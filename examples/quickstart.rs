@@ -1,0 +1,31 @@
+//! Quickstart: a 4-replica SafarDB cluster serving a PN-Counter CRDT over
+//! the simulated network-attached-FPGA fabric, plus the same workload on
+//! the Hamband CPU/RDMA baseline for contrast.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::rdt::RdtKind;
+
+fn main() {
+    println!("SafarDB quickstart: PN-Counter, 4 replicas, 20% updates\n");
+    for (name, mut cfg) in [
+        ("SafarDB (FPGA)", SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter))),
+        ("Hamband (CPU) ", SimConfig::hamband(WorkloadKind::Micro(RdtKind::PnCounter))),
+    ] {
+        cfg.update_pct = 20;
+        cfg.total_ops = 100_000;
+        let rep = cluster::run(cfg);
+        assert!(rep.converged(), "replicas must converge");
+        println!(
+            "{name}: response {:>7.3} us | throughput {:>7.3} OPs/us | power {:>5.1} W | converged {}",
+            rep.response_us(),
+            rep.throughput(),
+            rep.power.total_w(),
+            rep.converged(),
+        );
+    }
+    println!("\nBoth systems replicate the same RDT library; only the fabric");
+    println!("and execution cost models differ (see DESIGN.md).");
+}

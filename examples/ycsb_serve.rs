@@ -1,0 +1,83 @@
+//! **End-to-end driver** (DESIGN.md deliverable): serve batched YCSB +
+//! SmallBank requests through the full three-layer stack —
+//!
+//!   clients -> Rust coordinator (simulated FPGA cluster, Mu SMR when
+//!   needed) -> **PJRT-executed Pallas batch kernels** applying the op
+//!   bursts and guarding Account batches -> metrics.
+//!
+//! The AOT artifacts (built once by `make artifacts`) are loaded from
+//! `artifacts/` and executed on the request path; the scalar engine result
+//! is cross-checked against the kernel result exactly. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example ycsb_serve`
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::runtime::{Accelerator, Runtime};
+use safardb::util::rng::{Rng, Zipf};
+
+fn main() -> anyhow::Result<()> {
+    // --- Layer-1/2 artifacts through the PJRT runtime -------------------
+    let rt = Runtime::load("artifacts")?;
+    println!("PJRT platform: {} | artifacts: {:?}\n", rt.platform(), rt.names());
+    let mut acc = Accelerator::new(rt);
+
+    // --- Serve request bursts through the batch kernels ------------------
+    // 1024-key YCSB tile, 64 bursts of 256 ops each, Zipf-skewed keys.
+    let mut rng = Rng::new(42);
+    let zipf = Zipf::new(1024, 0.99);
+    let mut state = vec![0f32; 1024];
+    let mut shadow = state.clone(); // scalar cross-check
+    let mut served = 0u64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..64 {
+        let mut keys = Vec::with_capacity(256);
+        let mut deltas = Vec::with_capacity(256);
+        for _ in 0..256 {
+            keys.push(zipf.sample(&mut rng) as i32);
+            deltas.push(rng.gen_f64_range(-5.0, 10.0) as f32);
+        }
+        state = acc.kv_burst_apply(&state, &keys, &deltas)?;
+        for (k, d) in keys.iter().zip(&deltas) {
+            shadow[*k as usize] += d;
+        }
+        served += 256;
+    }
+    let kernel_wall = t0.elapsed();
+    for (i, (a, b)) in state.iter().zip(&shadow).enumerate() {
+        assert!((a - b).abs() < 1e-2, "key {i}: kernel {a} vs scalar {b}");
+    }
+    println!(
+        "kernel path : {served} ops in {:.1} ms ({:.1} kops/s through PJRT, {} kernel calls)",
+        kernel_wall.as_secs_f64() * 1e3,
+        served as f64 / kernel_wall.as_secs_f64() / 1e3,
+        acc.calls(),
+    );
+
+    // Account guard burst: overdraft-protected debit batch (SmallBank).
+    let deltas: Vec<f32> = (0..256).map(|_| rng.gen_f64_range(-30.0, 20.0) as f32).collect();
+    let (mask, balance) = acc.account_guard(100.0, &deltas)?;
+    let accepted = mask.iter().filter(|&&m| m).count();
+    println!("guard burst : {accepted}/256 ops accepted, final balance {balance:.2} (>= 0: {})", balance >= 0.0);
+    assert!(balance >= 0.0, "integrity invariant");
+
+    // --- Full-cluster serving runs (latency/throughput report) -----------
+    println!("\nfull-cluster serving (4 replicas, 100k ops each workload):");
+    for (name, workload) in [("YCSB", WorkloadKind::Ycsb), ("SmallBank", WorkloadKind::SmallBank)] {
+        let mut cfg = SimConfig::safardb(workload);
+        cfg.update_pct = 25;
+        cfg.total_ops = 100_000;
+        let rep = cluster::run(cfg);
+        assert!(rep.converged() && rep.invariants_ok);
+        println!(
+            "  {name:9}: response {:>7.3} us (p99 {:>8.3}) | throughput {:>7.3} OPs/us | {} SMR commits",
+            rep.response_us(),
+            rep.metrics.response.p99() as f64 / 1000.0,
+            rep.throughput(),
+            rep.metrics.smr_commits,
+        );
+    }
+    println!("\nOK: all layers compose (JAX/Pallas -> HLO -> PJRT -> Rust coordinator).");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX model + AOT export.
+
+Never imported at runtime — the Rust binary is self-contained once
+`make artifacts` has produced artifacts/*.hlo.txt.
+"""

@@ -1,0 +1,65 @@
+"""AOT exporter: lower every Layer-2 entry to HLO *text* artifacts.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Emits artifacts/<name>.hlo.txt per entry plus artifacts/manifest.txt with
+one line per entry:  name;in=<dtype><shape>,...;out=<dtype><shape>,...
+which rust/src/runtime/artifacts.rs parses.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(spec) -> str:
+    dt = str(spec.dtype)
+    shape = "x".join(str(d) for d in spec.shape)
+    return f"{dt}[{shape}]"
+
+
+def export_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, in_specs) in EXPORTS.items():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        ins = ",".join(_sig(s) for s in in_specs)
+        out_sig = ",".join(_sig(s) for s in outs)
+        manifest_lines.append(f"{name};in={ins};out={out_sig}")
+        print(f"  {name}: {len(text)} chars, out=({out_sig})")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    lines = export_all(args.out)
+    print(f"wrote {len(lines)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

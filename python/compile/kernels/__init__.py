@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for SafarDB's batch replication engine.
+
+Each kernel is the TPU-shaped analogue of one of the paper's FPGA
+"user kernel" fixed-function accelerators (DESIGN.md §Hardware-Adaptation):
+
+  pn_merge          — G/PN-Counter contribution fold  (Fig 4a, summarization)
+  lww_merge         — LWW-Register last-writer fold    (Table A.1)
+  set_or            — G-Set/2P-Set bitmap fold         (Table A.1)
+  permissibility    — Account batch overdraft scan     (Table B.1 invariant)
+  batch_apply       — KV scatter-add burst (YCSB/SmallBank hot path, Fig 11)
+
+All kernels run with interpret=True: CPU PJRT cannot execute Mosaic
+custom-calls, so interpret-mode lowering (plain HLO) is the correctness and
+interchange path; TPU efficiency is argued structurally in DESIGN.md §Perf.
+"""
+
+from .pn_merge import pn_merge
+from .lww_merge import lww_merge
+from .set_or import set_or
+from .permissibility import account_permissibility
+from .batch_apply import batch_apply
+
+__all__ = [
+    "pn_merge",
+    "lww_merge",
+    "set_or",
+    "account_permissibility",
+    "batch_apply",
+]

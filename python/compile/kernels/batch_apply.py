@@ -1,0 +1,42 @@
+"""KV burst scatter-add kernel (YCSB / SmallBank hot path).
+
+Applies a burst of (key, delta) updates to a K-element state vector. The
+FPGA streams decoded ops into a BRAM-resident table; the TPU-shaped
+formulation materializes the burst as a one-hot [B, K] matrix and performs
+one MXU matmul — duplicate keys in a burst accumulate correctly, which a
+naive vector scatter would not guarantee.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(state_ref, keys_ref, deltas_ref, out_ref):
+    k = state_ref.shape[0]
+    keys = keys_ref[...]
+    deltas = deltas_ref[...]
+    # one-hot [B, K] on the fly; deltas @ onehot reduces over B on the MXU.
+    onehot = (keys[:, None] == jax.lax.iota(jnp.int32, k)[None, :]).astype(deltas.dtype)
+    out_ref[...] = state_ref[...] + deltas @ onehot
+
+
+def batch_apply(state, keys, deltas):
+    """Apply a burst of additive updates to a state vector.
+
+    Args:
+      state:  f32[K] current values.
+      keys:   i32[B] target indices (may repeat; out-of-range keys must not
+              be passed — the Rust dispatcher pads with key 0 / delta 0).
+      deltas: f32[B] additive updates.
+    Returns:
+      f32[K] updated state.
+    """
+    if state.ndim != 1 or keys.ndim != 1 or keys.shape != deltas.shape:
+        raise ValueError(f"batch_apply expects ([K],[B],[B]), got {state.shape} {keys.shape} {deltas.shape}")
+    k = state.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), state.dtype),
+        interpret=True,
+    )(state, keys, deltas)

@@ -1,0 +1,41 @@
+"""LWW-Register merge kernel.
+
+Last-writer-wins fold over per-replica (value, timestamp) pairs. The paper
+assumes unique timestamps (Table A.1), which makes the fold order-free; on
+ties we deterministically keep the lowest replica index (argmax-first), and
+ref.py / the Rust scalar path implement the identical rule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, ts_ref, out_val_ref, out_ts_ref):
+    vals = vals_ref[...]
+    ts = ts_ref[...]
+    best = jnp.argmax(ts, axis=0)  # first max => lowest replica id on ties
+    out_val_ref[...] = jnp.take_along_axis(vals, best[None, :], axis=0)[0]
+    out_ts_ref[...] = jnp.take_along_axis(ts, best[None, :], axis=0)[0]
+
+
+def lww_merge(vals, ts):
+    """Fold per-replica LWW-Register states.
+
+    Args:
+      vals: f32[N, K] last-written values per replica.
+      ts:   i32[N, K] timestamps per replica.
+    Returns:
+      (f32[K] merged values, i32[K] merged timestamps).
+    """
+    if vals.shape != ts.shape or vals.ndim != 2:
+        raise ValueError(f"lww_merge expects matching [N,K] arrays, got {vals.shape} {ts.shape}")
+    n, k = vals.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k,), vals.dtype),
+            jax.ShapeDtypeStruct((k,), ts.dtype),
+        ),
+        interpret=True,
+    )(vals, ts)

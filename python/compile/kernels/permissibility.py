@@ -1,0 +1,48 @@
+"""Account batch permissibility kernel.
+
+The Bank Account WRDT's integrity invariant is a non-negative balance
+(Table B.1): withdraw(w) is permissible only if B - w >= 0 *given every
+previously accepted operation in the batch*. The FPGA runs this as a
+sequential check-and-commit loop; on a vector unit we keep the running
+balance in a scalar carried through a fori_loop over the batch, emitting an
+accept mask. Deposits (delta >= 0) are always permissible.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(b0_ref, deltas_ref, accept_ref, bal_ref):
+    b = deltas_ref.shape[0]
+
+    def body(i, bal):
+        d = deltas_ref[i]
+        ok = (d >= 0.0) | (bal + d >= 0.0)
+        accept_ref[i] = ok.astype(jnp.int32)
+        return jnp.where(ok, bal + d, bal)
+
+    final = jax.lax.fori_loop(0, b, body, b0_ref[0])
+    bal_ref[0] = final
+
+
+def account_permissibility(b0, deltas):
+    """Scan a batch of signed balance deltas against the overdraft invariant.
+
+    Args:
+      b0:     f32[1] starting balance (>= 0 by invariant).
+      deltas: f32[B] signed deltas (deposit > 0, withdraw < 0).
+    Returns:
+      (i32[B] accept mask, f32[1] final balance after accepted ops).
+    """
+    if deltas.ndim != 1 or b0.shape != (1,):
+        raise ValueError(f"account_permissibility expects ([1],[B]), got {b0.shape} {deltas.shape}")
+    b = deltas.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), b0.dtype),
+        ),
+        interpret=True,
+    )(b0, deltas)

@@ -1,0 +1,41 @@
+"""PN-Counter merge kernel.
+
+The paper's reducible path (§4.1) keeps an N-element contribution array A —
+A[i] is replica i's summarized contribution — and folds it on access. On the
+FPGA that fold is a pipelined adder over BRAM; here it is a VPU reduction
+over a VMEM-resident [N, K] tile (N replicas × K counters).
+
+A PN-Counter is two G-Counters (increments P, decrements M); the merged
+value is sum_i P[i] - sum_i M[i].
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, m_ref, out_ref):
+    # Whole [N, K] blocks stay resident in VMEM for the entire fold, the way
+    # the FPGA keeps the contribution array in BRAM across the burst.
+    p = p_ref[...]
+    m = m_ref[...]
+    out_ref[...] = jnp.sum(p, axis=0) - jnp.sum(m, axis=0)
+
+
+def pn_merge(p, m):
+    """Fold per-replica PN-Counter contributions.
+
+    Args:
+      p: f32[N, K] increment contributions (replica-major).
+      m: f32[N, K] decrement contributions.
+    Returns:
+      f32[K] merged counter values.
+    """
+    if p.shape != m.shape or p.ndim != 2:
+        raise ValueError(f"pn_merge expects matching [N,K] arrays, got {p.shape} {m.shape}")
+    n, k = p.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), p.dtype),
+        interpret=True,
+    )(p, m)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: python/tests compares each Pallas
+kernel against its oracle (exact dtype-for-dtype agreement is required for
+the integer kernels, allclose for f32 reductions), and the Rust scalar
+paths implement the same semantics, closing the loop L1 == L2 == L3.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pn_merge_ref(p, m):
+    return jnp.sum(p, axis=0) - jnp.sum(m, axis=0)
+
+
+def lww_merge_ref(vals, ts):
+    best = jnp.argmax(ts, axis=0)  # first max => lowest replica id on ties
+    val = jnp.take_along_axis(vals, best[None, :], axis=0)[0]
+    t = jnp.take_along_axis(ts, best[None, :], axis=0)[0]
+    return val, t
+
+
+def set_or_ref(bitmaps):
+    out = bitmaps[0]
+    for i in range(1, bitmaps.shape[0]):
+        out = out | bitmaps[i]
+    return out
+
+
+def account_permissibility_ref(b0, deltas):
+    def body(bal, d):
+        ok = (d >= 0.0) | (bal + d >= 0.0)
+        return jnp.where(ok, bal + d, bal), ok.astype(jnp.int32)
+
+    final, accept = jax.lax.scan(body, b0[0], deltas)
+    return accept, final[None]
+
+
+def batch_apply_ref(state, keys, deltas):
+    return state.at[keys].add(deltas)

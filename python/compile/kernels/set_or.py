@@ -1,0 +1,40 @@
+"""Grow-only set bitmap merge kernel.
+
+G-Sets (and each phase of a 2P-Set) merge by union; with a fixed element
+universe the union is a bitwise OR over per-replica bitmaps. N is small and
+static (cluster size), so the fold is a fully unrolled OR tree — the direct
+analogue of the FPGA's OR reduction fabric.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(n):
+    def kernel(bm_ref, out_ref):
+        bm = bm_ref[...]
+        acc = bm[0]
+        for i in range(1, n):  # static unroll: N is the cluster size
+            acc = acc | bm[i]
+        out_ref[...] = acc
+
+    return kernel
+
+
+def set_or(bitmaps):
+    """OR-fold per-replica set bitmaps.
+
+    Args:
+      bitmaps: i32[N, W] bitmap words per replica.
+    Returns:
+      i32[W] merged bitmap.
+    """
+    if bitmaps.ndim != 2:
+        raise ValueError(f"set_or expects [N,W], got {bitmaps.shape}")
+    n, w = bitmaps.shape
+    return pl.pallas_call(
+        _make_kernel(n),
+        out_shape=jax.ShapeDtypeStruct((w,), bitmaps.dtype),
+        interpret=True,
+    )(bitmaps)

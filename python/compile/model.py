@@ -1,0 +1,114 @@
+"""Layer-2: JAX compute graphs exported for the Rust coordinator.
+
+Each entry composes Layer-1 Pallas kernels into the merge/apply graph that
+the Rust replica engine invokes through PJRT (rust/src/runtime). Shapes are
+fixed at export time (AOT); the Rust dispatcher pads bursts to these shapes.
+
+Export shape constants mirror the paper's testbed scale: N=8 replicas
+(Alveo cluster size), K=1024 FPGA-resident keys per shard tile, B=256 op
+burst, W=512 bitmap words (16,384 set elements).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    account_permissibility,
+    batch_apply,
+    lww_merge,
+    pn_merge,
+    set_or,
+)
+
+N_REPLICAS = 8
+K_KEYS = 1024
+B_BURST = 256
+W_WORDS = 512
+
+
+def pn_counter_merge(p, m):
+    """PN-Counter fold: f32[N,K], f32[N,K] -> (f32[K],)."""
+    return (pn_merge(p, m),)
+
+
+def lww_register_merge(vals, ts):
+    """LWW fold: f32[N,K], i32[N,K] -> (f32[K], i32[K])."""
+    v, t = lww_merge(vals, ts)
+    return (v, t)
+
+
+def gset_merge(bitmaps):
+    """G-Set fold: i32[N,W] -> (i32[W],)."""
+    return (set_or(bitmaps),)
+
+
+def two_p_set_merge(adds, removes):
+    """2P-Set fold: present = OR(adds) & ~OR(removes). i32[N,W] x2 -> (i32[W],)."""
+    a = set_or(adds)
+    r = set_or(removes)
+    return (a & ~r,)
+
+
+def account_guard(b0, deltas):
+    """Account batch permissibility: f32[1], f32[B] -> (i32[B], f32[1])."""
+    accept, bal = account_permissibility(b0, deltas)
+    return (accept, bal)
+
+
+def kv_burst_apply(state, keys, deltas):
+    """KV burst scatter-add: f32[K], i32[B], f32[B] -> (f32[K],)."""
+    return (batch_apply(state, keys, deltas),)
+
+
+def smallbank_burst(state, keys, deltas, b0, guard_deltas):
+    """Fused SmallBank step: guard one hot account's batch, then apply the
+    KV burst. Exercises kernel composition in a single HLO module so XLA can
+    fuse the surrounding element-wise work."""
+    accept, bal = account_permissibility(b0, guard_deltas)
+    masked = deltas * accept.astype(deltas.dtype)
+    new_state = batch_apply(state, keys, masked)
+    return (new_state, accept, bal)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, input ShapeDtypeStructs). The AOT exporter and the manifest
+# generator both iterate this table; rust/src/runtime parses the manifest.
+EXPORTS = {
+    "pn_counter_merge": (
+        pn_counter_merge,
+        (_spec((N_REPLICAS, K_KEYS), jnp.float32), _spec((N_REPLICAS, K_KEYS), jnp.float32)),
+    ),
+    "lww_register_merge": (
+        lww_register_merge,
+        (_spec((N_REPLICAS, K_KEYS), jnp.float32), _spec((N_REPLICAS, K_KEYS), jnp.int32)),
+    ),
+    "gset_merge": (
+        gset_merge,
+        (_spec((N_REPLICAS, W_WORDS), jnp.int32),),
+    ),
+    "two_p_set_merge": (
+        two_p_set_merge,
+        (_spec((N_REPLICAS, W_WORDS), jnp.int32), _spec((N_REPLICAS, W_WORDS), jnp.int32)),
+    ),
+    "account_guard": (
+        account_guard,
+        (_spec((1,), jnp.float32), _spec((B_BURST,), jnp.float32)),
+    ),
+    "kv_burst_apply": (
+        kv_burst_apply,
+        (_spec((K_KEYS,), jnp.float32), _spec((B_BURST,), jnp.int32), _spec((B_BURST,), jnp.float32)),
+    ),
+    "smallbank_burst": (
+        smallbank_burst,
+        (
+            _spec((K_KEYS,), jnp.float32),
+            _spec((B_BURST,), jnp.int32),
+            _spec((B_BURST,), jnp.float32),
+            _spec((1,), jnp.float32),
+            _spec((B_BURST,), jnp.float32),
+        ),
+    ),
+}

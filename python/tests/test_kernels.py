@@ -1,0 +1,138 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; integer kernels must agree exactly,
+float folds to tight tolerance. This is the core correctness signal for the
+AOT artifacts the Rust coordinator executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    account_permissibility,
+    batch_apply,
+    lww_merge,
+    pn_merge,
+    set_or,
+)
+from compile.kernels import ref
+
+SHAPE_NK = st.tuples(st.integers(1, 8), st.integers(1, 64))
+FINITE = st.floats(-1e4, 1e4, allow_nan=False, width=32)
+
+
+def _arr(rng, shape, lo, hi, dtype):
+    if np.issubdtype(dtype, np.integer):
+        return jnp.asarray(rng.integers(lo, hi, size=shape, dtype=np.int64).astype(dtype))
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(nk=SHAPE_NK, seed=st.integers(0, 2**32 - 1))
+def test_pn_merge_matches_ref(nk, seed):
+    rng = np.random.default_rng(seed)
+    p = _arr(rng, nk, 0, 1e4, np.float32)
+    m = _arr(rng, nk, 0, 1e4, np.float32)
+    got = pn_merge(p, m)
+    want = ref.pn_merge_ref(p, m)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(nk=SHAPE_NK, seed=st.integers(0, 2**32 - 1))
+def test_lww_merge_matches_ref(nk, seed):
+    rng = np.random.default_rng(seed)
+    vals = _arr(rng, nk, -1e4, 1e4, np.float32)
+    ts = _arr(rng, nk, 0, 1 << 30, np.int32)
+    gv, gt = lww_merge(vals, ts)
+    wv, wt = ref.lww_merge_ref(vals, ts)
+    np.testing.assert_array_equal(gv, wv)
+    np.testing.assert_array_equal(gt, wt)
+
+
+def test_lww_merge_tie_keeps_lowest_replica():
+    vals = jnp.array([[1.0], [2.0], [3.0]], jnp.float32)
+    ts = jnp.array([[7], [7], [3]], jnp.int32)
+    gv, gt = lww_merge(vals, ts)
+    assert gv[0] == 1.0 and gt[0] == 7
+
+
+@settings(max_examples=40, deadline=None)
+@given(nw=st.tuples(st.integers(2, 8), st.integers(1, 64)), seed=st.integers(0, 2**32 - 1))
+def test_set_or_matches_ref(nw, seed):
+    rng = np.random.default_rng(seed)
+    bm = _arr(rng, nw, 0, 1 << 31, np.int32)
+    np.testing.assert_array_equal(set_or(bm), ref.set_or_ref(bm))
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 128), b0=st.floats(0, 1e4, width=32), seed=st.integers(0, 2**32 - 1))
+def test_account_permissibility_matches_ref(b, b0, seed):
+    rng = np.random.default_rng(seed)
+    b0 = jnp.array([b0], jnp.float32)
+    deltas = _arr(rng, (b,), -200, 200, np.float32)
+    ga, gb = account_permissibility(b0, deltas)
+    wa, wb = ref.account_permissibility_ref(b0, deltas)
+    np.testing.assert_array_equal(ga, wa)
+    np.testing.assert_allclose(gb, wb, rtol=1e-6, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 128), b0=st.floats(0, 1e3, width=32), seed=st.integers(0, 2**32 - 1))
+def test_account_balance_never_negative(b, b0, seed):
+    """The integrity invariant itself (Table B.1): accepted prefix never
+    overdrafts, regardless of input batch."""
+    rng = np.random.default_rng(seed)
+    deltas = _arr(rng, (b,), -500, 100, np.float32)
+    accept, _ = account_permissibility(jnp.array([b0], jnp.float32), deltas)
+    bal = float(b0)
+    for i in range(b):
+        if int(accept[i]):
+            bal += float(deltas[i])
+        assert bal >= -1e-3, f"overdraft at op {i}: {bal}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 256),
+    b=st.integers(1, 128),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_batch_apply_matches_ref(k, b, seed):
+    rng = np.random.default_rng(seed)
+    state = _arr(rng, (k,), -1e3, 1e3, np.float32)
+    keys = _arr(rng, (b,), 0, k, np.int32)
+    deltas = _arr(rng, (b,), -100, 100, np.float32)
+    got = batch_apply(state, keys, deltas)
+    want = ref.batch_apply_ref(state, keys, deltas)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_batch_apply_duplicate_keys_accumulate():
+    state = jnp.zeros(4, jnp.float32)
+    keys = jnp.array([2, 2, 2], jnp.int32)
+    deltas = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+    out = batch_apply(state, keys, deltas)
+    np.testing.assert_allclose(out, jnp.array([0, 0, 6.0, 0]))
+
+
+def test_pn_merge_empty_contributions():
+    p = jnp.zeros((8, 16), jnp.float32)
+    out = pn_merge(p, p)
+    np.testing.assert_array_equal(out, jnp.zeros(16))
+
+
+def test_kernel_shape_validation():
+    import pytest
+
+    with pytest.raises(ValueError):
+        pn_merge(jnp.zeros((2, 3)), jnp.zeros((3, 2)))
+    with pytest.raises(ValueError):
+        batch_apply(jnp.zeros(4), jnp.zeros(2, jnp.int32), jnp.zeros(3))
+    with pytest.raises(ValueError):
+        account_permissibility(jnp.zeros(2), jnp.zeros(4))
+    with pytest.raises(ValueError):
+        set_or(jnp.zeros((2, 2, 2), jnp.int32))
+    with pytest.raises(ValueError):
+        lww_merge(jnp.zeros((2, 3)), jnp.zeros((2, 4), jnp.int32))

@@ -1,0 +1,58 @@
+"""Layer-2 checks: export table shapes, composition semantics, and the
+no-redundant-recompute perf property on the lowered HLO."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_export_table_shapes_lower():
+    for name, (fn, specs) in model.EXPORTS.items():
+        outs = jax.eval_shape(fn, *specs)
+        assert isinstance(outs, tuple) and len(outs) >= 1, name
+
+
+def test_two_p_set_merge_semantics():
+    adds = jnp.array([[0b0111], [0b1000]], jnp.int32)
+    removes = jnp.array([[0b0001], [0b0000]], jnp.int32)
+    (present,) = model.two_p_set_merge(adds, removes)
+    assert int(present[0]) == 0b1110  # removed bit 0 stays removed (2P rule)
+
+
+def test_smallbank_burst_masks_rejected_guard_ops():
+    k, b = 16, 8
+    state = jnp.zeros(k, jnp.float32)
+    keys = jnp.arange(b, dtype=jnp.int32)
+    deltas = jnp.ones(b, jnp.float32) * 10
+    b0 = jnp.array([5.0], jnp.float32)
+    guard = jnp.array([-3.0, -3.0, -3.0, 1.0, -2.0, -9.0, 0.0, -1.0], jnp.float32)
+    new_state, accept, bal = model.smallbank_burst(state, keys, deltas, b0, guard)
+    wa, wb = ref.account_permissibility_ref(b0, guard)
+    np.testing.assert_array_equal(accept, wa)
+    np.testing.assert_allclose(bal, wb)
+    np.testing.assert_allclose(new_state[:b], 10.0 * wa.astype(jnp.float32))
+
+
+def _hlo_text(name):
+    fn, specs = model.EXPORTS[name]
+    from compile.aot import to_hlo_text
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_hlo_exports_parse_and_are_single_module():
+    for name in model.EXPORTS:
+        text = _hlo_text(name)
+        assert text.count("HloModule") == 1, name
+        assert "ENTRY" in text, name
+
+
+def test_pn_merge_hlo_has_no_redundant_reduce():
+    """Perf guard (DESIGN.md §Perf L2): the PN fold must lower to exactly two
+    reduces (one per G-Counter) and one subtract — no recompute."""
+    text = _hlo_text("pn_counter_merge")
+    n_reduce = sum(1 for line in text.splitlines() if " reduce(" in line)
+    assert n_reduce == 2, f"expected 2 reduces, got {n_reduce}"

@@ -1,0 +1,108 @@
+//! Engine micro-benchmarks (harness=false; criterion unavailable offline).
+//!
+//! Times the coordinator hot paths the §Perf pass optimizes: DES event
+//! throughput, verb issue, replica op processing (end-to-end events/s),
+//! RNG/Zipf sampling, histogram recording, LRU access, and one PJRT batch
+//! kernel invocation. Results feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::mem::{LruCache, MemParams};
+use safardb::net::fabric::FabricParams;
+use safardb::rdt::RdtKind;
+use safardb::sim::{EventKind, EventQueue, TimerKind};
+use safardb::util::rng::{Rng, Zipf};
+use safardb::util::stats::Histogram;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    for _ in 0..iters / 10 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed();
+    let per = dt.as_nanos() as f64 / iters as f64;
+    let rate = 1e9 / per / 1e6;
+    println!("{name:<36} {per:>10.1} ns/op {rate:>9.2} Mops/s");
+}
+
+fn main() {
+    println!("SafarDB engine micro-benchmarks\n");
+
+    let mut rng = Rng::new(1);
+    bench("rng_next_u64", 10_000_000, || {
+        std::hint::black_box(rng.next_u64());
+    });
+
+    let zipf = Zipf::new(1_000_000, 0.99);
+    bench("zipf_sample_theta_0.99", 2_000_000, || {
+        std::hint::black_box(zipf.sample(&mut rng));
+    });
+
+    let mut h = Histogram::new();
+    bench("histogram_record", 10_000_000, || {
+        h.record(rng.next_u64() % 1_000_000);
+    });
+
+    let mut lru = LruCache::new(100_000);
+    bench("lru_access_1M_keyspace", 2_000_000, || {
+        std::hint::black_box(lru.access(rng.next_u64() % 1_000_000));
+    });
+
+    let mut q = EventQueue::new();
+    let mut t = 0u64;
+    bench("event_queue_push_pop", 2_000_000, || {
+        t += 1;
+        q.push(t, 0, EventKind::Timer(TimerKind::WorkDone));
+        std::hint::black_box(q.pop());
+    });
+
+    let fab = FabricParams::fpga();
+    let mem = MemParams::default_params();
+    bench("fabric_one_way_cost", 10_000_000, || {
+        std::hint::black_box(fab.one_way_ns(122, safardb::mem::MemKind::Hbm, &mem));
+    });
+
+    for (name, cfg) in [
+        ("cluster_crdt_events", SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter))),
+        ("cluster_wrdt_events", SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account))),
+        ("cluster_hamband_events", SimConfig::hamband(WorkloadKind::Micro(RdtKind::Account))),
+    ] {
+        let mut cfg = cfg;
+        cfg.total_ops = 60_000;
+        let t0 = Instant::now();
+        let rep = cluster::run(cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{name:<36} {:>10.2} M events/s ({} events, {:.2}s wall)",
+            rep.metrics.events as f64 / dt / 1e6,
+            rep.metrics.events,
+            dt
+        );
+    }
+
+    match safardb::runtime::Runtime::load("artifacts") {
+        Ok(rt) => {
+            let mut acc = safardb::runtime::Accelerator::new(rt);
+            let state = vec![0f32; 1024];
+            let keys: Vec<i32> = (0..256).map(|i| i % 1024).collect();
+            let deltas = vec![1f32; 256];
+            let t0 = Instant::now();
+            let iters = 200;
+            for _ in 0..iters {
+                std::hint::black_box(acc.kv_burst_apply(&state, &keys, &deltas).unwrap());
+            }
+            let per_us = t0.elapsed().as_micros() as f64 / iters as f64;
+            println!(
+                "{:<36} {per_us:>10.1} us/call ({:.2} Mops/s through PJRT)",
+                "pjrt_kv_burst_apply_256",
+                256.0 / per_us
+            );
+        }
+        Err(_) => println!("pjrt_kv_burst_apply_256              skipped (run `make artifacts`)"),
+    }
+}

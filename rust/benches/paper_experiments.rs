@@ -1,0 +1,38 @@
+//! `cargo bench` harness (criterion is unavailable offline; harness=false).
+//!
+//! Regenerates every paper table/figure in quick mode, timing each, and
+//! prints the headline ratios next to the paper's claims — the "same
+//! rows/series the paper reports" requirement of the benchmark deliverable.
+//! Full-density runs: `cargo run --release -- expt all`.
+
+use std::time::Instant;
+
+use safardb::expt;
+
+fn main() {
+    println!("SafarDB paper-experiment bench (quick mode; full: `safardb expt all`)\n");
+    println!("{:<10} {:>9} {:>7}  headline", "experiment", "wall_s", "tables");
+    let t_all = Instant::now();
+    for id in expt::ALL {
+        let t0 = Instant::now();
+        let tables = expt::run(id, true).expect("known id");
+        let wall = t0.elapsed().as_secs_f64();
+        let headline = match *id {
+            "fig9" => {
+                let (rt, tp) = expt::fig09::headline(&tables);
+                format!("CRDT RT {rt:.1}x / tput {tp:.1}x vs Hamband (paper 7.0x / 5.3x)")
+            }
+            "fig10" => {
+                let (rt, tp) = expt::fig10::headline(&tables);
+                format!("WRDT RT {rt:.1}x / tput {tp:.1}x vs Hamband (paper 12x / 6.8x)")
+            }
+            "table2_1" => "verb latencies (paper 1.8/2.0us vs 9ns)".to_string(),
+            "fig13" => "perm switch ns vs 100s-of-us (paper 17/24ns)".to_string(),
+            "fig27" => "power ~35W vs ~160W (paper 4.5x)".to_string(),
+            _ => String::new(),
+        };
+        println!("{id:<10} {wall:>9.2} {:>7}  {headline}", tables.len());
+        expt::common::save(&tables, id);
+    }
+    println!("\ntotal: {:.1}s — all {} experiments regenerated under results/", t_all.elapsed().as_secs_f64(), expt::ALL.len());
+}

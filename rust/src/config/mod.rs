@@ -1,0 +1,365 @@
+//! Configuration system: which system (SafarDB / Hamband / Waverunner),
+//! cluster shape, workload, propagation modes, faults, hybrid-mode layout —
+//! plus per-system parameter presets bundling fabric, memory, execution,
+//! and power models.
+//!
+//! Configs are built programmatically (`SimConfig::safardb(...)`) or parsed
+//! from simple `key = value` files (`parse`), since no TOML crate exists in
+//! the offline set.
+
+pub mod params;
+
+pub use params::{ExecParams, PowerParams, SystemParams};
+
+use crate::rdt::RdtKind;
+
+/// Which system a run models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// The paper's system: network-attached FPGA, soft RNIC, FPGA-resident
+    /// RDT engine, Mu SMR.
+    SafarDb,
+    /// Baseline (1): CPU-hosted RDTs over traditional RDMA [41].
+    Hamband,
+    /// Baseline (2): FPGA SmartNIC Raft, leader-only client handling [5].
+    Waverunner,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::SafarDb => "SafarDB",
+            SystemKind::Hamband => "Hamband",
+            SystemKind::Waverunner => "Waverunner",
+        }
+    }
+
+    pub fn params(&self) -> SystemParams {
+        match self {
+            SystemKind::SafarDb => SystemParams::safardb(),
+            SystemKind::Hamband => SystemParams::hamband(),
+            SystemKind::Waverunner => SystemParams::waverunner(),
+        }
+    }
+
+    /// Parameters for a run, honoring an ablation override.
+    pub fn params_for(&self, cfg: &SimConfig) -> SystemParams {
+        cfg.params_override.unwrap_or_else(|| self.params())
+    }
+}
+
+/// How a transaction category is propagated to remote replicas
+/// (the Figs 6–8 sweeps; §4.1–4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PropagationMode {
+    /// RDMA Write into HBM, reader folds on access (§4.1/4.2/4.3 config 1,
+    /// "no buffer").
+    WriteNoBuffer,
+    /// RDMA Write into HBM + background poller refreshing an on-fabric
+    /// copy (§4.1 config 2).
+    WriteBuffered,
+    /// FPGA-specific RDMA RPC verb: remote accelerator state updated
+    /// directly from the network (§4.1/4.2 config RPC).
+    Rpc,
+    /// RDMA RPC Write-Through: accelerator update + simultaneous
+    /// replication-log append (§4.3 config 2, conflicting only).
+    WriteThrough,
+}
+
+/// Fault injection plan (Fig 14, §3 fault model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Crash a specific node once a fraction of ops have completed.
+    CrashAtFraction { node: usize, fraction_pct: u8 },
+    /// Crash whoever is leader at that point (Fig 14 c/d).
+    CrashLeaderAtFraction { fraction_pct: u8 },
+    /// Crash a follower, then bring it back ("return to functionality",
+    /// §3): the leader detects the resumed heartbeat and replays its log.
+    CrashThenRecover { node: usize, crash_pct: u8, recover_pct: u8 },
+}
+
+/// Hybrid-mode layout (Figs 15–17): part of the keyspace FPGA-resident,
+/// the rest in host memory behind the CPU cache.
+#[derive(Clone, Copy, Debug)]
+pub struct HybridConfig {
+    /// Total keys (YCSB keys / SmallBank accounts).
+    pub total_keys: u64,
+    /// Keys resident on the FPGA (hot set).
+    pub fpga_keys: u64,
+    /// Fraction (0..=100) of operations targeting FPGA-resident keys.
+    pub fpga_ops_pct: u8,
+    /// Zipfian skew of key selection (θ=0 uniform).
+    pub zipf_theta: f64,
+    /// Host LLC model capacity in keys.
+    pub host_cache_keys: usize,
+}
+
+impl HybridConfig {
+    pub fn ycsb_default() -> Self {
+        // Scaled 10:1 from the paper's 100K FPGA / 10M host keys so exact
+        // LRU simulation stays cheap; ratios preserved (DESIGN.md §1).
+        HybridConfig {
+            total_keys: 1_010_000,
+            fpga_keys: 10_000,
+            fpga_ops_pct: 50,
+            zipf_theta: 0.0,
+            host_cache_keys: 150_000,
+        }
+    }
+
+    pub fn smallbank_default() -> Self {
+        // Paper: 10M FPGA / 90M host accounts, scaled 100:1.
+        HybridConfig {
+            total_keys: 1_000_000,
+            fpga_keys: 100_000,
+            fpga_ops_pct: 50,
+            zipf_theta: 0.0,
+            host_cache_keys: 150_000,
+        }
+    }
+}
+
+/// Workload selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// One RDT instance, update/query mix (the micro-benchmarks).
+    Micro(RdtKind),
+    /// YCSB over a keyspace of LWW registers (Fig 11/12/15/16).
+    Ycsb,
+    /// SmallBank over accounts (Fig 11/15/16/17).
+    SmallBank,
+}
+
+impl WorkloadKind {
+    pub fn name(&self) -> String {
+        match self {
+            WorkloadKind::Micro(k) => k.name().to_string(),
+            WorkloadKind::Ycsb => "YCSB".to_string(),
+            WorkloadKind::SmallBank => "SmallBank".to_string(),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub system: SystemKind,
+    pub n_replicas: usize,
+    pub workload: WorkloadKind,
+    /// Total operations across the cluster (paper: 4M; sweeps scale down).
+    pub total_ops: u64,
+    /// Percent of ops that are updates (the rest are query()).
+    pub update_pct: u8,
+    /// Closed-loop client slots per replica.
+    pub clients_per_replica: usize,
+    pub prop_reducible: PropagationMode,
+    pub prop_irreducible: PropagationMode,
+    pub prop_conflicting: PropagationMode,
+    /// Reducible ops aggregated locally before one propagation (§5.4; 1 =
+    /// propagate every op).
+    pub summarize_threshold: u32,
+    pub seed: u64,
+    pub fault: Option<FaultSpec>,
+    pub hybrid: Option<HybridConfig>,
+    /// Background poll interval for buffered/queue/log pollers (ns).
+    pub poll_interval_ns: u64,
+    /// Heartbeat scanner period (ns) and #unchanged reads to declare death.
+    pub heartbeat_period_ns: u64,
+    pub hb_fail_threshold: u32,
+    /// Ablation hook: replace the system's parameter bundle (fabric /
+    /// memory / exec / power) for this run only.
+    pub params_override: Option<SystemParams>,
+}
+
+impl SimConfig {
+    pub fn new(system: SystemKind, workload: WorkloadKind) -> Self {
+        SimConfig {
+            system,
+            n_replicas: 4,
+            workload,
+            total_ops: 100_000,
+            update_pct: 15,
+            clients_per_replica: 4,
+            prop_reducible: PropagationMode::Rpc,
+            prop_irreducible: PropagationMode::Rpc,
+            prop_conflicting: PropagationMode::WriteThrough,
+            summarize_threshold: 1,
+            seed: 0xC0FFEE,
+            fault: None,
+            hybrid: None,
+            poll_interval_ns: 400,
+            heartbeat_period_ns: 20_000,
+            hb_fail_threshold: 4,
+            params_override: None,
+        }
+    }
+
+    /// SafarDB with its best configuration (RPC verbs everywhere).
+    pub fn safardb(workload: WorkloadKind) -> Self {
+        SimConfig::new(SystemKind::SafarDb, workload)
+    }
+
+    /// SafarDB restricted to standard verbs + buffering ("SafarDB
+    /// (Baseline)" in Figs 8/10).
+    pub fn safardb_baseline(workload: WorkloadKind) -> Self {
+        let mut c = SimConfig::new(SystemKind::SafarDb, workload);
+        c.prop_reducible = PropagationMode::WriteBuffered;
+        c.prop_irreducible = PropagationMode::WriteNoBuffer;
+        c.prop_conflicting = PropagationMode::WriteNoBuffer;
+        c
+    }
+
+    /// Hamband: CPU RDMA, standard verbs only.
+    pub fn hamband(workload: WorkloadKind) -> Self {
+        let mut c = SimConfig::new(SystemKind::Hamband, workload);
+        c.prop_reducible = PropagationMode::WriteNoBuffer;
+        c.prop_irreducible = PropagationMode::WriteNoBuffer;
+        c.prop_conflicting = PropagationMode::WriteNoBuffer;
+        // CPU pollers are threads, not fabric logic: coarser interval.
+        c.poll_interval_ns = 1_200;
+        c
+    }
+
+    /// Waverunner: 3-node Raft, leader-only clients.
+    pub fn waverunner(workload: WorkloadKind) -> Self {
+        let mut c = SimConfig::new(SystemKind::Waverunner, workload);
+        c.n_replicas = 3;
+        c
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_replicas < 2 {
+            return Err(format!("n_replicas must be >= 2, got {}", self.n_replicas));
+        }
+        if self.n_replicas > crate::rdt::crdt::counter::MAX_REPLICAS {
+            return Err(format!("n_replicas must be <= 16, got {}", self.n_replicas));
+        }
+        if self.update_pct > 100 {
+            return Err(format!("update_pct must be <= 100, got {}", self.update_pct));
+        }
+        if self.total_ops == 0 {
+            return Err("total_ops must be positive".into());
+        }
+        if self.clients_per_replica == 0 {
+            return Err("clients_per_replica must be positive".into());
+        }
+        if self.summarize_threshold == 0 {
+            return Err("summarize_threshold must be >= 1".into());
+        }
+        if self.system != SystemKind::SafarDb {
+            let rpc = [self.prop_reducible, self.prop_irreducible]
+                .iter()
+                .any(|m| matches!(m, PropagationMode::Rpc | PropagationMode::WriteThrough))
+                || matches!(self.prop_conflicting, PropagationMode::Rpc | PropagationMode::WriteThrough);
+            if rpc && self.system == SystemKind::Hamband {
+                return Err("Hamband's RNIC has no FPGA-specific RPC verbs".into());
+            }
+        }
+        if let Some(h) = &self.hybrid {
+            if h.fpga_keys > h.total_keys {
+                return Err("hybrid: fpga_keys > total_keys".into());
+            }
+            if h.fpga_ops_pct > 100 {
+                return Err("hybrid: fpga_ops_pct > 100".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a simple `key = value` config file body over a base config.
+    pub fn apply_kv(&mut self, body: &str) -> Result<(), String> {
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let bad = |what: &str| format!("line {}: bad {what}: {v}", lineno + 1);
+            match k {
+                "replicas" => self.n_replicas = v.parse().map_err(|_| bad("replicas"))?,
+                "total_ops" => self.total_ops = v.parse().map_err(|_| bad("total_ops"))?,
+                "update_pct" => self.update_pct = v.parse().map_err(|_| bad("update_pct"))?,
+                "clients" => {
+                    self.clients_per_replica = v.parse().map_err(|_| bad("clients"))?
+                }
+                "seed" => self.seed = v.parse().map_err(|_| bad("seed"))?,
+                "summarize" => {
+                    self.summarize_threshold = v.parse().map_err(|_| bad("summarize"))?
+                }
+                "poll_interval_ns" => {
+                    self.poll_interval_ns = v.parse().map_err(|_| bad("poll_interval_ns"))?
+                }
+                "system" => {
+                    self.system = match v {
+                        "safardb" => SystemKind::SafarDb,
+                        "hamband" => SystemKind::Hamband,
+                        "waverunner" => SystemKind::Waverunner,
+                        _ => return Err(bad("system")),
+                    }
+                }
+                _ => return Err(format!("line {}: unknown key '{k}'", lineno + 1)),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for c in [
+            SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter)),
+            SimConfig::safardb_baseline(WorkloadKind::Micro(RdtKind::Account)),
+            SimConfig::hamband(WorkloadKind::Ycsb),
+            SimConfig::waverunner(WorkloadKind::Ycsb),
+        ] {
+            c.validate().expect("preset must validate");
+        }
+    }
+
+    #[test]
+    fn hamband_cannot_use_rpc_verbs() {
+        let mut c = SimConfig::hamband(WorkloadKind::Ycsb);
+        c.prop_reducible = PropagationMode::Rpc;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut c = SimConfig::safardb(WorkloadKind::Ycsb);
+        c.n_replicas = 1;
+        assert!(c.validate().is_err());
+        c.n_replicas = 64;
+        assert!(c.validate().is_err());
+        c.n_replicas = 8;
+        c.update_pct = 101;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kv_parse_applies_and_rejects() {
+        let mut c = SimConfig::safardb(WorkloadKind::Ycsb);
+        c.apply_kv("replicas = 6\nupdate_pct = 25 # comment\n\nseed = 7\n").unwrap();
+        assert_eq!(c.n_replicas, 6);
+        assert_eq!(c.update_pct, 25);
+        assert_eq!(c.seed, 7);
+        assert!(c.apply_kv("nope = 1").is_err());
+        assert!(c.apply_kv("replicas").is_err());
+        assert!(c.apply_kv("replicas = x").is_err());
+    }
+
+    #[test]
+    fn hybrid_validation() {
+        let mut c = SimConfig::safardb(WorkloadKind::Ycsb);
+        let mut h = HybridConfig::ycsb_default();
+        h.fpga_keys = h.total_keys + 1;
+        c.hybrid = Some(h);
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Per-system parameter bundles: fabric + memory + execution + power.
+//!
+//! `ExecParams` captures where a system's RDT engine runs (FPGA user kernel
+//! vs host CPU) and what its per-transaction compute costs are;
+//! `PowerParams` feeds the §5.5 power model.
+
+use crate::mem::{MemKind, MemParams};
+use crate::net::fabric::FabricParams;
+
+/// Execution-cost model for the replica's compute element.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecParams {
+    /// Fixed per-transaction pipeline cost (decode + ALU), excluding memory.
+    pub op_exec_ns: u64,
+    /// Per-request software overhead (parse, dispatch, locking). FPGA: the
+    /// dispatcher is wires, so this is a few ns; CPU: function-call and
+    /// cache-pressure reality.
+    pub software_overhead_ns: u64,
+    /// Where the object state lives.
+    pub state_mem: MemKind,
+    /// Client ingress + response-egress overhead per completed op.
+    pub client_overhead_ns: u64,
+    /// Cost of re-arming / servicing a background poller tick.
+    pub poll_tick_ns: u64,
+}
+
+/// Activity-based power model inputs (§5.5, Fig 27).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerParams {
+    /// Static floor: FPGA fabric + HBM, or CPU package idle.
+    pub static_w: f64,
+    /// I/O subsystem static (RNIC + PCIe + DRAM for the CPU system; the
+    /// FPGA card's CMAC is inside static_w).
+    pub io_static_w: f64,
+    /// Dynamic energy per executed transaction (nJ).
+    pub op_nj: f64,
+    /// Dynamic energy per verb on the wire (nJ).
+    pub verb_nj: f64,
+}
+
+/// Everything latency/energy about one system under test.
+#[derive(Clone, Copy, Debug)]
+pub struct SystemParams {
+    pub fabric: FabricParams,
+    pub mem: MemParams,
+    pub exec: ExecParams,
+    pub power: PowerParams,
+}
+
+impl SystemParams {
+    /// SafarDB: RDT engine in the FPGA user kernel, state in BRAM.
+    pub fn safardb() -> Self {
+        SystemParams {
+            fabric: FabricParams::fpga(),
+            mem: MemParams::default_params(),
+            exec: ExecParams {
+                op_exec_ns: 20,
+                software_overhead_ns: 4,
+                state_mem: MemKind::Bram,
+                // Client requests arrive over the same 100 GbE port: packet
+                // ingress + dispatch + response egress.
+                client_overhead_ns: 240,
+                poll_tick_ns: 6,
+            },
+            power: PowerParams {
+                static_w: 27.0, // U280 fabric + HBM + CMAC
+                io_static_w: 6.0,
+                op_nj: 35.0,
+                verb_nj: 20.0,
+            },
+        }
+    }
+
+    /// Hamband: RDT engine on the host CPU, state in DRAM, traditional RNIC.
+    pub fn hamband() -> Self {
+        SystemParams {
+            fabric: FabricParams::traditional(),
+            mem: MemParams::default_params(),
+            exec: ExecParams {
+                op_exec_ns: 55,
+                software_overhead_ns: 170,
+                state_mem: MemKind::HostDram,
+                client_overhead_ns: 230,
+                poll_tick_ns: 90,
+            },
+            power: PowerParams {
+                static_w: 92.0,   // Sapphire Rapids package under load floor
+                io_static_w: 52.0, // DDR5 + NDR200 RNIC + PCIe (paper: ~1/3 I/O)
+                op_nj: 480.0,
+                verb_nj: 160.0,
+            },
+        }
+    }
+
+    /// Waverunner: FPGA SmartNIC accelerates the Raft replication path,
+    /// but the *application runs in host software* (§5.2) — so execution
+    /// costs are CPU-like while the replication fabric is FPGA-like.
+    pub fn waverunner() -> Self {
+        let mut fabric = FabricParams::fpga();
+        fabric.supports_rpc = false; // stock SmartNIC verbs only
+        // SmartNIC: NIC-side fast path still crosses PCIe to reach the
+        // host-resident application state.
+        fabric.remote_landing_ns = 430;
+        SystemParams {
+            fabric,
+            mem: MemParams::default_params(),
+            exec: ExecParams {
+                op_exec_ns: 55,
+                software_overhead_ns: 170,
+                state_mem: MemKind::HostDram,
+                client_overhead_ns: 230,
+                poll_tick_ns: 90,
+            },
+            power: PowerParams {
+                static_w: 85.0,
+                io_static_w: 45.0,
+                op_nj: 430.0,
+                verb_nj: 60.0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safardb_is_near_memory() {
+        let s = SystemParams::safardb();
+        assert_eq!(s.exec.state_mem, MemKind::Bram);
+        assert!(s.exec.software_overhead_ns < 10);
+        assert!(s.fabric.supports_rpc);
+        assert!(!s.fabric.wait_ack);
+    }
+
+    #[test]
+    fn hamband_is_host_resident() {
+        let h = SystemParams::hamband();
+        assert_eq!(h.exec.state_mem, MemKind::HostDram);
+        assert!(h.fabric.wait_ack);
+        assert!(!h.fabric.supports_rpc);
+    }
+
+    #[test]
+    fn waverunner_mixes_fpga_fabric_with_host_exec() {
+        let w = SystemParams::waverunner();
+        assert!(!w.fabric.wait_ack, "SmartNIC pipeline");
+        assert_eq!(w.exec.state_mem, MemKind::HostDram, "app in software");
+        assert!(w.fabric.remote_landing_ns > 0, "PCIe hop to host state");
+    }
+
+    #[test]
+    fn power_floors_match_paper_scale() {
+        // §5.5: SafarDB ~35 W vs Hamband ~160 W before dynamic power.
+        let s = SystemParams::safardb().power;
+        let h = SystemParams::hamband().power;
+        assert!((30.0..40.0).contains(&(s.static_w + s.io_static_w)));
+        assert!((130.0..165.0).contains(&(h.static_w + h.io_static_w)));
+    }
+}

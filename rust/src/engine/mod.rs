@@ -1,0 +1,25 @@
+//! The replication engine (Layer 3 proper): replica actors over the DES,
+//! the cluster builder/run loop, the opcode dispatcher, hybrid storage,
+//! and the summarization batcher.
+
+pub mod cluster;
+pub mod replica;
+pub mod store;
+
+pub use cluster::{Cluster, RunReport};
+
+use crate::metrics::RunMetrics;
+use crate::net::{Network, QpTable};
+use crate::sim::EventQueue;
+
+/// Mutable cluster context handed to replica handlers (split-borrowed from
+/// the cluster so replicas and shared infrastructure coexist).
+pub struct Ctx<'a> {
+    pub q: &'a mut EventQueue,
+    pub net: &'a mut Network,
+    pub qps: &'a mut QpTable,
+    pub metrics: &'a mut RunMetrics,
+    /// True once the op target is met: background timers stop re-arming so
+    /// the event queue drains to quiescence.
+    pub draining: bool,
+}

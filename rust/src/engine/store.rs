@@ -1,0 +1,308 @@
+//! The replica's data plane: either one micro-benchmark RDT object or a
+//! keyed store (YCSB registers / SmallBank accounts), behind a single
+//! category-routing interface — the paper's "single replication/consistency
+//! interface across FPGA- and host-resident data" (§1, contribution 3).
+
+use crate::config::WorkloadKind;
+use crate::rdt::{mix64, mix_f64, Category, OpCall, QueryValue, Rdt, RdtKind};
+
+/// KV opcodes (OpCall.b carries the key).
+pub const KV_READ: u8 = 0xFE; // like query() but keyed
+pub const KV_WRITE: u8 = 0; // YCSB update / SmallBank deposit  (reducible)
+pub const KV_WITHDRAW: u8 = 1; // SmallBank debit (conflicting, overdraft guard)
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvKind {
+    /// YCSB: last-writer-wins registers; updates are reducible.
+    Ycsb,
+    /// SmallBank: accounts with a non-negative-balance invariant; debits
+    /// are conflicting (the Fig 11 "drastic drop at 5% updates" is the SMR
+    /// engagement this category triggers).
+    SmallBank,
+}
+
+#[derive(Clone, Debug)]
+pub struct KvState {
+    pub kind: KvKind,
+    values: Vec<f64>,
+    versions: Vec<u64>, // LWW timestamps for YCSB convergence
+}
+
+impl KvState {
+    pub fn new(kind: KvKind, keys: u64) -> Self {
+        let init = match kind {
+            KvKind::Ycsb => 0.0,
+            KvKind::SmallBank => 100.0, // seeded account balances
+        };
+        KvState {
+            kind,
+            values: vec![init; keys as usize],
+            versions: vec![0; keys as usize],
+        }
+    }
+
+    pub fn keys(&self) -> u64 {
+        self.values.len() as u64
+    }
+
+    pub fn value(&self, key: u64) -> f64 {
+        self.values[key as usize]
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        let k = op.b as usize;
+        match (self.kind, op.opcode) {
+            (KvKind::Ycsb, KV_WRITE) => {
+                // LWW merge on (timestamp, origin): replicas converge
+                // regardless of delivery order.
+                let ts = op.a;
+                if ts > self.versions[k] {
+                    self.versions[k] = ts;
+                    self.values[k] = op.x;
+                    true
+                } else {
+                    false
+                }
+            }
+            (KvKind::SmallBank, KV_WRITE) => {
+                self.values[k] += op.x; // deposit: commutative add
+                true
+            }
+            (KvKind::SmallBank, KV_WITHDRAW) => {
+                if self.values[k] - op.x >= -1e-9 {
+                    self.values[k] -= op.x;
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match (self.kind, op.opcode) {
+            (KvKind::SmallBank, KV_WITHDRAW) => {
+                self.values[op.b as usize] - op.x >= -1e-9
+            }
+            _ => true,
+        }
+    }
+
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match (self.kind, op.opcode) {
+            (KvKind::SmallBank, KV_WITHDRAW) => {
+                self.values[op.b as usize] -= op.x; // leader-accepted debit
+                true
+            }
+            _ => self.apply(op),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut acc = 0u64;
+        for (k, (&v, &ver)) in self.values.iter().zip(&self.versions).enumerate() {
+            // Round to cents: deposit folding order differs across replicas.
+            let vq = (v * 100.0).round() / 100.0;
+            if vq != 0.0 || ver != 0 {
+                acc ^= mix64(k as u64 ^ (ver << 32)).wrapping_mul(mix_f64(vq) | 1);
+            }
+        }
+        acc
+    }
+
+    fn invariant_ok(&self) -> bool {
+        match self.kind {
+            KvKind::Ycsb => true,
+            KvKind::SmallBank => self.values.iter().all(|&v| v >= -1e-6),
+        }
+    }
+}
+
+/// The unified data plane.
+pub enum DataPlane {
+    Micro(Box<dyn Rdt>),
+    Kv(KvState),
+}
+
+impl DataPlane {
+    pub fn for_workload(workload: WorkloadKind, keys: u64) -> Self {
+        match workload {
+            WorkloadKind::Micro(kind) => DataPlane::Micro(kind.instantiate()),
+            WorkloadKind::Ycsb => DataPlane::Kv(KvState::new(KvKind::Ycsb, keys)),
+            WorkloadKind::SmallBank => DataPlane::Kv(KvState::new(KvKind::SmallBank, keys)),
+        }
+    }
+
+    pub fn category(&self, opcode: u8) -> Category {
+        match self {
+            DataPlane::Micro(r) => r.category(opcode),
+            DataPlane::Kv(kv) => match (kv.kind, opcode) {
+                (KvKind::SmallBank, KV_WITHDRAW) => Category::Conflicting,
+                _ => Category::Reducible,
+            },
+        }
+    }
+
+    pub fn sync_group(&self, opcode: u8) -> u8 {
+        match self {
+            DataPlane::Micro(r) => r.sync_group(opcode),
+            DataPlane::Kv(_) => 0,
+        }
+    }
+
+    pub fn sync_groups(&self) -> u8 {
+        match self {
+            DataPlane::Micro(r) => r.sync_groups(),
+            DataPlane::Kv(kv) => match kv.kind {
+                KvKind::Ycsb => 0,
+                KvKind::SmallBank => 1,
+            },
+        }
+    }
+
+    pub fn permissible(&self, op: &OpCall) -> bool {
+        match self {
+            DataPlane::Micro(r) => r.permissible(op),
+            DataPlane::Kv(kv) => kv.permissible(op),
+        }
+    }
+
+    pub fn apply(&mut self, op: &OpCall) -> bool {
+        match self {
+            DataPlane::Micro(r) => r.apply(op),
+            DataPlane::Kv(kv) => kv.apply(op),
+        }
+    }
+
+    /// Unconditional application of a leader-committed conflicting op
+    /// (see `Rdt::apply_forced`).
+    pub fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match self {
+            DataPlane::Micro(r) => r.apply_forced(op),
+            DataPlane::Kv(kv) => kv.apply_forced(op),
+        }
+    }
+
+    pub fn query(&self, key: u64) -> QueryValue {
+        match self {
+            DataPlane::Micro(r) => r.query(),
+            DataPlane::Kv(kv) => QueryValue::Float(kv.value(key)),
+        }
+    }
+
+    pub fn has_query(&self) -> bool {
+        match self {
+            DataPlane::Micro(r) => r.has_query(),
+            DataPlane::Kv(_) => true,
+        }
+    }
+
+    pub fn state_digest(&self) -> u64 {
+        match self {
+            DataPlane::Micro(r) => r.state_digest(),
+            DataPlane::Kv(kv) => kv.digest(),
+        }
+    }
+
+    pub fn invariant_ok(&self) -> bool {
+        match self {
+            DataPlane::Micro(r) => r.invariant_ok(),
+            DataPlane::Kv(kv) => kv.invariant_ok(),
+        }
+    }
+
+    /// Type-correct summarization rule for this plane's reducible ops
+    /// (see `engine::replica::summarize`).
+    pub fn summarize_rule(&self) -> crate::engine::replica::SummarizeRule {
+        use crate::engine::replica::SummarizeRule as R;
+        match self {
+            DataPlane::Micro(r) => match r.kind() {
+                RdtKind::GCounter | RdtKind::PnCounter | RdtKind::Account => R::SumDelta,
+                RdtKind::LwwRegister => R::LastWrite,
+                _ => R::ShipAll,
+            },
+            DataPlane::Kv(kv) => match kv.kind {
+                KvKind::Ycsb => R::LastWrite,
+                KvKind::SmallBank => R::SumDelta,
+            },
+        }
+    }
+
+    /// Deep-copy for recovery snapshot transfer.
+    pub fn snapshot(&self) -> DataPlane {
+        match self {
+            DataPlane::Micro(r) => DataPlane::Micro(r.clone_box()),
+            DataPlane::Kv(kv) => DataPlane::Kv(kv.clone()),
+        }
+    }
+
+    pub fn debug_dump(&self) -> String {
+        match self {
+            DataPlane::Micro(r) => r.debug_dump(),
+            DataPlane::Kv(_) => String::new(),
+        }
+    }
+
+    pub fn micro_kind(&self) -> Option<RdtKind> {
+        match self {
+            DataPlane::Micro(r) => Some(r.kind()),
+            DataPlane::Kv(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ycsb_lww_converges_out_of_order() {
+        let mut a = KvState::new(KvKind::Ycsb, 8);
+        let mut b = KvState::new(KvKind::Ycsb, 8);
+        let mut w1 = OpCall::new(KV_WRITE, 10, 3, 1.5);
+        w1.origin = 0;
+        let mut w2 = OpCall::new(KV_WRITE, 20, 3, 2.5);
+        w2.origin = 1;
+        a.apply(&w1);
+        a.apply(&w2);
+        b.apply(&w2);
+        b.apply(&w1);
+        assert_eq!(a.value(3), 2.5);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn smallbank_withdraw_guard() {
+        let mut kv = KvState::new(KvKind::SmallBank, 4);
+        let w = OpCall::new(KV_WITHDRAW, 0, 2, 150.0);
+        assert!(!kv.permissible(&w), "balance 100 < 150");
+        assert!(!kv.apply(&w));
+        assert!(kv.invariant_ok());
+        let d = OpCall::new(KV_WRITE, 0, 2, 75.0);
+        kv.apply(&d);
+        assert!(kv.apply(&w));
+        assert!((kv.value(2) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dataplane_category_routing() {
+        let sb = DataPlane::for_workload(WorkloadKind::SmallBank, 16);
+        assert_eq!(sb.category(KV_WITHDRAW), Category::Conflicting);
+        assert_eq!(sb.category(KV_WRITE), Category::Reducible);
+        assert_eq!(sb.sync_groups(), 1);
+        let y = DataPlane::for_workload(WorkloadKind::Ycsb, 16);
+        assert_eq!(y.category(KV_WRITE), Category::Reducible);
+        assert_eq!(y.sync_groups(), 0);
+    }
+
+    #[test]
+    fn micro_plane_delegates() {
+        let mut p = DataPlane::for_workload(WorkloadKind::Micro(RdtKind::PnCounter), 0);
+        let op = OpCall::new(0, 5, 0, 0.0);
+        assert!(p.permissible(&op));
+        p.apply(&op);
+        assert_eq!(p.query(0), QueryValue::Int(5));
+        assert!(p.invariant_ok());
+    }
+}

@@ -1,0 +1,88 @@
+//! Ablation study (DESIGN.md §5): which *mechanism* buys the headline gap?
+//!
+//! Starting from the Hamband baseline, each row enables one SafarDB
+//! ingredient in isolation on the PN-Counter (relaxed) and Account
+//! (conflicting) workloads:
+//!
+//!   +pipeline   — drop the CQE wait (StRoM-style verb pipelining)
+//!   +near-net   — FPGA verb-issue/landing costs (no PCIe doorbell dance)
+//!   +near-mem   — BRAM-resident state + wire-speed dispatch (FPGA exec)
+//!   full SafarDB — all of the above + RPC verbs
+//!
+//! The decomposition attributes the Fig 9/10 ratios to their causes — the
+//! paper's Design Principles #1 (near-network) and #2 (direct updates).
+
+use crate::config::{SimConfig, SystemParams, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::mem::MemKind;
+use crate::net::fabric::FabricParams;
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+fn variants() -> Vec<(&'static str, SystemParams)> {
+    let base = SystemParams::hamband();
+    let mut pipeline = base;
+    pipeline.fabric.wait_ack = false;
+
+    let mut near_net = pipeline;
+    near_net.fabric = FabricParams::fpga();
+    near_net.fabric.supports_rpc = false;
+    // Still a host-resident application:
+    near_net.fabric.remote_landing_ns = 430;
+    near_net.exec = base.exec;
+
+    let mut near_mem = near_net;
+    near_mem.fabric.remote_landing_ns = 0;
+    near_mem.exec = SystemParams::safardb().exec;
+    near_mem.exec.state_mem = MemKind::Bram;
+
+    vec![
+        ("hamband", base),
+        ("+pipeline", pipeline),
+        ("+near-net", near_net),
+        ("+near-mem", near_mem),
+    ]
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation — which mechanism buys the gap? (4 nodes, 20% updates)",
+        &["variant", "workload", "rt_us", "tput_ops_us"],
+    );
+    for rdt in [RdtKind::PnCounter, RdtKind::Account] {
+        for (name, params) in variants() {
+            let mut cfg = SimConfig::hamband(WorkloadKind::Micro(rdt));
+            cfg.update_pct = 20;
+            cfg.params_override = Some(params);
+            let (cell, _) = run_cell(cfg, cell_ops(quick));
+            t.row(vec![name.into(), rdt.name().into(), f3(cell.rt_us), f3(cell.tput)]);
+        }
+        // Full SafarDB (adds RPC verbs on top of near-mem).
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+        cfg.update_pct = 20;
+        let (cell, _) = run_cell(cfg, cell_ops(quick));
+        t.row(vec!["safardb(full)".into(), rdt.name().into(), f3(cell.rt_us), f3(cell.tput)]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_mechanism_contributes_monotonically_to_throughput() {
+        let t = &run(true)[0];
+        for rdt in ["PN-Counter", "Account"] {
+            let tput = |v: &str| -> f64 {
+                t.rows().iter().find(|r| r[0] == v && r[1] == rdt).unwrap()[3].parse().unwrap()
+            };
+            let (h, p, nm, full) =
+                (tput("hamband"), tput("+pipeline"), tput("+near-mem"), tput("safardb(full)"));
+            assert!(p > h, "{rdt}: pipelining helps ({p} vs {h})");
+            assert!(nm > p * 0.8, "{rdt}: near-mem at least holds ({nm} vs {p})");
+            assert!(full >= nm * 0.8, "{rdt}: full SafarDB competitive ({full} vs {nm})");
+            assert!(full > h * 2.0, "{rdt}: cumulative gap is large");
+        }
+    }
+}

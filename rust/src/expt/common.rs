@@ -1,0 +1,98 @@
+//! Shared experiment plumbing: cell runners, sweep axes, result output.
+
+use std::path::Path;
+
+use crate::config::SimConfig;
+use crate::engine::cluster::{self, RunReport};
+use crate::util::table::Table;
+
+/// Paper sweep axes (§5.1: 3–8 nodes, 15/20/25 % updates; 4M ops scaled).
+pub const NODE_SWEEP: &[usize] = &[3, 4, 5, 6, 7, 8];
+pub const NODE_SWEEP_QUICK: &[usize] = &[3, 5, 8];
+pub const UPDATE_SWEEP: &[u8] = &[15, 20, 25];
+
+pub fn nodes(quick: bool) -> &'static [usize] {
+    if quick {
+        NODE_SWEEP_QUICK
+    } else {
+        NODE_SWEEP
+    }
+}
+
+/// Ops per cell: the paper runs 4M per experiment; the simulator preserves
+/// shape at far smaller counts (documented in EXPERIMENTS.md).
+pub fn cell_ops(quick: bool) -> u64 {
+    if quick {
+        24_000
+    } else {
+        96_000
+    }
+}
+
+/// One measured cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub rt_us: f64,
+    pub tput: f64,
+}
+
+/// Run one configuration and sanity-check it (convergence + integrity are
+/// hard requirements of every experiment, not just the tests).
+pub fn run_cell(mut cfg: SimConfig, ops: u64) -> (Cell, RunReport) {
+    cfg.total_ops = ops;
+    let label = format!(
+        "{}/{} n={} upd={}%",
+        cfg.system.name(),
+        cfg.workload.name(),
+        cfg.n_replicas,
+        cfg.update_pct
+    );
+    let rep = cluster::run(cfg);
+    assert!(rep.converged(), "experiment cell diverged: {label} digests={:?}", rep.digests);
+    assert!(rep.invariants_ok, "experiment cell violated integrity: {label}");
+    (Cell { rt_us: rep.response_us(), tput: rep.throughput() }, rep)
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Write tables as CSV under `results/` (one file per table).
+pub fn save(tables: &[Table], id: &str) {
+    let dir = Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    for (i, t) in tables.iter().enumerate() {
+        let name = if tables.len() == 1 {
+            format!("{id}.csv")
+        } else {
+            format!("{id}_{i}.csv")
+        };
+        let _ = std::fs::write(dir.join(name), t.to_csv());
+    }
+}
+
+/// Geometric-mean ratio of two series (the paper's "X× lower/higher").
+pub fn geomean_ratio(nums: &[f64], dens: &[f64]) -> f64 {
+    assert_eq!(nums.len(), dens.len());
+    let log_sum: f64 = nums
+        .iter()
+        .zip(dens)
+        .filter(|(n, d)| **n > 0.0 && **d > 0.0)
+        .map(|(n, d)| (n / d).ln())
+        .sum();
+    (log_sum / nums.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_ratio_basics() {
+        assert!((geomean_ratio(&[2.0, 8.0], &[1.0, 2.0]) - (2.0f64 * 4.0).sqrt()).abs() < 1e-9);
+    }
+}

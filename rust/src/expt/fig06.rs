@@ -1,0 +1,80 @@
+//! Fig 6: reducible-transaction implementations (§4.1) on PN-Counter
+//! (CRDT) and Account (WRDT) — RDMA Write (no buffer) vs Write (buffered)
+//! vs RDMA RPC; 3–8 nodes, 15/20/25 % updates.
+//!
+//! Expected shape: buffering/RPC ≈8× better RT for the counter (queries
+//! stop folding HBM); for Account, RPC beats buffering (the leader's memory
+//! accesses cannot be fully hidden by polling).
+
+use crate::config::{PropagationMode, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+const CONFIGS: &[(&str, PropagationMode)] = &[
+    ("write-nobuf", PropagationMode::WriteNoBuffer),
+    ("write-buffered", PropagationMode::WriteBuffered),
+    ("rpc", PropagationMode::Rpc),
+];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for rdt in [RdtKind::PnCounter, RdtKind::Account] {
+        let mut t = Table::new(
+            &format!("Fig 6 — reducible configs on {}", rdt.name()),
+            &["config", "nodes", "upd%", "rt_us", "tput_ops_us"],
+        );
+        for &(name, mode) in CONFIGS {
+            for &n in nodes(quick) {
+                for &u in UPDATE_SWEEP {
+                    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+                    cfg.prop_reducible = mode;
+                    // Conflicting path held at the paper's baseline here so
+                    // the reducible axis is isolated.
+                    cfg.prop_conflicting = PropagationMode::WriteNoBuffer;
+                    cfg.n_replicas = n;
+                    cfg.update_pct = u;
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        name.into(),
+                        n.to_string(),
+                        u.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::common::geomean_ratio;
+
+    #[test]
+    fn buffering_and_rpc_beat_nobuffer_on_counter() {
+        let t = &run(true)[0];
+        let series = |cfg: &str| -> Vec<f64> {
+            t.rows()
+                .iter()
+                .filter(|r| r[0] == cfg)
+                .map(|r| r[3].parse().unwrap())
+                .collect()
+        };
+        let nobuf = series("write-nobuf");
+        let buf = series("write-buffered");
+        let rpc = series("rpc");
+        let gain_buf = geomean_ratio(&nobuf, &buf);
+        let gain_rpc = geomean_ratio(&nobuf, &rpc);
+        // Paper: ~8x lower response time. Our client-ingress overhead
+        // compresses the ratio (EXPERIMENTS.md discusses the delta); the
+        // *ordering* — nobuffer strictly worst — must hold clearly.
+        assert!(gain_buf > 1.4, "buffered gain {gain_buf}");
+        assert!(gain_rpc > 1.4, "rpc gain {gain_rpc}");
+        assert!(gain_rpc >= gain_buf * 0.8, "rpc at least comparable to buffered");
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig 7: irreducible-transaction implementations (§4.2) on LWW-Register
+//! and Courseware — RDMA Write (+queue polling) vs RDMA RPC.
+//!
+//! Expected shape: near-parity for the LWW register (polling hides the
+//! queue reads — all replicas are peers); a small RPC edge on Courseware
+//! that narrows with node count.
+
+use crate::config::{PropagationMode, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+const CONFIGS: &[(&str, PropagationMode)] =
+    &[("write", PropagationMode::WriteNoBuffer), ("rpc", PropagationMode::Rpc)];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for rdt in [RdtKind::LwwRegister, RdtKind::Courseware] {
+        let mut t = Table::new(
+            &format!("Fig 7 — irreducible configs on {}", rdt.name()),
+            &["config", "nodes", "upd%", "rt_us", "tput_ops_us"],
+        );
+        for &(name, mode) in CONFIGS {
+            for &n in nodes(quick) {
+                for &u in UPDATE_SWEEP {
+                    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+                    cfg.prop_irreducible = mode;
+                    // Buffered reducible + write-mode conflicting: isolate
+                    // the irreducible axis (as the paper's Fig 7 does).
+                    cfg.prop_reducible = PropagationMode::WriteBuffered;
+                    cfg.prop_conflicting = PropagationMode::WriteNoBuffer;
+                    cfg.n_replicas = n;
+                    cfg.update_pct = u;
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        name.into(),
+                        n.to_string(),
+                        u.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::common::geomean_ratio;
+
+    #[test]
+    fn lww_register_near_parity_courseware_small_rpc_edge() {
+        let tabs = run(true);
+        let series = |t: &crate::util::table::Table, cfg: &str| -> Vec<f64> {
+            t.rows().iter().filter(|r| r[0] == cfg).map(|r| r[3].parse().unwrap()).collect()
+        };
+        // LWW: polling hides everything — ratio close to 1.
+        let lww_ratio = geomean_ratio(&series(&tabs[0], "write"), &series(&tabs[0], "rpc"));
+        assert!((0.8..1.6).contains(&lww_ratio), "lww write/rpc = {lww_ratio}");
+        // Courseware: rpc should not lose.
+        let cw_ratio = geomean_ratio(&series(&tabs[1], "write"), &series(&tabs[1], "rpc"));
+        assert!(cw_ratio >= 0.95, "courseware write/rpc = {cw_ratio}");
+    }
+}

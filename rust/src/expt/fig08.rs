@@ -1,0 +1,57 @@
+//! Fig 8: conflicting-transaction implementations (§4.3) on Auction —
+//! RDMA Write (log + polling) vs RDMA RPC Write-Through.
+//!
+//! Expected shape: Write-Through ~1.5× lower RT, ~1.1× higher throughput
+//! on average, with the throughput edge strongest at low node counts
+//! (coordination dominates at high N). Auction stresses this most: three
+//! sync groups = three replication logs to poll.
+
+use crate::config::{PropagationMode, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+const CONFIGS: &[(&str, PropagationMode)] = &[
+    ("write", PropagationMode::WriteNoBuffer),
+    ("write-through", PropagationMode::WriteThrough),
+];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 8 — conflicting configs on Auction (3 sync groups)",
+        &["config", "nodes", "upd%", "rt_us", "tput_ops_us"],
+    );
+    for &(name, mode) in CONFIGS {
+        for &n in nodes(quick) {
+            for &u in UPDATE_SWEEP {
+                let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Auction));
+                cfg.prop_conflicting = mode;
+                cfg.prop_reducible = PropagationMode::WriteBuffered;
+                cfg.prop_irreducible = PropagationMode::WriteNoBuffer;
+                cfg.n_replicas = n;
+                cfg.update_pct = u;
+                let (cell, _) = run_cell(cfg, cell_ops(quick));
+                t.row(vec![name.into(), n.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+            }
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::common::geomean_ratio;
+
+    #[test]
+    fn write_through_lowers_response_time() {
+        let t = &run(true)[0];
+        let series = |cfg: &str, col: usize| -> Vec<f64> {
+            t.rows().iter().filter(|r| r[0] == cfg).map(|r| r[col].parse().unwrap()).collect()
+        };
+        let rt_gain = geomean_ratio(&series("write", 3), &series("write-through", 3));
+        assert!(rt_gain > 1.1, "rt gain {rt_gain} (paper ~1.5x)");
+        let tput_gain = geomean_ratio(&series("write-through", 4), &series("write", 4));
+        assert!(tput_gain > 0.95, "tput gain {tput_gain} (paper ~1.1x)");
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig 9: the five CRDT micro-benchmarks, SafarDB vs Hamband, 3–8 nodes,
+//! 15/20/25 % updates.
+//!
+//! Headline: SafarDB ≈7.0× lower response time, ≈5.3× higher throughput;
+//! Hamband degrades faster with node count (CQE-wait serialization) while
+//! SafarDB's per-replica load *drops* with N.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for &rdt in RdtKind::crdt_benchmarks() {
+        let mut t = Table::new(
+            &format!("Fig 9 — {} (CRDT): SafarDB vs Hamband", rdt.name()),
+            &["system", "nodes", "upd%", "rt_us", "tput_ops_us"],
+        );
+        for system in ["SafarDB", "Hamband"] {
+            for &n in nodes(quick) {
+                for &u in UPDATE_SWEEP {
+                    let mut cfg = match system {
+                        "SafarDB" => SimConfig::safardb(WorkloadKind::Micro(rdt)),
+                        _ => SimConfig::hamband(WorkloadKind::Micro(rdt)),
+                    };
+                    cfg.n_replicas = n;
+                    cfg.update_pct = u;
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        system.into(),
+                        n.to_string(),
+                        u.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Aggregate ratios over all CRDT tables (for EXPERIMENTS.md).
+pub fn headline(tables: &[Table]) -> (f64, f64) {
+    let mut h_rt = Vec::new();
+    let mut s_rt = Vec::new();
+    let mut h_tp = Vec::new();
+    let mut s_tp = Vec::new();
+    for t in tables {
+        for r in t.rows() {
+            let (rt, tp): (f64, f64) = (r[3].parse().unwrap(), r[4].parse().unwrap());
+            if r[0] == "SafarDB" {
+                s_rt.push(rt);
+                s_tp.push(tp);
+            } else {
+                h_rt.push(rt);
+                h_tp.push(tp);
+            }
+        }
+    }
+    (
+        crate::expt::common::geomean_ratio(&h_rt, &s_rt),
+        crate::expt::common::geomean_ratio(&s_tp, &h_tp),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_ratios_in_band() {
+        let tables = run(true);
+        assert_eq!(tables.len(), 5, "five CRDT benchmarks");
+        let (rt_ratio, tput_ratio) = headline(&tables);
+        // Paper: 7.0x RT, 5.3x throughput. Accept a generous band; the
+        // direction and order must hold.
+        assert!((3.0..16.0).contains(&rt_ratio), "rt ratio {rt_ratio}");
+        assert!((3.0..16.0).contains(&tput_ratio), "tput ratio {tput_ratio}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Fig 10: the five WRDT micro-benchmarks — SafarDB (baseline verbs),
+//! SafarDB (RPC), and Hamband.
+//!
+//! Headline: ≈12× lower RT / ≈6.8× higher throughput vs Hamband. SafarDB
+//! (RPC) ≥ SafarDB everywhere; its edge is clearest on Auction (3 sync
+//! groups) and absent on Movie (no query, no non-conflicting ops).
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for &rdt in RdtKind::wrdt_benchmarks() {
+        let mut t = Table::new(
+            &format!("Fig 10 — {} (WRDT): SafarDB / SafarDB(RPC) / Hamband", rdt.name()),
+            &["system", "nodes", "upd%", "rt_us", "tput_ops_us"],
+        );
+        for system in ["SafarDB", "SafarDB(RPC)", "Hamband"] {
+            for &n in nodes(quick) {
+                for &u in UPDATE_SWEEP {
+                    let mut cfg = match system {
+                        "SafarDB" => SimConfig::safardb_baseline(WorkloadKind::Micro(rdt)),
+                        "SafarDB(RPC)" => SimConfig::safardb(WorkloadKind::Micro(rdt)),
+                        _ => SimConfig::hamband(WorkloadKind::Micro(rdt)),
+                    };
+                    cfg.n_replicas = n;
+                    cfg.update_pct = u;
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        system.into(),
+                        n.to_string(),
+                        u.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+pub fn headline(tables: &[Table]) -> (f64, f64) {
+    let mut h_rt = Vec::new();
+    let mut s_rt = Vec::new();
+    let mut h_tp = Vec::new();
+    let mut s_tp = Vec::new();
+    for t in tables {
+        for r in t.rows() {
+            let (rt, tp): (f64, f64) = (r[3].parse().unwrap(), r[4].parse().unwrap());
+            match r[0].as_str() {
+                "SafarDB(RPC)" => {
+                    s_rt.push(rt);
+                    s_tp.push(tp);
+                }
+                "Hamband" => {
+                    h_rt.push(rt);
+                    h_tp.push(tp);
+                }
+                _ => {}
+            }
+        }
+    }
+    (
+        crate::expt::common::geomean_ratio(&h_rt, &s_rt),
+        crate::expt::common::geomean_ratio(&s_tp, &h_tp),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::common::geomean_ratio;
+
+    #[test]
+    fn wrdt_headline_and_rpc_never_loses() {
+        let tables = run(true);
+        assert_eq!(tables.len(), 5);
+        let (rt_ratio, tput_ratio) = headline(&tables);
+        assert!(rt_ratio > 4.0, "rt ratio {rt_ratio} (paper 12x)");
+        assert!(tput_ratio > 4.0, "tput ratio {tput_ratio} (paper 6.8x)");
+        // "we see no instances in which SafarDB clearly outperforms
+        // SafarDB (RPC)" — geomean per benchmark must not favor baseline.
+        for t in &tables {
+            let series = |sys: &str| -> Vec<f64> {
+                t.rows().iter().filter(|r| r[0] == sys).map(|r| r[3].parse().unwrap()).collect()
+            };
+            let ratio = geomean_ratio(&series("SafarDB"), &series("SafarDB(RPC)"));
+            assert!(ratio > 0.9, "rpc must not clearly lose: {ratio}");
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig 11: YCSB and SmallBank, SafarDB vs Hamband across update
+//! percentages (0–50 %).
+//!
+//! Expected shape: ≈8× lower RT / ≈5.2× higher throughput on average;
+//! Hamband *wins the read-only point* (its big CPU cache holds the whole
+//! store); SmallBank shows the 0→5 % cliff where SMR engages.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::util::table::Table;
+
+const UPDATES: &[u8] = &[0, 5, 15, 25, 50];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for workload in [WorkloadKind::Ycsb, WorkloadKind::SmallBank] {
+        let mut t = Table::new(
+            &format!("Fig 11 — {} : SafarDB vs Hamband", workload.name()),
+            &["system", "nodes", "upd%", "rt_us", "tput_ops_us"],
+        );
+        let node_sweep: &[usize] = if quick { &[4, 8] } else { &[4, 6, 8] };
+        for system in ["SafarDB", "Hamband"] {
+            for &n in node_sweep {
+                for &u in UPDATES {
+                    let mut cfg = match system {
+                        "SafarDB" => SimConfig::safardb(workload),
+                        _ => SimConfig::hamband(workload),
+                    };
+                    cfg.n_replicas = n;
+                    cfg.update_pct = u;
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        system.into(),
+                        n.to_string(),
+                        u.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, sys: &str, upd: &str, col: usize) -> Vec<f64> {
+        t.rows()
+            .iter()
+            .filter(|r| r[0] == sys && r[2] == upd)
+            .map(|r| r[col].parse().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn smallbank_smr_cliff_at_5pct() {
+        let tables = run(true);
+        let sb = &tables[1];
+        let t0: f64 = col(sb, "SafarDB", "0", 4).iter().sum();
+        let t5: f64 = col(sb, "SafarDB", "5", 4).iter().sum();
+        assert!(t0 > t5 * 1.5, "0% {t0} should be well above 5% {t5} (SMR cliff)");
+    }
+
+    #[test]
+    fn safardb_wins_update_workloads() {
+        let tables = run(true);
+        for t in &tables {
+            let s: f64 = col(t, "SafarDB", "25", 3).iter().sum();
+            let h: f64 = col(t, "Hamband", "25", 3).iter().sum();
+            assert!(h > 2.0 * s, "{}: h={h} s={s}", t.headers().len());
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig 12: SafarDB vs Waverunner on YCSB, three nodes, across PUT/GET
+//! ratios.
+//!
+//! Expected shape: SafarDB ≈25× lower RT / ≈31× higher throughput — the
+//! Waverunner app lives in host software behind the SmartNIC, only its
+//! leader serves clients (follower requests bounce), and every PUT takes a
+//! full Raft round.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::util::table::Table;
+
+const PUT_RATIOS: &[u8] = &[5, 25, 50, 75, 95];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 12 — YCSB on 3 nodes: SafarDB vs Waverunner",
+        &["system", "put%", "rt_us", "tput_ops_us"],
+    );
+    for system in ["SafarDB", "Waverunner"] {
+        for &put in PUT_RATIOS {
+            let mut cfg = match system {
+                "SafarDB" => {
+                    let mut c = SimConfig::safardb(WorkloadKind::Ycsb);
+                    c.n_replicas = 3;
+                    c
+                }
+                _ => SimConfig::waverunner(WorkloadKind::Ycsb),
+            };
+            cfg.update_pct = put;
+            let (cell, _) = run_cell(cfg, cell_ops(quick));
+            t.row(vec![system.into(), put.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::common::geomean_ratio;
+
+    #[test]
+    fn safardb_dominates_waverunner() {
+        let t = &run(true)[0];
+        let series = |sys: &str, col: usize| -> Vec<f64> {
+            t.rows().iter().filter(|r| r[0] == sys).map(|r| r[col].parse().unwrap()).collect()
+        };
+        let rt = geomean_ratio(&series("Waverunner", 2), &series("SafarDB", 2));
+        let tp = geomean_ratio(&series("SafarDB", 3), &series("Waverunner", 3));
+        assert!(rt > 3.0, "rt ratio {rt} (paper 25.5x)");
+        assert!(tp > 3.0, "tput ratio {tp} (paper 31.3x)");
+    }
+}

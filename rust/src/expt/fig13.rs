@@ -1,0 +1,74 @@
+//! Fig 13: permission-switch round-trip histograms — SafarDB's FPGA QP
+//! pokes (bimodal 17/24 ns) vs Hamband's traditional RNIC permission
+//! change (lognormal, hundreds of µs, heavy tail). Design Principle #3.
+
+use crate::net::fabric::FabricParams;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+use crate::util::table::Table;
+
+pub fn sample(model: &crate::net::fabric::PermSwitchModel, iters: u64, seed: u64) -> Histogram {
+    let mut rng = Rng::new(seed);
+    let mut h = Histogram::new();
+    for _ in 0..iters {
+        h.record(model.sample(&mut rng));
+    }
+    h
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let iters = if quick { 10_000 } else { 100_000 };
+    let fpga = sample(&FabricParams::fpga().perm_switch, iters, 13);
+    let trad = sample(&FabricParams::traditional().perm_switch, iters, 14);
+
+    let mut summary = Table::new(
+        "Fig 13 — permission switch latency",
+        &["fabric", "p50_ns", "p99_ns", "min_ns", "max_ns"],
+    );
+    for (name, h) in [("SafarDB (FPGA QP regs)", &fpga), ("Hamband (RNIC verbs)", &trad)] {
+        summary.row(vec![
+            name.into(),
+            h.p50().to_string(),
+            h.p99().to_string(),
+            h.min().to_string(),
+            h.max().to_string(),
+        ]);
+    }
+
+    let mut hist = Table::new(
+        "Fig 13 — histogram series (bucket_ns, count)",
+        &["fabric", "bucket_ns", "count"],
+    );
+    for (name, h) in [("SafarDB", &fpga), ("Hamband", &trad)] {
+        for (b, c) in h.nonzero_buckets() {
+            hist.row(vec![name.into(), b.to_string(), c.to_string()]);
+        }
+    }
+    vec![summary, hist]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_bimodal_traditional_heavy_tailed() {
+        let tabs = run(true);
+        let s = &tabs[0];
+        let fpga_p50: u64 = s.rows()[0][1].parse().unwrap();
+        let fpga_max: u64 = s.rows()[0][4].parse().unwrap();
+        let trad_p50: u64 = s.rows()[1][1].parse().unwrap();
+        let trad_p99: u64 = s.rows()[1][2].parse().unwrap();
+        assert!(fpga_p50 == 17 || fpga_p50 == 24);
+        assert!(fpga_max <= 24);
+        assert!(trad_p50 > 100_000, "hundreds of us: {trad_p50}");
+        assert!(trad_p99 > trad_p50, "variability");
+        // Orders of magnitude apart.
+        assert!(trad_p50 / fpga_p50 > 1_000);
+        // The FPGA histogram has exactly two buckets (17 and 24).
+        let h = &tabs[1];
+        let fpga_buckets: Vec<&Vec<String>> =
+            h.rows().iter().filter(|r| r[0] == "SafarDB").collect();
+        assert_eq!(fpga_buckets.len(), 2);
+    }
+}

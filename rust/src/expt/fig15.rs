@@ -1,0 +1,64 @@
+//! Fig 15: hybrid mode — response time and throughput as the fraction of
+//! operations served by FPGA-resident keys sweeps 10→90 % (YCSB and
+//! SmallBank).
+//!
+//! Expected shape: ~linear improvement with FPGA share (paper: 5.7× RT /
+//! 4.7× tput from 10 %→90 % at 50 % writes on YCSB).
+
+use crate::config::{HybridConfig, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::util::table::Table;
+
+const FPGA_PCTS: &[u8] = &[10, 30, 50, 70, 90];
+const WRITES: &[u8] = &[5, 25, 50];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for workload in [WorkloadKind::Ycsb, WorkloadKind::SmallBank] {
+        let mut t = Table::new(
+            &format!("Fig 15 — hybrid ops assignment on {}", workload.name()),
+            &["fpga_ops%", "upd%", "rt_us", "tput_ops_us"],
+        );
+        for &pct in FPGA_PCTS {
+            for &u in WRITES {
+                if quick && u == 25 {
+                    continue;
+                }
+                let mut cfg = SimConfig::safardb(workload);
+                cfg.n_replicas = 4;
+                cfg.update_pct = u;
+                let mut h = match workload {
+                    WorkloadKind::Ycsb => HybridConfig::ycsb_default(),
+                    _ => HybridConfig::smallbank_default(),
+                };
+                h.fpga_ops_pct = pct;
+                cfg.hybrid = Some(h);
+                let (cell, _) = run_cell(cfg, cell_ops(quick));
+                t.row(vec![pct.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_fpga_share_is_monotonically_better() {
+        for t in run(true) {
+            let series: Vec<(u8, f64, f64)> = t
+                .rows()
+                .iter()
+                .filter(|r| r[1] == "50")
+                .map(|r| (r[0].parse().unwrap(), r[2].parse().unwrap(), r[3].parse().unwrap()))
+                .collect();
+            let p10 = series.iter().find(|s| s.0 == 10).unwrap();
+            let p90 = series.iter().find(|s| s.0 == 90).unwrap();
+            assert!(p10.1 > p90.1 * 1.5, "RT improves with FPGA share: {} vs {}", p10.1, p90.1);
+            assert!(p90.2 > p10.2 * 1.5, "tput improves with FPGA share");
+        }
+    }
+}

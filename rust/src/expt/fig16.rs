@@ -1,0 +1,79 @@
+//! Fig 16: Zipfian skew in hybrid mode — θ ∈ [0, 2], update ratios
+//! 0/5/50 %, FPGA shares 20 % and 80 %.
+//!
+//! Expected shape: skew helps most when reads dominate AND most requests go
+//! to host-resident keys (CPU cache locality: paper 2.5× RT / 2.3× tput at
+//! 0 % writes, 20 % FPGA, θ 0→1.2); the benefit fades at 80 % FPGA share or
+//! higher write ratios.
+
+use crate::config::{HybridConfig, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::util::table::Table;
+
+const THETAS: &[f64] = &[0.0, 0.6, 1.2, 2.0];
+const WRITES: &[u8] = &[0, 5, 50];
+const FPGA_PCTS: &[u8] = &[20, 80];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for workload in [WorkloadKind::Ycsb, WorkloadKind::SmallBank] {
+        let mut t = Table::new(
+            &format!("Fig 16 — Zipfian skew on {} (hybrid)", workload.name()),
+            &["theta", "upd%", "fpga_ops%", "rt_us", "tput_ops_us"],
+        );
+        for &theta in THETAS {
+            for &u in WRITES {
+                for &pct in FPGA_PCTS {
+                    if quick && (u == 5 || theta == 0.6) {
+                        continue;
+                    }
+                    let mut cfg = SimConfig::safardb(workload);
+                    cfg.n_replicas = 4;
+                    cfg.update_pct = u;
+                    let mut h = match workload {
+                        WorkloadKind::Ycsb => HybridConfig::ycsb_default(),
+                        _ => HybridConfig::smallbank_default(),
+                    };
+                    h.fpga_ops_pct = pct;
+                    h.zipf_theta = theta;
+                    cfg.hybrid = Some(h);
+                    let (cell, _) = run_cell(cfg, cell_ops(quick));
+                    t.row(vec![
+                        format!("{theta:.1}"),
+                        u.to_string(),
+                        pct.to_string(),
+                        f3(cell.rt_us),
+                        f3(cell.tput),
+                    ]);
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(t: &Table, theta: &str, upd: &str, pct: &str) -> f64 {
+        t.rows()
+            .iter()
+            .find(|r| r[0] == theta && r[1] == upd && r[2] == pct)
+            .unwrap()[3]
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn skew_helps_host_heavy_reads_most() {
+        let t = &run(true)[0]; // YCSB
+        let gain_host = rt(t, "0.0", "0", "20") / rt(t, "1.2", "0", "20");
+        let gain_fpga = rt(t, "0.0", "0", "80") / rt(t, "1.2", "0", "80");
+        assert!(gain_host > 1.3, "read-heavy host-heavy skew gain {gain_host} (paper 2.5x; ratio compressed by PCIe floor — EXPERIMENTS.md)");
+        assert!(gain_host > gain_fpga, "host-heavy benefits more: {gain_host} vs {gain_fpga}");
+        let gain_writes = rt(t, "0.0", "50", "20") / rt(t, "1.2", "50", "20");
+        assert!(gain_writes < gain_host, "writes dampen the skew benefit");
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig 17: summarization (batch size 5) on SmallBank across hybrid FPGA
+//! shares — batching remote updates improves RT/throughput at the cost of
+//! staleness (paper: 4.9× RT / 5× tput at 40 % FPGA, 50 % writes).
+
+use crate::config::{HybridConfig, SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::util::table::Table;
+
+const FPGA_PCTS: &[u8] = &[20, 40, 60, 80];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 17 — summarization (size 5) on SmallBank, 50% writes",
+        &["summarize", "fpga_ops%", "rt_us", "tput_ops_us", "staleness_us"],
+    );
+    for &size in &[1u32, 5] {
+        for &pct in FPGA_PCTS {
+            if quick && (pct == 20 || pct == 60) {
+                continue;
+            }
+            let mut cfg = SimConfig::safardb(WorkloadKind::SmallBank);
+            cfg.n_replicas = 4;
+            cfg.update_pct = 50;
+            cfg.summarize_threshold = size;
+            let mut h = HybridConfig::smallbank_default();
+            h.fpga_ops_pct = pct;
+            cfg.hybrid = Some(h);
+            let (cell, rep) = run_cell(cfg, cell_ops(quick));
+            t.row(vec![
+                size.to_string(),
+                pct.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+                format!("{:.3}", rep.metrics.staleness.mean() / 1000.0),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batching_trades_staleness_for_performance() {
+        let t = &run(true)[0];
+        let get = |size: &str, pct: &str, col: usize| -> f64 {
+            t.rows()
+                .iter()
+                .find(|r| r[0] == size && r[1] == pct)
+                .unwrap()[col]
+                .parse()
+                .unwrap()
+        };
+        let rt_gain = get("1", "40", 2) / get("5", "40", 2);
+        let tput_gain = get("5", "40", 3) / get("1", "40", 3);
+        assert!(rt_gain > 1.2, "rt gain {rt_gain} (paper 4.9x)");
+        assert!(tput_gain > 1.2, "tput gain {tput_gain} (paper 5x)");
+        assert!(
+            get("5", "40", 4) > get("1", "40", 4),
+            "staleness must increase with batching"
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Fig 24 (appendix D.1): per-replica execution time for Bank Account,
+//! 8 nodes, 15 % writes — the leader runs >2× longer than any follower,
+//! which is why throughput is leader-bound.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, run_cell};
+use crate::rdt::RdtKind;
+use crate::util::table::{fmt_ns, Table};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 8;
+    cfg.update_pct = 15;
+    let (_, rep) = run_cell(cfg, cell_ops(quick));
+    let leader = rep.leader;
+    let mut t = Table::new(
+        "Fig 24 — per-replica execution time, Account, 8 nodes, 15% writes",
+        &["replica", "role", "exec_time"],
+    );
+    for (i, &busy) in rep.metrics.busy_ns.iter().enumerate() {
+        let role = if i == leader { "LEADER" } else { "follower" };
+        t.row(vec![i.to_string(), role.into(), fmt_ns(busy as f64)]);
+    }
+    let (l, f) = rep.metrics.leader_vs_followers(leader);
+    t.row(vec!["-".into(), "leader/follower-mean".into(), format!("{:.2}x", l as f64 / f)]);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{SimConfig, WorkloadKind};
+    use crate::expt::common::run_cell;
+    use crate::rdt::RdtKind;
+
+    #[test]
+    fn leader_execution_dominates() {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        cfg.n_replicas = 8;
+        cfg.update_pct = 15;
+        let (_, rep) = run_cell(cfg, 24_000);
+        let (l, f) = rep.metrics.leader_vs_followers(rep.leader);
+        assert!(
+            l as f64 > 2.0 * f,
+            "leader {l} should be >2x follower mean {f} (paper Fig 24)"
+        );
+    }
+}

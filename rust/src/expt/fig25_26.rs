@@ -1,0 +1,52 @@
+//! Figs 25/26 (appendix D.1): Courseware leader and mean-follower
+//! execution times across 3–8 replicas and 15/20/25 % writes.
+//!
+//! Expected shape: leader time grows with both write % (more conflicting
+//! ops) and replica count (more followers to coordinate); follower time
+//! *shrinks* with replica count (fewer calls each) and only marginally
+//! grows with write %.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, nodes, run_cell, UPDATE_SWEEP};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Figs 25/26 — Courseware leader & follower execution time (ms)",
+        &["nodes", "upd%", "leader_ms", "follower_mean_ms"],
+    );
+    for &n in nodes(quick) {
+        for &u in UPDATE_SWEEP {
+            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Courseware));
+            cfg.n_replicas = n;
+            cfg.update_pct = u;
+            let (_, rep) = run_cell(cfg, cell_ops(quick));
+            let (l, f) = rep.metrics.leader_vs_followers(rep.leader);
+            t.row(vec![
+                n.to_string(),
+                u.to_string(),
+                format!("{:.3}", l as f64 / 1e6),
+                format!("{:.3}", f / 1e6),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leader_grows_with_writes_follower_shrinks_with_nodes() {
+        let t = &run(true)[0];
+        let get = |n: &str, u: &str, col: usize| -> f64 {
+            t.rows().iter().find(|r| r[0] == n && r[1] == u).unwrap()[col].parse().unwrap()
+        };
+        // Leader time increases with write percentage (fixed nodes).
+        assert!(get("8", "25", 2) > get("8", "15", 2), "leader grows with writes");
+        // Follower mean decreases with node count (fixed write %).
+        assert!(get("3", "15", 3) > get("8", "15", 3), "follower shrinks with nodes");
+    }
+}

@@ -1,0 +1,76 @@
+//! Fig 27 / §5.5: peak power — SafarDB (whole Alveo U280 card) vs Hamband
+//! (CPU + RNIC + memory), averaged over CRDT and WRDT use cases.
+//!
+//! Expected: ≈35 W vs ≈160 W (≈4.5× less), with ≈2/3 of Hamband's power in
+//! the CPU.
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::expt::common::{cell_ops, run_cell};
+use crate::rdt::RdtKind;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 27 — power consumption (W)",
+        &["system", "workload-class", "total_w", "compute_w", "io_w"],
+    );
+    let classes: &[(&str, &[RdtKind])] = &[
+        ("CRDTs", RdtKind::crdt_benchmarks()),
+        ("WRDTs", RdtKind::wrdt_benchmarks()),
+    ];
+    for system in ["SafarDB", "Hamband"] {
+        for (class, kinds) in classes {
+            let mut total = Summary::new();
+            let mut compute = Summary::new();
+            let mut io = Summary::new();
+            for &rdt in kinds.iter() {
+                if quick && rdt != kinds[0] && rdt != kinds[kinds.len() - 1] {
+                    continue;
+                }
+                let mut cfg = match system {
+                    "SafarDB" => SimConfig::safardb(WorkloadKind::Micro(rdt)),
+                    _ => SimConfig::hamband(WorkloadKind::Micro(rdt)),
+                };
+                cfg.update_pct = 20;
+                let (_, rep) = run_cell(cfg, cell_ops(quick));
+                total.add(rep.power.total_w());
+                compute.add(rep.power.static_w + rep.power.dynamic_w);
+                io.add(rep.power.io_w);
+            }
+            t.row(vec![
+                system.into(),
+                class.to_string(),
+                format!("{:.1}", total.mean()),
+                format!("{:.1}", compute.mean()),
+                format!("{:.1}", io.mean()),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_ratio_matches_paper() {
+        let t = &run(true)[0];
+        let mean = |sys: &str| -> f64 {
+            let v: Vec<f64> = t
+                .rows()
+                .iter()
+                .filter(|r| r[0] == sys)
+                .map(|r| r[2].parse().unwrap())
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        let s = mean("SafarDB");
+        let h = mean("Hamband");
+        assert!((30.0..42.0).contains(&s), "SafarDB {s} W (paper ~35)");
+        assert!((130.0..180.0).contains(&h), "Hamband {h} W (paper ~160)");
+        let ratio = h / s;
+        assert!((3.5..5.5).contains(&ratio), "ratio {ratio} (paper ~4.5x)");
+    }
+}

@@ -1,0 +1,62 @@
+//! Experiment harness: one module per table/figure in the paper's
+//! evaluation (§5 + appendix D). Each `run(quick)` returns the tables the
+//! paper reports; `safardb expt <id>` prints them and writes CSV under
+//! `results/`.
+//!
+//! See DESIGN.md §4 for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured.
+
+pub mod ablation;
+pub mod common;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig24;
+pub mod fig25_26;
+pub mod fig27;
+pub mod table2_1;
+pub mod tablec_1;
+
+use crate::util::table::Table;
+
+/// Every experiment id, in paper order.
+pub const ALL: &[&str] = &[
+    "table2_1", "tableC_1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+    "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation",
+];
+
+/// Dispatch by id. `quick` shrinks op counts / sweep density for CI-speed
+/// runs; the shapes are preserved.
+pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
+    let tables = match id {
+        "table2_1" => table2_1::run(quick),
+        "tableC_1" | "tablec_1" => tablec_1::run(quick),
+        "fig6" => fig06::run(quick),
+        "fig7" => fig07::run(quick),
+        "fig8" => fig08::run(quick),
+        "fig9" => fig09::run(quick),
+        "fig10" => fig10::run(quick),
+        "fig11" => fig11::run(quick),
+        "fig12" => fig12::run(quick),
+        "fig13" => fig13::run(quick),
+        "fig14" => fig14::run(quick),
+        "fig15" => fig15::run(quick),
+        "fig16" => fig16::run(quick),
+        "fig17" => fig17::run(quick),
+        "fig24" => fig24::run(quick),
+        "fig25_26" => fig25_26::run(quick),
+        "fig27" => fig27::run(quick),
+        "ablation" => ablation::run(quick),
+        _ => return None,
+    };
+    Some(tables)
+}

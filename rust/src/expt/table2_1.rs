@@ -1,0 +1,59 @@
+//! Table 2.1: average Read/Write verb latencies, traditional RDMA vs
+//! network-attached FPGA (1M random requests). Expected: 1.8/2.0 µs vs
+//! ~9 ns (the FPGA number is the on-chip AXI verb path the paper measured).
+
+use crate::mem::{MemKind, MemParams};
+use crate::net::fabric::FabricParams;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let iters = if quick { 100_000 } else { 1_000_000 };
+    let mem = MemParams::default_params();
+    let trad = FabricParams::traditional();
+    let fpga = FabricParams::fpga();
+    let mut rng = Rng::new(21);
+
+    let mut t_read = Summary::new();
+    let mut t_write = Summary::new();
+    let mut f_read = Summary::new();
+    let mut f_write = Summary::new();
+    for _ in 0..iters {
+        let bytes = 8 + rng.gen_range(56);
+        t_read.add(trad.read_rtt_ns(bytes, MemKind::HostDram, &mem) as f64);
+        t_write.add(trad.ack_at_ns(bytes, MemKind::HostDram, &mem) as f64);
+        // FPGA: the measured on-chip path (user kernel -> AXI -> HBM).
+        f_read.add(fpga.local_verb_ns(&mem) as f64);
+        f_write.add(fpga.local_verb_ns(&mem) as f64);
+    }
+
+    let mut t = Table::new(
+        "Table 2.1 — average RDMA verb latencies (1M random requests)",
+        &["fabric", "read_us", "write_us"],
+    );
+    t.row(vec![
+        "Traditional RDMA".into(),
+        format!("{:.4}", t_read.mean() / 1000.0),
+        format!("{:.4}", t_write.mean() / 1000.0),
+    ]);
+    t.row(vec![
+        "Network-attached FPGA".into(),
+        format!("{:.4}", f_read.mean() / 1000.0),
+        format!("{:.4}", f_write.mean() / 1000.0),
+    ]);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reproduces_two_orders_of_magnitude_gap() {
+        let t = &super::run(true)[0];
+        let trad_read: f64 = t.rows()[0][1].parse().unwrap();
+        let fpga_read: f64 = t.rows()[1][1].parse().unwrap();
+        assert!((1.7..1.9).contains(&trad_read), "trad={trad_read}");
+        assert!(fpga_read < 0.02, "fpga={fpga_read}");
+        assert!(trad_read / fpga_read > 100.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Table C.1: FPGA-specific verb latencies — Write(HBM) 413 ns,
+//! BRAM_Write(_Through) 309 ns, Register_Write(_Through) 285 ns (one-way,
+//! ACKs excluded, as the paper notes).
+
+use crate::mem::{MemKind, MemParams};
+use crate::net::fabric::FabricParams;
+use crate::util::table::Table;
+
+pub fn run(_quick: bool) -> Vec<Table> {
+    let mem = MemParams::default_params();
+    let f = FabricParams::fpga();
+    let mut t = Table::new(
+        "Table C.1 — FPGA-specific RDMA verb latencies (one-way, no ACK)",
+        &["operation", "latency_ns"],
+    );
+    let rows: &[(&str, MemKind)] = &[
+        ("Write", MemKind::Hbm),
+        ("BRAM_Write", MemKind::Bram),
+        ("BRAM_Write_Through", MemKind::Bram),
+        ("Register_Write", MemKind::Reg),
+        ("Register_Write_Through", MemKind::Reg),
+    ];
+    for (name, kind) in rows {
+        t.row(vec![name.to_string(), f.one_way_ns(0, *kind, &mem).to_string()]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn matches_paper_values() {
+        let t = &super::run(true)[0];
+        let v: Vec<u64> = t.rows().iter().map(|r| r[1].parse().unwrap()).collect();
+        assert_eq!(v, vec![413, 309, 309, 285, 285]);
+    }
+}

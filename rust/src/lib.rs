@@ -1,0 +1,25 @@
+//! # SafarDB (simulated reproduction)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *"SafarDB:
+//! FPGA-Accelerated Distributed Transactions via Replicated Data Types"*.
+//!
+//! Layer 3 (this crate) is the coordinator: a deterministic discrete-event
+//! cluster simulation in which real CRDT/WRDT state is replicated over a
+//! calibrated RDMA model, with Mu SMR for conflicting transactions, plus
+//! the Hamband and Waverunner baselines, the paper's complete experiment
+//! harness, and a PJRT runtime executing the AOT-compiled Pallas batch
+//! kernels on the data plane. See DESIGN.md for the system inventory.
+
+pub mod config;
+pub mod engine;
+pub mod expt;
+pub mod mem;
+pub mod metrics;
+pub mod net;
+pub mod power;
+pub mod rdt;
+pub mod runtime;
+pub mod sim;
+pub mod smr;
+pub mod util;
+pub mod workload;

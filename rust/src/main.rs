@@ -1,0 +1,157 @@
+//! SafarDB launcher.
+//!
+//! ```text
+//! safardb expt <id|all> [--quick]     reproduce a paper table/figure
+//! safardb list                        list experiment ids
+//! safardb run [config.kv] [k=v ...]   run one cluster config, print report
+//! safardb runtime-check [dir]         load + execute the AOT artifacts
+//! ```
+//! (hand-rolled arg parsing: the offline crate set has no clap.)
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::expt;
+use safardb::rdt::RdtKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("expt") => cmd_expt(&args[1..]),
+        Some("list") => {
+            for id in expt::ALL {
+                println!("{id}");
+            }
+            0
+        }
+        Some("run") => cmd_run(&args[1..]),
+        Some("runtime-check") => cmd_runtime_check(&args[1..]),
+        _ => {
+            eprintln!("usage: safardb <expt|list|run|runtime-check> [...]");
+            eprintln!("  expt <id|all> [--quick]  reproduce a paper table/figure (see `safardb list`)");
+            eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
+            eprintln!("  runtime-check [dir]      verify the AOT artifacts load and execute");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_expt(args: &[String]) -> i32 {
+    let quick = args.iter().any(|a| a == "--quick");
+    let ids: Vec<&str> = args.iter().filter(|a| !a.starts_with("--")).map(String::as_str).collect();
+    let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
+        expt::ALL.to_vec()
+    } else {
+        ids
+    };
+    for id in ids {
+        let Some(tables) = expt::run(id, quick) else {
+            eprintln!("unknown experiment '{id}'; try `safardb list`");
+            return 2;
+        };
+        for t in &tables {
+            println!("{}", t.render());
+        }
+        expt::common::save(&tables, id);
+        println!("[saved results/{id}*.csv]\n");
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+    for a in args {
+        if a.ends_with(".kv") || a.contains('/') {
+            match std::fs::read_to_string(a) {
+                Ok(body) => {
+                    if let Err(e) = cfg.apply_kv(&body) {
+                        eprintln!("{a}: {e}");
+                        return 2;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{a}: {e}");
+                    return 2;
+                }
+            }
+        } else if let Some((k, v)) = a.split_once('=') {
+            if let Err(e) = cfg.apply_kv(&format!("{k} = {v}")) {
+                eprintln!("{e}");
+                return 2;
+            }
+        } else {
+            // workload selector: rdt name / ycsb / smallbank
+            cfg.workload = match a.to_lowercase().as_str() {
+                "ycsb" => WorkloadKind::Ycsb,
+                "smallbank" => WorkloadKind::SmallBank,
+                "pn-counter" | "pncounter" => WorkloadKind::Micro(RdtKind::PnCounter),
+                "lww" | "lww-register" => WorkloadKind::Micro(RdtKind::LwwRegister),
+                "g-set" | "gset" => WorkloadKind::Micro(RdtKind::GSet),
+                "pn-set" | "pnset" => WorkloadKind::Micro(RdtKind::PnSet),
+                "2p-set" | "2pset" => WorkloadKind::Micro(RdtKind::TwoPSet),
+                "account" => WorkloadKind::Micro(RdtKind::Account),
+                "courseware" => WorkloadKind::Micro(RdtKind::Courseware),
+                "project" => WorkloadKind::Micro(RdtKind::Project),
+                "movie" => WorkloadKind::Micro(RdtKind::Movie),
+                "auction" => WorkloadKind::Micro(RdtKind::Auction),
+                other => {
+                    eprintln!("unknown workload '{other}'");
+                    return 2;
+                }
+            };
+        }
+    }
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        return 2;
+    }
+    let sys = cfg.system;
+    let name = cfg.workload.name();
+    let rep = cluster::run(cfg);
+    println!("system      : {}", sys.name());
+    println!("workload    : {name}");
+    println!(
+        "response    : {:.3} us (p50 {:.3}, p99 {:.3})",
+        rep.response_us(),
+        rep.metrics.response.p50() as f64 / 1000.0,
+        rep.metrics.response.p99() as f64 / 1000.0
+    );
+    println!("throughput  : {:.3} OPs/us", rep.throughput());
+    println!("power       : {:.1} W", rep.power.total_w());
+    println!("converged   : {}", rep.converged());
+    println!("invariants  : {}", rep.invariants_ok);
+    println!("smr commits : {}", rep.metrics.smr_commits);
+    println!("rejected    : {}", rep.metrics.rejected);
+    println!("elections   : {}", rep.metrics.elections);
+    println!(
+        "sim events  : {} ({:.2}M events/s wall)",
+        rep.metrics.events,
+        rep.metrics.events as f64 / rep.wall_s.max(1e-9) / 1e6
+    );
+    if rep.converged() && rep.invariants_ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_runtime_check(args: &[String]) -> i32 {
+    let dir = args.first().map(String::as_str).unwrap_or(safardb::runtime::DEFAULT_ARTIFACTS);
+    match safardb::runtime::Runtime::load(dir) {
+        Ok(rt) => {
+            println!("platform : {}", rt.platform());
+            println!("artifacts: {:?}", rt.names());
+            let mut acc = safardb::runtime::Accelerator::new(rt);
+            let v = acc
+                .pn_counter_merge(&[vec![1.0, 2.0], vec![3.0, 4.0]], &[vec![0.5; 2], vec![0.5; 2]])
+                .expect("pn_counter_merge");
+            assert_eq!(v, vec![3.0, 5.0]);
+            println!("pn_counter_merge OK ({} calls)", acc.calls());
+            0
+        }
+        Err(e) => {
+            eprintln!("runtime load failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! An exact LRU cache over keys, used to model the host CPU's last-level
+//! cache for the hybrid-mode experiments (Fig 16: "with higher skew, the
+//! hot host keys are reused more and stay in the CPU caches").
+//!
+//! O(1) access via HashMap + intrusive doubly-linked list over a slab.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    key: u64,
+    prev: usize,
+    next: usize,
+}
+
+#[derive(Debug)]
+pub struct LruCache {
+    capacity: usize,
+    map: HashMap<u64, usize>,
+    slab: Vec<Node>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    hits: u64,
+    misses: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "LruCache capacity must be positive");
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity + 1),
+            slab: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Touch `key`: returns true on hit. On miss the key is inserted,
+    /// evicting the least-recently-used entry if full.
+    pub fn access(&mut self, key: u64) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.unlink(idx);
+            self.push_front(idx);
+            self.hits += 1;
+            return true;
+        }
+        self.misses += 1;
+        if self.slab.len() < self.capacity {
+            let idx = self.slab.len();
+            self.slab.push(Node { key, prev: NIL, next: NIL });
+            self.map.insert(key, idx);
+            self.push_front(idx);
+        } else {
+            // Evict LRU in place.
+            let idx = self.tail;
+            debug_assert_ne!(idx, NIL);
+            self.unlink(idx);
+            let old_key = self.slab[idx].key;
+            self.map.remove(&old_key);
+            self.slab[idx].key = key;
+            self.map.insert(key, idx);
+            self.push_front(idx);
+        }
+        false
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.slab[idx].prev, self.slab[idx].next);
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = NIL;
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_after_insert() {
+        let mut c = LruCache::new(2);
+        assert!(!c.access(1));
+        assert!(c.access(1));
+        assert_eq!(c.counters(), (1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.access(1);
+        c.access(2);
+        c.access(1); // 1 now MRU
+        c.access(3); // evicts 2 -> cache {1, 3}
+        assert!(c.access(3), "3 still resident");
+        assert!(c.access(1), "1 still resident");
+        assert!(!c.access(2), "2 was evicted");
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let mut c = LruCache::new(10);
+        for k in 0..1000 {
+            c.access(k);
+        }
+        assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn skewed_stream_has_high_hit_rate() {
+        // The Fig 16 mechanism in miniature: zipf-ish reuse of a hot head.
+        let mut c = LruCache::new(100);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let z = crate::util::rng::Zipf::new(10_000, 1.2);
+        for _ in 0..50_000 {
+            c.access(z.sample(&mut rng));
+        }
+        assert!(c.hit_rate() > 0.5, "hit_rate={}", c.hit_rate());
+
+        let mut u = LruCache::new(100);
+        for _ in 0..50_000 {
+            u.access(rng.gen_range(10_000));
+        }
+        assert!(u.hit_rate() < 0.05, "uniform hit_rate={}", u.hit_rate());
+    }
+
+    #[test]
+    fn single_entry_cache() {
+        let mut c = LruCache::new(1);
+        assert!(!c.access(5));
+        assert!(c.access(5));
+        assert!(!c.access(6));
+        assert!(!c.access(5));
+    }
+}

@@ -1,0 +1,172 @@
+//! Memory-hierarchy models (appendix C, Figs 18–23).
+//!
+//! Which memory a path touches is the entire story of the paper's Q1/Q6
+//! results, so the model is explicit: FPGA registers / BRAM / HBM, host
+//! DRAM behind a real LRU cache (drives the Fig 16 Zipfian-skew result),
+//! and the PCIe hop that separates host from device.
+
+pub mod cache;
+
+pub use cache::LruCache;
+
+/// Where a payload lives / lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// FPGA fabric registers (Table C.1 Register_Write).
+    Reg,
+    /// FPGA on-chip BRAM (Table C.1 BRAM_Write) — the user kernel's state.
+    Bram,
+    /// FPGA off-chip HBM (8 GB buffer, §3) — contribution arrays, queues,
+    /// replication logs.
+    Hbm,
+    /// Host DRAM behind the CPU cache hierarchy.
+    HostDram,
+}
+
+/// Access latencies (ns). Values calibrated so that the end-to-end verb
+/// latencies reproduce Tables 2.1 and C.1 — see `net::fabric` tests.
+#[derive(Clone, Copy, Debug)]
+pub struct MemParams {
+    pub reg_ns: u64,
+    pub bram_ns: u64,
+    /// HBM random access from the user kernel over MM-AXI. Real HBM2
+    /// random-read latency on the U280 is in the hundreds of ns — this is
+    /// exactly why §4.1's buffering/RPC configurations win (Fig 6).
+    pub hbm_axi_ns: u64,
+    /// Per-element cost of subsequent beats in an HBM burst read (folding
+    /// an N-slot contribution array pipelines after the first access).
+    pub hbm_burst_ns: u64,
+    /// On-chip AXI hop (user kernel <-> network kernel handshake); with
+    /// `verb_issue` this is Table 2.1's 9 ns FPGA verb path.
+    pub axi_hop_ns: u64,
+    /// HBM accessed from the network kernel on the receive path (the
+    /// +128 ns that separates Write from Register_Write in Table C.1).
+    pub hbm_net_ns: u64,
+    /// Host DRAM access (row hit average).
+    pub dram_ns: u64,
+    /// CPU last-level-cache hit.
+    pub cache_hit_ns: u64,
+    /// One PCIe transaction (posted write / read completion), host <-> device.
+    pub pcie_ns: u64,
+    /// Number of dependent memory touches a host-side keyed lookup costs on
+    /// a miss (index walk + data), multiplying `dram_ns`.
+    pub host_lookup_depth: u64,
+}
+
+impl MemParams {
+    pub fn default_params() -> Self {
+        MemParams {
+            reg_ns: 1,
+            bram_ns: 3,
+            hbm_axi_ns: 220,
+            hbm_burst_ns: 25,
+            axi_hop_ns: 5,
+            hbm_net_ns: 128,
+            dram_ns: 90,
+            cache_hit_ns: 14,
+            pcie_ns: 450,
+            host_lookup_depth: 10,
+        }
+    }
+
+    /// Write latency as seen by the *network kernel / RNIC* landing a
+    /// payload (the receive-side component of a verb).
+    pub fn net_write_ns(&self, kind: MemKind) -> u64 {
+        match kind {
+            MemKind::Reg => self.reg_ns.saturating_sub(1), // wired directly
+            MemKind::Bram => self.bram_ns + 21,            // BRAM port arb
+            MemKind::Hbm => self.hbm_net_ns,
+            // Host DRAM behind PCIe: DMA write + posted PCIe transaction.
+            MemKind::HostDram => self.pcie_ns + self.dram_ns,
+        }
+    }
+
+    /// Read latency from the local compute element (user kernel or CPU).
+    pub fn local_read_ns(&self, kind: MemKind) -> u64 {
+        match kind {
+            MemKind::Reg => self.reg_ns,
+            MemKind::Bram => self.bram_ns,
+            MemKind::Hbm => self.hbm_axi_ns,
+            MemKind::HostDram => self.dram_ns,
+        }
+    }
+
+    /// Local write symmetric with read for on-chip kinds.
+    pub fn local_write_ns(&self, kind: MemKind) -> u64 {
+        self.local_read_ns(kind)
+    }
+
+    /// Host keyed read through the cache model: `hit` decides LLC vs a
+    /// dependent DRAM walk (Fig 16's mechanism).
+    pub fn host_keyed_read_ns(&self, hit: bool) -> u64 {
+        if hit {
+            self.cache_hit_ns * 2 // index + data, both resident
+        } else {
+            self.dram_ns * self.host_lookup_depth
+        }
+    }
+
+    /// Burst fold of an `n`-slot array in a memory kind (the §4.1 "read the
+    /// contribution array on access" path). First access pays full random
+    /// latency; subsequent slots pipeline.
+    pub fn fold_read_ns(&self, kind: MemKind, n: usize) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        let tail = (n as u64 - 1)
+            * match kind {
+                MemKind::Hbm => self.hbm_burst_ns,
+                MemKind::HostDram => self.dram_ns, // DMA-invalidated lines: no locality
+                _ => 1,
+            };
+        self.local_read_ns(kind) + tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_write_ordering_matches_table_c1() {
+        // Register < BRAM < HBM < host (Table C.1 ordering).
+        let m = MemParams::default_params();
+        assert!(m.net_write_ns(MemKind::Reg) < m.net_write_ns(MemKind::Bram));
+        assert!(m.net_write_ns(MemKind::Bram) < m.net_write_ns(MemKind::Hbm));
+        assert!(m.net_write_ns(MemKind::Hbm) < m.net_write_ns(MemKind::HostDram));
+    }
+
+    #[test]
+    fn table_c1_deltas() {
+        let m = MemParams::default_params();
+        // BRAM_Write - Register_Write = 24 ns; Write(HBM) - Register = 128 ns.
+        assert_eq!(m.net_write_ns(MemKind::Bram) - m.net_write_ns(MemKind::Reg), 24);
+        assert_eq!(m.net_write_ns(MemKind::Hbm) - m.net_write_ns(MemKind::Reg), 128);
+    }
+
+    #[test]
+    fn cache_hit_much_cheaper_than_miss() {
+        let m = MemParams::default_params();
+        assert!(m.host_keyed_read_ns(true) * 5 < m.host_keyed_read_ns(false));
+    }
+
+    #[test]
+    fn on_chip_reads_are_fast_but_hbm_random_is_not() {
+        let m = MemParams::default_params();
+        assert!(m.local_read_ns(MemKind::Bram) < 10);
+        // HBM *random* latency exceeds DRAM — the reason buffering into
+        // BRAM (Fig 6) matters at all.
+        assert!(m.local_read_ns(MemKind::Hbm) > m.local_read_ns(MemKind::HostDram));
+    }
+
+    #[test]
+    fn fold_read_pipelines_after_first_beat() {
+        let m = MemParams::default_params();
+        let one = m.fold_read_ns(MemKind::Hbm, 1);
+        let eight = m.fold_read_ns(MemKind::Hbm, 8);
+        assert_eq!(one, m.hbm_axi_ns);
+        assert_eq!(eight, m.hbm_axi_ns + 7 * m.hbm_burst_ns);
+        assert!(eight < 8 * one, "burst must beat 8 random reads");
+        assert_eq!(m.fold_read_ns(MemKind::Hbm, 0), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Run metrics: the paper's three reported quantities — response time,
+//! throughput (OPs/µs), power (W) — plus per-replica execution time
+//! (Figs 24–26), permission-switch samples (Fig 13), staleness
+//! (summarization trade-off, §5.4), and engine counters for §Perf.
+
+use crate::util::stats::{Histogram, Summary};
+
+#[derive(Debug)]
+pub struct RunMetrics {
+    /// Response time of completed client ops (ns).
+    pub response: Histogram,
+    /// Per-replica busy time (execution time in the paper's Fig 24 sense).
+    pub busy_ns: Vec<u64>,
+    /// Per-replica completed client ops.
+    pub completed: Vec<u64>,
+    /// Running sum of `completed` (hot-loop termination check, §Perf 2).
+    pub completed_sum: u64,
+    /// Updates rejected by permissibility (impermissible at execution).
+    pub rejected: u64,
+    /// Conflicting ops that went through SMR.
+    pub smr_commits: u64,
+    /// Verbs put on the wire.
+    pub verbs: u64,
+    /// Transactions executed (local + remote applies) for power accounting.
+    pub executions: u64,
+    /// Permission-switch latencies sampled during leader changes (Fig 13).
+    pub perm_switch: Histogram,
+    /// Staleness: local-apply -> propagation-issue delay for summarized ops.
+    pub staleness: Summary,
+    /// Leader elections completed.
+    pub elections: u64,
+    /// Virtual makespan of the run (ns): last client completion.
+    pub makespan_ns: u64,
+    /// Last client-op completion time (feeds makespan).
+    pub last_completion_ns: u64,
+    /// DES events processed (engine §Perf).
+    pub events: u64,
+}
+
+impl RunMetrics {
+    pub fn new(n: usize) -> Self {
+        RunMetrics {
+            response: Histogram::new(),
+            busy_ns: vec![0; n],
+            completed: vec![0; n],
+            completed_sum: 0,
+            rejected: 0,
+            smr_commits: 0,
+            verbs: 0,
+            executions: 0,
+            perm_switch: Histogram::new(),
+            staleness: Summary::new(),
+            elections: 0,
+            makespan_ns: 0,
+            last_completion_ns: 0,
+            events: 0,
+        }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        debug_assert_eq!(self.completed_sum, self.completed.iter().sum::<u64>());
+        self.completed_sum
+    }
+
+    /// Mean response time in µs (the paper's Figs 6–12 y-axis).
+    pub fn response_us(&self) -> f64 {
+        self.response.mean() / 1_000.0
+    }
+
+    /// Throughput in OPs/µs: completed ops over the system makespan, which
+    /// is constrained by the longest-running replica (appendix D.1).
+    pub fn throughput_ops_per_us(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.total_completed() as f64 / (self.makespan_ns as f64 / 1_000.0)
+    }
+
+    /// Busy time of the leader vs mean follower busy time (Fig 24).
+    pub fn leader_vs_followers(&self, leader: usize) -> (u64, f64) {
+        let l = self.busy_ns[leader];
+        let others: Vec<u64> = self
+            .busy_ns
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != leader)
+            .map(|(_, &b)| b)
+            .collect();
+        let mean = others.iter().sum::<u64>() as f64 / others.len().max(1) as f64;
+        (l, mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_definition_uses_makespan() {
+        let mut m = RunMetrics::new(2);
+        m.completed = vec![500, 500];
+        m.completed_sum = 1_000;
+        m.makespan_ns = 1_000_000; // 1 ms
+        assert!((m.throughput_ops_per_us() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leader_vs_followers_split() {
+        let mut m = RunMetrics::new(4);
+        m.busy_ns = vec![100, 1000, 120, 80];
+        let (l, f) = m.leader_vs_followers(1);
+        assert_eq!(l, 1000);
+        assert!((f - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_unit_conversion() {
+        let mut m = RunMetrics::new(1);
+        m.response.record(2_000);
+        m.response.record(4_000);
+        assert!((m.response_us() - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulated RDMA networking: verbs, queue pairs with permissions, fabric
+//! cost models (traditional CPU RNIC vs network-attached FPGA), and the
+//! delivery scheduler that turns an issued verb into `VerbDeliver` /
+//! `AckDeliver` events with calibrated latencies.
+
+pub mod fabric;
+pub mod network;
+pub mod qp;
+pub mod verbs;
+
+pub use fabric::{FabricParams, PermSwitchModel};
+pub use network::Network;
+pub use qp::QpTable;
+pub use verbs::{Payload, ReadData, ReadTarget, Verb, VerbKind};

@@ -1,0 +1,228 @@
+//! The network actor: turns issued verbs into delivery/ACK events with
+//! fabric-calibrated latencies, enforcing reliable in-order delivery per
+//! (src, dst) pair (the paper's network model, §3).
+
+use crate::mem::MemParams;
+use crate::net::fabric::FabricParams;
+use crate::net::qp::QpTable;
+use crate::net::verbs::{Verb, VerbKind};
+use crate::sim::{EventKind, EventQueue, NodeId, Time};
+
+/// Outcome of issuing a verb, as seen by the initiator.
+#[derive(Clone, Copy, Debug)]
+pub struct IssueOutcome {
+    /// When the initiating compute element regains control.
+    pub initiator_free_at: Time,
+    /// When the payload is visible at the destination (None if nacked).
+    pub delivered_at: Option<Time>,
+}
+
+#[derive(Debug)]
+pub struct Network {
+    mem: MemParams,
+    /// In-order channel state: earliest next delivery time per (src, dst).
+    channel_clear_at: Vec<Vec<Time>>,
+    /// Separate lane for heartbeat-plane traffic (never queued behind bulk
+    /// replication).
+    hb_clear_at: Vec<Vec<Time>>,
+    /// Crash state mirror (verbs to a crashed node vanish; no ACK).
+    crashed: Vec<bool>,
+    pub verbs_issued: u64,
+    pub verbs_nacked: u64,
+}
+
+impl Network {
+    pub fn new(n: usize, mem: MemParams) -> Self {
+        Network {
+            mem,
+            channel_clear_at: vec![vec![0; n]; n],
+            hb_clear_at: vec![vec![0; n]; n],
+            crashed: vec![false; n],
+            verbs_issued: 0,
+            verbs_nacked: 0,
+        }
+    }
+
+    pub fn set_crashed(&mut self, node: NodeId, crashed: bool) {
+        self.crashed[node] = crashed;
+    }
+
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.crashed[node]
+    }
+
+    pub fn mem(&self) -> &MemParams {
+        &self.mem
+    }
+
+    /// Issue `verb` from `src` to `dst` at time `now` over `fabric`.
+    ///
+    /// Schedules `VerbDeliver` at the destination and, when the verb kind
+    /// carries a completion, `AckDeliver`/`NackDeliver` back at the source.
+    /// Returns initiator-side timing so the caller can advance its busy
+    /// clock (Hamband blocks on the CQE; SafarDB only pays the issue cost).
+    pub fn issue(
+        &mut self,
+        q: &mut EventQueue,
+        qps: &QpTable,
+        fabric: &FabricParams,
+        now: Time,
+        src: NodeId,
+        dst: NodeId,
+        verb: Verb,
+        want_completion: bool,
+    ) -> IssueOutcome {
+        self.verbs_issued += 1;
+        let bytes = verb.wire_bytes();
+        let token = verb.token;
+
+        // Permission check at the destination QPC. Only the follower's
+        // leader-write QP is fenced by the Permission Switch (§4.4);
+        // relaxed-path traffic rides per-peer QPs that stay open, and
+        // one-sided reads are answered from memory regardless.
+        let fenced = verb.leader_qp && !qps.is_open(src, dst);
+
+        if fenced || self.crashed[dst] {
+            self.verbs_nacked += 1;
+            // Fenced QPs NACK after a round trip; a crashed destination
+            // stalls the verb until the retransmission timeout expires.
+            let nack_at = if self.crashed[dst] {
+                now + fabric.crash_timeout_ns
+            } else {
+                now + fabric.ack_at_ns(bytes, verb.dst_mem, &self.mem)
+            };
+            if want_completion {
+                q.push(nack_at, src, EventKind::NackDeliver { token });
+            }
+            let free_at = if fabric.wait_ack { nack_at } else { now + fabric.verb_issue_ns };
+            return IssueOutcome { initiator_free_at: free_at, delivered_at: None };
+        }
+
+        let one_way = fabric.one_way_ns(bytes, verb.dst_mem, &self.mem);
+        // Reliable in-order per channel: delivery can't overtake the
+        // previous verb on the same (src, dst) pair. Heartbeat-plane verbs
+        // ride their own lane.
+        let clear = if verb.payload.is_heartbeat() {
+            &mut self.hb_clear_at[src][dst]
+        } else {
+            &mut self.channel_clear_at[src][dst]
+        };
+        let deliver_at = (now + one_way).max(*clear + 1);
+        *clear = deliver_at;
+
+        let is_read = verb.kind == VerbKind::Read;
+        q.push(deliver_at, dst, EventKind::VerbDeliver { src, verb });
+
+        let ack_at = deliver_at + fabric.ack_overhead_ns;
+        // Read verbs complete via the remote's ReadResp, not an ACK; they
+        // still NACK above when fenced/crashed so initiators see failures.
+        if want_completion && !is_read {
+            q.push(ack_at, src, EventKind::AckDeliver { token });
+        }
+        let free_at = if fabric.wait_ack { ack_at } else { now + fabric.verb_issue_ns };
+        IssueOutcome { initiator_free_at: free_at, delivered_at: Some(deliver_at) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemKind;
+    use crate::net::verbs::Payload;
+
+    fn setup(n: usize) -> (EventQueue, Network, QpTable, FabricParams) {
+        (
+            EventQueue::new(),
+            Network::new(n, MemParams::default_params()),
+            QpTable::full_mesh(n),
+            FabricParams::fpga(),
+        )
+    }
+
+    fn raw_write(token: u64) -> Verb {
+        Verb::write(MemKind::Hbm, Payload::Raw { bytes: 64 }, token)
+    }
+
+    #[test]
+    fn delivery_and_ack_scheduled() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(7), true);
+        assert!(out.delivered_at.is_some());
+        let ev1 = q.pop().unwrap();
+        assert!(matches!(ev1.kind, EventKind::VerbDeliver { src: 0, .. }));
+        assert_eq!(ev1.dest, 1);
+        let ev2 = q.pop().unwrap();
+        assert!(matches!(ev2.kind, EventKind::AckDeliver { token: 7 }));
+        assert_eq!(ev2.dest, 0);
+        assert!(ev2.time > ev1.time);
+    }
+
+    #[test]
+    fn in_order_delivery_per_channel() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        // Issue a large verb then a tiny one: the tiny one must not overtake.
+        let big = Verb::write(MemKind::Hbm, Payload::Raw { bytes: 8192 }, 1);
+        let tiny = Verb::write(MemKind::Reg, Payload::Raw { bytes: 1 }, 2);
+        let d1 = net.issue(&mut q, &qps, &fab, 0, 0, 1, big, false).delivered_at.unwrap();
+        let d2 = net.issue(&mut q, &qps, &fab, 5, 0, 1, tiny, false).delivered_at.unwrap();
+        assert!(d2 > d1, "FIFO per (src,dst): {d2} <= {d1}");
+    }
+
+    #[test]
+    fn closed_qp_nacks_writes() {
+        let (mut q, mut net, mut qps, fab) = setup(2);
+        qps.close(1, 0);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(9).on_leader_qp(), true);
+        assert!(out.delivered_at.is_none());
+        let ev = q.pop().unwrap();
+        assert!(matches!(ev.kind, EventKind::NackDeliver { token: 9 }));
+        assert_eq!(net.verbs_nacked, 1);
+    }
+
+    #[test]
+    fn reads_bypass_write_fencing() {
+        let (mut q, mut net, mut qps, fab) = setup(2);
+        qps.close(1, 0);
+        let r = Verb::read(crate::net::verbs::ReadTarget::Heartbeat, 3);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, r, false);
+        assert!(out.delivered_at.is_some(), "one-sided reads still answered");
+    }
+
+    #[test]
+    fn relaxed_path_writes_unfenced() {
+        // Only the leader-write QP is fenced (§4.4); relaxed RDT traffic
+        // keeps flowing through a permission switch.
+        let (mut q, mut net, mut qps, fab) = setup(2);
+        qps.close(1, 0);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(5), false);
+        assert!(out.delivered_at.is_some());
+    }
+
+    #[test]
+    fn crashed_destination_swallows_verbs() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        net.set_crashed(1, true);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(4), true);
+        assert!(out.delivered_at.is_none());
+        assert!(matches!(q.pop().unwrap().kind, EventKind::NackDeliver { token: 4 }));
+    }
+
+    #[test]
+    fn wait_ack_fabric_blocks_initiator() {
+        let mut q = EventQueue::new();
+        let mut net = Network::new(2, MemParams::default_params());
+        let qps = QpTable::full_mesh(2);
+        let fab = FabricParams::traditional();
+        let out = net.issue(
+            &mut q,
+            &qps,
+            &fab,
+            0,
+            0,
+            1,
+            Verb::write(MemKind::HostDram, Payload::Raw { bytes: 64 }, 1),
+            true,
+        );
+        assert!(out.initiator_free_at > 1_900, "CQE wait: {}", out.initiator_free_at);
+    }
+}

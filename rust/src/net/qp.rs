@@ -1,0 +1,80 @@
+//! Queue-pair permission table (QPC, §2.2).
+//!
+//! Each follower keeps one open QP granting write permission to the
+//! current leader; on suspected leader failure it closes that QP and opens
+//! one for the new leader (§4.4 "Permission Switch"). Writes through a
+//! closed QP fail with a NACK — the mechanism Mu leans on to fence a
+//! deposed leader.
+
+use crate::sim::NodeId;
+
+#[derive(Debug)]
+pub struct QpTable {
+    n: usize,
+    /// `open[dst][src]` — may `src` write into `dst`'s memory?
+    open: Vec<Vec<bool>>,
+}
+
+impl QpTable {
+    /// All-open mesh (relaxed-path traffic is always permitted; only the
+    /// leader-write QPs get fenced).
+    pub fn full_mesh(n: usize) -> Self {
+        QpTable { n, open: vec![vec![true; n]; n] }
+    }
+
+    pub fn is_open(&self, src: NodeId, dst: NodeId) -> bool {
+        self.open[dst][src]
+    }
+
+    pub fn close(&mut self, dst: NodeId, src: NodeId) {
+        self.open[dst][src] = false;
+    }
+
+    pub fn open(&mut self, dst: NodeId, src: NodeId) {
+        self.open[dst][src] = true;
+    }
+
+    /// Permission switch at `dst`: fence `old_leader`, grant `new_leader`.
+    pub fn switch_leader(&mut self, dst: NodeId, old_leader: NodeId, new_leader: NodeId) {
+        if old_leader != dst {
+            self.close(dst, old_leader);
+        }
+        self.open(dst, new_leader);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_fully_open() {
+        let t = QpTable::full_mesh(4);
+        for s in 0..4 {
+            for d in 0..4 {
+                assert!(t.is_open(s, d));
+            }
+        }
+    }
+
+    #[test]
+    fn close_blocks_one_direction_only() {
+        let mut t = QpTable::full_mesh(3);
+        t.close(1, 0); // node 0 may no longer write into node 1
+        assert!(!t.is_open(0, 1));
+        assert!(t.is_open(1, 0), "reverse direction unaffected");
+        assert!(t.is_open(0, 2));
+    }
+
+    #[test]
+    fn switch_leader_fences_old_grants_new() {
+        let mut t = QpTable::full_mesh(4);
+        t.switch_leader(2, 0, 1);
+        assert!(!t.is_open(0, 2), "old leader fenced");
+        assert!(t.is_open(1, 2), "new leader granted");
+    }
+}

@@ -1,0 +1,195 @@
+//! RDMA verbs — the standard one-sided Read/Write pair plus SafarDB's
+//! FPGA-specific verbs (§2.2, appendix C.6, Table C.1):
+//!
+//! * `Write`         — one-sided write to a memory kind (HBM / host DRAM).
+//! * `Read`          — one-sided read; the NIC answers without CPU help.
+//! * `Rpc`           — payload is (opcode, params); the Dispatcher invokes
+//!                     an FPGA-resident accelerator directly (Fig 1),
+//!                     landing in integrated storage (BRAM/registers).
+//! * `RpcWriteThrough` — §4.3's verb: invokes the accelerator *and*
+//!                     concurrently appends the replication log in HBM.
+
+use crate::mem::MemKind;
+use crate::rdt::OpCall;
+use crate::sim::NodeId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerbKind {
+    Write,
+    Read,
+    Rpc,
+    RpcWriteThrough,
+}
+
+/// What a Read verb targets in the remote node's memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadTarget {
+    /// Heartbeat counter of the remote replica (leader-switch plane).
+    Heartbeat,
+    /// Highest proposal number of a sync group (Mu Prepare).
+    MinProposal { group: u8 },
+    /// One replication-log slot of a sync group (Mu Prepare slot check).
+    LogSlot { group: u8, slot: u64 },
+    /// A raw memory region (micro-benchmarks, Table 2.1).
+    Raw { bytes: u64 },
+}
+
+/// Data returned by a Read.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReadData {
+    Heartbeat(u64),
+    MinProposal(u64),
+    /// (proposal, op) if the slot is non-empty.
+    LogSlot(Option<(u64, OpCall)>),
+    Raw,
+}
+
+/// Verb payloads — real protocol state travels here, not just costs.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Raw bytes (micro-benchmarks / Table 2.1 traffic).
+    Raw { bytes: u64 },
+    /// Reducible summary: replica `origin`'s aggregated contribution
+    /// written into slot A[origin] (§4.1). `ops` carries the summarized
+    /// count for metrics; `value` rows carry the actual contribution.
+    Summary { origin: NodeId, ops: u32, value: OpCall },
+    /// Irreducible op appended to the per-origin FIFO queue (§4.2).
+    QueueAppend { op: OpCall },
+    /// Mu: write the next proposal number at a follower (Prepare).
+    Propose { group: u8, proposal: u64 },
+    /// Mu: append a committed entry to the replication log (Accept).
+    LogAppend { group: u8, slot: u64, proposal: u64, op: OpCall },
+    /// Forward a conflicting op from a non-leader replica to the leader.
+    LeaderForward { op: OpCall, reply_to: NodeId, request_id: u64 },
+    /// Leader's response to a forwarded conflicting op. `handled` false
+    /// means "not the leader, retry elsewhere"; `committed` false with
+    /// `handled` true means ordered but rejected by permissibility.
+    LeaderReply { request_id: u64, handled: bool, committed: bool },
+    /// One-sided read request.
+    ReadReq { target: ReadTarget },
+    /// Read response delivered back to the initiator.
+    ReadResp { target: ReadTarget, data: ReadData },
+    /// Raft (Waverunner baseline): AppendEntries carrying one op.
+    RaftAppend { term: u64, index: u64, op: OpCall },
+    /// Raft follower ack.
+    RaftAck { term: u64, index: u64, from: NodeId },
+    /// Client redirect (Waverunner: follower rejects, client re-sends).
+    ClientRedirect { request_id: u64 },
+}
+
+impl Payload {
+    /// Heartbeat-plane traffic rides its own QP / virtual lane (§4.4: the
+    /// Heartbeat Scanner is independent fabric logic), so it is never
+    /// queued behind bulk replication on the in-order data channel.
+    pub fn is_heartbeat(&self) -> bool {
+        matches!(
+            self,
+            Payload::ReadReq { target: ReadTarget::Heartbeat }
+                | Payload::ReadResp { target: ReadTarget::Heartbeat, .. }
+        )
+    }
+
+    /// Wire size for serialization-delay modeling.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Raw { bytes } => *bytes,
+            Payload::Summary { value, .. } => value.wire_bytes() + 8,
+            Payload::QueueAppend { op } => op.wire_bytes(),
+            Payload::Propose { .. } => 16,
+            Payload::LogAppend { op, .. } => op.wire_bytes() + 24,
+            Payload::LeaderForward { op, .. } => op.wire_bytes() + 16,
+            Payload::LeaderReply { .. } => 16,
+            Payload::ReadReq { .. } => 16,
+            Payload::ReadResp { .. } => 48,
+            Payload::RaftAppend { op, .. } => op.wire_bytes() + 24,
+            Payload::RaftAck { .. } => 24,
+            Payload::ClientRedirect { .. } => 16,
+        }
+    }
+}
+
+/// A verb in flight.
+#[derive(Clone, Debug)]
+pub struct Verb {
+    pub kind: VerbKind,
+    /// Where the payload lands at the destination (write verbs).
+    pub dst_mem: MemKind,
+    pub payload: Payload,
+    /// Initiator completion token: the ACK/NACK event carries it back.
+    pub token: u64,
+    /// True for writes that travel on the follower's *leader-write QP* —
+    /// the one the Permission Switch fences (§4.4). Relaxed-path RDT
+    /// traffic uses per-peer QPs that stay open.
+    pub leader_qp: bool,
+}
+
+impl Verb {
+    pub fn write(dst_mem: MemKind, payload: Payload, token: u64) -> Self {
+        Verb { kind: VerbKind::Write, dst_mem, payload, token, leader_qp: false }
+    }
+
+    pub fn read(target: ReadTarget, token: u64) -> Self {
+        Verb {
+            kind: VerbKind::Read,
+            dst_mem: MemKind::Hbm,
+            payload: Payload::ReadReq { target },
+            token,
+            leader_qp: false,
+        }
+    }
+
+    pub fn rpc(payload: Payload, token: u64) -> Self {
+        Verb { kind: VerbKind::Rpc, dst_mem: MemKind::Bram, payload, token, leader_qp: false }
+    }
+
+    pub fn rpc_write_through(payload: Payload, token: u64) -> Self {
+        Verb {
+            kind: VerbKind::RpcWriteThrough,
+            dst_mem: MemKind::Bram,
+            payload,
+            token,
+            leader_qp: true, // write-through is the SMR Accept path
+        }
+    }
+
+    /// Mark this verb as leader-write-QP traffic (Mu Propose/Accept).
+    pub fn on_leader_qp(mut self) -> Self {
+        self.leader_qp = true;
+        self
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        // RoCEv2 headers (Eth+IP+UDP+IB BTH ≈ 58B) + payload.
+        58 + self.payload.wire_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verb_constructors_set_kind_and_mem() {
+        let w = Verb::write(MemKind::Hbm, Payload::Raw { bytes: 64 }, 1);
+        assert_eq!(w.kind, VerbKind::Write);
+        assert_eq!(w.dst_mem, MemKind::Hbm);
+
+        let r = Verb::read(ReadTarget::Heartbeat, 2);
+        assert!(matches!(r.payload, Payload::ReadReq { target: ReadTarget::Heartbeat }));
+
+        let rpc = Verb::rpc(Payload::QueueAppend { op: OpCall::new(0, 1, 0, 0.0) }, 3);
+        assert_eq!(rpc.dst_mem, MemKind::Bram, "RPC lands in integrated storage");
+
+        let wt = Verb::rpc_write_through(
+            Payload::LogAppend { group: 0, slot: 0, proposal: 1, op: OpCall::new(0, 0, 0, 0.0) },
+            4,
+        );
+        assert_eq!(wt.kind, VerbKind::RpcWriteThrough);
+    }
+
+    #[test]
+    fn wire_bytes_include_headers() {
+        let w = Verb::write(MemKind::Hbm, Payload::Raw { bytes: 100 }, 0);
+        assert_eq!(w.wire_bytes(), 158);
+    }
+}

@@ -1,0 +1,78 @@
+//! Activity-based power model (§5.5, Fig 27, appendix D.2).
+//!
+//! Power = static floor (FPGA fabric+HBM, or CPU package) + I/O subsystem
+//! static (RNIC/PCIe/DRAM) + dynamic energy of executed transactions and
+//! wire verbs amortized over the run's makespan. Calibrated so SafarDB
+//! lands ≈35 W and Hamband ≈160 W with ≈2/3 of Hamband's draw on the CPU
+//! (the paper's attribution).
+
+use crate::config::PowerParams;
+use crate::metrics::RunMetrics;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    pub static_w: f64,
+    pub io_w: f64,
+    pub dynamic_w: f64,
+}
+
+impl PowerReport {
+    pub fn total_w(&self) -> f64 {
+        self.static_w + self.io_w + self.dynamic_w
+    }
+
+    /// Fraction attributable to the compute element (paper: ~2/3 for the
+    /// CPU system).
+    pub fn compute_fraction(&self) -> f64 {
+        (self.static_w + self.dynamic_w) / self.total_w()
+    }
+}
+
+pub fn estimate(params: &PowerParams, metrics: &RunMetrics) -> PowerReport {
+    let elapsed_ns = metrics.makespan_ns.max(1) as f64;
+    // nJ / ns == W.
+    let dynamic_w = (params.op_nj * metrics.executions as f64
+        + params.verb_nj * metrics.verbs as f64)
+        / elapsed_ns;
+    PowerReport { static_w: params.static_w, io_w: params.io_static_w, dynamic_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemParams;
+
+    fn metrics_with(ops: u64, verbs: u64, ns: u64) -> RunMetrics {
+        let mut m = RunMetrics::new(4);
+        m.executions = ops;
+        m.verbs = verbs;
+        m.makespan_ns = ns;
+        m
+    }
+
+    #[test]
+    fn safardb_lands_near_35w() {
+        let p = SystemParams::safardb().power;
+        // ~2 ops/µs cluster-wide for 1 ms.
+        let m = metrics_with(2_000, 6_000, 1_000_000);
+        let r = estimate(&p, &m);
+        assert!((32.0..40.0).contains(&r.total_w()), "total={}", r.total_w());
+    }
+
+    #[test]
+    fn hamband_lands_near_160w_with_cpu_majority() {
+        let p = SystemParams::hamband().power;
+        let m = metrics_with(400, 1_200, 1_000_000);
+        let r = estimate(&p, &m);
+        assert!((140.0..175.0).contains(&r.total_w()), "total={}", r.total_w());
+        assert!(r.compute_fraction() > 0.6, "cpu fraction {}", r.compute_fraction());
+    }
+
+    #[test]
+    fn dynamic_power_scales_with_activity() {
+        let p = SystemParams::safardb().power;
+        let low = estimate(&p, &metrics_with(100, 100, 1_000_000));
+        let high = estimate(&p, &metrics_with(100_000, 100_000, 1_000_000));
+        assert!(high.dynamic_w > low.dynamic_w * 100.0);
+    }
+}

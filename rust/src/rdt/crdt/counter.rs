@@ -1,0 +1,209 @@
+//! G-Counter and PN-Counter (Table A.1).
+//!
+//! State is kept **replica-major** — `p[i]` is replica i's summarized
+//! contribution — mirroring the paper's N-element array A (§4.1, Fig 4a).
+//! This is exactly the layout the `pn_merge` Pallas kernel folds.
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_INCREMENT: u8 = 0;
+pub const OP_DECREMENT: u8 = 1;
+
+pub const MAX_REPLICAS: usize = 16;
+
+/// Grow-only counter: increment(x), x >= 0. Reducible (summable).
+#[derive(Clone, Debug, Default)]
+pub struct GCounter {
+    p: [u64; MAX_REPLICAS],
+}
+
+impl GCounter {
+    pub fn value(&self) -> u64 {
+        self.p.iter().sum()
+    }
+
+    pub fn contribution(&self, replica: usize) -> u64 {
+        self.p[replica]
+    }
+}
+
+impl Rdt for GCounter {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::GCounter
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Reducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        op.is_query() || op.opcode == OP_INCREMENT
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        debug_assert_eq!(op.opcode, OP_INCREMENT);
+        self.p[op.origin] += op.a;
+        true
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Int(self.value() as i64)
+    }
+
+    fn state_digest(&self) -> u64 {
+        self.p
+            .iter()
+            .enumerate()
+            .fold(0, |acc, (i, &v)| acc ^ mix64(v.wrapping_add((i as u64) << 56)))
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        OpCall::new(OP_INCREMENT, 1 + rng.gen_range(10), 0, 0.0)
+    }
+}
+
+/// Positive-negative counter: two G-Counters (increments `p`, decrements
+/// `m`). Both ops reducible.
+#[derive(Clone, Debug, Default)]
+pub struct PnCounter {
+    p: [u64; MAX_REPLICAS],
+    m: [u64; MAX_REPLICAS],
+}
+
+impl PnCounter {
+    pub fn value(&self) -> i64 {
+        self.p.iter().sum::<u64>() as i64 - self.m.iter().sum::<u64>() as i64
+    }
+
+    /// Replica-major contribution rows for the `pn_merge` kernel.
+    pub fn contributions(&self) -> (&[u64; MAX_REPLICAS], &[u64; MAX_REPLICAS]) {
+        (&self.p, &self.m)
+    }
+}
+
+impl Rdt for PnCounter {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::PnCounter
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Reducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        op.is_query() || matches!(op.opcode, OP_INCREMENT | OP_DECREMENT)
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_INCREMENT => self.p[op.origin] += op.a,
+            OP_DECREMENT => self.m[op.origin] += op.a,
+            _ => unreachable!("pn-counter opcode {}", op.opcode),
+        }
+        true
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Int(self.value())
+    }
+
+    fn state_digest(&self) -> u64 {
+        let dp = self
+            .p
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &v)| acc ^ mix64(v.wrapping_add((i as u64) << 56)));
+        let dm = self
+            .m
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &v)| acc ^ mix64(v.wrapping_add(((i as u64) << 56) | (1 << 48))));
+        dp ^ dm.rotate_left(1)
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        let opcode = if rng.gen_bool(0.5) { OP_INCREMENT } else { OP_DECREMENT };
+        OpCall::new(opcode, 1 + rng.gen_range(10), 0, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(opcode: u8, a: u64, origin: usize) -> OpCall {
+        let mut o = OpCall::new(opcode, a, 0, 0.0);
+        o.origin = origin;
+        o
+    }
+
+    #[test]
+    fn g_counter_sums_across_origins() {
+        let mut c = GCounter::default();
+        c.apply(&op(OP_INCREMENT, 5, 0));
+        c.apply(&op(OP_INCREMENT, 3, 2));
+        assert_eq!(c.value(), 8);
+        assert_eq!(c.contribution(2), 3);
+    }
+
+    #[test]
+    fn pn_counter_value_and_query() {
+        let mut c = PnCounter::default();
+        c.apply(&op(OP_INCREMENT, 10, 0));
+        c.apply(&op(OP_DECREMENT, 4, 1));
+        assert_eq!(c.value(), 6);
+        assert_eq!(c.query(), QueryValue::Int(6));
+    }
+
+    #[test]
+    fn pn_counter_ops_commute() {
+        let ops = [op(OP_INCREMENT, 3, 0), op(OP_DECREMENT, 2, 1), op(OP_INCREMENT, 7, 2)];
+        let mut a = PnCounter::default();
+        let mut b = PnCounter::default();
+        for o in &ops {
+            a.apply(o);
+        }
+        for o in ops.iter().rev() {
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert_eq!(a.value(), b.value());
+    }
+
+    #[test]
+    fn digests_distinguish_p_from_m() {
+        let mut a = PnCounter::default();
+        let mut b = PnCounter::default();
+        a.apply(&op(OP_INCREMENT, 5, 0));
+        b.apply(&op(OP_DECREMENT, 5, 0));
+        assert_ne!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn gen_update_is_permissible() {
+        let c = PnCounter::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let o = c.gen_update(&mut rng);
+            assert!(c.permissible(&o));
+            assert_eq!(c.category(o.opcode), Category::Reducible);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! LWW-Register (Table A.1): assign(value) with unique timestamps ensures
+//! a total order of assignments; the register keeps the latest write.
+//!
+//! Timestamps are supplied by the engine as `(virtual_time << 8) | origin`,
+//! which makes them globally unique and makes merge order-free. Ties (which
+//! cannot occur with engine timestamps) resolve to the lowest origin — the
+//! same argmax-first rule as the `lww_merge` kernel and its oracle.
+
+use crate::rdt::{mix64, mix_f64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_ASSIGN: u8 = 0;
+
+#[derive(Clone, Debug, Default)]
+pub struct LwwRegister {
+    value: f64,
+    ts: u64,
+    ts_origin: usize,
+}
+
+impl LwwRegister {
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    pub fn timestamp(&self) -> u64 {
+        self.ts
+    }
+}
+
+impl Rdt for LwwRegister {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::LwwRegister
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        // assign is reducible (Table A.1): a local run of assigns summarizes
+        // to the one with the highest timestamp.
+        Category::Reducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        op.is_query() || op.opcode == OP_ASSIGN
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        debug_assert_eq!(op.opcode, OP_ASSIGN);
+        // Strictly newer timestamp wins; on a timestamp tie the lowest
+        // origin wins (argmax-first, matching the lww_merge kernel). The
+        // initial state (ts == 0) is older than any engine timestamp.
+        let newer = op.a > self.ts || (op.a == self.ts && self.ts != 0 && op.origin < self.ts_origin);
+        if newer {
+            self.value = op.x;
+            self.ts = op.a;
+            self.ts_origin = op.origin;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Float(self.value)
+    }
+
+    fn state_digest(&self) -> u64 {
+        mix_f64(self.value) ^ mix64(self.ts).rotate_left(7)
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        // Timestamp (arg a) is overwritten by the engine at issue time.
+        OpCall::new(OP_ASSIGN, 0, 0, rng.gen_f64_range(-1e6, 1e6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assign(ts: u64, origin: usize, x: f64) -> OpCall {
+        let mut o = OpCall::new(OP_ASSIGN, ts, 0, x);
+        o.origin = origin;
+        o
+    }
+
+    #[test]
+    fn latest_timestamp_wins() {
+        let mut r = LwwRegister::default();
+        r.apply(&assign(10, 0, 1.0));
+        r.apply(&assign(5, 1, 2.0));
+        assert_eq!(r.value(), 1.0);
+        r.apply(&assign(20, 1, 3.0));
+        assert_eq!(r.value(), 3.0);
+    }
+
+    #[test]
+    fn order_free_merge() {
+        let ops = [assign(10, 0, 1.0), assign(30, 2, 3.0), assign(20, 1, 2.0)];
+        let mut a = LwwRegister::default();
+        let mut b = LwwRegister::default();
+        for o in &ops {
+            a.apply(o);
+        }
+        for o in ops.iter().rev() {
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert_eq!(a.value(), 3.0);
+        assert_eq!(b.value(), 3.0);
+    }
+
+    #[test]
+    fn tie_resolves_to_lowest_origin() {
+        // Matches lww_merge kernel's argmax-first rule.
+        let mut a = LwwRegister::default();
+        a.apply(&assign(7, 2, 9.0));
+        a.apply(&assign(7, 0, 1.0));
+        let mut b = LwwRegister::default();
+        b.apply(&assign(7, 0, 1.0));
+        b.apply(&assign(7, 2, 9.0));
+        assert_eq!(a.value(), 1.0);
+        assert_eq!(b.value(), 1.0);
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+}

@@ -1,0 +1,6 @@
+//! Operation-based CRDTs (Table A.1). All transactions are conflict-free,
+//! so every type here uses only the relaxed replication paths.
+
+pub mod counter;
+pub mod lww;
+pub mod sets;

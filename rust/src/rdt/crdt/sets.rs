@@ -1,0 +1,301 @@
+//! Set CRDTs (Table A.1): G-Set (reducible insert), PN-Set and 2P-Set
+//! (irreducible insert/remove — order within an origin matters, so they use
+//! the per-origin FIFO queue path of §4.2).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_INSERT: u8 = 0;
+pub const OP_REMOVE: u8 = 1;
+
+/// Element universe used by workload generators (small enough that inserts
+/// and removes actually collide, exercising merge semantics).
+pub const ELEMENT_UNIVERSE: u64 = 4096;
+
+/// Grow-only set: insert only; reducible (a batch of inserts summarizes to
+/// a set union).
+#[derive(Clone, Debug, Default)]
+pub struct GSet {
+    s: HashSet<u64>,
+}
+
+impl GSet {
+    pub fn contains(&self, e: u64) -> bool {
+        self.s.contains(&e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.s.is_empty()
+    }
+}
+
+impl Rdt for GSet {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::GSet
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Reducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        op.is_query() || op.opcode == OP_INSERT
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        debug_assert_eq!(op.opcode, OP_INSERT);
+        self.s.insert(op.a)
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Size(self.s.len())
+    }
+
+    fn state_digest(&self) -> u64 {
+        self.s.iter().fold(0, |acc, &e| acc ^ mix64(e))
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        OpCall::new(OP_INSERT, rng.gen_range(ELEMENT_UNIVERSE), 0, 0.0)
+    }
+}
+
+/// PN-Set: per-element counter; insert increments, remove decrements,
+/// present iff counter > 0 (appendix A.1). Irreducible: an origin's
+/// insert/remove sequence must apply in order.
+#[derive(Clone, Debug, Default)]
+pub struct PnSet {
+    c: HashMap<u64, i64>,
+}
+
+impl PnSet {
+    pub fn contains(&self, e: u64) -> bool {
+        self.c.get(&e).copied().unwrap_or(0) > 0
+    }
+
+    pub fn present_count(&self) -> usize {
+        self.c.values().filter(|&&v| v > 0).count()
+    }
+}
+
+impl Rdt for PnSet {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::PnSet
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Irreducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        op.is_query() || matches!(op.opcode, OP_INSERT | OP_REMOVE)
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        let e = self.c.entry(op.a).or_insert(0);
+        match op.opcode {
+            OP_INSERT => *e += 1,
+            OP_REMOVE => *e -= 1,
+            _ => unreachable!("pn-set opcode {}", op.opcode),
+        }
+        true
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Size(self.present_count())
+    }
+
+    fn state_digest(&self) -> u64 {
+        self.c
+            .iter()
+            .filter(|(_, &v)| v != 0)
+            .fold(0, |acc, (&e, &v)| acc ^ mix64(e).wrapping_mul(mix64(v as u64) | 1))
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        let opcode = if rng.gen_bool(0.6) { OP_INSERT } else { OP_REMOVE };
+        OpCall::new(opcode, rng.gen_range(ELEMENT_UNIVERSE), 0, 0.0)
+    }
+}
+
+/// 2P-Set: two G-Sets (added, removed); once removed an element can never
+/// be reinserted (appendix A.1).
+#[derive(Clone, Debug, Default)]
+pub struct TwoPSet {
+    added: HashSet<u64>,
+    removed: HashSet<u64>,
+}
+
+impl TwoPSet {
+    pub fn contains(&self, e: u64) -> bool {
+        self.added.contains(&e) && !self.removed.contains(&e)
+    }
+
+    pub fn present_count(&self) -> usize {
+        self.added.iter().filter(|e| !self.removed.contains(e)).count()
+    }
+}
+
+impl Rdt for TwoPSet {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::TwoPSet
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Irreducible
+    }
+
+    fn sync_groups(&self) -> u8 {
+        0
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_INSERT => !self.removed.contains(&op.a),
+            OP_REMOVE => true,
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_INSERT => {
+                // Insert always lands in `added` (state convergence); the
+                // tombstone in `removed` masks it from lookups (2P rule).
+                self.added.insert(op.a)
+            }
+            OP_REMOVE => {
+                // remove is recorded even if not yet added at this replica —
+                // it tombstones any concurrent insert.
+                self.removed.insert(op.a)
+            }
+            _ => unreachable!("2p-set opcode {}", op.opcode),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Size(self.present_count())
+    }
+
+    fn state_digest(&self) -> u64 {
+        let da = self.added.iter().fold(0u64, |acc, &e| acc ^ mix64(e));
+        let dr = self.removed.iter().fold(0u64, |acc, &e| acc ^ mix64(e | 1 << 63));
+        da ^ dr.rotate_left(13)
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        let opcode = if rng.gen_bool(0.7) { OP_INSERT } else { OP_REMOVE };
+        OpCall::new(opcode, rng.gen_range(ELEMENT_UNIVERSE), 0, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(opcode: u8, e: u64) -> OpCall {
+        OpCall::new(opcode, e, 0, 0.0)
+    }
+
+    #[test]
+    fn gset_grows_only() {
+        let mut s = GSet::default();
+        assert!(s.apply(&op(OP_INSERT, 1)));
+        assert!(!s.apply(&op(OP_INSERT, 1)), "re-insert is a no-op");
+        assert!(s.contains(1));
+        assert_eq!(s.query(), QueryValue::Size(1));
+    }
+
+    #[test]
+    fn gset_digest_order_free() {
+        let mut a = GSet::default();
+        let mut b = GSet::default();
+        for e in [5u64, 9, 2] {
+            a.apply(&op(OP_INSERT, e));
+        }
+        for e in [2u64, 5, 9] {
+            b.apply(&op(OP_INSERT, e));
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn pnset_counter_semantics() {
+        let mut s = PnSet::default();
+        s.apply(&op(OP_INSERT, 7));
+        s.apply(&op(OP_INSERT, 7));
+        s.apply(&op(OP_REMOVE, 7));
+        assert!(s.contains(7), "counter 1 > 0");
+        s.apply(&op(OP_REMOVE, 7));
+        assert!(!s.contains(7));
+        s.apply(&op(OP_REMOVE, 7)); // negative counter
+        s.apply(&op(OP_INSERT, 7));
+        assert!(!s.contains(7), "negative counters need multiple inserts");
+    }
+
+    #[test]
+    fn pnset_commutes() {
+        let ops = [op(OP_INSERT, 1), op(OP_REMOVE, 1), op(OP_INSERT, 2), op(OP_INSERT, 1)];
+        let mut a = PnSet::default();
+        let mut b = PnSet::default();
+        for o in &ops {
+            a.apply(o);
+        }
+        for o in ops.iter().rev() {
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn two_p_set_no_reinsert() {
+        let mut s = TwoPSet::default();
+        s.apply(&op(OP_INSERT, 3));
+        s.apply(&op(OP_REMOVE, 3));
+        assert!(!s.contains(3));
+        assert!(!s.permissible(&op(OP_INSERT, 3)), "reinsert impermissible");
+        s.apply(&op(OP_INSERT, 3));
+        assert!(!s.contains(3), "tombstone wins");
+    }
+
+    #[test]
+    fn two_p_set_remove_insert_commute() {
+        // remove arrives before insert at replica b: final states converge.
+        let ins = op(OP_INSERT, 4);
+        let rem = op(OP_REMOVE, 4);
+        let mut a = TwoPSet::default();
+        a.apply(&ins);
+        a.apply(&rem);
+        let mut b = TwoPSet::default();
+        b.apply(&rem);
+        b.apply(&ins);
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert!(!a.contains(4) && !b.contains(4));
+    }
+}

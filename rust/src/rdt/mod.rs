@@ -1,0 +1,251 @@
+//! Replicated Data Type library.
+//!
+//! One implementation serves both systems under test: SafarDB's
+//! FPGA-resident engine and the Hamband CPU baseline execute exactly this
+//! code; only the *cost models* differ (DESIGN.md §5 "One RDT library, two
+//! systems").
+//!
+//! * `crdt::*` — the six CRDTs of Table A.1 (operation-based).
+//! * `wrdt::*` — the five WRDTs of Table B.1, with integrity invariants,
+//!   permissibility checks, and synchronization groups.
+//!
+//! Every type implements [`Rdt`]: category routing (reducible / irreducible
+//! / conflicting, §2.1), permissibility, op application, a state digest for
+//! convergence checks, and an invariant check for integrity tests.
+
+pub mod crdt;
+pub mod op;
+pub mod wrdt;
+
+pub use op::{Category, OpCall, QueryValue};
+
+use crate::util::rng::Rng;
+
+/// Which concrete RDT a workload instantiates (paper benchmark names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RdtKind {
+    // CRDTs (Table A.1)
+    GCounter,
+    PnCounter,
+    LwwRegister,
+    GSet,
+    PnSet,
+    TwoPSet,
+    // WRDTs (Table B.1)
+    Account,
+    Courseware,
+    Project,
+    Movie,
+    Auction,
+}
+
+impl RdtKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RdtKind::GCounter => "G-Counter",
+            RdtKind::PnCounter => "PN-Counter",
+            RdtKind::LwwRegister => "LWW-Register",
+            RdtKind::GSet => "G-Set",
+            RdtKind::PnSet => "PN-Set",
+            RdtKind::TwoPSet => "2P-Set",
+            RdtKind::Account => "Account",
+            RdtKind::Courseware => "Courseware",
+            RdtKind::Project => "Project",
+            RdtKind::Movie => "Movie",
+            RdtKind::Auction => "Auction",
+        }
+    }
+
+    pub fn is_wrdt(&self) -> bool {
+        matches!(
+            self,
+            RdtKind::Account
+                | RdtKind::Courseware
+                | RdtKind::Project
+                | RdtKind::Movie
+                | RdtKind::Auction
+        )
+    }
+
+    /// The paper's five CRDT micro-benchmarks (Fig 9; G-Counter is a
+    /// building block, not a benchmark — appendix A.1 footnote).
+    pub fn crdt_benchmarks() -> &'static [RdtKind] {
+        &[
+            RdtKind::PnCounter,
+            RdtKind::LwwRegister,
+            RdtKind::GSet,
+            RdtKind::PnSet,
+            RdtKind::TwoPSet,
+        ]
+    }
+
+    /// The paper's five WRDT micro-benchmarks (Fig 10).
+    pub fn wrdt_benchmarks() -> &'static [RdtKind] {
+        &[
+            RdtKind::Account,
+            RdtKind::Courseware,
+            RdtKind::Project,
+            RdtKind::Movie,
+            RdtKind::Auction,
+        ]
+    }
+
+    pub fn instantiate(&self) -> Box<dyn Rdt> {
+        match self {
+            RdtKind::GCounter => Box::new(crdt::counter::GCounter::default()),
+            RdtKind::PnCounter => Box::new(crdt::counter::PnCounter::default()),
+            RdtKind::LwwRegister => Box::new(crdt::lww::LwwRegister::default()),
+            RdtKind::GSet => Box::new(crdt::sets::GSet::default()),
+            RdtKind::PnSet => Box::new(crdt::sets::PnSet::default()),
+            RdtKind::TwoPSet => Box::new(crdt::sets::TwoPSet::default()),
+            RdtKind::Account => Box::new(wrdt::account::Account::default()),
+            RdtKind::Courseware => Box::new(wrdt::courseware::Courseware::default()),
+            RdtKind::Project => Box::new(wrdt::project::Project::default()),
+            RdtKind::Movie => Box::new(wrdt::movie::Movie::default()),
+            RdtKind::Auction => Box::new(wrdt::auction::Auction::default()),
+        }
+    }
+}
+
+/// Object-level interface shared by all replicated data types (§2.1).
+pub trait Rdt: Send {
+    fn kind(&self) -> RdtKind;
+
+    /// Transaction category for coordination routing (§2.1). `QUERY_OP` is
+    /// never routed.
+    fn category(&self, opcode: u8) -> Category;
+
+    /// Synchronization group of a conflicting opcode (Table B.1 SG column).
+    fn sync_group(&self, opcode: u8) -> u8 {
+        debug_assert!(matches!(self.category(opcode), Category::Conflicting));
+        0
+    }
+
+    /// Number of synchronization groups (== SMR instances / replication
+    /// logs this object needs; Auction has 3, Movie 2, others 1 or 0).
+    fn sync_groups(&self) -> u8;
+
+    /// Local precondition validation (§2.1 "permissibility check").
+    fn permissible(&self, op: &OpCall) -> bool;
+
+    /// Execute a (permissible) transaction against local state. Returns
+    /// false if the op was a no-op under this state (still convergent).
+    fn apply(&mut self, op: &OpCall) -> bool;
+
+    /// Apply a *leader-committed* conflicting transaction unconditionally.
+    /// A follower's local state may be missing concurrent relaxed updates
+    /// (the paper's dependence discussion, §2.1), so leader-accepted ops
+    /// must take effect regardless of the local precondition; transient
+    /// dips resolve once in-flight relaxed updates land, and the leader's
+    /// conservatism guarantees the quiescent invariant. Defaults to
+    /// `apply` for types whose apply is already unconditional.
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        self.apply(op)
+    }
+
+    /// Read-only query() transaction over local state.
+    fn query(&self) -> QueryValue;
+
+    /// Whether this object exposes a query() transaction at all (Movie does
+    /// not — §5.2).
+    fn has_query(&self) -> bool {
+        true
+    }
+
+    /// Order-insensitive digest of the full state; equal digests across
+    /// replicas at quiescence == convergence.
+    fn state_digest(&self) -> u64;
+
+    /// Integrity invariant (Table B.1). CRDTs: trivially true.
+    fn invariant_ok(&self) -> bool {
+        true
+    }
+
+    /// Generate a random update transaction that is locally sensible for
+    /// workload driving (may still be impermissible — that is part of the
+    /// workload, the engine counts rejects).
+    fn gen_update(&self, rng: &mut Rng) -> OpCall;
+
+    /// Human-readable state dump for divergence diagnosis (tests only).
+    fn debug_dump(&self) -> String {
+        String::new()
+    }
+
+    /// Deep-copy for recovery snapshot transfer (§3: a returned replica
+    /// catches up on relaxed state via snapshot + committed-log replay).
+    fn clone_box(&self) -> Box<dyn Rdt>;
+}
+
+/// Order-insensitive 64-bit mix for state digests: XOR of mixed element
+/// hashes is set-equality-stable regardless of iteration order.
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Digest helper for f64 state (canonical bit pattern; -0.0 folded to 0.0).
+pub fn mix_f64(x: f64) -> u64 {
+    let x = if x == 0.0 { 0.0 } else { x };
+    mix64(x.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_instantiate_and_report_kind() {
+        let kinds = [
+            RdtKind::GCounter,
+            RdtKind::PnCounter,
+            RdtKind::LwwRegister,
+            RdtKind::GSet,
+            RdtKind::PnSet,
+            RdtKind::TwoPSet,
+            RdtKind::Account,
+            RdtKind::Courseware,
+            RdtKind::Project,
+            RdtKind::Movie,
+            RdtKind::Auction,
+        ];
+        for k in kinds {
+            let o = k.instantiate();
+            assert_eq!(o.kind(), k);
+            assert!(o.invariant_ok(), "{} starts valid", k.name());
+        }
+    }
+
+    #[test]
+    fn benchmark_lists_match_paper() {
+        assert_eq!(RdtKind::crdt_benchmarks().len(), 5);
+        assert_eq!(RdtKind::wrdt_benchmarks().len(), 5);
+        assert!(RdtKind::wrdt_benchmarks().iter().all(|k| k.is_wrdt()));
+        assert!(!RdtKind::crdt_benchmarks().iter().any(|k| k.is_wrdt()));
+    }
+
+    #[test]
+    fn sync_group_counts_match_table_b1() {
+        assert_eq!(RdtKind::Account.instantiate().sync_groups(), 1);
+        assert_eq!(RdtKind::Courseware.instantiate().sync_groups(), 1);
+        assert_eq!(RdtKind::Project.instantiate().sync_groups(), 1);
+        assert_eq!(RdtKind::Movie.instantiate().sync_groups(), 2);
+        assert_eq!(RdtKind::Auction.instantiate().sync_groups(), 3);
+        assert_eq!(RdtKind::PnCounter.instantiate().sync_groups(), 0);
+    }
+
+    #[test]
+    fn movie_has_no_query_transaction() {
+        assert!(!RdtKind::Movie.instantiate().has_query());
+        assert!(RdtKind::Account.instantiate().has_query());
+    }
+
+    #[test]
+    fn mix64_is_injective_enough() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+}

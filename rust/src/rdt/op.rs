@@ -1,0 +1,102 @@
+//! Transaction representation.
+//!
+//! Transactions are single-statement (paper §3 fn.2) and travel inside RDMA
+//! verbs as `(opcode, args)` — exactly the payload the paper's Dispatcher
+//! decodes (Fig 1). `OpCall` is small and `Copy` so the simulator can move
+//! millions of them without allocation.
+
+/// Coordination category of a transaction (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Conflict-free, dependence-free, summarizable — relaxed path with
+    /// local aggregation (§4.1).
+    Reducible,
+    /// Conflict-free but order/dependence-carrying — relaxed path via
+    /// per-origin FIFO queues (§4.2).
+    Irreducible,
+    /// Requires total order via SMR (§4.3/4.4).
+    Conflicting,
+}
+
+/// Reserved opcode for the read-only query() transaction (never replicated).
+pub const QUERY_OP: u8 = 0xFF;
+
+/// A single-statement transaction: opcode + up to two integer args and one
+/// float arg, tagged with its origin replica and per-origin sequence number
+/// (used for FIFO/dependence ordering and at-most-once application).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpCall {
+    pub opcode: u8,
+    pub a: u64,
+    pub b: u64,
+    pub x: f64,
+    pub origin: usize,
+    pub seq: u64,
+}
+
+impl OpCall {
+    pub fn new(opcode: u8, a: u64, b: u64, x: f64) -> Self {
+        OpCall { opcode, a, b, x, origin: 0, seq: 0 }
+    }
+
+    pub fn query() -> Self {
+        OpCall::new(QUERY_OP, 0, 0, 0.0)
+    }
+
+    pub fn is_query(&self) -> bool {
+        self.opcode == QUERY_OP
+    }
+
+    /// Wire size in bytes (opcode + tag + args), used for serialization
+    /// delay on the simulated link.
+    pub fn wire_bytes(&self) -> u64 {
+        1 + 8 + 8 + 8 + 8 // opcode, origin/seq tag, a, b, x
+    }
+}
+
+/// Result of a query() — enough structure for the workloads and tests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryValue {
+    Int(i64),
+    Float(f64),
+    Size(usize),
+    Pair(i64, i64),
+    None,
+}
+
+impl QueryValue {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            QueryValue::Int(v) => *v as f64,
+            QueryValue::Float(v) => *v,
+            QueryValue::Size(v) => *v as f64,
+            QueryValue::Pair(a, _) => *a as f64,
+            QueryValue::None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_op_recognized() {
+        assert!(OpCall::query().is_query());
+        assert!(!OpCall::new(0, 1, 2, 3.0).is_query());
+    }
+
+    #[test]
+    fn wire_bytes_constant_small() {
+        let op = OpCall::new(3, u64::MAX, 0, -1.5);
+        assert_eq!(op.wire_bytes(), 33);
+    }
+
+    #[test]
+    fn query_value_coercion() {
+        assert_eq!(QueryValue::Int(-3).as_f64(), -3.0);
+        assert_eq!(QueryValue::Size(7).as_f64(), 7.0);
+        assert_eq!(QueryValue::Pair(9, 1).as_f64(), 9.0);
+        assert_eq!(QueryValue::None.as_f64(), 0.0);
+    }
+}

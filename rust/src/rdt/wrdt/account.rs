@@ -1,0 +1,190 @@
+//! Bank Account WRDT (Table B.1): scalar balance B.
+//!
+//! * deposit(d)  — reducible (sums locally, propagates a summary).
+//! * withdraw(w) — conflicting, permissible iff B - w >= 0; one sync group.
+//!
+//! Invariant: B >= 0 always. This is the paper's running example (§2.1) and
+//! the WRDT used in Figs 6, 14, 24. The batched form of the withdraw guard
+//! is the `account_guard` Pallas artifact.
+
+use crate::rdt::{mix_f64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_DEPOSIT: u8 = 0;
+pub const OP_WITHDRAW: u8 = 1;
+
+const EPS: f64 = 1e-9;
+
+#[derive(Clone, Debug)]
+pub struct Account {
+    balance: f64,
+}
+
+impl Default for Account {
+    fn default() -> Self {
+        // Seed balance so early withdrawals in workloads are not all
+        // rejected; the invariant holds from the start.
+        Account { balance: 1_000.0 }
+    }
+}
+
+impl Account {
+    pub fn balance(&self) -> f64 {
+        self.balance
+    }
+}
+
+impl Rdt for Account {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::Account
+    }
+
+    fn category(&self, opcode: u8) -> Category {
+        match opcode {
+            OP_DEPOSIT => Category::Reducible,
+            OP_WITHDRAW => Category::Conflicting,
+            _ => Category::Reducible, // query never routed
+        }
+    }
+
+    fn sync_group(&self, _opcode: u8) -> u8 {
+        0
+    }
+
+    fn sync_groups(&self) -> u8 {
+        1
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            // Negative deposits arrive only as summarized, origin-validated
+            // debit deltas (§5.4); fresh client deposits are non-negative.
+            OP_DEPOSIT => true,
+            OP_WITHDRAW => op.x >= 0.0 && self.balance - op.x >= -EPS,
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_DEPOSIT => {
+                self.balance += op.x;
+                true
+            }
+            OP_WITHDRAW => {
+                if self.balance - op.x >= -EPS {
+                    self.balance -= op.x;
+                    true
+                } else {
+                    false // impermissible at execution: rejected, state unchanged
+                }
+            }
+            _ => unreachable!("account opcode {}", op.opcode),
+        }
+    }
+
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_WITHDRAW => {
+                // Leader-accepted withdrawal: unconditional (the leader's
+                // view was conservative; see trait docs).
+                self.balance -= op.x;
+                true
+            }
+            _ => self.apply(op),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Float(self.balance)
+    }
+
+    fn state_digest(&self) -> u64 {
+        // Round to cents before hashing: deposit summaries may fold f64
+        // additions in different orders across replicas.
+        mix_f64((self.balance * 100.0).round() / 100.0)
+    }
+
+    fn invariant_ok(&self) -> bool {
+        self.balance >= -1e-6
+    }
+
+    fn debug_dump(&self) -> String {
+        format!("balance={:.6}", self.balance)
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        if rng.gen_bool(0.5) {
+            OpCall::new(OP_DEPOSIT, 0, 0, rng.gen_f64_range(1.0, 50.0))
+        } else {
+            OpCall::new(OP_WITHDRAW, 0, 0, rng.gen_f64_range(1.0, 80.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deposit(x: f64) -> OpCall {
+        OpCall::new(OP_DEPOSIT, 0, 0, x)
+    }
+
+    fn withdraw(x: f64) -> OpCall {
+        OpCall::new(OP_WITHDRAW, 0, 0, x)
+    }
+
+    #[test]
+    fn categories_match_table_b1() {
+        let a = Account::default();
+        assert_eq!(a.category(OP_DEPOSIT), Category::Reducible);
+        assert_eq!(a.category(OP_WITHDRAW), Category::Conflicting);
+        assert_eq!(a.sync_groups(), 1);
+    }
+
+    #[test]
+    fn overdraft_rejected() {
+        let mut a = Account::default();
+        let w = withdraw(5_000.0);
+        assert!(!a.permissible(&w));
+        assert!(!a.apply(&w), "execution re-check also rejects");
+        assert!(a.invariant_ok());
+        assert_eq!(a.balance(), 1_000.0);
+    }
+
+    #[test]
+    fn exact_drain_permissible() {
+        let mut a = Account::default();
+        assert!(a.apply(&withdraw(1_000.0)));
+        assert!(a.balance().abs() < 1e-9);
+        assert!(a.invariant_ok());
+    }
+
+    #[test]
+    fn deposits_commute() {
+        let mut a = Account::default();
+        let mut b = Account::default();
+        a.apply(&deposit(10.0));
+        a.apply(&deposit(7.0));
+        b.apply(&deposit(7.0));
+        b.apply(&deposit(10.0));
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn concurrent_withdraw_hazard_needs_ordering() {
+        // The §2.1 motivating example: two locally-permissible withdrawals
+        // can jointly overdraft — exactly why withdraw is conflicting.
+        let a = Account::default(); // 1000
+        let w = withdraw(600.0);
+        assert!(a.permissible(&w));
+        let mut serial = Account::default();
+        assert!(serial.apply(&w));
+        assert!(!serial.apply(&w), "second 600 must be rejected in total order");
+        assert!(serial.invariant_ok());
+    }
+}

@@ -1,0 +1,291 @@
+//! Auction WRDT (Table B.1): RUBiS-style e-commerce site.
+//!
+//! State: users U, auctions A, items I, stock array S[].
+//! * sellItem(i, u)   — reducible (lists item, bumps stock; summable).
+//! * openAuction(a)   — irreducible, a ∉ A.
+//! * registerUser(u)  — conflicting (group 0), u ∉ U.
+//! * buyItem(i, u)    — conflicting (group 1), i ∈ I ∧ S[i] ≥ 1 ∧ u ∈ U.
+//! * placeBid(a,b,u)  — conflicting (group 2), a ∈ A ∧ u ∈ U.
+//! * closeAuction(a)  — conflicting (group 2), a ∈ A.
+//!
+//! Three synchronization groups (Table B.1) — the most of any benchmark,
+//! which is why Auction is the Fig 8 conflicting-transaction stress case:
+//! three replication logs mean three polling targets for the baseline.
+//! Invariant: stock never negative; bids only on open auctions by
+//! registered users.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_SELL_ITEM: u8 = 0;
+pub const OP_OPEN_AUCTION: u8 = 1;
+pub const OP_REGISTER_USER: u8 = 2;
+pub const OP_BUY_ITEM: u8 = 3;
+pub const OP_PLACE_BID: u8 = 4;
+pub const OP_CLOSE_AUCTION: u8 = 5;
+
+pub const GROUP_USER: u8 = 0;
+pub const GROUP_ITEM: u8 = 1;
+pub const GROUP_AUCTION: u8 = 2;
+
+const ID_UNIVERSE: u64 = 512;
+
+#[derive(Clone, Debug, Default)]
+pub struct Auction {
+    users: HashSet<u64>,
+    auctions: HashSet<u64>,
+    closed: HashSet<u64>,
+    items: HashSet<u64>,
+    stock: HashMap<u64, i64>,
+    bids: HashMap<u64, (u64, u64)>, // auction -> (best bid, user)
+}
+
+impl Auction {
+    pub fn stock_of(&self, item: u64) -> i64 {
+        self.stock.get(&item).copied().unwrap_or(0)
+    }
+}
+
+impl Rdt for Auction {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::Auction
+    }
+
+    fn category(&self, opcode: u8) -> Category {
+        match opcode {
+            OP_SELL_ITEM => Category::Reducible,
+            OP_OPEN_AUCTION => Category::Irreducible,
+            OP_REGISTER_USER | OP_BUY_ITEM | OP_PLACE_BID | OP_CLOSE_AUCTION => {
+                Category::Conflicting
+            }
+            _ => Category::Reducible,
+        }
+    }
+
+    fn sync_group(&self, opcode: u8) -> u8 {
+        match opcode {
+            OP_REGISTER_USER => GROUP_USER,
+            OP_BUY_ITEM => GROUP_ITEM,
+            _ => GROUP_AUCTION,
+        }
+    }
+
+    fn sync_groups(&self) -> u8 {
+        3
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_SELL_ITEM => true,
+            OP_OPEN_AUCTION => !self.auctions.contains(&op.a),
+            OP_REGISTER_USER => !self.users.contains(&op.a),
+            OP_BUY_ITEM => {
+                self.items.contains(&op.a) && self.stock_of(op.a) >= 1 && self.users.contains(&op.b)
+            }
+            OP_PLACE_BID => {
+                self.auctions.contains(&op.a)
+                    && !self.closed.contains(&op.a)
+                    && self.users.contains(&op.b)
+            }
+            OP_CLOSE_AUCTION => self.auctions.contains(&op.a) && !self.closed.contains(&op.a),
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_SELL_ITEM => {
+                self.items.insert(op.a);
+                *self.stock.entry(op.a).or_insert(0) += 1;
+                true
+            }
+            OP_OPEN_AUCTION => self.auctions.insert(op.a),
+            OP_REGISTER_USER => self.users.insert(op.a),
+            OP_BUY_ITEM => {
+                if self.items.contains(&op.a)
+                    && self.stock_of(op.a) >= 1
+                    && self.users.contains(&op.b)
+                {
+                    *self.stock.get_mut(&op.a).unwrap() -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            OP_PLACE_BID => {
+                if self.auctions.contains(&op.a)
+                    && !self.closed.contains(&op.a)
+                    && self.users.contains(&op.b)
+                {
+                    let bid = op.x as u64;
+                    let best = self.bids.entry(op.a).or_insert((0, 0));
+                    if bid > best.0 {
+                        *best = (bid, op.b);
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            OP_CLOSE_AUCTION => {
+                if self.auctions.contains(&op.a) {
+                    self.closed.insert(op.a)
+                } else {
+                    false
+                }
+            }
+            _ => unreachable!("auction opcode {}", op.opcode),
+        }
+    }
+
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_BUY_ITEM => {
+                // Sell (reducible) may still be in flight at this replica.
+                *self.stock.entry(op.a).or_insert(0) -= 1;
+                true
+            }
+            OP_PLACE_BID => {
+                let bid = op.x as u64;
+                let best = self.bids.entry(op.a).or_insert((0, 0));
+                if bid > best.0 {
+                    *best = (bid, op.b);
+                }
+                true
+            }
+            OP_CLOSE_AUCTION => self.closed.insert(op.a),
+            _ => self.apply(op),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Pair(self.users.len() as i64, self.items.len() as i64)
+    }
+
+    fn state_digest(&self) -> u64 {
+        let du = self.users.iter().fold(0u64, |a, &e| a ^ mix64(e));
+        let da = self.auctions.iter().fold(0u64, |a, &e| a ^ mix64(e | 1 << 59));
+        let dc = self.closed.iter().fold(0u64, |a, &e| a ^ mix64(e | 1 << 58));
+        let di = self
+            .stock
+            .iter()
+            .filter(|(_, &v)| v != 0)
+            .fold(0u64, |a, (&i, &v)| a ^ mix64(i).wrapping_mul(mix64(v as u64) | 1));
+        let db = self
+            .bids
+            .iter()
+            .fold(0u64, |a, (&k, &(b, u))| a ^ mix64(k ^ (b << 20) ^ (u << 40)));
+        du ^ da.rotate_left(5) ^ dc.rotate_left(23) ^ di.rotate_left(37) ^ db.rotate_left(49)
+    }
+
+    fn invariant_ok(&self) -> bool {
+        self.stock.values().all(|&v| v >= 0)
+            && self
+                .bids
+                .keys()
+                .all(|a| self.auctions.contains(a))
+    }
+
+    fn debug_dump(&self) -> String {
+        let mut u: Vec<_> = self.users.iter().collect();
+        u.sort();
+        let mut a: Vec<_> = self.auctions.iter().collect();
+        a.sort();
+        let mut c: Vec<_> = self.closed.iter().collect();
+        c.sort();
+        let mut st: Vec<_> = self.stock.iter().filter(|(_, &v)| v != 0).collect();
+        st.sort();
+        let mut b: Vec<_> = self.bids.iter().collect();
+        b.sort();
+        format!("users={u:?}\nauctions={a:?}\nclosed={c:?}\nstock={st:?}\nbids={b:?}")
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        match rng.gen_range(6) {
+            0 => OpCall::new(OP_SELL_ITEM, rng.gen_range(ID_UNIVERSE), rng.gen_range(ID_UNIVERSE), 0.0),
+            1 => OpCall::new(OP_OPEN_AUCTION, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            2 => OpCall::new(OP_REGISTER_USER, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            3 => OpCall::new(OP_BUY_ITEM, rng.gen_range(ID_UNIVERSE), rng.gen_range(ID_UNIVERSE), 0.0),
+            4 => OpCall::new(
+                OP_PLACE_BID,
+                rng.gen_range(ID_UNIVERSE),
+                rng.gen_range(ID_UNIVERSE),
+                rng.gen_f64_range(1.0, 1000.0),
+            ),
+            _ => OpCall::new(OP_CLOSE_AUCTION, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(opcode: u8, a: u64, b: u64, x: f64) -> OpCall {
+        OpCall::new(opcode, a, b, x)
+    }
+
+    #[test]
+    fn three_sync_groups() {
+        let a = Auction::default();
+        assert_eq!(a.sync_group(OP_REGISTER_USER), GROUP_USER);
+        assert_eq!(a.sync_group(OP_BUY_ITEM), GROUP_ITEM);
+        assert_eq!(a.sync_group(OP_PLACE_BID), GROUP_AUCTION);
+        assert_eq!(a.sync_group(OP_CLOSE_AUCTION), GROUP_AUCTION);
+        assert_eq!(a.sync_groups(), 3);
+    }
+
+    #[test]
+    fn buy_needs_stock_and_user() {
+        let mut a = Auction::default();
+        a.apply(&op(OP_REGISTER_USER, 9, 0, 0.0));
+        assert!(!a.permissible(&op(OP_BUY_ITEM, 1, 9, 0.0)), "no item listed");
+        a.apply(&op(OP_SELL_ITEM, 1, 9, 0.0));
+        assert!(a.apply(&op(OP_BUY_ITEM, 1, 9, 0.0)));
+        assert_eq!(a.stock_of(1), 0);
+        assert!(!a.permissible(&op(OP_BUY_ITEM, 1, 9, 0.0)), "stock exhausted");
+        assert!(a.invariant_ok());
+    }
+
+    #[test]
+    fn bids_only_on_open_auctions() {
+        let mut a = Auction::default();
+        a.apply(&op(OP_REGISTER_USER, 5, 0, 0.0));
+        a.apply(&op(OP_OPEN_AUCTION, 1, 0, 0.0));
+        assert!(a.apply(&op(OP_PLACE_BID, 1, 5, 100.0)));
+        a.apply(&op(OP_CLOSE_AUCTION, 1, 0, 0.0));
+        assert!(!a.permissible(&op(OP_PLACE_BID, 1, 5, 200.0)));
+    }
+
+    #[test]
+    fn best_bid_is_max() {
+        let mut a = Auction::default();
+        a.apply(&op(OP_REGISTER_USER, 5, 0, 0.0));
+        a.apply(&op(OP_REGISTER_USER, 6, 0, 0.0));
+        a.apply(&op(OP_OPEN_AUCTION, 1, 0, 0.0));
+        a.apply(&op(OP_PLACE_BID, 1, 5, 100.0));
+        a.apply(&op(OP_PLACE_BID, 1, 6, 50.0));
+        assert_eq!(a.bids[&1], (100, 5));
+    }
+
+    #[test]
+    fn sell_items_commute() {
+        let ops = [op(OP_SELL_ITEM, 1, 0, 0.0), op(OP_SELL_ITEM, 2, 0, 0.0), op(OP_SELL_ITEM, 1, 0, 0.0)];
+        let mut a = Auction::default();
+        let mut b = Auction::default();
+        for o in &ops {
+            a.apply(o);
+        }
+        for o in ops.iter().rev() {
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert_eq!(a.stock_of(1), 2);
+    }
+}

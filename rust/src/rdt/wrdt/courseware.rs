@@ -1,0 +1,209 @@
+//! Courseware WRDT (Table B.1): university registrar.
+//!
+//! State: students S, courses C, enrollments E.
+//! * addStudent(s) where s ∉ S — irreducible conflict-free.
+//! * addCourse(c) where c ∉ C, deleteCourse(c) where c ∈ C,
+//!   enroll(s, c) where s ∈ S ∧ c ∈ C ∧ (s,c) ∉ E — conflicting, one group.
+//!
+//! Invariant: referential integrity — every (s,c) ∈ E has s ∈ S and c ∈ C.
+//! deleteCourse cascades its enrollments to preserve it.
+
+use std::collections::HashSet;
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_ADD_STUDENT: u8 = 0;
+pub const OP_ADD_COURSE: u8 = 1;
+pub const OP_DELETE_COURSE: u8 = 2;
+pub const OP_ENROLL: u8 = 3;
+
+const ID_UNIVERSE: u64 = 512;
+
+#[derive(Clone, Debug, Default)]
+pub struct Courseware {
+    students: HashSet<u64>,
+    courses: HashSet<u64>,
+    enrollments: HashSet<(u64, u64)>,
+}
+
+impl Courseware {
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (self.students.len(), self.courses.len(), self.enrollments.len())
+    }
+}
+
+impl Rdt for Courseware {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::Courseware
+    }
+
+    fn category(&self, opcode: u8) -> Category {
+        match opcode {
+            OP_ADD_STUDENT => Category::Irreducible,
+            OP_ADD_COURSE | OP_DELETE_COURSE | OP_ENROLL => Category::Conflicting,
+            _ => Category::Reducible,
+        }
+    }
+
+    fn sync_group(&self, _opcode: u8) -> u8 {
+        0
+    }
+
+    fn sync_groups(&self) -> u8 {
+        1
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_STUDENT => !self.students.contains(&op.a),
+            OP_ADD_COURSE => !self.courses.contains(&op.a),
+            OP_DELETE_COURSE => self.courses.contains(&op.a),
+            OP_ENROLL => {
+                self.students.contains(&op.a)
+                    && self.courses.contains(&op.b)
+                    && !self.enrollments.contains(&(op.a, op.b))
+            }
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_STUDENT => self.students.insert(op.a),
+            OP_ADD_COURSE => self.courses.insert(op.a),
+            OP_DELETE_COURSE => {
+                if self.courses.remove(&op.a) {
+                    self.enrollments.retain(|&(_, c)| c != op.a); // cascade
+                    true
+                } else {
+                    false
+                }
+            }
+            OP_ENROLL => {
+                if self.students.contains(&op.a) && self.courses.contains(&op.b) {
+                    self.enrollments.insert((op.a, op.b))
+                } else {
+                    false // impermissible at execution time
+                }
+            }
+            _ => unreachable!("courseware opcode {}", op.opcode),
+        }
+    }
+
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ENROLL => self.enrollments.insert((op.a, op.b)), // student may still be in flight
+            OP_DELETE_COURSE => {
+                self.courses.remove(&op.a);
+                self.enrollments.retain(|&(_, c)| c != op.a);
+                true
+            }
+            _ => self.apply(op),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Pair(self.students.len() as i64, self.enrollments.len() as i64)
+    }
+
+    fn state_digest(&self) -> u64 {
+        let ds = self.students.iter().fold(0u64, |a, &e| a ^ mix64(e));
+        let dc = self.courses.iter().fold(0u64, |a, &e| a ^ mix64(e | 1 << 62));
+        let de = self
+            .enrollments
+            .iter()
+            .fold(0u64, |a, &(s, c)| a ^ mix64(s.wrapping_mul(0x1F3) ^ (c << 32)));
+        ds ^ dc.rotate_left(17) ^ de.rotate_left(31)
+    }
+
+    fn invariant_ok(&self) -> bool {
+        self.enrollments
+            .iter()
+            .all(|&(s, c)| self.students.contains(&s) && self.courses.contains(&c))
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        match rng.gen_range(4) {
+            0 => OpCall::new(OP_ADD_STUDENT, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            1 => OpCall::new(OP_ADD_COURSE, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            2 => OpCall::new(OP_DELETE_COURSE, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            _ => OpCall::new(
+                OP_ENROLL,
+                rng.gen_range(ID_UNIVERSE),
+                rng.gen_range(ID_UNIVERSE),
+                0.0,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op2(opcode: u8, a: u64, b: u64) -> OpCall {
+        OpCall::new(opcode, a, b, 0.0)
+    }
+
+    #[test]
+    fn enroll_requires_both_sides() {
+        let mut cw = Courseware::default();
+        assert!(!cw.permissible(&op2(OP_ENROLL, 1, 2)));
+        cw.apply(&op2(OP_ADD_STUDENT, 1, 0));
+        cw.apply(&op2(OP_ADD_COURSE, 2, 0));
+        assert!(cw.permissible(&op2(OP_ENROLL, 1, 2)));
+        assert!(cw.apply(&op2(OP_ENROLL, 1, 2)));
+        assert!(cw.invariant_ok());
+    }
+
+    #[test]
+    fn delete_course_cascades_enrollments() {
+        let mut cw = Courseware::default();
+        cw.apply(&op2(OP_ADD_STUDENT, 1, 0));
+        cw.apply(&op2(OP_ADD_COURSE, 2, 0));
+        cw.apply(&op2(OP_ENROLL, 1, 2));
+        assert!(cw.apply(&op2(OP_DELETE_COURSE, 2, 0)));
+        assert!(cw.invariant_ok(), "cascade preserves referential integrity");
+        assert_eq!(cw.counts().2, 0);
+    }
+
+    #[test]
+    fn duplicate_add_course_impermissible() {
+        let mut cw = Courseware::default();
+        cw.apply(&op2(OP_ADD_COURSE, 9, 0));
+        assert!(!cw.permissible(&op2(OP_ADD_COURSE, 9, 0)));
+    }
+
+    #[test]
+    fn conflicting_ops_share_one_group() {
+        let cw = Courseware::default();
+        for opc in [OP_ADD_COURSE, OP_DELETE_COURSE, OP_ENROLL] {
+            assert_eq!(cw.sync_group(opc), 0);
+            assert_eq!(cw.category(opc), Category::Conflicting);
+        }
+        assert_eq!(cw.category(OP_ADD_STUDENT), Category::Irreducible);
+    }
+
+    #[test]
+    fn same_total_order_converges() {
+        let ops = [
+            op2(OP_ADD_STUDENT, 1, 0),
+            op2(OP_ADD_COURSE, 2, 0),
+            op2(OP_ENROLL, 1, 2),
+            op2(OP_DELETE_COURSE, 2, 0),
+            op2(OP_ADD_COURSE, 2, 0),
+        ];
+        let mut a = Courseware::default();
+        let mut b = Courseware::default();
+        for o in &ops {
+            a.apply(o);
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+}

@@ -1,0 +1,13 @@
+//! Well-coordinated Replicated Data Types (Table B.1).
+//!
+//! Each WRDT partitions its transactions into reducible / irreducible /
+//! conflicting categories and declares synchronization groups; conflicting
+//! transactions of one group share an SMR instance and replication log
+//! (§2.1, §4.3). Integrity invariants are checked by `invariant_ok` in
+//! tests and by `permissible` on the execution path.
+
+pub mod account;
+pub mod auction;
+pub mod courseware;
+pub mod movie;
+pub mod project;

@@ -1,0 +1,150 @@
+//! Movie WRDT (Table B.1): theater ticketing database.
+//!
+//! State: customers C, movies M. All four transactions are conflicting and
+//! form **two** synchronization groups (§2.1's example): {addCustomer,
+//! deleteCustomer} and {addMovie, deleteMovie}. Movie has *no* query()
+//! transaction and no non-conflicting transactions (§5.2), which is why the
+//! RPC variant shows no advantage on it — the experiment reproduces that.
+
+use std::collections::HashSet;
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_ADD_CUSTOMER: u8 = 0;
+pub const OP_DELETE_CUSTOMER: u8 = 1;
+pub const OP_ADD_MOVIE: u8 = 2;
+pub const OP_DELETE_MOVIE: u8 = 3;
+
+pub const GROUP_CUSTOMER: u8 = 0;
+pub const GROUP_MOVIE: u8 = 1;
+
+const ID_UNIVERSE: u64 = 512;
+
+#[derive(Clone, Debug, Default)]
+pub struct Movie {
+    customers: HashSet<u64>,
+    movies: HashSet<u64>,
+}
+
+impl Rdt for Movie {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::Movie
+    }
+
+    fn category(&self, _opcode: u8) -> Category {
+        Category::Conflicting
+    }
+
+    fn sync_group(&self, opcode: u8) -> u8 {
+        match opcode {
+            OP_ADD_CUSTOMER | OP_DELETE_CUSTOMER => GROUP_CUSTOMER,
+            _ => GROUP_MOVIE,
+        }
+    }
+
+    fn sync_groups(&self) -> u8 {
+        2
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_CUSTOMER => !self.customers.contains(&op.a),
+            OP_DELETE_CUSTOMER => self.customers.contains(&op.a),
+            OP_ADD_MOVIE => !self.movies.contains(&op.a),
+            OP_DELETE_MOVIE => self.movies.contains(&op.a),
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_CUSTOMER => self.customers.insert(op.a),
+            OP_DELETE_CUSTOMER => self.customers.remove(&op.a),
+            OP_ADD_MOVIE => self.movies.insert(op.a),
+            OP_DELETE_MOVIE => self.movies.remove(&op.a),
+            _ => unreachable!("movie opcode {}", op.opcode),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Pair(self.customers.len() as i64, self.movies.len() as i64)
+    }
+
+    fn has_query(&self) -> bool {
+        false // §5.2: Movie has no query transaction
+    }
+
+    fn state_digest(&self) -> u64 {
+        let dc = self.customers.iter().fold(0u64, |a, &e| a ^ mix64(e));
+        let dm = self.movies.iter().fold(0u64, |a, &e| a ^ mix64(e | 1 << 60));
+        dc ^ dm.rotate_left(19)
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        let opcode = match rng.gen_range(4) {
+            0 => OP_ADD_CUSTOMER,
+            1 => OP_DELETE_CUSTOMER,
+            2 => OP_ADD_MOVIE,
+            _ => OP_DELETE_MOVIE,
+        };
+        OpCall::new(opcode, rng.gen_range(ID_UNIVERSE), 0, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op1(opcode: u8, a: u64) -> OpCall {
+        OpCall::new(opcode, a, 0, 0.0)
+    }
+
+    #[test]
+    fn two_sync_groups_partition_ops() {
+        let m = Movie::default();
+        assert_eq!(m.sync_group(OP_ADD_CUSTOMER), GROUP_CUSTOMER);
+        assert_eq!(m.sync_group(OP_DELETE_CUSTOMER), GROUP_CUSTOMER);
+        assert_eq!(m.sync_group(OP_ADD_MOVIE), GROUP_MOVIE);
+        assert_eq!(m.sync_group(OP_DELETE_MOVIE), GROUP_MOVIE);
+        assert_eq!(m.sync_groups(), 2);
+    }
+
+    #[test]
+    fn all_ops_conflicting() {
+        let m = Movie::default();
+        for opc in [OP_ADD_CUSTOMER, OP_DELETE_CUSTOMER, OP_ADD_MOVIE, OP_DELETE_MOVIE] {
+            assert_eq!(m.category(opc), Category::Conflicting);
+        }
+    }
+
+    #[test]
+    fn delete_requires_presence() {
+        let mut m = Movie::default();
+        assert!(!m.permissible(&op1(OP_DELETE_MOVIE, 3)));
+        m.apply(&op1(OP_ADD_MOVIE, 3));
+        assert!(m.permissible(&op1(OP_DELETE_MOVIE, 3)));
+        assert!(m.apply(&op1(OP_DELETE_MOVIE, 3)));
+    }
+
+    #[test]
+    fn same_order_converges() {
+        let ops = [
+            op1(OP_ADD_MOVIE, 1),
+            op1(OP_ADD_CUSTOMER, 2),
+            op1(OP_DELETE_MOVIE, 1),
+            op1(OP_ADD_MOVIE, 1),
+        ];
+        let mut a = Movie::default();
+        let mut b = Movie::default();
+        for o in &ops {
+            a.apply(o);
+            b.apply(o);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+}

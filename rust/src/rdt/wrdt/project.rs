@@ -1,0 +1,170 @@
+//! Project WRDT (Table B.1): business project management.
+//!
+//! State: employees E, projects P, assignments A.
+//! * addEmployee(e) where e ∉ E — irreducible conflict-free.
+//! * addProject(p) where p ∉ P, deleteProject(p) where p ∈ P,
+//!   assign(e, p) where e ∈ E ∧ p ∈ P ∧ (e,p) ∉ A — conflicting, one group.
+//!
+//! Structurally the sibling of Courseware (the paper benchmarks both; their
+//! performance differs through op-mix and state size, not mechanism).
+
+use std::collections::HashSet;
+
+use crate::rdt::{mix64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::util::rng::Rng;
+
+pub const OP_ADD_EMPLOYEE: u8 = 0;
+pub const OP_ADD_PROJECT: u8 = 1;
+pub const OP_DELETE_PROJECT: u8 = 2;
+pub const OP_ASSIGN: u8 = 3;
+
+const ID_UNIVERSE: u64 = 512;
+
+#[derive(Clone, Debug, Default)]
+pub struct Project {
+    employees: HashSet<u64>,
+    projects: HashSet<u64>,
+    assignments: HashSet<(u64, u64)>,
+}
+
+impl Rdt for Project {
+    fn clone_box(&self) -> Box<dyn Rdt> {
+        Box::new(self.clone())
+    }
+
+    fn kind(&self) -> RdtKind {
+        RdtKind::Project
+    }
+
+    fn category(&self, opcode: u8) -> Category {
+        match opcode {
+            OP_ADD_EMPLOYEE => Category::Irreducible,
+            OP_ADD_PROJECT | OP_DELETE_PROJECT | OP_ASSIGN => Category::Conflicting,
+            _ => Category::Reducible,
+        }
+    }
+
+    fn sync_group(&self, _opcode: u8) -> u8 {
+        0
+    }
+
+    fn sync_groups(&self) -> u8 {
+        1
+    }
+
+    fn permissible(&self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_EMPLOYEE => !self.employees.contains(&op.a),
+            OP_ADD_PROJECT => !self.projects.contains(&op.a),
+            OP_DELETE_PROJECT => self.projects.contains(&op.a),
+            OP_ASSIGN => {
+                self.employees.contains(&op.a)
+                    && self.projects.contains(&op.b)
+                    && !self.assignments.contains(&(op.a, op.b))
+            }
+            _ => op.is_query(),
+        }
+    }
+
+    fn apply(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ADD_EMPLOYEE => self.employees.insert(op.a),
+            OP_ADD_PROJECT => self.projects.insert(op.a),
+            OP_DELETE_PROJECT => {
+                if self.projects.remove(&op.a) {
+                    self.assignments.retain(|&(_, p)| p != op.a);
+                    true
+                } else {
+                    false
+                }
+            }
+            OP_ASSIGN => {
+                if self.employees.contains(&op.a) && self.projects.contains(&op.b) {
+                    self.assignments.insert((op.a, op.b))
+                } else {
+                    false
+                }
+            }
+            _ => unreachable!("project opcode {}", op.opcode),
+        }
+    }
+
+    fn apply_forced(&mut self, op: &OpCall) -> bool {
+        match op.opcode {
+            OP_ASSIGN => self.assignments.insert((op.a, op.b)),
+            OP_DELETE_PROJECT => {
+                self.projects.remove(&op.a);
+                self.assignments.retain(|&(_, p)| p != op.a);
+                true
+            }
+            _ => self.apply(op),
+        }
+    }
+
+    fn query(&self) -> QueryValue {
+        QueryValue::Pair(self.projects.len() as i64, self.assignments.len() as i64)
+    }
+
+    fn state_digest(&self) -> u64 {
+        let de = self.employees.iter().fold(0u64, |a, &e| a ^ mix64(e));
+        let dp = self.projects.iter().fold(0u64, |a, &e| a ^ mix64(e | 1 << 61));
+        let da = self
+            .assignments
+            .iter()
+            .fold(0u64, |a, &(e, p)| a ^ mix64(e.wrapping_mul(0x2E7) ^ (p << 32)));
+        de ^ dp.rotate_left(11) ^ da.rotate_left(29)
+    }
+
+    fn invariant_ok(&self) -> bool {
+        self.assignments
+            .iter()
+            .all(|&(e, p)| self.employees.contains(&e) && self.projects.contains(&p))
+    }
+
+    fn gen_update(&self, rng: &mut Rng) -> OpCall {
+        match rng.gen_range(4) {
+            0 => OpCall::new(OP_ADD_EMPLOYEE, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            1 => OpCall::new(OP_ADD_PROJECT, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            2 => OpCall::new(OP_DELETE_PROJECT, rng.gen_range(ID_UNIVERSE), 0, 0.0),
+            _ => OpCall::new(OP_ASSIGN, rng.gen_range(ID_UNIVERSE), rng.gen_range(ID_UNIVERSE), 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op2(opcode: u8, a: u64, b: u64) -> OpCall {
+        OpCall::new(opcode, a, b, 0.0)
+    }
+
+    #[test]
+    fn assign_needs_both() {
+        let mut p = Project::default();
+        assert!(!p.permissible(&op2(OP_ASSIGN, 1, 2)));
+        p.apply(&op2(OP_ADD_EMPLOYEE, 1, 0));
+        p.apply(&op2(OP_ADD_PROJECT, 2, 0));
+        assert!(p.apply(&op2(OP_ASSIGN, 1, 2)));
+        assert!(p.invariant_ok());
+    }
+
+    #[test]
+    fn delete_project_cascades() {
+        let mut p = Project::default();
+        p.apply(&op2(OP_ADD_EMPLOYEE, 1, 0));
+        p.apply(&op2(OP_ADD_PROJECT, 2, 0));
+        p.apply(&op2(OP_ASSIGN, 1, 2));
+        p.apply(&op2(OP_DELETE_PROJECT, 2, 0));
+        assert!(p.invariant_ok());
+        assert_eq!(p.query(), QueryValue::Pair(0, 0));
+    }
+
+    #[test]
+    fn categories_match_table_b1() {
+        let p = Project::default();
+        assert_eq!(p.category(OP_ADD_EMPLOYEE), Category::Irreducible);
+        assert_eq!(p.category(OP_ASSIGN), Category::Conflicting);
+        assert_eq!(p.sync_groups(), 1);
+    }
+}

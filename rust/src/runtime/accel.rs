@@ -1,0 +1,190 @@
+//! Typed batch accelerators over the PJRT runtime — the Rust-side mirror of
+//! the paper's FPGA-resident operators (Fig 1). The Dispatcher selects one
+//! by name; inputs are padded to the fixed AOT export shapes
+//! (N=8 replicas, K=1024 keys, B=256 burst, W=512 words — model.py).
+//!
+//! Every operator has a scalar fallback in `rdt/` / `engine/store.rs`; the
+//! integration tests assert kernel == scalar exactly.
+
+use anyhow::{ensure, Result};
+
+use super::exec::Runtime;
+
+pub const N_REPLICAS: usize = 8;
+pub const K_KEYS: usize = 1024;
+pub const B_BURST: usize = 256;
+pub const W_WORDS: usize = 512;
+
+pub struct Accelerator {
+    rt: Runtime,
+}
+
+impl Accelerator {
+    pub fn new(rt: Runtime) -> Self {
+        Accelerator { rt }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Accelerator { rt: Runtime::load(super::DEFAULT_ARTIFACTS)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.rt.calls
+    }
+
+    fn pad_rows_f32(rows: &[Vec<f32>], k: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; N_REPLICAS * k];
+        for (i, row) in rows.iter().enumerate() {
+            out[i * k..i * k + row.len()].copy_from_slice(row);
+        }
+        out
+    }
+
+    fn pad_rows_i32(rows: &[Vec<i32>], k: usize) -> Vec<i32> {
+        let mut out = vec![0i32; N_REPLICAS * k];
+        for (i, row) in rows.iter().enumerate() {
+            out[i * k..i * k + row.len()].copy_from_slice(row);
+        }
+        out
+    }
+
+    /// PN-Counter fold: per-replica increment/decrement contribution rows
+    /// -> merged values (first `k` entries meaningful).
+    pub fn pn_counter_merge(&mut self, p: &[Vec<f32>], m: &[Vec<f32>]) -> Result<Vec<f32>> {
+        ensure!(p.len() <= N_REPLICAS && p.len() == m.len(), "≤{N_REPLICAS} replica rows");
+        let k = p.iter().map(|r| r.len()).max().unwrap_or(0);
+        ensure!(k <= K_KEYS, "≤{K_KEYS} counters per tile");
+        let pl = Runtime::lit_f32_2d(&Self::pad_rows_f32(p, K_KEYS), N_REPLICAS, K_KEYS)?;
+        let ml = Runtime::lit_f32_2d(&Self::pad_rows_f32(m, K_KEYS), N_REPLICAS, K_KEYS)?;
+        let outs = self.rt.call("pn_counter_merge", &[pl, ml])?;
+        let mut v = outs[0].to_vec::<f32>()?;
+        v.truncate(k);
+        Ok(v)
+    }
+
+    /// LWW fold: (values, timestamps) per replica -> merged (values, ts).
+    pub fn lww_merge(&mut self, vals: &[Vec<f32>], ts: &[Vec<i32>]) -> Result<(Vec<f32>, Vec<i32>)> {
+        ensure!(vals.len() <= N_REPLICAS && vals.len() == ts.len(), "row count");
+        let k = vals.iter().map(|r| r.len()).max().unwrap_or(0);
+        ensure!(k <= K_KEYS, "≤{K_KEYS} registers per tile");
+        let vl = Runtime::lit_f32_2d(&Self::pad_rows_f32(vals, K_KEYS), N_REPLICAS, K_KEYS)?;
+        let tl = Runtime::lit_i32_2d(&Self::pad_rows_i32(ts, K_KEYS), N_REPLICAS, K_KEYS)?;
+        let outs = self.rt.call("lww_register_merge", &[vl, tl])?;
+        let mut v = outs[0].to_vec::<f32>()?;
+        let mut t = outs[1].to_vec::<i32>()?;
+        v.truncate(k);
+        t.truncate(k);
+        Ok((v, t))
+    }
+
+    /// G-Set fold: per-replica bitmaps -> merged bitmap.
+    pub fn gset_merge(&mut self, bitmaps: &[Vec<i32>]) -> Result<Vec<i32>> {
+        ensure!(bitmaps.len() <= N_REPLICAS, "≤{N_REPLICAS} replica rows");
+        let w = bitmaps.iter().map(|r| r.len()).max().unwrap_or(0);
+        ensure!(w <= W_WORDS, "≤{W_WORDS} bitmap words");
+        let bl = Runtime::lit_i32_2d(&Self::pad_rows_i32(bitmaps, W_WORDS), N_REPLICAS, W_WORDS)?;
+        let outs = self.rt.call("gset_merge", &[bl])?;
+        let mut v = outs[0].to_vec::<i32>()?;
+        v.truncate(w);
+        Ok(v)
+    }
+
+    /// 2P-Set fold: present = OR(adds) & !OR(removes).
+    pub fn two_p_set_merge(&mut self, adds: &[Vec<i32>], removes: &[Vec<i32>]) -> Result<Vec<i32>> {
+        ensure!(adds.len() <= N_REPLICAS && removes.len() <= N_REPLICAS, "row count");
+        let w = adds
+            .iter()
+            .chain(removes.iter())
+            .map(|r| r.len())
+            .max()
+            .unwrap_or(0);
+        ensure!(w <= W_WORDS, "≤{W_WORDS} bitmap words");
+        let al = Runtime::lit_i32_2d(&Self::pad_rows_i32(adds, W_WORDS), N_REPLICAS, W_WORDS)?;
+        let rl = Runtime::lit_i32_2d(&Self::pad_rows_i32(removes, W_WORDS), N_REPLICAS, W_WORDS)?;
+        let outs = self.rt.call("two_p_set_merge", &[al, rl])?;
+        let mut v = outs[0].to_vec::<i32>()?;
+        v.truncate(w);
+        Ok(v)
+    }
+
+    /// Account overdraft scan: (starting balance, signed deltas) ->
+    /// (accept mask, final balance). Padding deltas are 0 (always accepted,
+    /// no effect).
+    pub fn account_guard(&mut self, b0: f32, deltas: &[f32]) -> Result<(Vec<bool>, f32)> {
+        ensure!(deltas.len() <= B_BURST, "≤{B_BURST} ops per burst");
+        let mut d = deltas.to_vec();
+        d.resize(B_BURST, 0.0);
+        let outs = self
+            .rt
+            .call("account_guard", &[Runtime::lit_f32_1d(&[b0]), Runtime::lit_f32_1d(&d)])?;
+        let mask = outs[0].to_vec::<i32>()?;
+        let bal = outs[1].to_vec::<f32>()?[0];
+        Ok((mask[..deltas.len()].iter().map(|&m| m != 0).collect(), bal))
+    }
+
+    /// KV burst scatter-add (duplicate keys accumulate). State tile must be
+    /// ≤ K_KEYS; padding ops target key 0 with delta 0.
+    pub fn kv_burst_apply(&mut self, state: &[f32], keys: &[i32], deltas: &[f32]) -> Result<Vec<f32>> {
+        ensure!(state.len() <= K_KEYS, "≤{K_KEYS} keys per tile");
+        ensure!(keys.len() == deltas.len() && keys.len() <= B_BURST, "burst shape");
+        ensure!(
+            keys.iter().all(|&k| (k as usize) < state.len().max(1)),
+            "keys must be in range"
+        );
+        let mut s = state.to_vec();
+        s.resize(K_KEYS, 0.0);
+        let mut kk = keys.to_vec();
+        kk.resize(B_BURST, 0);
+        let mut dd = deltas.to_vec();
+        dd.resize(B_BURST, 0.0);
+        let outs = self.rt.call(
+            "kv_burst_apply",
+            &[Runtime::lit_f32_1d(&s), Runtime::lit_i32_1d(&kk), Runtime::lit_f32_1d(&dd)],
+        )?;
+        let mut v = outs[0].to_vec::<f32>()?;
+        v.truncate(state.len());
+        Ok(v)
+    }
+
+    /// Fused SmallBank step: guard one hot account's delta batch, mask the
+    /// burst, scatter-apply. Returns (new state, accept mask, final guard
+    /// balance).
+    pub fn smallbank_burst(
+        &mut self,
+        state: &[f32],
+        keys: &[i32],
+        deltas: &[f32],
+        b0: f32,
+        guard_deltas: &[f32],
+    ) -> Result<(Vec<f32>, Vec<bool>, f32)> {
+        ensure!(state.len() <= K_KEYS && keys.len() == deltas.len(), "shapes");
+        ensure!(keys.len() <= B_BURST && guard_deltas.len() <= B_BURST, "burst");
+        let mut s = state.to_vec();
+        s.resize(K_KEYS, 0.0);
+        let mut kk = keys.to_vec();
+        kk.resize(B_BURST, 0);
+        let mut dd = deltas.to_vec();
+        dd.resize(B_BURST, 0.0);
+        let mut gg = guard_deltas.to_vec();
+        gg.resize(B_BURST, 0.0);
+        let outs = self.rt.call(
+            "smallbank_burst",
+            &[
+                Runtime::lit_f32_1d(&s),
+                Runtime::lit_i32_1d(&kk),
+                Runtime::lit_f32_1d(&dd),
+                Runtime::lit_f32_1d(&[b0]),
+                Runtime::lit_f32_1d(&gg),
+            ],
+        )?;
+        let mut v = outs[0].to_vec::<f32>()?;
+        v.truncate(state.len());
+        let mask = outs[1].to_vec::<i32>()?;
+        let bal = outs[2].to_vec::<f32>()?[0];
+        Ok((v, mask[..guard_deltas.len()].iter().map(|&m| m != 0).collect(), bal))
+    }
+}

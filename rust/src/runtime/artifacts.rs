@@ -1,0 +1,136 @@
+//! Artifact manifest: `artifacts/manifest.txt`, one line per exported
+//! entry — `name;in=f32[8x1024],...;out=f32[1024],...` — written by
+//! `python/compile/aot.py` and parsed here so the runtime can type-check
+//! inputs before handing them to PJRT.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    fn parse(s: &str) -> Result<Self> {
+        let (dt, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor sig {s}"))?;
+        let dims = rest.trim_end_matches(']');
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().map_err(Into::into))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSig { dtype: DType::parse(dt)?, shape })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Signature {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<Signature>,
+}
+
+impl Manifest {
+    pub fn parse(body: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (i, line) in body.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split(';');
+            let name = parts.next().context("missing name")?.to_string();
+            let ins = parts
+                .next()
+                .and_then(|p| p.strip_prefix("in="))
+                .with_context(|| format!("line {}: missing in=", i + 1))?;
+            let outs = parts
+                .next()
+                .and_then(|p| p.strip_prefix("out="))
+                .with_context(|| format!("line {}: missing out=", i + 1))?;
+            let parse_list = |s: &str| -> Result<Vec<TensorSig>> {
+                s.split(',').map(TensorSig::parse).collect()
+            };
+            entries.push(Signature { name, inputs: parse_list(ins)?, outputs: parse_list(outs)? });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let body = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Self::parse(&body)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Signature> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+pn_counter_merge;in=float32[8x1024],float32[8x1024];out=float32[1024]
+account_guard;in=float32[1],float32[256];out=int32[256],float32[1]
+";
+
+    #[test]
+    fn parses_manifest_lines() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let pn = m.get("pn_counter_merge").unwrap();
+        assert_eq!(pn.inputs.len(), 2);
+        assert_eq!(pn.inputs[0].shape, vec![8, 1024]);
+        assert_eq!(pn.inputs[0].dtype, DType::F32);
+        assert_eq!(pn.outputs[0].elems(), 1024);
+        let ag = m.get("account_guard").unwrap();
+        assert_eq!(ag.outputs[0].dtype, DType::I32);
+        assert_eq!(ag.outputs[1].shape, vec![1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name_only").is_err());
+        assert!(Manifest::parse("x;in=f99[2];out=float32[1]").is_err());
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! PJRT executable registry: HLO text -> compile once -> execute many.
+//!
+//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md: jax
+//! >= 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+    /// Executions served (perf accounting).
+    pub calls: u64,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (expects `manifest.txt` +
+    /// `<name>.hlo.txt`, produced by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for sig in &manifest.entries {
+            let path = dir.join(format!("{}.hlo.txt", sig.name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", sig.name))?;
+            exes.insert(sig.name.clone(), exe);
+        }
+        Ok(Runtime { client, manifest, exes, dir, calls: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Execute `name` with the given input literals; returns the flattened
+    /// output tuple.
+    pub fn call(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let Some(sig) = self.manifest.get(name) else {
+            bail!("unknown artifact {name}; have {:?}", self.names());
+        };
+        if inputs.len() != sig.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", sig.inputs.len(), inputs.len());
+        }
+        let exe = self.exes.get(name).expect("compiled artifact");
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        self.calls += 1;
+        // aot.py lowers with return_tuple=True: flatten the tuple.
+        let n_out = sig.outputs.len();
+        let outs = result.to_tuple()?;
+        if outs.len() != n_out {
+            bail!("{name}: expected {n_out} outputs, got {}", outs.len());
+        }
+        Ok(outs)
+    }
+
+    /// f32 literal of the given 2-D shape (row-major).
+    pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    pub fn lit_f32_1d(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    pub fn lit_i32_1d(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+}

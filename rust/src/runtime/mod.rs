@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled Pallas/JAX artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from Rust. Python never runs on this path.
+//!
+//! * [`artifacts`] — manifest parsing + artifact registry.
+//! * [`exec`] — the PJRT CPU client wrapper (compile once, execute many).
+//! * [`accel`] — typed batch operators mirroring the paper's FPGA-resident
+//!   accelerators (Fig 1's Dispatcher targets), with padding to the fixed
+//!   export shapes.
+
+pub mod accel;
+pub mod artifacts;
+pub mod exec;
+
+pub use accel::Accelerator;
+pub use artifacts::{Manifest, Signature};
+pub use exec::Runtime;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,189 @@
+//! Discrete-event simulation core: a virtual nanosecond clock and a
+//! deterministic event queue.
+//!
+//! Everything time-shaped in SafarDB's reproduction flows through here —
+//! verb deliveries, ACKs, background pollers, heartbeat scans, crash
+//! injections, and closed-loop client arrivals. Determinism: events are
+//! totally ordered by `(time, seq)` where `seq` is the global push order,
+//! so equal-time events fire in FIFO order and runs are bit-reproducible
+//! from the config seed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::net::verbs::Verb;
+
+/// Virtual time in nanoseconds.
+pub type Time = u64;
+
+/// Replica index (0-based).
+pub type NodeId = usize;
+
+/// Background timers a replica can arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimerKind {
+    /// §4.1 config (2): poll HBM to refresh the on-fabric copy of the
+    /// contribution array.
+    PollReducible,
+    /// §4.2 config (1): poll the per-origin FIFO queues.
+    PollIrreducible,
+    /// §4.3 config (1): poll the replication log of one sync group.
+    PollLog(u8),
+    /// Summarization flush deadline (§5.4 Summarization).
+    SummarizeFlush,
+    /// Leader-switch plane: heartbeat scanner tick (§4.4).
+    HeartbeatScan,
+    /// Retry driving the SMR pipeline (leader waiting for quorum timeout).
+    SmrTick(u8),
+    /// Generic continuation: replica finished a locally-serialized work
+    /// item and should pick up the next queued one.
+    WorkDone,
+}
+
+/// Event payloads.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A closed-loop client slot at this replica wants to issue its next op.
+    ClientArrive { client: usize },
+    /// A verb arrives at this node's NIC (payload lands per its dst_mem).
+    VerbDeliver { src: NodeId, verb: Verb },
+    /// Completion (CQE/ACK) for a verb this node issued earlier.
+    AckDeliver { token: u64 },
+    /// Negative completion: QP closed at target or target crashed.
+    NackDeliver { token: u64 },
+    /// A background timer fired.
+    Timer(TimerKind),
+    /// Fault injection.
+    Crash,
+    Recover,
+}
+
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub time: Time,
+    pub seq: u64,
+    pub dest: NodeId,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Deterministic min-queue of events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now: Time,
+    pushed: u64,
+    popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn push(&mut self, time: Time, dest: NodeId, kind: EventKind) {
+        debug_assert!(time >= self.now, "scheduling into the past: {} < {}", time, self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.pushed += 1;
+        self.heap.push(Reverse(Event { time, seq, dest, kind }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop().map(|Reverse(e)| e)?;
+        debug_assert!(ev.time >= self.now);
+        self.now = ev.time;
+        self.popped += 1;
+        Some(ev)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// (pushed, popped) — engine throughput accounting for §Perf.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.pushed, self.popped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(q: &mut EventQueue, t: Time) {
+        q.push(t, 0, EventKind::Timer(TimerKind::WorkDone));
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        ev(&mut q, 30);
+        ev(&mut q, 10);
+        ev(&mut q, 20);
+        let times: Vec<Time> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn equal_times_fifo_by_push_order() {
+        let mut q = EventQueue::new();
+        q.push(5, 1, EventKind::Timer(TimerKind::WorkDone));
+        q.push(5, 2, EventKind::Timer(TimerKind::WorkDone));
+        q.push(5, 3, EventKind::Timer(TimerKind::WorkDone));
+        let dests: Vec<NodeId> = std::iter::from_fn(|| q.pop()).map(|e| e.dest).collect();
+        assert_eq!(dests, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        ev(&mut q, 10);
+        ev(&mut q, 10);
+        ev(&mut q, 40);
+        let mut last = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.time >= last);
+            last = e.time;
+            assert_eq!(q.now(), e.time);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    #[cfg(debug_assertions)]
+    fn rejects_past_scheduling() {
+        let mut q = EventQueue::new();
+        ev(&mut q, 10);
+        q.pop();
+        ev(&mut q, 5);
+    }
+}

@@ -1,0 +1,149 @@
+//! Leader Switch Plane (§4.4): heartbeat tracking, crash detection, and
+//! smallest-live-ID leader election.
+//!
+//! Each replica keeps an RDMA-exposed heartbeat counter it increments
+//! periodically; its Heartbeat Scanner RDMA-reads every other replica's
+//! counter. A counter unchanged for `threshold` consecutive reads marks the
+//! replica failed; a counter that moves again marks it recovered. If the
+//! failed replica was the leader, the new leader is the smallest live ID
+//! and every live replica performs a Permission Switch (Fig 13).
+
+use crate::sim::NodeId;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PeerState {
+    last_value: u64,
+    unchanged: u32,
+    alive: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct HeartbeatTracker {
+    me: NodeId,
+    peers: Vec<PeerState>,
+    threshold: u32,
+}
+
+/// What a heartbeat observation revealed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HbVerdict {
+    Alive,
+    /// Crossed the failure threshold on *this* observation.
+    JustFailed,
+    /// Already considered failed.
+    StillDead,
+    /// Was failed, counter moved again (§3: replicas may return).
+    Recovered,
+}
+
+impl HeartbeatTracker {
+    pub fn new(me: NodeId, n: usize, threshold: u32) -> Self {
+        HeartbeatTracker {
+            me,
+            peers: vec![PeerState { last_value: 0, unchanged: 0, alive: true }; n],
+            threshold,
+        }
+    }
+
+    /// Feed one heartbeat read of `peer`.
+    pub fn observe(&mut self, peer: NodeId, value: u64) -> HbVerdict {
+        debug_assert_ne!(peer, self.me);
+        let s = &mut self.peers[peer];
+        if value != s.last_value {
+            s.last_value = value;
+            s.unchanged = 0;
+            if !s.alive {
+                s.alive = true;
+                return HbVerdict::Recovered;
+            }
+            return HbVerdict::Alive;
+        }
+        if !s.alive {
+            return HbVerdict::StillDead;
+        }
+        s.unchanged += 1;
+        if s.unchanged >= self.threshold {
+            s.alive = false;
+            HbVerdict::JustFailed
+        } else {
+            HbVerdict::Alive
+        }
+    }
+
+    /// A read that never completed (node crashed hard): counts as an
+    /// unchanged observation.
+    pub fn observe_timeout(&mut self, peer: NodeId) -> HbVerdict {
+        let v = self.peers[peer].last_value;
+        self.observe(peer, v)
+    }
+
+    pub fn is_alive(&self, peer: NodeId) -> bool {
+        if peer == self.me {
+            true
+        } else {
+            self.peers[peer].alive
+        }
+    }
+
+    /// Live replica set as this replica sees it (self always included).
+    pub fn live_set(&self) -> Vec<NodeId> {
+        (0..self.peers.len()).filter(|&i| self.is_alive(i)).collect()
+    }
+
+    /// Election rule: the live replica with the smallest ID (§4.4).
+    pub fn elect_leader(&self) -> NodeId {
+        self.live_set().into_iter().min().expect("self is always live")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_after_threshold_unchanged_reads() {
+        let mut t = HeartbeatTracker::new(1, 4, 3);
+        assert_eq!(t.observe(0, 5), HbVerdict::Alive);
+        assert_eq!(t.observe(0, 5), HbVerdict::Alive);
+        assert_eq!(t.observe(0, 5), HbVerdict::Alive); // unchanged #2
+        assert_eq!(t.observe(0, 5), HbVerdict::JustFailed); // unchanged #3
+        assert!(!t.is_alive(0));
+        assert_eq!(t.observe(0, 5), HbVerdict::StillDead);
+    }
+
+    #[test]
+    fn progressing_heartbeat_stays_alive() {
+        let mut t = HeartbeatTracker::new(1, 2, 2);
+        for v in 1..100 {
+            assert_eq!(t.observe(0, v), HbVerdict::Alive);
+        }
+        assert!(t.is_alive(0));
+    }
+
+    #[test]
+    fn recovery_detected() {
+        let mut t = HeartbeatTracker::new(1, 2, 1);
+        t.observe(0, 5);
+        assert_eq!(t.observe(0, 5), HbVerdict::JustFailed);
+        assert_eq!(t.observe(0, 6), HbVerdict::Recovered);
+        assert!(t.is_alive(0));
+    }
+
+    #[test]
+    fn elects_smallest_live_id() {
+        let mut t = HeartbeatTracker::new(2, 4, 1);
+        assert_eq!(t.elect_leader(), 0);
+        t.observe(0, 0); // unchanged from initial 0 -> failed (threshold 1)
+        assert_eq!(t.elect_leader(), 1);
+        t.observe(1, 0);
+        assert_eq!(t.elect_leader(), 2, "self is next smallest");
+    }
+
+    #[test]
+    fn timeout_counts_as_unchanged() {
+        let mut t = HeartbeatTracker::new(1, 2, 2);
+        t.observe(0, 9);
+        assert_eq!(t.observe_timeout(0), HbVerdict::Alive);
+        assert_eq!(t.observe_timeout(0), HbVerdict::JustFailed);
+    }
+}

@@ -1,0 +1,155 @@
+//! Replication log (§4.3): per-synchronization-group ordered slots of
+//! `(proposal, operation)`. Allocated in HBM in the paper because it can
+//! outgrow on-fabric storage; here it is a real Vec the recovery path
+//! replays from.
+
+use crate::rdt::OpCall;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogEntry {
+    pub proposal: u64,
+    pub op: OpCall,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ReplicationLog {
+    slots: Vec<Option<LogEntry>>,
+    /// Highest proposal number this replica has promised/seen (Mu's
+    /// min-proposal register, RDMA-readable).
+    pub min_proposal: u64,
+    /// Slots `< applied_upto` have been executed against local state.
+    pub applied_upto: u64,
+}
+
+impl ReplicationLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.slots.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// First never-written slot index (leader's append point).
+    pub fn next_free_slot(&self) -> u64 {
+        self.slots.iter().rposition(|s| s.is_some()).map(|i| i as u64 + 1).unwrap_or(0)
+    }
+
+    pub fn read_slot(&self, slot: u64) -> Option<LogEntry> {
+        self.slots.get(slot as usize).copied().flatten()
+    }
+
+    /// Write a slot (leader's Accept write, or recovery replay). Higher
+    /// proposals overwrite lower ones; equal/lower are ignored (stale
+    /// leader fencing at the data level).
+    pub fn write_slot(&mut self, slot: u64, proposal: u64, op: OpCall) -> bool {
+        let idx = slot as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize(idx + 1, None);
+        }
+        match self.slots[idx] {
+            Some(e) if e.proposal >= proposal => false,
+            _ => {
+                self.slots[idx] = Some(LogEntry { proposal, op });
+                true
+            }
+        }
+    }
+
+    pub fn bump_min_proposal(&mut self, proposal: u64) -> bool {
+        if proposal > self.min_proposal {
+            self.min_proposal = proposal;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Contiguously committed entries not yet applied; advances
+    /// `applied_upto`. This is what the follower's poller (§4.3 config 1)
+    /// or the write-through path drains.
+    pub fn drain_unapplied(&mut self) -> Vec<LogEntry> {
+        let mut out = Vec::new();
+        while let Some(e) = self.read_slot(self.applied_upto) {
+            out.push(e);
+            self.applied_upto += 1;
+        }
+        out
+    }
+
+    /// Entries from `from` upward — the leader's recovery replay for a
+    /// returned follower (§3 Fault Model).
+    pub fn entries_from(&self, from: u64) -> Vec<(u64, LogEntry)> {
+        (from..self.next_free_slot())
+            .filter_map(|s| self.read_slot(s).map(|e| (s, e)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(n: u64) -> OpCall {
+        OpCall::new(0, n, 0, 0.0)
+    }
+
+    #[test]
+    fn append_and_read() {
+        let mut l = ReplicationLog::new();
+        assert_eq!(l.next_free_slot(), 0);
+        assert!(l.write_slot(0, 1, op(10)));
+        assert_eq!(l.next_free_slot(), 1);
+        assert_eq!(l.read_slot(0).unwrap().op.a, 10);
+        assert!(l.read_slot(1).is_none());
+    }
+
+    #[test]
+    fn higher_proposal_overwrites() {
+        let mut l = ReplicationLog::new();
+        l.write_slot(0, 2, op(1));
+        assert!(!l.write_slot(0, 1, op(2)), "stale proposal rejected");
+        assert!(!l.write_slot(0, 2, op(3)), "equal proposal rejected");
+        assert!(l.write_slot(0, 3, op(4)));
+        assert_eq!(l.read_slot(0).unwrap().op.a, 4);
+    }
+
+    #[test]
+    fn drain_applies_contiguous_prefix_only() {
+        let mut l = ReplicationLog::new();
+        l.write_slot(0, 1, op(0));
+        l.write_slot(2, 1, op(2)); // gap at slot 1
+        let d = l.drain_unapplied();
+        assert_eq!(d.len(), 1);
+        assert_eq!(l.applied_upto, 1);
+        l.write_slot(1, 1, op(1));
+        let d2 = l.drain_unapplied();
+        assert_eq!(d2.len(), 2, "gap filled, both drain");
+        assert_eq!(l.applied_upto, 3);
+    }
+
+    #[test]
+    fn min_proposal_monotone() {
+        let mut l = ReplicationLog::new();
+        assert!(l.bump_min_proposal(5));
+        assert!(!l.bump_min_proposal(5));
+        assert!(!l.bump_min_proposal(3));
+        assert_eq!(l.min_proposal, 5);
+    }
+
+    #[test]
+    fn recovery_replay_range() {
+        let mut l = ReplicationLog::new();
+        for s in 0..5 {
+            l.write_slot(s, 1, op(s));
+        }
+        let replay = l.entries_from(2);
+        assert_eq!(replay.len(), 3);
+        assert_eq!(replay[0].0, 2);
+        assert_eq!(replay[2].1.op.a, 4);
+    }
+}

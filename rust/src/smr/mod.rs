@@ -1,0 +1,16 @@
+//! State Machine Replication for conflicting transactions (§4.3/4.4).
+//!
+//! * [`log`] — the replication log: a circular buffer in (modeled) HBM,
+//!   one per synchronization group, used for commit and recovery.
+//! * [`mu`] — the leader-side Mu state machine (Propose / Prepare /
+//!   Accept), expressed as a pure action-emitting automaton so the engine
+//!   wires it to the simulated network and tests drive it directly.
+//! * [`election`] — the Leader Switch Plane: heartbeat tracking, failure
+//!   detection, smallest-live-ID election.
+//! * [`raft`] — the simplified Raft used by the Waverunner baseline
+//!   (leader-only client handling).
+
+pub mod election;
+pub mod log;
+pub mod mu;
+pub mod raft;

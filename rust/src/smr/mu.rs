@@ -1,0 +1,441 @@
+//! Mu [3] leader-side state machine (§4.4 Replication Plane), one instance
+//! per synchronization group.
+//!
+//! Per conflicting transaction the leader runs, as the paper describes:
+//!   Prepare: RDMA-read followers' min-proposal registers → RDMA-write the
+//!   next highest proposal number → RDMA-read the target log slot at each
+//!   follower (adopting the highest-proposal non-empty entry if any) →
+//!   Accept: execute and RDMA-write the entry to followers' logs (standard
+//!   Write, or RPC Write-Through which also updates follower state
+//!   directly, skipping their log poll).
+//!
+//! The automaton is *pure*: it emits [`Round`]s; the engine fans each round
+//! out to the current live follower set over the simulated fabric and feeds
+//! responses back. Each round completes on a majority quorum (leader
+//! included). NACKed/crashed followers are counted as failures; if failures
+//! make quorum impossible the instance stalls and the engine retries after
+//! the follower list is refreshed by the Leader Switch Plane.
+
+use std::collections::VecDeque;
+
+use crate::rdt::OpCall;
+
+/// One fan-out round to the follower set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Round {
+    /// RDMA read each follower's min-proposal register.
+    ReadMinProposals,
+    /// RDMA write the chosen proposal number.
+    WriteProposal { proposal: u64 },
+    /// RDMA read the log slot the leader intends to use.
+    ReadSlots { slot: u64 },
+    /// Accept: RDMA write (or RPC write-through) the entry. `adopted` is
+    /// true when the entry was recovered from a follower's slot rather
+    /// than proposed by this leader.
+    WriteLog { slot: u64, proposal: u64, op: OpCall, adopted: bool },
+}
+
+/// What the engine should do after feeding a response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Step {
+    /// Nothing yet — keep feeding responses.
+    Wait,
+    /// Start the next round (previous one reached quorum).
+    Next(Round),
+    /// The entry in `slot` is committed; `op` must be applied at the leader
+    /// and (if `adopted`) the originally proposed op must be re-submitted.
+    Commit { slot: u64, proposal: u64, op: OpCall, adopted: Option<OpCall> },
+    /// Quorum unreachable with the current follower set.
+    Stall,
+}
+
+/// Response payloads the engine feeds back.
+#[derive(Clone, Copy, Debug)]
+pub enum Resp {
+    MinProposal(u64),
+    Ack,
+    Slot(Option<(u64, OpCall)>),
+    Failure,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Idle,
+    ReadProposals,
+    WriteProposal,
+    ReadSlots,
+    Accept,
+}
+
+#[derive(Debug)]
+pub struct MuInstance {
+    pub group: u8,
+    phase: Phase,
+    /// Followers targeted in the in-flight round.
+    targeted: u32,
+    responded: u32,
+    failed: u32,
+    /// Cluster size (quorum = majority of n, leader counts as one vote).
+    n: usize,
+    proposal: u64,
+    max_seen_proposal: u64,
+    slot: u64,
+    current_op: Option<OpCall>,
+    /// Originally submitted op when a foreign entry got adopted.
+    original_op: Option<OpCall>,
+    /// Highest-proposal non-empty slot seen during ReadSlots.
+    adopted: Option<(u64, OpCall)>,
+    queue: VecDeque<OpCall>,
+    pub committed: u64,
+    pub restarts: u64,
+}
+
+impl MuInstance {
+    pub fn new(group: u8, n: usize) -> Self {
+        MuInstance {
+            group,
+            phase: Phase::Idle,
+            targeted: 0,
+            responded: 0,
+            failed: 0,
+            n,
+            proposal: 0,
+            max_seen_proposal: 0,
+            slot: 0,
+            current_op: None,
+            original_op: None,
+            adopted: None,
+            queue: VecDeque::new(),
+            committed: 0,
+            restarts: 0,
+        }
+    }
+
+    pub fn set_cluster_size(&mut self, n: usize) {
+        self.n = n;
+    }
+
+    /// Followers (excluding the leader) whose responses complete a quorum.
+    fn quorum_followers(&self) -> u32 {
+        (self.n / 2) as u32 // majority of n including the leader's own vote
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.phase == Phase::Idle && self.queue.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Submit a conflicting op. Returns the first round to fan out if the
+    /// instance was idle.
+    pub fn submit(&mut self, op: OpCall, next_free_slot: u64) -> Option<Round> {
+        if self.phase != Phase::Idle {
+            self.queue.push_back(op);
+            return None;
+        }
+        self.begin(op, next_free_slot)
+    }
+
+    fn begin(&mut self, op: OpCall, next_free_slot: u64) -> Option<Round> {
+        self.current_op = Some(op);
+        self.slot = next_free_slot;
+        self.adopted = None;
+        self.phase = Phase::ReadProposals;
+        self.arm();
+        Some(Round::ReadMinProposals)
+    }
+
+    /// The engine tells the instance how many followers it targeted.
+    pub fn round_started(&mut self, targeted: u32) {
+        self.targeted = targeted;
+    }
+
+    fn arm(&mut self) {
+        self.responded = 0;
+        self.failed = 0;
+        self.max_seen_proposal = self.max_seen_proposal.max(self.proposal);
+    }
+
+    /// Pop the next queued op once a commit completes. Returns the opening
+    /// round if something was queued.
+    pub fn pump(&mut self, next_free_slot: u64) -> Option<Round> {
+        debug_assert_eq!(self.phase, Phase::Idle);
+        let op = self.queue.pop_front()?;
+        self.begin(op, next_free_slot)
+    }
+
+    /// Feed one follower response for the in-flight round.
+    pub fn on_response(&mut self, resp: Resp) -> Step {
+        if self.phase == Phase::Idle {
+            return Step::Wait; // stale response after stall/commit
+        }
+        match resp {
+            Resp::Failure => self.failed += 1,
+            Resp::MinProposal(p) => {
+                self.max_seen_proposal = self.max_seen_proposal.max(p);
+                self.responded += 1;
+            }
+            Resp::Ack => self.responded += 1,
+            Resp::Slot(entry) => {
+                if let Some((p, op)) = entry {
+                    match self.adopted {
+                        Some((bp, _)) if bp >= p => {}
+                        _ => self.adopted = Some((p, op)),
+                    }
+                }
+                self.responded += 1;
+            }
+        }
+
+        let need = self.quorum_followers();
+        if self.responded < need {
+            // Quorum impossible once too many targets have failed.
+            let healthy_remaining = self.targeted - self.responded - self.failed;
+            if self.responded + healthy_remaining < need {
+                return Step::Stall;
+            }
+            return Step::Wait;
+        }
+
+        // Quorum reached: advance the phase.
+        match self.phase {
+            Phase::ReadProposals => {
+                self.proposal = self.max_seen_proposal + 1;
+                self.phase = Phase::WriteProposal;
+                self.arm();
+                Step::Next(Round::WriteProposal { proposal: self.proposal })
+            }
+            Phase::WriteProposal => {
+                self.phase = Phase::ReadSlots;
+                self.arm();
+                Step::Next(Round::ReadSlots { slot: self.slot })
+            }
+            Phase::ReadSlots => {
+                // Adopt a previously accepted entry if any slot was non-empty.
+                let mut was_adopted = false;
+                let op = if let Some((_, foreign)) = self.adopted {
+                    if Some(foreign) != self.current_op {
+                        self.original_op = self.current_op.take();
+                        self.restarts += 1;
+                        was_adopted = true;
+                    }
+                    foreign
+                } else {
+                    self.current_op.expect("op in flight")
+                };
+                self.current_op = Some(op);
+                self.phase = Phase::Accept;
+                self.arm();
+                Step::Next(Round::WriteLog {
+                    slot: self.slot,
+                    proposal: self.proposal,
+                    op,
+                    adopted: was_adopted,
+                })
+            }
+            Phase::Accept => {
+                let op = self.current_op.take().expect("op in flight");
+                let slot = self.slot;
+                let proposal = self.proposal;
+                self.committed += 1;
+                self.phase = Phase::Idle;
+                // If we adopted a foreign entry, the original op restarts
+                // from Prepare (paper: "the leader repeats the Prepare
+                // phase for the originally proposed transaction").
+                let adopted = self.original_op.take();
+                if let Some(orig) = adopted {
+                    self.queue.push_front(orig);
+                }
+                Step::Commit { slot, proposal, op, adopted }
+            }
+            Phase::Idle => Step::Wait,
+        }
+    }
+
+    /// Abort the in-flight op without requeueing it (the leader found it
+    /// impermissible in total-order position; §2.1 permissibility).
+    pub fn abort_current(&mut self) {
+        self.current_op = None;
+        if let Some(orig) = self.original_op.take() {
+            self.queue.push_front(orig);
+        }
+        self.phase = Phase::Idle;
+        self.adopted = None;
+    }
+
+    /// Abandon the in-flight round (leader change / stall reset).
+    pub fn reset_in_flight(&mut self) {
+        if let Some(op) = self.current_op.take() {
+            self.queue.push_front(op);
+        }
+        if let Some(op) = self.original_op.take() {
+            self.queue.push_front(op);
+        }
+        self.phase = Phase::Idle;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(n: u64) -> OpCall {
+        OpCall::new(1, n, 0, 0.0)
+    }
+
+    /// Drive one full consensus round with `f` followers all healthy.
+    fn drive_commit(mu: &mut MuInstance, f: u32, o: OpCall, slot: u64) -> Step {
+        let mut round = mu.submit(o, slot).expect("idle -> first round");
+        loop {
+            mu.round_started(f);
+            assert_eq!(round, Round::ReadMinProposals);
+            let mut step = Step::Wait;
+            for _ in 0..f {
+                step = mu.on_response(Resp::MinProposal(0));
+                if !matches!(step, Step::Wait) {
+                    break;
+                }
+            }
+            let Step::Next(r2) = step else { panic!("expected WriteProposal, got {step:?}") };
+            assert!(matches!(r2, Round::WriteProposal { .. }));
+            mu.round_started(f);
+            let mut step = Step::Wait;
+            for _ in 0..f {
+                step = mu.on_response(Resp::Ack);
+                if !matches!(step, Step::Wait) {
+                    break;
+                }
+            }
+            let Step::Next(r3) = step else { panic!("expected ReadSlots") };
+            assert!(matches!(r3, Round::ReadSlots { .. }));
+            mu.round_started(f);
+            let mut step = Step::Wait;
+            for _ in 0..f {
+                step = mu.on_response(Resp::Slot(None));
+                if !matches!(step, Step::Wait) {
+                    break;
+                }
+            }
+            let Step::Next(r4) = step else { panic!("expected WriteLog") };
+            assert!(matches!(r4, Round::WriteLog { .. }));
+            mu.round_started(f);
+            let mut step = Step::Wait;
+            for _ in 0..f {
+                step = mu.on_response(Resp::Ack);
+                if !matches!(step, Step::Wait) {
+                    break;
+                }
+            }
+            match step {
+                Step::Commit { .. } => return step,
+                Step::Next(r) => {
+                    round = r;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn happy_path_commits_own_op() {
+        let mut mu = MuInstance::new(0, 4); // quorum = 2 followers
+        let step = drive_commit(&mut mu, 3, op(42), 0);
+        match step {
+            Step::Commit { slot, op: o, adopted, .. } => {
+                assert_eq!(slot, 0);
+                assert_eq!(o.a, 42);
+                assert!(adopted.is_none());
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(mu.committed, 1);
+        assert!(mu.is_idle());
+    }
+
+    #[test]
+    fn quorum_before_all_responses() {
+        let mut mu = MuInstance::new(0, 8); // n=8: quorum followers = 4
+        mu.submit(op(1), 0);
+        mu.round_started(7);
+        for _ in 0..3 {
+            assert_eq!(mu.on_response(Resp::MinProposal(5)), Step::Wait);
+        }
+        let s = mu.on_response(Resp::MinProposal(2));
+        assert!(matches!(s, Step::Next(Round::WriteProposal { proposal: 6 })), "{s:?}");
+    }
+
+    #[test]
+    fn adopts_highest_proposal_foreign_entry_then_requeues_original() {
+        let mut mu = MuInstance::new(0, 4);
+        mu.submit(op(7), 3);
+        mu.round_started(3);
+        // Prepare reads
+        mu.on_response(Resp::MinProposal(0));
+        let Step::Next(_) = mu.on_response(Resp::MinProposal(0)) else { panic!() };
+        mu.round_started(3);
+        mu.on_response(Resp::Ack);
+        let Step::Next(_) = mu.on_response(Resp::Ack) else { panic!() };
+        // Slot reads find a foreign entry with proposal 9 and one with 4:
+        mu.round_started(3);
+        mu.on_response(Resp::Slot(Some((4, op(100)))));
+        let step = mu.on_response(Resp::Slot(Some((9, op(200)))));
+        let Step::Next(Round::WriteLog { op: chosen, .. }) = step else { panic!("{step:?}") };
+        assert_eq!(chosen.a, 200, "highest proposal adopted");
+        // Accept acks
+        mu.round_started(3);
+        mu.on_response(Resp::Ack);
+        let step = mu.on_response(Resp::Ack);
+        let Step::Commit { op: committed, adopted, .. } = step else { panic!("{step:?}") };
+        assert_eq!(committed.a, 200);
+        assert_eq!(adopted.unwrap().a, 7, "original requeued");
+        assert_eq!(mu.queue_len(), 1);
+        assert_eq!(mu.restarts, 1);
+    }
+
+    #[test]
+    fn queues_while_busy_and_pumps() {
+        let mut mu = MuInstance::new(0, 4);
+        assert!(mu.submit(op(1), 0).is_some());
+        assert!(mu.submit(op(2), 0).is_none(), "busy -> queued");
+        assert_eq!(mu.queue_len(), 1);
+        // finish op 1
+        for round in 0..4 {
+            mu.round_started(3);
+            let resp = match round {
+                0 => Resp::MinProposal(0),
+                2 => Resp::Slot(None),
+                _ => Resp::Ack,
+            };
+            mu.on_response(resp);
+            let _ = mu.on_response(resp);
+        }
+        assert!(mu.phase == Phase::Idle);
+        let r = mu.pump(1);
+        assert_eq!(r, Some(Round::ReadMinProposals));
+    }
+
+    #[test]
+    fn stalls_when_quorum_impossible() {
+        let mut mu = MuInstance::new(0, 4); // needs 2 follower responses
+        mu.submit(op(1), 0);
+        mu.round_started(3);
+        assert_eq!(mu.on_response(Resp::Failure), Step::Wait); // 2 healthy left, need 2
+        // Second failure leaves only 1 healthy target < quorum 2: stall now.
+        let s = mu.on_response(Resp::Failure);
+        assert_eq!(s, Step::Stall);
+        mu.reset_in_flight();
+        assert_eq!(mu.queue_len(), 1, "op requeued for retry");
+    }
+
+    #[test]
+    fn proposal_numbers_increase_past_observed() {
+        let mut mu = MuInstance::new(0, 4);
+        mu.submit(op(1), 0);
+        mu.round_started(3);
+        mu.on_response(Resp::MinProposal(41));
+        let s = mu.on_response(Resp::MinProposal(3));
+        assert!(matches!(s, Step::Next(Round::WriteProposal { proposal: 42 })), "{s:?}");
+    }
+}

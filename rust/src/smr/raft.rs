@@ -1,0 +1,200 @@
+//! Simplified Raft for the Waverunner baseline [5] (Fig 12).
+//!
+//! Waverunner accelerates the Raft replication fast path on an FPGA
+//! SmartNIC while the application runs in host software; only the leader
+//! serves client requests — followers reject and the client re-sends
+//! (§5.2 "SafarDB vs Waverunner"). We model the stable-leader fast path:
+//! AppendEntries fan-out, majority-ack commit, apply, respond. Leader
+//! election on failure is the smallest-live-ID shortcut (documented
+//! simplification — Fig 12 runs fault-free).
+
+use std::collections::VecDeque;
+
+use crate::rdt::OpCall;
+use crate::sim::NodeId;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RaftStep {
+    Wait,
+    /// Entry at `index` is committed: apply + respond to the client.
+    Commit { index: u64, op: OpCall },
+}
+
+/// Leader-side replication pipeline. One in-flight entry at a time
+/// (Waverunner's packet-serial fast path), queueing behind it.
+#[derive(Debug)]
+pub struct RaftLeader {
+    pub term: u64,
+    n: usize,
+    next_index: u64,
+    in_flight: Option<(u64, OpCall, u32)>, // (index, op, acks)
+    queue: VecDeque<(u64, OpCall)>,
+    pub committed: u64,
+}
+
+impl RaftLeader {
+    pub fn new(n: usize) -> Self {
+        RaftLeader { term: 1, n, next_index: 0, in_flight: None, queue: VecDeque::new(), committed: 0 }
+    }
+
+    fn majority_acks(&self) -> u32 {
+        (self.n / 2) as u32 // leader's own log write is the +1 vote
+    }
+
+    /// Client op arrives at the leader. The entry's log index is assigned
+    /// immediately (so callers can key pending requests on it); the
+    /// AppendEntries fan-out is returned only if the pipeline was empty.
+    pub fn submit(&mut self, op: OpCall) -> (u64, Option<(u64, u64, OpCall)>) {
+        let index = self.next_index;
+        self.next_index += 1;
+        if self.in_flight.is_some() {
+            self.queue.push_back((index, op));
+            return (index, None);
+        }
+        self.in_flight = Some((index, op, 0));
+        (index, Some((self.term, index, op)))
+    }
+
+    /// Follower ack for `index`.
+    pub fn on_ack(&mut self, term: u64, index: u64) -> RaftStep {
+        if term != self.term {
+            return RaftStep::Wait;
+        }
+        let majority = self.majority_acks();
+        match &mut self.in_flight {
+            Some((idx, op, acks)) if *idx == index => {
+                *acks += 1;
+                if *acks >= majority {
+                    let (i, o) = (*idx, *op);
+                    self.in_flight = None;
+                    self.committed += 1;
+                    RaftStep::Commit { index: i, op: o }
+                } else {
+                    RaftStep::Wait
+                }
+            }
+            _ => RaftStep::Wait,
+        }
+    }
+
+    /// After a commit, start the next queued entry if any.
+    pub fn pump(&mut self) -> Option<(u64, u64, OpCall)> {
+        if self.in_flight.is_some() {
+            return None;
+        }
+        let (index, op) = self.queue.pop_front()?;
+        self.in_flight = Some((index, op, 0));
+        Some((self.term, index, op))
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Follower-side log acceptance.
+#[derive(Debug, Default)]
+pub struct RaftFollower {
+    pub term: u64,
+    entries: Vec<OpCall>,
+    pub applied: u64,
+}
+
+impl RaftFollower {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// AppendEntries from the leader; returns whether to ack.
+    pub fn on_append(&mut self, term: u64, index: u64, op: OpCall) -> bool {
+        if term < self.term {
+            return false; // stale leader
+        }
+        self.term = term;
+        let idx = index as usize;
+        if idx > self.entries.len() {
+            return false; // gap: reject (leader would back up; fast path has none)
+        }
+        if idx == self.entries.len() {
+            self.entries.push(op);
+        } else {
+            self.entries[idx] = op;
+        }
+        true
+    }
+
+    /// Apply contiguous entries (followers apply on the leader's heels).
+    pub fn drain_apply(&mut self) -> Vec<OpCall> {
+        let out: Vec<OpCall> = self.entries[self.applied as usize..].to_vec();
+        self.applied = self.entries.len() as u64;
+        out
+    }
+
+    /// Waverunner followers reject client requests (redirect to leader).
+    pub fn handles_clients(&self) -> bool {
+        false
+    }
+}
+
+/// Which replica leads (fault-free runs: node 0).
+pub fn initial_leader() -> NodeId {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(n: u64) -> OpCall {
+        OpCall::new(0, n, 0, 0.0)
+    }
+
+    #[test]
+    fn three_node_commit_needs_one_follower_ack() {
+        let mut l = RaftLeader::new(3);
+        let (idx, fanout) = l.submit(op(1));
+        let (term, fidx, _) = fanout.unwrap();
+        assert_eq!((term, fidx, idx), (1, 0, 0));
+        let s = l.on_ack(1, 0);
+        assert_eq!(s, RaftStep::Commit { index: 0, op: op(1) });
+    }
+
+    #[test]
+    fn pipeline_serializes_entries() {
+        let mut l = RaftLeader::new(3);
+        l.submit(op(1)).1.unwrap();
+        let (idx2, fanout2) = l.submit(op(2));
+        assert_eq!(idx2, 1, "index assigned immediately");
+        assert!(fanout2.is_none(), "queued behind in-flight");
+        l.on_ack(1, 0);
+        let (_, idx, o) = l.pump().unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(o.a, 2);
+    }
+
+    #[test]
+    fn stale_term_acks_ignored() {
+        let mut l = RaftLeader::new(3);
+        l.submit(op(1)).1.unwrap();
+        assert_eq!(l.on_ack(0, 0), RaftStep::Wait);
+        assert_eq!(l.on_ack(1, 5), RaftStep::Wait, "wrong index");
+    }
+
+    #[test]
+    fn follower_appends_in_order_and_applies() {
+        let mut f = RaftFollower::new();
+        assert!(f.on_append(1, 0, op(1)));
+        assert!(f.on_append(1, 1, op(2)));
+        assert!(!f.on_append(1, 5, op(9)), "gap rejected");
+        let applied = f.drain_apply();
+        assert_eq!(applied.len(), 2);
+        assert!(!f.handles_clients());
+    }
+
+    #[test]
+    fn follower_rejects_stale_term() {
+        let mut f = RaftFollower::new();
+        f.on_append(3, 0, op(1));
+        assert!(!f.on_append(2, 1, op(2)));
+    }
+}

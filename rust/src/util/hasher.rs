@@ -1,0 +1,68 @@
+//! Identity/multiply hashers for the coordinator's hot maps. Tokens and
+//! request ids are sequential u64s — SipHash (std default) wastes cycles
+//! on the verb hot path (§Perf optimization 1, EXPERIMENTS.md).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Fibonacci-multiply hasher for integer keys (not DoS-resistant; keys are
+/// internal counters, never attacker-controlled).
+#[derive(Default)]
+pub struct FxU64Hasher {
+    state: u64,
+}
+
+impl Hasher for FxU64Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Fallback for composite keys: FNV-ish fold.
+        for &b in bytes {
+            self.state = (self.state ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.state = (self.state ^ n).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+pub type BuildFxU64 = BuildHasherDefault<FxU64Hasher>;
+
+/// HashMap with the fast integer hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, BuildFxU64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i, i as u32 * 2);
+        }
+        for i in 0..10_000u64 {
+            assert_eq!(m[&i], i as u32 * 2);
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn composite_keys_work() {
+        let mut m: FastMap<(usize, u64), u8> = FastMap::default();
+        m.insert((1, 2), 3);
+        m.insert((2, 1), 4);
+        assert_eq!(m[&(1, 2)], 3);
+        assert_eq!(m[&(2, 1)], 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dependency-free utilities: deterministic RNG, statistics, table
+//! rendering, a tiny JSON writer, and an in-repo property-test harness.
+//!
+//! The offline crate set has no `rand`, `serde`, or `proptest`, so these are
+//! implemented here (see DESIGN.md §5 "Property testing without proptest").
+
+pub mod hasher;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,69 @@
+//! Minimal seeded property-test harness (the offline crate set lacks
+//! proptest). `check` runs a property over `iters` derived RNG streams and,
+//! on failure, panics with the exact seed so the case replays with
+//! `Rng::new(seed)`.
+//!
+//! Used by the coordinator invariants: replica convergence, batching
+//! conservation, routing determinism, log ordering (see rust/tests/).
+
+use super::rng::Rng;
+
+/// Run `prop` for `iters` independent seeds derived from `base_seed`.
+/// The property receives a fresh RNG; panic or `Err` fails the run with a
+/// replayable seed in the message.
+pub fn check<F>(name: &str, base_seed: u64, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..iters {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i.wrapping_mul(0xD1B54A32D192ED03));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at iter {i} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("unit-interval", 1, 50, |rng| {
+            let v = rng.gen_f64();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("v={v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_replay_seed_on_failure() {
+        check("always-fails", 2, 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", 3, 10, |rng| {
+            let v = rng.gen_range(10);
+            prop_assert!(v < 10, "v={v}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,306 @@
+//! Deterministic PRNG (splitmix64 seeding + xoshiro256++), plus the
+//! distribution helpers the simulator needs (uniform, exponential,
+//! lognormal, Zipfian). Everything is reproducible from a single `u64`
+//! seed, which every experiment and property test reports on failure.
+
+/// xoshiro256++ PRNG. Not cryptographic; fast, 2^256-1 period,
+/// deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (e.g. one per replica) from this RNG.
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[0, n)`. Lemire's unbiased bounded generation.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn gen_f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.gen_f64() * (hi - lo)
+    }
+
+    /// True with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Exponentially distributed with the given mean.
+    pub fn gen_exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.gen_f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.gen_f64();
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with the given median and sigma (of the underlying normal).
+    /// Used for the traditional-RDMA permission-switch latency (Fig 13's
+    /// "high variability" histogram).
+    pub fn gen_lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.gen_normal()).exp()
+    }
+
+    /// Pick one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipfian generator over `[0, n)` with parameter `theta` (θ=0 is uniform),
+/// using the Gray et al. rejection-free method YCSB uses. θ here matches the
+/// paper's Fig 16 x-axis (0 … 2).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        if theta <= 1e-9 {
+            return Zipf { n, theta: 0.0, alpha: 0.0, zetan: 0.0, eta: 0.0, zeta2: 0.0 };
+        }
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2.min(n), theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Direct sum for small n; Euler–Maclaurin tail approximation above.
+        const EXACT: u64 = 100_000;
+        if n <= EXACT {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 = (1..=EXACT).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            let a = EXACT as f64;
+            let b = n as f64;
+            let tail = if (theta - 1.0).abs() < 1e-9 {
+                (b / a).ln()
+            } else {
+                (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta)
+            };
+            head + tail
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.theta == 0.0 {
+            return rng.gen_range(self.n);
+        }
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let spread = (self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha);
+        (spread as u64).min(self.n - 1)
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    #[allow(dead_code)]
+    fn debug_consts(&self) -> (f64, f64) {
+        (self.zeta2, self.zetan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut root = Rng::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.gen_range(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let v = rng.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut rng = Rng::new(3);
+        let mean: f64 = (0..20_000).map(|_| rng.gen_exp(5.0)).sum::<f64>() / 20_000.0;
+        assert!((mean - 5.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut rng = Rng::new(4);
+        let mut v: Vec<f64> = (0..20_001).map(|_| rng.gen_lognormal(250.0, 0.6)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = v[10_000];
+        assert!((med - 250.0).abs() < 20.0, "median={med}");
+    }
+
+    #[test]
+    fn zipf_uniform_when_theta_zero() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Rng::new(5);
+        let mut counts = [0u64; 10];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_skews_head_with_theta() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(6);
+        let mut head = 0u64;
+        for _ in 0..10_000 {
+            if z.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        // With θ≈1, the top 1% of keys should draw a large share of accesses.
+        assert!(head > 4_000, "head={head}");
+    }
+
+    #[test]
+    fn zipf_higher_theta_more_skew() {
+        let mut rng = Rng::new(7);
+        let mut top_share = |theta: f64| {
+            let z = Zipf::new(1000, theta);
+            let mut head = 0u64;
+            for _ in 0..20_000 {
+                if z.sample(&mut rng) == 0 {
+                    head += 1;
+                }
+            }
+            head
+        };
+        let low = top_share(0.5);
+        let high = top_share(1.5);
+        assert!(high > low * 2, "low={low} high={high}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(8);
+        let mut v: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

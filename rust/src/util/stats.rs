@@ -1,0 +1,296 @@
+//! Latency statistics: an HDR-style log-bucketed histogram (ns resolution,
+//! ~1.6% relative error) plus simple summary accumulators. Used for the
+//! paper's response-time metrics and the Fig 13 permission-switch
+//! histograms.
+
+/// Log-bucketed histogram over u64 nanosecond values.
+///
+/// Buckets: 64 magnitude groups × `SUB` linear sub-buckets, i.e. values are
+/// recorded with a relative error of at most 1/SUB.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets => <= 1.6% relative error
+const SUB: u64 = 1 << SUB_BITS;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let mag = 63 - v.leading_zeros(); // >= SUB_BITS
+    let shift = mag - SUB_BITS;
+    let sub = (v >> shift) & (SUB - 1);
+    (((mag - SUB_BITS + 1) as u64 * SUB) + sub) as usize
+}
+
+#[inline]
+fn bucket_value(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB {
+        return idx;
+    }
+    let group = (idx / SUB) - 1;
+    let sub = idx % SUB;
+    // Midpoint of the bucket range for low reconstruction bias.
+    let base = (SUB + sub) << group;
+    let width = 1u64 << group;
+    base + width / 2
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; (SUB as usize) * 60],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = bucket_of(v).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let idx = bucket_of(v).min(self.counts.len() - 1);
+        self.counts[idx] += n;
+        self.total += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_value(i).clamp(self.min, self.max.max(self.min));
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Non-empty (bucket midpoint, count) pairs — the Fig 13 histogram series.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_value(i), c))
+            .collect()
+    }
+}
+
+/// Streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 5, 17, 24, 63] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        // values < 64 land in exact buckets
+        let buckets = h.nonzero_buckets();
+        let vals: Vec<u64> = buckets.iter().map(|&(v, _)| v).collect();
+        assert_eq!(vals, vec![0, 1, 5, 17, 24, 63]);
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        let mut h = Histogram::new();
+        for v in [1_000u64, 250_000, 2_000_000, 300_000_000] {
+            h.record(v);
+        }
+        for &(mid, _) in &h.nonzero_buckets() {
+            let nearest = [1_000u64, 250_000, 2_000_000, 300_000_000]
+                .iter()
+                .copied()
+                .min_by_key(|&x| x.abs_diff(mid))
+                .unwrap();
+            let err = mid.abs_diff(nearest) as f64 / nearest as f64;
+            assert!(err < 0.02, "mid={mid} nearest={nearest} err={err}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 10);
+        }
+        let p50 = h.p50();
+        let p90 = h.quantile(0.9);
+        let p99 = h.p99();
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!((p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.05, "p50={p50}");
+        assert!((p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(100);
+        b.record(200);
+        b.record(300);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 300);
+    }
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+}

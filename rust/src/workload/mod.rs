@@ -1,0 +1,252 @@
+//! Workload generators: the CRDT/WRDT micro-benchmark mixes, YCSB (with
+//! Zipfian key selection, Fig 16), and SmallBank (§5 Workloads).
+//!
+//! A generator yields the next transaction for a replica's client slot;
+//! keys for the hybrid experiments are pre-partitioned into FPGA-resident
+//! and host-resident ranges with the paper's operation-assignment knob.
+
+use crate::config::{HybridConfig, SimConfig, WorkloadKind};
+use crate::engine::store::{DataPlane, KV_READ, KV_WITHDRAW, KV_WRITE};
+use crate::rdt::OpCall;
+use crate::util::rng::{Rng, Zipf};
+
+/// Where a keyed op's data lives (hybrid mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    Fpga,
+    Host,
+}
+
+/// One generated client request.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkItem {
+    pub op: OpCall,
+    pub placement: Placement,
+}
+
+#[derive(Debug)]
+pub struct Generator {
+    workload: WorkloadKind,
+    update_pct: u8,
+    hybrid: Option<HybridConfig>,
+    zipf_fpga: Option<Zipf>,
+    zipf_host: Option<Zipf>,
+    /// Keyspace when not hybrid.
+    keys: u64,
+    zipf_flat: Option<Zipf>,
+}
+
+impl Generator {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let keys = default_keys(cfg.workload);
+        let (zipf_fpga, zipf_host, zipf_flat) = match &cfg.hybrid {
+            Some(h) => (
+                Some(Zipf::new(h.fpga_keys.max(1), h.zipf_theta)),
+                Some(Zipf::new((h.total_keys - h.fpga_keys).max(1), h.zipf_theta)),
+                None,
+            ),
+            None => (None, None, Some(Zipf::new(keys.max(1), 0.0))),
+        };
+        Generator {
+            workload: cfg.workload,
+            update_pct: cfg.update_pct,
+            hybrid: cfg.hybrid,
+            zipf_fpga,
+            zipf_host,
+            keys,
+            zipf_flat,
+        }
+    }
+
+    /// Total keyspace size this generator addresses.
+    pub fn keyspace(&self) -> u64 {
+        match &self.hybrid {
+            Some(h) => h.total_keys,
+            None => self.keys,
+        }
+    }
+
+    /// Draw the next request. `plane` supplies state-aware micro-benchmark
+    /// op generation; `timestamp` seeds LWW versions.
+    pub fn next(&self, rng: &mut Rng, plane: &DataPlane, timestamp: u64) -> WorkItem {
+        match self.workload {
+            WorkloadKind::Micro(_) => self.next_micro(rng, plane, timestamp),
+            WorkloadKind::Ycsb => self.next_kv(rng, timestamp, false),
+            WorkloadKind::SmallBank => self.next_kv(rng, timestamp, true),
+        }
+    }
+
+    fn next_micro(&self, rng: &mut Rng, plane: &DataPlane, timestamp: u64) -> WorkItem {
+        let is_update = rng.gen_bool(self.update_pct as f64 / 100.0);
+        let op = if is_update || !plane.has_query() {
+            // Movie has no query(): reads degrade to local no-ops at the
+            // engine level; the generator always produces updates for it.
+            let mut op = match plane {
+                DataPlane::Micro(r) => r.gen_update(rng),
+                DataPlane::Kv(_) => unreachable!("micro generator on kv plane"),
+            };
+            if !is_update && !plane.has_query() {
+                // Keep the configured mix: non-update slots become local
+                // reads that bypass replication (see §5.2 on Movie).
+                return WorkItem { op: OpCall::query(), placement: Placement::Fpga };
+            }
+            // LWW timestamps must be unique and monotone: engine time.
+            if matches!(plane.micro_kind(), Some(crate::rdt::RdtKind::LwwRegister)) {
+                op.a = timestamp;
+            }
+            op
+        } else {
+            OpCall::query()
+        };
+        WorkItem { op, placement: Placement::Fpga }
+    }
+
+    fn next_kv(&self, rng: &mut Rng, timestamp: u64, smallbank: bool) -> WorkItem {
+        let (key, placement) = self.pick_key(rng);
+        let is_update = rng.gen_bool(self.update_pct as f64 / 100.0);
+        let op = if !is_update {
+            OpCall::new(KV_READ, 0, key, 0.0)
+        } else if smallbank {
+            // SmallBank update mix: half deposits, half debits (the debit
+            // path is the conflicting / SMR-engaging one).
+            if rng.gen_bool(0.5) {
+                OpCall::new(KV_WRITE, timestamp, key, rng.gen_f64_range(1.0, 20.0))
+            } else {
+                OpCall::new(KV_WITHDRAW, timestamp, key, rng.gen_f64_range(1.0, 30.0))
+            }
+        } else {
+            OpCall::new(KV_WRITE, timestamp, key, rng.gen_f64_range(-1e3, 1e3))
+        };
+        WorkItem { op, placement }
+    }
+
+    fn pick_key(&self, rng: &mut Rng) -> (u64, Placement) {
+        match (&self.hybrid, &self.zipf_flat) {
+            (Some(h), _) => {
+                let to_fpga = rng.gen_bool(h.fpga_ops_pct as f64 / 100.0);
+                if to_fpga {
+                    (self.zipf_fpga.as_ref().unwrap().sample(rng), Placement::Fpga)
+                } else {
+                    let k = h.fpga_keys + self.zipf_host.as_ref().unwrap().sample(rng);
+                    (k, Placement::Host)
+                }
+            }
+            (None, Some(z)) => (z.sample(rng), Placement::Fpga),
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Non-hybrid keyspace sizes (FPGA-only mode must fit on-fabric; §5.2 uses
+/// YCSB 100K keys inside the FPGA).
+pub fn default_keys(workload: WorkloadKind) -> u64 {
+    match workload {
+        WorkloadKind::Micro(_) => 0,
+        WorkloadKind::Ycsb => 100_000,
+        WorkloadKind::SmallBank => 100_000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdt::RdtKind;
+
+    fn cfg(workload: WorkloadKind, update_pct: u8) -> SimConfig {
+        let mut c = SimConfig::safardb(workload);
+        c.update_pct = update_pct;
+        c
+    }
+
+    #[test]
+    fn update_fraction_respected() {
+        let c = cfg(WorkloadKind::Ycsb, 25);
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, g.keyspace());
+        let mut rng = Rng::new(1);
+        let mut updates = 0;
+        for t in 0..10_000 {
+            let w = g.next(&mut rng, &plane, t);
+            if w.op.opcode != KV_READ {
+                updates += 1;
+            }
+        }
+        assert!((2_000..3_000).contains(&updates), "updates={updates}");
+    }
+
+    #[test]
+    fn hybrid_placement_fraction() {
+        let mut c = cfg(WorkloadKind::Ycsb, 50);
+        let mut h = HybridConfig::ycsb_default();
+        h.fpga_ops_pct = 30;
+        c.hybrid = Some(h);
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, g.keyspace());
+        let mut rng = Rng::new(2);
+        let mut fpga = 0;
+        for t in 0..10_000 {
+            if g.next(&mut rng, &plane, t).placement == Placement::Fpga {
+                fpga += 1;
+            }
+        }
+        assert!((2_500..3_500).contains(&fpga), "fpga={fpga}");
+    }
+
+    #[test]
+    fn hybrid_keys_partition_cleanly() {
+        let mut c = cfg(WorkloadKind::SmallBank, 50);
+        c.hybrid = Some(HybridConfig::smallbank_default());
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, g.keyspace());
+        let mut rng = Rng::new(3);
+        let h = c.hybrid.unwrap();
+        for t in 0..5_000 {
+            let w = g.next(&mut rng, &plane, t);
+            match w.placement {
+                Placement::Fpga => assert!(w.op.b < h.fpga_keys),
+                Placement::Host => {
+                    assert!(w.op.b >= h.fpga_keys && w.op.b < h.total_keys)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn micro_movie_reads_are_local_noops() {
+        let c = cfg(WorkloadKind::Micro(RdtKind::Movie), 0);
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, 0);
+        let mut rng = Rng::new(4);
+        for t in 0..100 {
+            let w = g.next(&mut rng, &plane, t);
+            assert!(w.op.is_query());
+        }
+    }
+
+    #[test]
+    fn lww_updates_get_engine_timestamps() {
+        let c = cfg(WorkloadKind::Micro(RdtKind::LwwRegister), 100);
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, 0);
+        let mut rng = Rng::new(5);
+        let w = g.next(&mut rng, &plane, 777);
+        assert_eq!(w.op.a, 777);
+    }
+
+    #[test]
+    fn smallbank_generates_both_update_kinds() {
+        let c = cfg(WorkloadKind::SmallBank, 100);
+        let g = Generator::new(&c);
+        let plane = DataPlane::for_workload(c.workload, g.keyspace());
+        let mut rng = Rng::new(6);
+        let (mut dep, mut wd) = (0, 0);
+        for t in 0..1_000 {
+            match g.next(&mut rng, &plane, t).op.opcode {
+                KV_WRITE => dep += 1,
+                KV_WITHDRAW => wd += 1,
+                _ => {}
+            }
+        }
+        assert!(dep > 300 && wd > 300, "dep={dep} wd={wd}");
+    }
+}

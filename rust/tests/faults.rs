@@ -1,0 +1,114 @@
+//! Integration: crash faults, leader election, permission switch, and
+//! recovery with log replay (§3 fault model, §4.4 leader switch plane).
+
+use safardb::config::{FaultSpec, SimConfig, SystemKind, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::prop_assert;
+use safardb::rdt::RdtKind;
+use safardb::util::prop;
+
+fn account(system: SystemKind, n: usize, fault: Option<FaultSpec>) -> SimConfig {
+    let mut cfg = match system {
+        SystemKind::SafarDb => SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account)),
+        _ => SimConfig::hamband(WorkloadKind::Micro(RdtKind::Account)),
+    };
+    cfg.n_replicas = n;
+    cfg.update_pct = 20;
+    cfg.total_ops = 16_000;
+    cfg.fault = fault;
+    cfg
+}
+
+#[test]
+fn leader_crash_elects_smallest_live_id() {
+    let rep = cluster::run(account(
+        SystemKind::SafarDb,
+        5,
+        Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 }),
+    ));
+    assert!(rep.crashed[0], "initial leader 0 crashed");
+    assert_eq!(rep.leader, 1, "smallest live ID becomes leader");
+    assert!(rep.metrics.elections >= 1);
+    assert!(rep.converged() && rep.invariants_ok);
+    // Permission switches were recorded with FPGA-speed latencies (Fig 13).
+    assert!(rep.metrics.perm_switch.count() >= 1);
+    assert!(rep.metrics.perm_switch.max() <= 24, "FPGA switch is 17/24 ns");
+}
+
+#[test]
+fn hamband_leader_crash_pays_rnic_switch_cost() {
+    let rep = cluster::run(account(
+        SystemKind::Hamband,
+        4,
+        Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 }),
+    ));
+    assert!(rep.converged() && rep.invariants_ok);
+    assert!(
+        rep.metrics.perm_switch.p50() > 10_000,
+        "traditional RNIC switch is 100s of us, got {} ns",
+        rep.metrics.perm_switch.p50()
+    );
+}
+
+#[test]
+fn follower_crash_keeps_serving() {
+    let rep = cluster::run(account(
+        SystemKind::SafarDb,
+        4,
+        Some(FaultSpec::CrashAtFraction { node: 3, fraction_pct: 30 }),
+    ));
+    assert!(rep.crashed[3]);
+    assert_eq!(rep.leader, 0, "leader unchanged");
+    assert!(rep.metrics.elections == 0);
+    assert!(rep.converged() && rep.invariants_ok);
+    // Redistributed quota: total completed is still the full target.
+    assert!(rep.metrics.total_completed() >= 15_990);
+}
+
+#[test]
+fn crashed_follower_recovers_and_catches_up_via_log_replay() {
+    let rep = cluster::run(account(
+        SystemKind::SafarDb,
+        4,
+        Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 }),
+    ));
+    assert!(!rep.crashed[2], "node 2 is back");
+    // The recovered node must converge with everyone else: the leader
+    // replayed committed entries on heartbeat resume (§3).
+    assert!(rep.converged(), "recovered node caught up: {:?}", rep.digests);
+    assert!(rep.invariants_ok);
+}
+
+#[test]
+fn crdt_replica_crash_no_election_needed() {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::TwoPSet));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 25;
+    cfg.total_ops = 12_000;
+    cfg.fault = Some(FaultSpec::CrashAtFraction { node: 1, fraction_pct: 50 });
+    let rep = cluster::run(cfg);
+    assert!(rep.converged() && rep.invariants_ok);
+    assert_eq!(rep.metrics.elections, 0, "CRDTs have no leader to lose");
+}
+
+#[test]
+fn prop_random_crash_points_never_break_safety() {
+    prop::check("crash-safety", 0xdead, 14, |rng| {
+        let n = 3 + rng.gen_range(5) as usize;
+        let node = rng.gen_range(n as u64) as usize;
+        let pct = 10 + rng.gen_range(80) as u8;
+        let leader_crash = rng.gen_bool(0.4);
+        let fault = if leader_crash {
+            FaultSpec::CrashLeaderAtFraction { fraction_pct: pct }
+        } else {
+            FaultSpec::CrashAtFraction { node, fraction_pct: pct }
+        };
+        let mut cfg = account(SystemKind::SafarDb, n, Some(fault));
+        cfg.total_ops = 8_000;
+        cfg.seed = rng.next_u64();
+        let rep = cluster::run(cfg);
+        prop_assert!(rep.converged(), "diverged under {fault:?}: {:?}", rep.digests);
+        prop_assert!(rep.invariants_ok, "integrity broke under {fault:?}");
+        Ok(())
+    });
+}

@@ -1,0 +1,135 @@
+//! Integration: PJRT-executed Pallas artifacts vs the Rust scalar engine —
+//! L1 == L3 exactly. Requires `make artifacts` (the Makefile test target
+//! guarantees it).
+
+use safardb::rdt::crdt::counter::{PnCounter, OP_DECREMENT, OP_INCREMENT};
+use safardb::rdt::Rdt;
+use safardb::rdt::{wrdt::account::Account, wrdt::account::OP_DEPOSIT, wrdt::account::OP_WITHDRAW, OpCall};
+use safardb::runtime::{Accelerator, Runtime};
+use safardb::util::rng::Rng;
+
+fn accel() -> Accelerator {
+    Accelerator::new(Runtime::load("artifacts").expect("run `make artifacts` first"))
+}
+
+#[test]
+fn pn_merge_kernel_matches_scalar_counter() {
+    let mut acc = accel();
+    let mut rng = Rng::new(7);
+    // Drive a scalar PN-Counter with random ops from 8 origins.
+    let mut c = PnCounter::default();
+    let (mut p_rows, mut m_rows) = (vec![vec![0f32]; 8], vec![vec![0f32]; 8]);
+    for _ in 0..500 {
+        let origin = rng.gen_range(8) as usize;
+        let amount = 1 + rng.gen_range(9);
+        let opcode = if rng.gen_bool(0.5) { OP_INCREMENT } else { OP_DECREMENT };
+        let mut op = OpCall::new(opcode, amount, 0, 0.0);
+        op.origin = origin;
+        c.apply(&op);
+        if opcode == OP_INCREMENT {
+            p_rows[origin][0] += amount as f32;
+        } else {
+            m_rows[origin][0] += amount as f32;
+        }
+    }
+    let merged = acc.pn_counter_merge(&p_rows, &m_rows).unwrap();
+    assert_eq!(merged[0] as i64, c.value(), "kernel fold == scalar CRDT");
+}
+
+#[test]
+fn account_guard_kernel_matches_scalar_account() {
+    let mut acc = accel();
+    let mut rng = Rng::new(8);
+    let mut scalar = Account::default(); // balance 1000
+    let mut deltas = Vec::new();
+    let mut scalar_accepts = Vec::new();
+    for _ in 0..200 {
+        let op = if rng.gen_bool(0.5) {
+            OpCall::new(OP_DEPOSIT, 0, 0, rng.gen_f64_range(1.0, 30.0))
+        } else {
+            OpCall::new(OP_WITHDRAW, 0, 0, rng.gen_f64_range(1.0, 60.0))
+        };
+        let d = if op.opcode == OP_DEPOSIT { op.x } else { -op.x };
+        deltas.push(d as f32);
+        scalar_accepts.push(scalar.apply(&op));
+    }
+    let (mask, balance) = acc.account_guard(1000.0, &deltas).unwrap();
+    assert_eq!(mask, scalar_accepts, "kernel accept mask == scalar permissibility");
+    assert!((balance as f64 - scalar.balance()).abs() < 0.05, "{balance} vs {}", scalar.balance());
+    assert!(balance >= 0.0, "integrity invariant at the kernel level");
+}
+
+#[test]
+fn lww_merge_kernel_picks_latest_writer() {
+    let mut acc = accel();
+    let vals = vec![vec![1.0f32, 10.0], vec![2.0, 20.0], vec![3.0, 30.0]];
+    let ts = vec![vec![5i32, 9], vec![9, 5], vec![1, 1]];
+    let (v, t) = acc.lww_merge(&vals, &ts).unwrap();
+    assert_eq!(v, vec![2.0, 10.0]);
+    assert_eq!(t, vec![9, 9]);
+}
+
+#[test]
+fn set_kernels_match_bit_semantics() {
+    let mut acc = accel();
+    let adds = vec![vec![0b0111i32], vec![0b1000]];
+    let removes = vec![vec![0b0001i32], vec![0b0000]];
+    let g = acc.gset_merge(&adds).unwrap();
+    assert_eq!(g[0], 0b1111);
+    let p = acc.two_p_set_merge(&adds, &removes).unwrap();
+    assert_eq!(p[0], 0b1110, "tombstoned bit stays out (2P rule)");
+}
+
+#[test]
+fn kv_burst_matches_scalar_scatter_add() {
+    let mut acc = accel();
+    let mut rng = Rng::new(9);
+    let mut state = vec![0f32; 600];
+    let mut shadow = state.clone();
+    for _ in 0..4 {
+        let keys: Vec<i32> = (0..256).map(|_| rng.gen_range(600) as i32).collect();
+        let deltas: Vec<f32> = (0..256).map(|_| rng.gen_f64_range(-10.0, 10.0) as f32).collect();
+        state = acc.kv_burst_apply(&state, &keys, &deltas).unwrap();
+        for (k, d) in keys.iter().zip(&deltas) {
+            shadow[*k as usize] += d;
+        }
+    }
+    for (i, (a, b)) in state.iter().zip(&shadow).enumerate() {
+        assert!((a - b).abs() < 1e-3, "key {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn smallbank_fused_kernel_guards_and_applies() {
+    let mut acc = accel();
+    let state = vec![10f32; 32];
+    let keys: Vec<i32> = (0..8).collect();
+    let deltas = vec![5f32; 8];
+    let guard = vec![-40f32, -40.0, -40.0, 10.0, -20.0, -5.0, 0.0, -1.0];
+    let (new_state, accepts, bal) = acc.smallbank_burst(&state, &keys, &deltas, 100.0, &guard).unwrap();
+    // Scalar oracle for the guard scan.
+    let mut b = 100f32;
+    let mut expect = Vec::new();
+    for d in &guard {
+        let ok = *d >= 0.0 || b + d >= 0.0;
+        if ok {
+            b += d;
+        }
+        expect.push(ok);
+    }
+    assert_eq!(accepts, expect);
+    assert!((bal - b).abs() < 1e-4);
+    for (i, ok) in expect.iter().enumerate() {
+        let want = if *ok { 15.0 } else { 10.0 };
+        assert_eq!(new_state[i], want, "slot {i}");
+    }
+}
+
+#[test]
+fn oversized_inputs_rejected() {
+    let mut acc = accel();
+    assert!(acc.account_guard(1.0, &vec![0.0; 4096]).is_err());
+    assert!(acc
+        .kv_burst_apply(&vec![0.0; 4096], &[0], &[0.0])
+        .is_err());
+}

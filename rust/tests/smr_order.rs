@@ -1,0 +1,86 @@
+//! Integration: SMR safety — total order of conflicting transactions, log
+//! consistency across replicas, and leader-authority of permissibility.
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::rdt::RdtKind;
+
+#[test]
+fn auction_three_groups_all_converge() {
+    // Auction is the stress case: three sync groups = three independent
+    // SMR instances sharing one leader (Fig 8).
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Auction));
+    cfg.n_replicas = 8;
+    cfg.update_pct = 40;
+    cfg.total_ops = 20_000;
+    let rep = cluster::run(cfg);
+    assert!(rep.converged() && rep.invariants_ok);
+    assert!(rep.metrics.smr_commits > 500, "conflicting traffic flowed");
+}
+
+#[test]
+fn movie_all_conflicting_two_groups() {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Movie));
+    cfg.n_replicas = 6;
+    cfg.update_pct = 25;
+    cfg.total_ops = 15_000;
+    let rep = cluster::run(cfg);
+    assert!(rep.converged() && rep.invariants_ok);
+    // Every Movie update is conflicting: commits ≈ update count.
+    let updates = rep.metrics.smr_commits + rep.metrics.rejected;
+    assert!(updates > 2_500, "updates routed through SMR: {updates}");
+}
+
+#[test]
+fn impermissible_conflicting_ops_rejected_consistently() {
+    // Courseware generates plenty of duplicate addCourse / missing-ref
+    // enrolls; leaders must reject them and every replica must agree.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Courseware));
+    cfg.n_replicas = 5;
+    cfg.update_pct = 50;
+    cfg.total_ops = 15_000;
+    let rep = cluster::run(cfg);
+    assert!(rep.converged() && rep.invariants_ok);
+    assert!(rep.metrics.rejected > 0, "duplicate adds must be rejected");
+}
+
+#[test]
+fn overdraft_impossible_under_concurrent_withdrawals() {
+    // The §2.1 motivating hazard at scale: all replicas fire withdrawals
+    // concurrently; serialization through the leader must keep B >= 0.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 8;
+    cfg.update_pct = 80;
+    cfg.total_ops = 20_000;
+    let rep = cluster::run(cfg);
+    assert!(rep.invariants_ok, "overdraft detected");
+    assert!(rep.converged());
+    assert!(rep.metrics.rejected > 0, "some withdrawals must bounce at the leader");
+}
+
+#[test]
+fn smallbank_debits_engage_smr_but_ycsb_does_not() {
+    let mut sb = SimConfig::safardb(WorkloadKind::SmallBank);
+    sb.total_ops = 8_000;
+    sb.update_pct = 30;
+    let sb_rep = cluster::run(sb);
+    assert!(sb_rep.metrics.smr_commits > 0, "SmallBank debits are conflicting");
+
+    let mut y = SimConfig::safardb(WorkloadKind::Ycsb);
+    y.total_ops = 8_000;
+    y.update_pct = 30;
+    let y_rep = cluster::run(y);
+    assert_eq!(y_rep.metrics.smr_commits, 0, "YCSB updates are reducible");
+}
+
+#[test]
+fn throughput_is_leader_bound_for_wrdts() {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 8;
+    cfg.update_pct = 25;
+    cfg.total_ops = 16_000;
+    let rep = cluster::run(cfg);
+    let leader_busy = rep.metrics.busy_ns[rep.leader];
+    let max_busy = *rep.metrics.busy_ns.iter().max().unwrap();
+    assert_eq!(leader_busy, max_busy, "leader is the longest-running replica (D.1)");
+}
