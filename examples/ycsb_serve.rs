@@ -2,25 +2,26 @@
 //! SmallBank requests through the full three-layer stack —
 //!
 //!   clients -> Rust coordinator (simulated FPGA cluster, Mu SMR when
-//!   needed) -> **PJRT-executed Pallas batch kernels** applying the op
-//!   bursts and guarding Account batches -> metrics.
+//!   needed) -> **batch kernels** applying the op bursts and guarding
+//!   Account batches -> metrics.
 //!
-//! The AOT artifacts (built once by `make artifacts`) are loaded from
-//! `artifacts/` and executed on the request path; the scalar engine result
-//! is cross-checked against the kernel result exactly. Recorded in
+//! The kernel runtime type-checks against the AOT manifest when
+//! `artifacts/` exists (built once by `python -m compile.aot`) and runs the
+//! std-only reference executor either way; the scalar engine result is
+//! cross-checked against the kernel result exactly. Recorded in
 //! EXPERIMENTS.md §End-to-end.
 //!
-//! Run: `make artifacts && cargo run --release --example ycsb_serve`
+//! Run: `cargo run --release --example ycsb_serve`
 
 use safardb::config::{SimConfig, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::runtime::{Accelerator, Runtime};
 use safardb::util::rng::{Rng, Zipf};
 
-fn main() -> anyhow::Result<()> {
-    // --- Layer-1/2 artifacts through the PJRT runtime -------------------
+fn main() -> safardb::runtime::Result<()> {
+    // --- Layer-1/2 signatures through the kernel runtime -----------------
     let rt = Runtime::load("artifacts")?;
-    println!("PJRT platform: {} | artifacts: {:?}\n", rt.platform(), rt.names());
+    println!("kernel platform: {} | artifacts: {:?}\n", rt.platform(), rt.names());
     let mut acc = Accelerator::new(rt);
 
     // --- Serve request bursts through the batch kernels ------------------
@@ -49,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         assert!((a - b).abs() < 1e-2, "key {i}: kernel {a} vs scalar {b}");
     }
     println!(
-        "kernel path : {served} ops in {:.1} ms ({:.1} kops/s through PJRT, {} kernel calls)",
+        "kernel path : {served} ops in {:.1} ms ({:.1} kops/s through the runtime, {} kernel calls)",
         kernel_wall.as_secs_f64() * 1e3,
         served as f64 / kernel_wall.as_secs_f64() / 1e3,
         acc.calls(),
@@ -78,6 +79,6 @@ fn main() -> anyhow::Result<()> {
             rep.metrics.smr_commits,
         );
     }
-    println!("\nOK: all layers compose (JAX/Pallas -> HLO -> PJRT -> Rust coordinator).");
+    println!("\nOK: all layers compose (kernel semantics -> batch runtime -> Rust coordinator).");
     Ok(())
 }

@@ -1,0 +1,63 @@
+"""Deterministic stand-in for the slice of the Hypothesis API the kernel
+tests use, for offline runners where `hypothesis` is not installed.
+
+Each `@given` test runs over a fixed number of seeded draws instead of
+Hypothesis's adaptive search. Coverage is narrower than real Hypothesis
+(no shrinking, no edge-case bias), but the oracle comparisons still sweep
+shapes and values deterministically, so the suite stays meaningful — and
+runnable — without the dependency. When `hypothesis` is installed the
+tests import it instead (see test_kernels.py).
+"""
+
+import random
+
+_N_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, width=64):
+        del allow_nan, width  # uniform draws are always finite
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+st = _Strategies()
+
+
+def settings(**_kwargs):
+    """No-op: example counts are fixed in this stub."""
+
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+def given(**strategies):
+    """Run the wrapped test over `_N_EXAMPLES` deterministic draws."""
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            for i in range(_N_EXAMPLES):
+                rng = random.Random(0xC0FFEE + 9176 * i)
+                drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return decorate

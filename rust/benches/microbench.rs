@@ -2,7 +2,7 @@
 //!
 //! Times the coordinator hot paths the §Perf pass optimizes: DES event
 //! throughput, verb issue, replica op processing (end-to-end events/s),
-//! RNG/Zipf sampling, histogram recording, LRU access, and one PJRT batch
+//! RNG/Zipf sampling, histogram recording, LRU access, and one batch
 //! kernel invocation. Results feed EXPERIMENTS.md §Perf.
 
 use std::time::Instant;
@@ -98,11 +98,11 @@ fn main() {
             }
             let per_us = t0.elapsed().as_micros() as f64 / iters as f64;
             println!(
-                "{:<36} {per_us:>10.1} us/call ({:.2} Mops/s through PJRT)",
-                "pjrt_kv_burst_apply_256",
+                "{:<36} {per_us:>10.1} us/call ({:.2} Mops/s through the runtime)",
+                "kernel_kv_burst_apply_256",
                 256.0 / per_us
             );
         }
-        Err(_) => println!("pjrt_kv_burst_apply_256              skipped (run `make artifacts`)"),
+        Err(e) => println!("kernel_kv_burst_apply_256            skipped (runtime load failed: {e:#})"),
     }
 }

@@ -13,7 +13,7 @@
 //! paper's Design Principles #1 (near-network) and #2 (direct updates).
 
 use crate::config::{SimConfig, SystemParams, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::mem::MemKind;
 use crate::net::fabric::FabricParams;
 use crate::rdt::RdtKind;
@@ -49,19 +49,21 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Ablation — which mechanism buys the gap? (4 nodes, 20% updates)",
         &["variant", "workload", "rt_us", "tput_ops_us"],
     );
+    let mut jobs = Vec::new();
     for rdt in [RdtKind::PnCounter, RdtKind::Account] {
         for (name, params) in variants() {
             let mut cfg = SimConfig::hamband(WorkloadKind::Micro(rdt));
             cfg.update_pct = 20;
             cfg.params_override = Some(params);
-            let (cell, _) = run_cell(cfg, cell_ops(quick));
-            t.row(vec![name.into(), rdt.name().into(), f3(cell.rt_us), f3(cell.tput)]);
+            jobs.push(((name, rdt), (cfg, cell_ops(quick))));
         }
         // Full SafarDB (adds RPC verbs on top of near-mem).
         let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
         cfg.update_pct = 20;
-        let (cell, _) = run_cell(cfg, cell_ops(quick));
-        t.row(vec!["safardb(full)".into(), rdt.name().into(), f3(cell.rt_us), f3(cell.tput)]);
+        jobs.push((("safardb(full)", rdt), (cfg, cell_ops(quick))));
+    }
+    for ((name, rdt), cell, _) in run_cells_tagged(jobs) {
+        t.row(vec![name.into(), rdt.name().into(), f3(cell.rt_us), f3(cell.tput)]);
     }
     vec![t]
 }

@@ -6,7 +6,7 @@
 //! that narrows with node count.
 
 use crate::config::{PropagationMode, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::expt::common::{cell_ops, f3, nodes, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -20,6 +20,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             &format!("Fig 7 — irreducible configs on {}", rdt.name()),
             &["config", "nodes", "upd%", "rt_us", "tput_ops_us"],
         );
+        let mut jobs = Vec::new();
         for &(name, mode) in CONFIGS {
             for &n in nodes(quick) {
                 for &u in UPDATE_SWEEP {
@@ -31,16 +32,18 @@ pub fn run(quick: bool) -> Vec<Table> {
                     cfg.prop_conflicting = PropagationMode::WriteNoBuffer;
                     cfg.n_replicas = n;
                     cfg.update_pct = u;
-                    let (cell, _) = run_cell(cfg, cell_ops(quick));
-                    t.row(vec![
-                        name.into(),
-                        n.to_string(),
-                        u.to_string(),
-                        f3(cell.rt_us),
-                        f3(cell.tput),
-                    ]);
+                    jobs.push(((name, n, u), (cfg, cell_ops(quick))));
                 }
             }
+        }
+        for ((name, n, u), cell, _) in run_cells_tagged(jobs) {
+            t.row(vec![
+                name.into(),
+                n.to_string(),
+                u.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+            ]);
         }
         tables.push(t);
     }

@@ -7,7 +7,7 @@
 //! sync groups = three replication logs to poll.
 
 use crate::config::{PropagationMode, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::expt::common::{cell_ops, f3, nodes, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -21,6 +21,7 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Fig 8 — conflicting configs on Auction (3 sync groups)",
         &["config", "nodes", "upd%", "rt_us", "tput_ops_us"],
     );
+    let mut jobs = Vec::new();
     for &(name, mode) in CONFIGS {
         for &n in nodes(quick) {
             for &u in UPDATE_SWEEP {
@@ -30,10 +31,12 @@ pub fn run(quick: bool) -> Vec<Table> {
                 cfg.prop_irreducible = PropagationMode::WriteNoBuffer;
                 cfg.n_replicas = n;
                 cfg.update_pct = u;
-                let (cell, _) = run_cell(cfg, cell_ops(quick));
-                t.row(vec![name.into(), n.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+                jobs.push(((name, n, u), (cfg, cell_ops(quick))));
             }
         }
+    }
+    for ((name, n, u), cell, _) in run_cells_tagged(jobs) {
+        t.row(vec![name.into(), n.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
     }
     vec![t]
 }

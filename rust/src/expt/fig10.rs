@@ -6,7 +6,7 @@
 //! groups) and absent on Movie (no query, no non-conflicting ops).
 
 use crate::config::{SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, nodes, run_cell, UPDATE_SWEEP};
+use crate::expt::common::{cell_ops, f3, nodes, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -17,6 +17,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             &format!("Fig 10 — {} (WRDT): SafarDB / SafarDB(RPC) / Hamband", rdt.name()),
             &["system", "nodes", "upd%", "rt_us", "tput_ops_us"],
         );
+        let mut jobs = Vec::new();
         for system in ["SafarDB", "SafarDB(RPC)", "Hamband"] {
             for &n in nodes(quick) {
                 for &u in UPDATE_SWEEP {
@@ -27,16 +28,18 @@ pub fn run(quick: bool) -> Vec<Table> {
                     };
                     cfg.n_replicas = n;
                     cfg.update_pct = u;
-                    let (cell, _) = run_cell(cfg, cell_ops(quick));
-                    t.row(vec![
-                        system.into(),
-                        n.to_string(),
-                        u.to_string(),
-                        f3(cell.rt_us),
-                        f3(cell.tput),
-                    ]);
+                    jobs.push(((system, n, u), (cfg, cell_ops(quick))));
                 }
             }
+        }
+        for ((system, n, u), cell, _) in run_cells_tagged(jobs) {
+            t.row(vec![
+                system.into(),
+                n.to_string(),
+                u.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+            ]);
         }
         tables.push(t);
     }

@@ -6,7 +6,7 @@
 //! store); SmallBank shows the 0→5 % cliff where SMR engages.
 
 use crate::config::{SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::util::table::Table;
 
 const UPDATES: &[u8] = &[0, 5, 15, 25, 50];
@@ -19,6 +19,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             &["system", "nodes", "upd%", "rt_us", "tput_ops_us"],
         );
         let node_sweep: &[usize] = if quick { &[4, 8] } else { &[4, 6, 8] };
+        let mut jobs = Vec::new();
         for system in ["SafarDB", "Hamband"] {
             for &n in node_sweep {
                 for &u in UPDATES {
@@ -28,16 +29,18 @@ pub fn run(quick: bool) -> Vec<Table> {
                     };
                     cfg.n_replicas = n;
                     cfg.update_pct = u;
-                    let (cell, _) = run_cell(cfg, cell_ops(quick));
-                    t.row(vec![
-                        system.into(),
-                        n.to_string(),
-                        u.to_string(),
-                        f3(cell.rt_us),
-                        f3(cell.tput),
-                    ]);
+                    jobs.push(((system, n, u), (cfg, cell_ops(quick))));
                 }
             }
+        }
+        for ((system, n, u), cell, _) in run_cells_tagged(jobs) {
+            t.row(vec![
+                system.into(),
+                n.to_string(),
+                u.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+            ]);
         }
         tables.push(t);
     }

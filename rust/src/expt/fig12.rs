@@ -7,7 +7,7 @@
 //! full Raft round.
 
 use crate::config::{SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::util::table::Table;
 
 const PUT_RATIOS: &[u8] = &[5, 25, 50, 75, 95];
@@ -17,6 +17,7 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Fig 12 — YCSB on 3 nodes: SafarDB vs Waverunner",
         &["system", "put%", "rt_us", "tput_ops_us"],
     );
+    let mut jobs = Vec::new();
     for system in ["SafarDB", "Waverunner"] {
         for &put in PUT_RATIOS {
             let mut cfg = match system {
@@ -28,9 +29,11 @@ pub fn run(quick: bool) -> Vec<Table> {
                 _ => SimConfig::waverunner(WorkloadKind::Ycsb),
             };
             cfg.update_pct = put;
-            let (cell, _) = run_cell(cfg, cell_ops(quick));
-            t.row(vec![system.into(), put.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+            jobs.push(((system, put), (cfg, cell_ops(quick))));
         }
+    }
+    for ((system, put), cell, _) in run_cells_tagged(jobs) {
+        t.row(vec![system.into(), put.to_string(), f3(cell.rt_us), f3(cell.tput)]);
     }
     vec![t]
 }

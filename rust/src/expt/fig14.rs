@@ -10,7 +10,7 @@
 //! Hamband ~40 %/40 % (permission-switch gap, Fig 13).
 
 use crate::config::{FaultSpec, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell, UPDATE_SWEEP};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -35,6 +35,7 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Fig 14 — crash faults (4 nodes)",
         &["scenario", "system", "upd%", "rt_us", "tput_ops_us", "elections"],
     );
+    let mut jobs = Vec::new();
     for (name, rdt, fault) in scenarios {
         for system in ["SafarDB", "Hamband"] {
             for &u in UPDATE_SWEEP {
@@ -44,17 +45,19 @@ pub fn run(quick: bool) -> Vec<Table> {
                 let mut cfg = base(system, *rdt);
                 cfg.update_pct = u;
                 cfg.fault = *fault;
-                let (cell, rep) = run_cell(cfg, cell_ops(quick));
-                t.row(vec![
-                    name.to_string(),
-                    system.into(),
-                    u.to_string(),
-                    f3(cell.rt_us),
-                    f3(cell.tput),
-                    rep.metrics.elections.to_string(),
-                ]);
+                jobs.push(((*name, system, u), (cfg, cell_ops(quick))));
             }
         }
+    }
+    for ((name, system, u), cell, rep) in run_cells_tagged(jobs) {
+        t.row(vec![
+            name.to_string(),
+            system.into(),
+            u.to_string(),
+            f3(cell.rt_us),
+            f3(cell.tput),
+            rep.metrics.elections.to_string(),
+        ]);
     }
     vec![t]
 }

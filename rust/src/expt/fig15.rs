@@ -6,7 +6,7 @@
 //! 4.7× tput from 10 %→90 % at 50 % writes on YCSB).
 
 use crate::config::{HybridConfig, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::util::table::Table;
 
 const FPGA_PCTS: &[u8] = &[10, 30, 50, 70, 90];
@@ -19,6 +19,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             &format!("Fig 15 — hybrid ops assignment on {}", workload.name()),
             &["fpga_ops%", "upd%", "rt_us", "tput_ops_us"],
         );
+        let mut jobs = Vec::new();
         for &pct in FPGA_PCTS {
             for &u in WRITES {
                 if quick && u == 25 {
@@ -33,9 +34,11 @@ pub fn run(quick: bool) -> Vec<Table> {
                 };
                 h.fpga_ops_pct = pct;
                 cfg.hybrid = Some(h);
-                let (cell, _) = run_cell(cfg, cell_ops(quick));
-                t.row(vec![pct.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
+                jobs.push(((pct, u), (cfg, cell_ops(quick))));
             }
+        }
+        for ((pct, u), cell, _) in run_cells_tagged(jobs) {
+            t.row(vec![pct.to_string(), u.to_string(), f3(cell.rt_us), f3(cell.tput)]);
         }
         tables.push(t);
     }

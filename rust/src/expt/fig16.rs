@@ -7,7 +7,7 @@
 //! higher write ratios.
 
 use crate::config::{HybridConfig, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::util::table::Table;
 
 const THETAS: &[f64] = &[0.0, 0.6, 1.2, 2.0];
@@ -21,6 +21,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             &format!("Fig 16 — Zipfian skew on {} (hybrid)", workload.name()),
             &["theta", "upd%", "fpga_ops%", "rt_us", "tput_ops_us"],
         );
+        let mut jobs = Vec::new();
         for &theta in THETAS {
             for &u in WRITES {
                 for &pct in FPGA_PCTS {
@@ -37,16 +38,18 @@ pub fn run(quick: bool) -> Vec<Table> {
                     h.fpga_ops_pct = pct;
                     h.zipf_theta = theta;
                     cfg.hybrid = Some(h);
-                    let (cell, _) = run_cell(cfg, cell_ops(quick));
-                    t.row(vec![
-                        format!("{theta:.1}"),
-                        u.to_string(),
-                        pct.to_string(),
-                        f3(cell.rt_us),
-                        f3(cell.tput),
-                    ]);
+                    jobs.push(((theta, u, pct), (cfg, cell_ops(quick))));
                 }
             }
+        }
+        for ((theta, u, pct), cell, _) in run_cells_tagged(jobs) {
+            t.row(vec![
+                format!("{theta:.1}"),
+                u.to_string(),
+                pct.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+            ]);
         }
         tables.push(t);
     }

@@ -3,7 +3,7 @@
 //! staleness (paper: 4.9× RT / 5× tput at 40 % FPGA, 50 % writes).
 
 use crate::config::{HybridConfig, SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, f3, run_cell};
+use crate::expt::common::{cell_ops, f3, run_cells_tagged};
 use crate::util::table::Table;
 
 const FPGA_PCTS: &[u8] = &[20, 40, 60, 80];
@@ -13,6 +13,7 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Fig 17 — summarization (size 5) on SmallBank, 50% writes",
         &["summarize", "fpga_ops%", "rt_us", "tput_ops_us", "staleness_us"],
     );
+    let mut jobs = Vec::new();
     for &size in &[1u32, 5] {
         for &pct in FPGA_PCTS {
             if quick && (pct == 20 || pct == 60) {
@@ -25,15 +26,17 @@ pub fn run(quick: bool) -> Vec<Table> {
             let mut h = HybridConfig::smallbank_default();
             h.fpga_ops_pct = pct;
             cfg.hybrid = Some(h);
-            let (cell, rep) = run_cell(cfg, cell_ops(quick));
-            t.row(vec![
-                size.to_string(),
-                pct.to_string(),
-                f3(cell.rt_us),
-                f3(cell.tput),
-                format!("{:.3}", rep.metrics.staleness.mean() / 1000.0),
-            ]);
+            jobs.push(((size, pct), (cfg, cell_ops(quick))));
         }
+    }
+    for ((size, pct), cell, rep) in run_cells_tagged(jobs) {
+        t.row(vec![
+            size.to_string(),
+            pct.to_string(),
+            f3(cell.rt_us),
+            f3(cell.tput),
+            format!("{:.3}", rep.metrics.staleness.mean() / 1000.0),
+        ]);
     }
     vec![t]
 }

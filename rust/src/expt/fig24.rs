@@ -8,6 +8,8 @@ use crate::rdt::RdtKind;
 use crate::util::table::{fmt_ns, Table};
 
 pub fn run(quick: bool) -> Vec<Table> {
+    // Single cell: nothing to fan out, the sequential runner is the
+    // simplest correct thing.
     let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
     cfg.n_replicas = 8;
     cfg.update_pct = 15;

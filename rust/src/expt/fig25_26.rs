@@ -7,7 +7,7 @@
 //! grows with write %.
 
 use crate::config::{SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, nodes, run_cell, UPDATE_SWEEP};
+use crate::expt::common::{cell_ops, nodes, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -16,20 +16,23 @@ pub fn run(quick: bool) -> Vec<Table> {
         "Figs 25/26 — Courseware leader & follower execution time (ms)",
         &["nodes", "upd%", "leader_ms", "follower_mean_ms"],
     );
+    let mut jobs = Vec::new();
     for &n in nodes(quick) {
         for &u in UPDATE_SWEEP {
             let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Courseware));
             cfg.n_replicas = n;
             cfg.update_pct = u;
-            let (_, rep) = run_cell(cfg, cell_ops(quick));
-            let (l, f) = rep.metrics.leader_vs_followers(rep.leader);
-            t.row(vec![
-                n.to_string(),
-                u.to_string(),
-                format!("{:.3}", l as f64 / 1e6),
-                format!("{:.3}", f / 1e6),
-            ]);
+            jobs.push(((n, u), (cfg, cell_ops(quick))));
         }
+    }
+    for ((n, u), _, rep) in run_cells_tagged(jobs) {
+        let (l, f) = rep.metrics.leader_vs_followers(rep.leader);
+        t.row(vec![
+            n.to_string(),
+            u.to_string(),
+            format!("{:.3}", l as f64 / 1e6),
+            format!("{:.3}", f / 1e6),
+        ]);
     }
     vec![t]
 }

@@ -5,7 +5,7 @@
 //! the CPU.
 
 use crate::config::{SimConfig, WorkloadKind};
-use crate::expt::common::{cell_ops, run_cell};
+use crate::expt::common::{cell_ops, run_cells_tagged};
 use crate::rdt::RdtKind;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
@@ -19,11 +19,10 @@ pub fn run(quick: bool) -> Vec<Table> {
         ("CRDTs", RdtKind::crdt_benchmarks()),
         ("WRDTs", RdtKind::wrdt_benchmarks()),
     ];
+    // Flat job list over (system, class, rdt); rows aggregate per group.
+    let mut jobs = Vec::new();
     for system in ["SafarDB", "Hamband"] {
         for (class, kinds) in classes {
-            let mut total = Summary::new();
-            let mut compute = Summary::new();
-            let mut io = Summary::new();
             for &rdt in kinds.iter() {
                 if quick && rdt != kinds[0] && rdt != kinds[kinds.len() - 1] {
                     continue;
@@ -33,7 +32,20 @@ pub fn run(quick: bool) -> Vec<Table> {
                     _ => SimConfig::hamband(WorkloadKind::Micro(rdt)),
                 };
                 cfg.update_pct = 20;
-                let (_, rep) = run_cell(cfg, cell_ops(quick));
+                jobs.push(((system, *class), (cfg, cell_ops(quick))));
+            }
+        }
+    }
+    let results = run_cells_tagged(jobs);
+    for system in ["SafarDB", "Hamband"] {
+        for (class, _) in classes {
+            let mut total = Summary::new();
+            let mut compute = Summary::new();
+            let mut io = Summary::new();
+            for ((msys, mclass), _, rep) in &results {
+                if *msys != system || mclass != class {
+                    continue;
+                }
                 total.add(rep.power.total_w());
                 compute.add(rep.power.static_w + rep.power.dynamic_w);
                 io.add(rep.power.io_w);

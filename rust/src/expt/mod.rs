@@ -34,12 +34,29 @@ pub const ALL: &[&str] = &[
     "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation",
 ];
 
-/// Dispatch by id. `quick` shrinks op counts / sweep density for CI-speed
+/// Canonical experiment id for `id`, accepting zero-padded aliases
+/// (`fig06` -> `fig6`), or `None` when unknown. CSV filenames under
+/// `results/` always use the canonical form regardless of how the
+/// experiment was invoked.
+pub fn canonical(id: &str) -> Option<&'static str> {
+    let id = match id {
+        "fig06" => "fig6",
+        "fig07" => "fig7",
+        "fig08" => "fig8",
+        "fig09" => "fig9",
+        "tablec_1" => "tableC_1",
+        other => other,
+    };
+    ALL.iter().copied().find(|&c| c == id)
+}
+
+/// Dispatch by id (zero-padded aliases like `fig06` accepted; see
+/// [`canonical`]). `quick` shrinks op counts / sweep density for CI-speed
 /// runs; the shapes are preserved.
 pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
-    let tables = match id {
+    let tables = match canonical(id)? {
         "table2_1" => table2_1::run(quick),
-        "tableC_1" | "tablec_1" => tablec_1::run(quick),
+        "tableC_1" => tablec_1::run(quick),
         "fig6" => fig06::run(quick),
         "fig7" => fig07::run(quick),
         "fig8" => fig08::run(quick),

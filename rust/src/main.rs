@@ -1,12 +1,16 @@
 //! SafarDB launcher.
 //!
 //! ```text
-//! safardb expt <id|all> [--quick]     reproduce a paper table/figure
-//! safardb list                        list experiment ids
-//! safardb run [config.kv] [k=v ...]   run one cluster config, print report
-//! safardb runtime-check [dir]         load + execute the AOT artifacts
+//! safardb expt <id|all> [--quick] [--threads N]   reproduce a paper table/figure
+//! safardb list                                    list experiment ids
+//! safardb run [config.kv] [k=v ...]               run one cluster config, print report
+//! safardb runtime-check [dir]                     load + execute the kernel runtime
 //! ```
 //! (hand-rolled arg parsing: the offline crate set has no clap.)
+//!
+//! Sweep cells fan out over worker threads (`--threads N`, the
+//! `SAFARDB_THREADS` environment variable, or all available cores, in that
+//! order); tables are bit-identical for any thread count.
 
 use safardb::config::{SimConfig, WorkloadKind};
 use safardb::engine::cluster;
@@ -27,33 +31,83 @@ fn main() {
         Some("runtime-check") => cmd_runtime_check(&args[1..]),
         _ => {
             eprintln!("usage: safardb <expt|list|run|runtime-check> [...]");
-            eprintln!("  expt <id|all> [--quick]  reproduce a paper table/figure (see `safardb list`)");
+            eprintln!("  expt <id|all> [--quick] [--threads N]");
+            eprintln!("                           reproduce a paper table/figure (see `safardb list`)");
             eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
-            eprintln!("  runtime-check [dir]      verify the AOT artifacts load and execute");
+            eprintln!("  runtime-check [dir]      verify the kernel runtime loads and executes");
             2
         }
     };
     std::process::exit(code);
 }
 
+fn parse_threads(v: &str) -> Option<usize> {
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => None,
+    }
+}
+
 fn cmd_expt(args: &[String]) -> i32 {
-    let quick = args.iter().any(|a| a == "--quick");
-    let ids: Vec<&str> = args.iter().filter(|a| !a.starts_with("--")).map(String::as_str).collect();
+    let mut quick = false;
+    let mut threads: Option<usize> = None;
+    let mut ids: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--quick" {
+            quick = true;
+        } else if a == "--threads" {
+            i += 1;
+            let Some(v) = args.get(i) else {
+                eprintln!("--threads requires a value");
+                return 2;
+            };
+            let Some(n) = parse_threads(v) else {
+                eprintln!("bad --threads value '{v}' (want a positive integer)");
+                return 2;
+            };
+            threads = Some(n);
+        } else if let Some(v) = a.strip_prefix("--threads=") {
+            let Some(n) = parse_threads(v) else {
+                eprintln!("bad --threads value '{v}' (want a positive integer)");
+                return 2;
+            };
+            threads = Some(n);
+        } else if a.starts_with("--") {
+            eprintln!("unknown flag '{a}'");
+            return 2;
+        } else {
+            ids.push(a);
+        }
+        i += 1;
+    }
+    if let Some(n) = threads {
+        expt::common::set_threads(n);
+    }
+    eprintln!("[sweep executor: {} worker thread(s)]", expt::common::configured_threads());
     let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
         expt::ALL.to_vec()
     } else {
         ids
     };
     for id in ids {
-        let Some(tables) = expt::run(id, quick) else {
+        // Save under the canonical id so `expt fig06` and `expt all` write
+        // the same results/ filenames.
+        let Some(canon) = expt::canonical(id) else {
             eprintln!("unknown experiment '{id}'; try `safardb list`");
+            return 2;
+        };
+        let Some(tables) = expt::run(canon, quick) else {
+            // Reachable only if expt::ALL and run()'s dispatch drift apart.
+            eprintln!("experiment '{canon}' is listed but has no dispatch arm");
             return 2;
         };
         for t in &tables {
             println!("{}", t.render());
         }
-        expt::common::save(&tables, id);
-        println!("[saved results/{id}*.csv]\n");
+        expt::common::save(&tables, canon);
+        println!("[saved results/{canon}*.csv]\n");
     }
     0
 }
@@ -139,6 +193,8 @@ fn cmd_runtime_check(args: &[String]) -> i32 {
     let dir = args.first().map(String::as_str).unwrap_or(safardb::runtime::DEFAULT_ARTIFACTS);
     match safardb::runtime::Runtime::load(dir) {
         Ok(rt) => {
+            // Absent AOT artifacts are not an error: the reference executor
+            // runs on builtin signatures (platform() says which happened).
             println!("platform : {}", rt.platform());
             println!("artifacts: {:?}", rt.names());
             let mut acc = safardb::runtime::Accelerator::new(rt);

@@ -1,19 +1,25 @@
-//! Typed batch accelerators over the PJRT runtime — the Rust-side mirror of
-//! the paper's FPGA-resident operators (Fig 1). The Dispatcher selects one
-//! by name; inputs are padded to the fixed AOT export shapes
-//! (N=8 replicas, K=1024 keys, B=256 burst, W=512 words — model.py).
+//! Typed batch accelerators over the kernel runtime — the Rust-side mirror
+//! of the paper's FPGA-resident operators (Fig 1's Dispatcher targets),
+//! with padding to the fixed AOT export shapes (N=8 replicas, K=1024 keys,
+//! B=256 burst, W=512 words — python/compile/model.py).
 //!
 //! Every operator has a scalar fallback in `rdt/` / `engine/store.rs`; the
 //! integration tests assert kernel == scalar exactly.
 
-use anyhow::{ensure, Result};
+use super::error::{Error, Result};
+use super::exec::{Literal, Runtime};
 
-use super::exec::Runtime;
+// Export shape constants live with the builtin signatures so padding and
+// type-checking can never drift apart.
+pub use super::artifacts::{B_BURST, K_KEYS, N_REPLICAS, W_WORDS};
 
-pub const N_REPLICAS: usize = 8;
-pub const K_KEYS: usize = 1024;
-pub const B_BURST: usize = 256;
-pub const W_WORDS: usize = 512;
+fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(Error::msg(msg()))
+    }
+}
 
 pub struct Accelerator {
     rt: Runtime,
@@ -55,27 +61,35 @@ impl Accelerator {
     /// PN-Counter fold: per-replica increment/decrement contribution rows
     /// -> merged values (first `k` entries meaningful).
     pub fn pn_counter_merge(&mut self, p: &[Vec<f32>], m: &[Vec<f32>]) -> Result<Vec<f32>> {
-        ensure!(p.len() <= N_REPLICAS && p.len() == m.len(), "≤{N_REPLICAS} replica rows");
+        ensure(p.len() <= N_REPLICAS && p.len() == m.len(), || {
+            format!("pn_counter_merge: <={N_REPLICAS} replica rows, matching p/m")
+        })?;
         let k = p.iter().map(|r| r.len()).max().unwrap_or(0);
-        ensure!(k <= K_KEYS, "≤{K_KEYS} counters per tile");
+        ensure(k <= K_KEYS, || format!("pn_counter_merge: <={K_KEYS} counters per tile"))?;
         let pl = Runtime::lit_f32_2d(&Self::pad_rows_f32(p, K_KEYS), N_REPLICAS, K_KEYS)?;
         let ml = Runtime::lit_f32_2d(&Self::pad_rows_f32(m, K_KEYS), N_REPLICAS, K_KEYS)?;
         let outs = self.rt.call("pn_counter_merge", &[pl, ml])?;
-        let mut v = outs[0].to_vec::<f32>()?;
+        let mut v = outs[0].f32s()?.to_vec();
         v.truncate(k);
         Ok(v)
     }
 
     /// LWW fold: (values, timestamps) per replica -> merged (values, ts).
-    pub fn lww_merge(&mut self, vals: &[Vec<f32>], ts: &[Vec<i32>]) -> Result<(Vec<f32>, Vec<i32>)> {
-        ensure!(vals.len() <= N_REPLICAS && vals.len() == ts.len(), "row count");
+    pub fn lww_merge(
+        &mut self,
+        vals: &[Vec<f32>],
+        ts: &[Vec<i32>],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        ensure(vals.len() <= N_REPLICAS && vals.len() == ts.len(), || {
+            "lww_merge: row count".to_string()
+        })?;
         let k = vals.iter().map(|r| r.len()).max().unwrap_or(0);
-        ensure!(k <= K_KEYS, "≤{K_KEYS} registers per tile");
+        ensure(k <= K_KEYS, || format!("lww_merge: <={K_KEYS} registers per tile"))?;
         let vl = Runtime::lit_f32_2d(&Self::pad_rows_f32(vals, K_KEYS), N_REPLICAS, K_KEYS)?;
         let tl = Runtime::lit_i32_2d(&Self::pad_rows_i32(ts, K_KEYS), N_REPLICAS, K_KEYS)?;
         let outs = self.rt.call("lww_register_merge", &[vl, tl])?;
-        let mut v = outs[0].to_vec::<f32>()?;
-        let mut t = outs[1].to_vec::<i32>()?;
+        let mut v = outs[0].f32s()?.to_vec();
+        let mut t = outs[1].i32s()?.to_vec();
         v.truncate(k);
         t.truncate(k);
         Ok((v, t))
@@ -83,30 +97,38 @@ impl Accelerator {
 
     /// G-Set fold: per-replica bitmaps -> merged bitmap.
     pub fn gset_merge(&mut self, bitmaps: &[Vec<i32>]) -> Result<Vec<i32>> {
-        ensure!(bitmaps.len() <= N_REPLICAS, "≤{N_REPLICAS} replica rows");
+        ensure(bitmaps.len() <= N_REPLICAS, || {
+            format!("gset_merge: <={N_REPLICAS} replica rows")
+        })?;
         let w = bitmaps.iter().map(|r| r.len()).max().unwrap_or(0);
-        ensure!(w <= W_WORDS, "≤{W_WORDS} bitmap words");
+        ensure(w <= W_WORDS, || format!("gset_merge: <={W_WORDS} bitmap words"))?;
         let bl = Runtime::lit_i32_2d(&Self::pad_rows_i32(bitmaps, W_WORDS), N_REPLICAS, W_WORDS)?;
         let outs = self.rt.call("gset_merge", &[bl])?;
-        let mut v = outs[0].to_vec::<i32>()?;
+        let mut v = outs[0].i32s()?.to_vec();
         v.truncate(w);
         Ok(v)
     }
 
     /// 2P-Set fold: present = OR(adds) & !OR(removes).
-    pub fn two_p_set_merge(&mut self, adds: &[Vec<i32>], removes: &[Vec<i32>]) -> Result<Vec<i32>> {
-        ensure!(adds.len() <= N_REPLICAS && removes.len() <= N_REPLICAS, "row count");
+    pub fn two_p_set_merge(
+        &mut self,
+        adds: &[Vec<i32>],
+        removes: &[Vec<i32>],
+    ) -> Result<Vec<i32>> {
+        ensure(adds.len() <= N_REPLICAS && removes.len() <= N_REPLICAS, || {
+            "two_p_set_merge: row count".to_string()
+        })?;
         let w = adds
             .iter()
             .chain(removes.iter())
             .map(|r| r.len())
             .max()
             .unwrap_or(0);
-        ensure!(w <= W_WORDS, "≤{W_WORDS} bitmap words");
+        ensure(w <= W_WORDS, || format!("two_p_set_merge: <={W_WORDS} bitmap words"))?;
         let al = Runtime::lit_i32_2d(&Self::pad_rows_i32(adds, W_WORDS), N_REPLICAS, W_WORDS)?;
         let rl = Runtime::lit_i32_2d(&Self::pad_rows_i32(removes, W_WORDS), N_REPLICAS, W_WORDS)?;
         let outs = self.rt.call("two_p_set_merge", &[al, rl])?;
-        let mut v = outs[0].to_vec::<i32>()?;
+        let mut v = outs[0].i32s()?.to_vec();
         v.truncate(w);
         Ok(v)
     }
@@ -115,26 +137,32 @@ impl Accelerator {
     /// (accept mask, final balance). Padding deltas are 0 (always accepted,
     /// no effect).
     pub fn account_guard(&mut self, b0: f32, deltas: &[f32]) -> Result<(Vec<bool>, f32)> {
-        ensure!(deltas.len() <= B_BURST, "≤{B_BURST} ops per burst");
+        ensure(deltas.len() <= B_BURST, || format!("account_guard: <={B_BURST} ops per burst"))?;
         let mut d = deltas.to_vec();
         d.resize(B_BURST, 0.0);
         let outs = self
             .rt
             .call("account_guard", &[Runtime::lit_f32_1d(&[b0]), Runtime::lit_f32_1d(&d)])?;
-        let mask = outs[0].to_vec::<i32>()?;
-        let bal = outs[1].to_vec::<f32>()?[0];
+        let mask = outs[0].i32s()?;
+        let bal = outs[1].f32s()?[0];
         Ok((mask[..deltas.len()].iter().map(|&m| m != 0).collect(), bal))
     }
 
     /// KV burst scatter-add (duplicate keys accumulate). State tile must be
-    /// ≤ K_KEYS; padding ops target key 0 with delta 0.
-    pub fn kv_burst_apply(&mut self, state: &[f32], keys: &[i32], deltas: &[f32]) -> Result<Vec<f32>> {
-        ensure!(state.len() <= K_KEYS, "≤{K_KEYS} keys per tile");
-        ensure!(keys.len() == deltas.len() && keys.len() <= B_BURST, "burst shape");
-        ensure!(
-            keys.iter().all(|&k| (k as usize) < state.len().max(1)),
-            "keys must be in range"
-        );
+    /// <= K_KEYS; padding ops target key 0 with delta 0.
+    pub fn kv_burst_apply(
+        &mut self,
+        state: &[f32],
+        keys: &[i32],
+        deltas: &[f32],
+    ) -> Result<Vec<f32>> {
+        ensure(state.len() <= K_KEYS, || format!("kv_burst_apply: <={K_KEYS} keys per tile"))?;
+        ensure(keys.len() == deltas.len() && keys.len() <= B_BURST, || {
+            "kv_burst_apply: burst shape".to_string()
+        })?;
+        ensure(keys.iter().all(|&k| (k as usize) < state.len().max(1)), || {
+            "kv_burst_apply: keys must be in range".to_string()
+        })?;
         let mut s = state.to_vec();
         s.resize(K_KEYS, 0.0);
         let mut kk = keys.to_vec();
@@ -145,7 +173,7 @@ impl Accelerator {
             "kv_burst_apply",
             &[Runtime::lit_f32_1d(&s), Runtime::lit_i32_1d(&kk), Runtime::lit_f32_1d(&dd)],
         )?;
-        let mut v = outs[0].to_vec::<f32>()?;
+        let mut v = outs[0].f32s()?.to_vec();
         v.truncate(state.len());
         Ok(v)
     }
@@ -161,8 +189,12 @@ impl Accelerator {
         b0: f32,
         guard_deltas: &[f32],
     ) -> Result<(Vec<f32>, Vec<bool>, f32)> {
-        ensure!(state.len() <= K_KEYS && keys.len() == deltas.len(), "shapes");
-        ensure!(keys.len() <= B_BURST && guard_deltas.len() <= B_BURST, "burst");
+        ensure(state.len() <= K_KEYS && keys.len() == deltas.len(), || {
+            "smallbank_burst: shapes".to_string()
+        })?;
+        ensure(keys.len() <= B_BURST && guard_deltas.len() <= B_BURST, || {
+            "smallbank_burst: burst".to_string()
+        })?;
         let mut s = state.to_vec();
         s.resize(K_KEYS, 0.0);
         let mut kk = keys.to_vec();
@@ -181,10 +213,10 @@ impl Accelerator {
                 Runtime::lit_f32_1d(&gg),
             ],
         )?;
-        let mut v = outs[0].to_vec::<f32>()?;
+        let mut v = outs[0].f32s()?.to_vec();
         v.truncate(state.len());
-        let mask = outs[1].to_vec::<i32>()?;
-        let bal = outs[2].to_vec::<f32>()?[0];
+        let mask = outs[1].i32s()?;
+        let bal = outs[2].f32s()?[0];
         Ok((v, mask[..guard_deltas.len()].iter().map(|&m| m != 0).collect(), bal))
     }
 }

@@ -1,11 +1,16 @@
 //! Artifact manifest: `artifacts/manifest.txt`, one line per exported
-//! entry — `name;in=f32[8x1024],...;out=f32[1024],...` — written by
+//! entry — `name;in=float32[8x1024],...;out=float32[1024],...` — written by
 //! `python/compile/aot.py` and parsed here so the runtime can type-check
-//! inputs before handing them to PJRT.
+//! inputs before dispatching them to the executor.
+//!
+//! When the AOT artifacts are absent (JAX not installed, `make artifacts`
+//! never run), [`Manifest::builtin`] supplies the same signatures from the
+//! export table in `python/compile/model.py`, so the reference executor
+//! stays usable everywhere.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use super::error::{Context, Error, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -18,7 +23,7 @@ impl DType {
         match s {
             "float32" => Ok(DType::F32),
             "int32" => Ok(DType::I32),
-            other => bail!("unsupported dtype {other}"),
+            other => Err(Error::msg(format!("unsupported dtype {other}"))),
         }
     }
 }
@@ -39,10 +44,17 @@ impl TensorSig {
             vec![]
         } else {
             dims.split('x')
-                .map(|d| d.parse::<usize>().map_err(Into::into))
+                .map(|d| {
+                    d.parse::<usize>()
+                        .with_context(|| format!("bad dim '{d}' in tensor sig {s}"))
+                })
                 .collect::<Result<Vec<_>>>()?
         };
         Ok(TensorSig { dtype: DType::parse(dt)?, shape })
+    }
+
+    fn of(dtype: DType, shape: &[usize]) -> TensorSig {
+        TensorSig { dtype, shape: shape.to_vec() }
     }
 
     pub fn elems(&self) -> usize {
@@ -61,6 +73,12 @@ pub struct Signature {
 pub struct Manifest {
     pub entries: Vec<Signature>,
 }
+
+/// Export shape constants (mirrors python/compile/model.py).
+pub const N_REPLICAS: usize = 8;
+pub const K_KEYS: usize = 1024;
+pub const B_BURST: usize = 256;
+pub const W_WORDS: usize = 512;
 
 impl Manifest {
     pub fn parse(body: &str) -> Result<Manifest> {
@@ -92,6 +110,72 @@ impl Manifest {
         let body = std::fs::read_to_string(dir.join("manifest.txt"))
             .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
         Self::parse(&body)
+    }
+
+    /// The export table of python/compile/model.py, verbatim. Used when no
+    /// artifacts directory exists, and to validate loaded manifests.
+    pub fn builtin() -> Manifest {
+        use DType::{F32, I32};
+        let sig = |name: &str, inputs: Vec<TensorSig>, outputs: Vec<TensorSig>| Signature {
+            name: name.to_string(),
+            inputs,
+            outputs,
+        };
+        let nk = [N_REPLICAS, K_KEYS];
+        let nw = [N_REPLICAS, W_WORDS];
+        Manifest {
+            entries: vec![
+                sig(
+                    "pn_counter_merge",
+                    vec![TensorSig::of(F32, &nk), TensorSig::of(F32, &nk)],
+                    vec![TensorSig::of(F32, &[K_KEYS])],
+                ),
+                sig(
+                    "lww_register_merge",
+                    vec![TensorSig::of(F32, &nk), TensorSig::of(I32, &nk)],
+                    vec![TensorSig::of(F32, &[K_KEYS]), TensorSig::of(I32, &[K_KEYS])],
+                ),
+                sig(
+                    "gset_merge",
+                    vec![TensorSig::of(I32, &nw)],
+                    vec![TensorSig::of(I32, &[W_WORDS])],
+                ),
+                sig(
+                    "two_p_set_merge",
+                    vec![TensorSig::of(I32, &nw), TensorSig::of(I32, &nw)],
+                    vec![TensorSig::of(I32, &[W_WORDS])],
+                ),
+                sig(
+                    "account_guard",
+                    vec![TensorSig::of(F32, &[1]), TensorSig::of(F32, &[B_BURST])],
+                    vec![TensorSig::of(I32, &[B_BURST]), TensorSig::of(F32, &[1])],
+                ),
+                sig(
+                    "kv_burst_apply",
+                    vec![
+                        TensorSig::of(F32, &[K_KEYS]),
+                        TensorSig::of(I32, &[B_BURST]),
+                        TensorSig::of(F32, &[B_BURST]),
+                    ],
+                    vec![TensorSig::of(F32, &[K_KEYS])],
+                ),
+                sig(
+                    "smallbank_burst",
+                    vec![
+                        TensorSig::of(F32, &[K_KEYS]),
+                        TensorSig::of(I32, &[B_BURST]),
+                        TensorSig::of(F32, &[B_BURST]),
+                        TensorSig::of(F32, &[1]),
+                        TensorSig::of(F32, &[B_BURST]),
+                    ],
+                    vec![
+                        TensorSig::of(F32, &[K_KEYS]),
+                        TensorSig::of(I32, &[B_BURST]),
+                        TensorSig::of(F32, &[1]),
+                    ],
+                ),
+            ],
+        }
     }
 
     pub fn get(&self, name: &str) -> Option<&Signature> {
@@ -132,5 +216,22 @@ account_guard;in=float32[1],float32[256];out=int32[256],float32[1]
     fn missing_entry_is_none() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn builtin_matches_model_py_exports() {
+        let m = Manifest::builtin();
+        assert_eq!(m.entries.len(), 7);
+        let pn = m.get("pn_counter_merge").unwrap();
+        assert_eq!(pn.inputs[0].shape, vec![N_REPLICAS, K_KEYS]);
+        let sb = m.get("smallbank_burst").unwrap();
+        assert_eq!(sb.inputs.len(), 5);
+        assert_eq!(sb.outputs.len(), 3);
+        // The builtin sample lines parse to the same signatures.
+        let parsed = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(
+            parsed.get("account_guard").unwrap().inputs,
+            m.get("account_guard").unwrap().inputs
+        );
     }
 }

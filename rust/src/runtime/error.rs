@@ -1,0 +1,115 @@
+//! Minimal error type with context chaining for the runtime layer.
+//!
+//! The offline crate set has no `anyhow`; this covers the slice of it the
+//! runtime needs: a string-backed error, `.context(...)` /
+//! `.with_context(...)` on `Result` and `Option`, and an alternate Display
+//! (`{:#}`) that renders the whole cause chain outermost-first.
+
+use std::fmt;
+
+/// A runtime error: root message plus outward-growing context frames.
+pub struct Error {
+    root: String,
+    /// Context frames, innermost first (`contexts.last()` is outermost).
+    contexts: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(root: impl Into<String>) -> Error {
+        Error { root: root.into(), contexts: Vec::new() }
+    }
+
+    fn wrap(mut self, context: String) -> Error {
+        self.contexts.push(context);
+        self
+    }
+
+    /// Outermost context (or the root message if no context was attached).
+    pub fn headline(&self) -> &str {
+        self.contexts.last().unwrap_or(&self.root)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for c in self.contexts.iter().rev() {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.root)
+        } else {
+            write!(f, "{}", self.headline())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style adapters for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    // `{e:#}` rather than `.to_string()`: when E is itself this Error type
+    // the alternate form carries the whole existing chain into the new
+    // root, so re-wrapping never drops inner frames.
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(msg.into()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.into()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>("root cause")
+            .context("parsing manifest")
+            .unwrap_err();
+        let e = Err::<(), _>(e).context("loading artifacts").unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifacts");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("loading artifacts: "), "{full}");
+        assert!(full.contains("parsing manifest"), "{full}");
+        // Re-wrapping an Error must not drop the innermost root.
+        assert!(full.ends_with("root cause"), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<u8> = "x".parse::<u8>().with_context(|| "bad number".to_string());
+        assert_eq!(format!("{}", r.unwrap_err()), "bad number");
+    }
+}

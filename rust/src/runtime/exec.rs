@@ -1,46 +1,110 @@
-//! PJRT executable registry: HLO text -> compile once -> execute many.
+//! Kernel executor: typed literals in, typed literals out, signature-checked
+//! against the artifact manifest.
 //!
-//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md: jax
-//! >= 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids).
+//! The seed executed AOT-lowered HLO through PJRT bindings; neither the
+//! `xla` crate nor `anyhow` exists in the offline crate set, so the runtime
+//! now ships a **std-only reference executor**. Each exported kernel is
+//! implemented natively with semantics identical to its Pallas source in
+//! `python/compile/kernels` (f32 arithmetic, sequential guard scans,
+//! argmax-first tie-breaks); the `runtime_kernels` integration tests pin
+//! those semantics against the scalar RDT engine. `Runtime::load` still
+//! reads `artifacts/manifest.txt` when present (produced by
+//! `python -m compile.aot`) and type-checks every call against it; when the
+//! artifacts are absent it falls back to the built-in export signatures, so
+//! `safardb runtime-check` degrades gracefully instead of failing.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use super::artifacts::{DType, Manifest};
+use super::error::{Error, Result};
 
-use super::artifacts::Manifest;
+/// A dense tensor value (row-major).
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Literal {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Literal::F32 { .. } => DType::F32,
+            Literal::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Literal::F32 { dims, .. } => dims,
+            Literal::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data),
+            Literal::I32 { .. } => Err(Error::msg("expected f32 literal, got i32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Literal::I32 { data, .. } => Ok(data),
+            Literal::F32 { .. } => Err(Error::msg("expected i32 literal, got f32")),
+        }
+    }
+}
 
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: PathBuf,
+    loaded_from_disk: bool,
     /// Executions served (perf accounting).
     pub calls: u64,
 }
 
 impl Runtime {
-    /// Load every artifact in `dir` (expects `manifest.txt` +
-    /// `<name>.hlo.txt`, produced by `make artifacts`).
+    /// Load the artifact manifest in `dir` when it exists; otherwise fall
+    /// back to the built-in export signatures (the reference executor needs
+    /// no compiled artifacts to run).
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = HashMap::new();
-        for sig in &manifest.entries {
-            let path = dir.join(format!("{}.hlo.txt", sig.name));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", sig.name))?;
-            exes.insert(sig.name.clone(), exe);
+        if dir.join("manifest.txt").exists() {
+            let manifest = Manifest::load(&dir)?;
+            for builtin in &Manifest::builtin().entries {
+                match manifest.get(&builtin.name) {
+                    None => {
+                        return Err(Error::msg(format!(
+                            "manifest in {dir:?} is missing kernel '{}' (stale artifacts? re-run `make artifacts`)",
+                            builtin.name
+                        )));
+                    }
+                    Some(loaded)
+                        if loaded.inputs != builtin.inputs
+                            || loaded.outputs != builtin.outputs =>
+                    {
+                        return Err(Error::msg(format!(
+                            "manifest in {dir:?} disagrees with the builtin export table for '{}' \
+                             (old artifacts? re-run `make artifacts`; export shapes changed in \
+                             python/compile/model.py? update Manifest::builtin in \
+                             rust/src/runtime/artifacts.rs to match)",
+                            builtin.name
+                        )));
+                    }
+                    Some(_) => {}
+                }
+            }
+            Ok(Runtime { manifest, dir, loaded_from_disk: true, calls: 0 })
+        } else {
+            Ok(Runtime { manifest: Manifest::builtin(), dir, loaded_from_disk: false, calls: 0 })
         }
-        Ok(Runtime { client, manifest, exes, dir, calls: 0 })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -51,8 +115,17 @@ impl Runtime {
         &self.dir
     }
 
+    /// Whether signatures were type-checked against on-disk AOT artifacts.
+    pub fn loaded_from_disk(&self) -> bool {
+        self.loaded_from_disk
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        if self.loaded_from_disk {
+            format!("native-reference (manifest: {})", self.dir.display())
+        } else {
+            "native-reference (builtin signatures; AOT artifacts absent)".to_string()
+        }
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -60,42 +133,285 @@ impl Runtime {
     }
 
     /// Execute `name` with the given input literals; returns the flattened
-    /// output tuple.
-    pub fn call(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    /// output tuple, shape-checked on both sides.
+    pub fn call(&mut self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let Some(sig) = self.manifest.get(name) else {
-            bail!("unknown artifact {name}; have {:?}", self.names());
+            return Err(Error::msg(format!("unknown artifact {name}; have {:?}", self.names())));
         };
         if inputs.len() != sig.inputs.len() {
-            bail!("{name}: expected {} inputs, got {}", sig.inputs.len(), inputs.len());
+            return Err(Error::msg(format!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            )));
         }
-        let exe = self.exes.get(name).expect("compiled artifact");
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        for (i, (lit, want)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if lit.dtype() != want.dtype || lit.dims() != want.shape.as_slice() {
+                return Err(Error::msg(format!(
+                    "{name}: input {i} is {:?}{:?}, signature wants {:?}{:?}",
+                    lit.dtype(),
+                    lit.dims(),
+                    want.dtype,
+                    want.shape
+                )));
+            }
+            // Literal fields are public: guard against hand-built literals
+            // whose buffer disagrees with their claimed dims (the executors
+            // index by dims and would panic otherwise).
+            if lit.elems() != want.elems() {
+                return Err(Error::msg(format!(
+                    "{name}: input {i} holds {} elements but claims shape {:?}",
+                    lit.elems(),
+                    lit.dims()
+                )));
+            }
+        }
+        let outs = dispatch(name, inputs)?;
+        if outs.len() != sig.outputs.len() {
+            return Err(Error::msg(format!(
+                "{name}: executor produced {} outputs, signature wants {}",
+                outs.len(),
+                sig.outputs.len()
+            )));
+        }
+        for (i, (lit, want)) in outs.iter().zip(&sig.outputs).enumerate() {
+            if lit.dtype() != want.dtype || lit.dims() != want.shape.as_slice() {
+                return Err(Error::msg(format!(
+                    "{name}: output {i} is {:?}{:?}, signature wants {:?}{:?}",
+                    lit.dtype(),
+                    lit.dims(),
+                    want.dtype,
+                    want.shape
+                )));
+            }
+        }
         self.calls += 1;
-        // aot.py lowers with return_tuple=True: flatten the tuple.
-        let n_out = sig.outputs.len();
-        let outs = result.to_tuple()?;
-        if outs.len() != n_out {
-            bail!("{name}: expected {n_out} outputs, got {}", outs.len());
-        }
         Ok(outs)
     }
 
     /// f32 literal of the given 2-D shape (row-major).
-    pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        debug_assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+        if data.len() != rows * cols {
+            return Err(Error::msg(format!(
+                "f32 literal: {} elements for shape {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Literal::F32 { data: data.to_vec(), dims: vec![rows, cols] })
     }
 
-    pub fn lit_f32_1d(data: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(data)
+    pub fn lit_f32_1d(data: &[f32]) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims: vec![data.len()] }
     }
 
-    pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        debug_assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+        if data.len() != rows * cols {
+            return Err(Error::msg(format!(
+                "i32 literal: {} elements for shape {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Literal::I32 { data: data.to_vec(), dims: vec![rows, cols] })
     }
 
-    pub fn lit_i32_1d(data: &[i32]) -> xla::Literal {
-        xla::Literal::vec1(data)
+    pub fn lit_i32_1d(data: &[i32]) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims: vec![data.len()] }
+    }
+}
+
+/// (rows, cols) of a 2-D literal.
+fn dims2(lit: &Literal) -> Result<(usize, usize)> {
+    match lit.dims() {
+        [r, c] => Ok((*r, *c)),
+        other => Err(Error::msg(format!("expected rank-2 literal, got shape {other:?}"))),
+    }
+}
+
+/// Sequential overdraft guard scan (mirrors kernels/permissibility.py):
+/// deposits (d >= 0) always accepted; withdrawals accepted iff the running
+/// balance stays non-negative. f32 arithmetic, batch order.
+fn guard_scan(b0: f32, deltas: &[f32]) -> (Vec<i32>, f32) {
+    let mut bal = b0;
+    let mut mask = Vec::with_capacity(deltas.len());
+    for &d in deltas {
+        let ok = d >= 0.0 || bal + d >= 0.0;
+        if ok {
+            bal += d;
+        }
+        mask.push(ok as i32);
+    }
+    (mask, bal)
+}
+
+/// Scatter-add a burst into a state tile (mirrors kernels/batch_apply.py).
+/// Out-of-range keys are dropped, matching XLA scatter's OOB behavior.
+fn scatter_add(state: &[f32], keys: &[i32], deltas: &[f32]) -> Vec<f32> {
+    let mut out = state.to_vec();
+    for (&k, &d) in keys.iter().zip(deltas) {
+        if let Some(slot) = out.get_mut(k as usize) {
+            *slot += d;
+        }
+    }
+    out
+}
+
+/// Execute one named kernel. Shapes were validated by the caller.
+fn dispatch(name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+    match name {
+        "pn_counter_merge" => {
+            let (n, k) = dims2(&inputs[0])?;
+            let p = inputs[0].f32s()?;
+            let m = inputs[1].f32s()?;
+            let mut out = vec![0f32; k];
+            for (col, slot) in out.iter_mut().enumerate() {
+                // Mirror pn_merge.py exactly: sum each G-Counter fully,
+                // subtract once — interleaving (p - m) per row rounds
+                // differently under f32 cancellation.
+                let mut sum_p = 0f32;
+                let mut sum_m = 0f32;
+                for row in 0..n {
+                    sum_p += p[row * k + col];
+                    sum_m += m[row * k + col];
+                }
+                *slot = sum_p - sum_m;
+            }
+            Ok(vec![Literal::F32 { data: out, dims: vec![k] }])
+        }
+        "lww_register_merge" => {
+            let (n, k) = dims2(&inputs[0])?;
+            let vals = inputs[0].f32s()?;
+            let ts = inputs[1].i32s()?;
+            let mut out_v = vec![0f32; k];
+            let mut out_t = vec![0i32; k];
+            for col in 0..k {
+                // argmax-first: on timestamp ties the lowest replica index
+                // wins (same rule as the lww_merge kernel and rdt/crdt/lww).
+                let mut best_row = 0usize;
+                for row in 1..n {
+                    if ts[row * k + col] > ts[best_row * k + col] {
+                        best_row = row;
+                    }
+                }
+                out_v[col] = vals[best_row * k + col];
+                out_t[col] = ts[best_row * k + col];
+            }
+            Ok(vec![
+                Literal::F32 { data: out_v, dims: vec![k] },
+                Literal::I32 { data: out_t, dims: vec![k] },
+            ])
+        }
+        "gset_merge" => {
+            let (n, w) = dims2(&inputs[0])?;
+            let maps = inputs[0].i32s()?;
+            let mut out = vec![0i32; w];
+            for (col, slot) in out.iter_mut().enumerate() {
+                for row in 0..n {
+                    *slot |= maps[row * w + col];
+                }
+            }
+            Ok(vec![Literal::I32 { data: out, dims: vec![w] }])
+        }
+        "two_p_set_merge" => {
+            let (n, w) = dims2(&inputs[0])?;
+            let adds = inputs[0].i32s()?;
+            let removes = inputs[1].i32s()?;
+            let mut out = vec![0i32; w];
+            for (col, slot) in out.iter_mut().enumerate() {
+                let mut a = 0i32;
+                let mut r = 0i32;
+                for row in 0..n {
+                    a |= adds[row * w + col];
+                    r |= removes[row * w + col];
+                }
+                *slot = a & !r;
+            }
+            Ok(vec![Literal::I32 { data: out, dims: vec![w] }])
+        }
+        "account_guard" => {
+            let b0 = inputs[0].f32s()?[0];
+            let deltas = inputs[1].f32s()?;
+            let (mask, bal) = guard_scan(b0, deltas);
+            Ok(vec![
+                Literal::I32 { data: mask, dims: vec![deltas.len()] },
+                Literal::F32 { data: vec![bal], dims: vec![1] },
+            ])
+        }
+        "kv_burst_apply" => {
+            let state = inputs[0].f32s()?;
+            let keys = inputs[1].i32s()?;
+            let deltas = inputs[2].f32s()?;
+            let out = scatter_add(state, keys, deltas);
+            let dims = vec![out.len()];
+            Ok(vec![Literal::F32 { data: out, dims }])
+        }
+        "smallbank_burst" => {
+            let state = inputs[0].f32s()?;
+            let keys = inputs[1].i32s()?;
+            let deltas = inputs[2].f32s()?;
+            let b0 = inputs[3].f32s()?[0];
+            let guard_deltas = inputs[4].f32s()?;
+            let (mask, bal) = guard_scan(b0, guard_deltas);
+            // masked = deltas * accept (model.py smallbank_burst), then the
+            // usual scatter-add.
+            let masked: Vec<f32> = deltas
+                .iter()
+                .zip(&mask)
+                .map(|(&d, &ok)| d * ok as f32)
+                .collect();
+            let out = scatter_add(state, keys, &masked);
+            let k = out.len();
+            let b = mask.len();
+            Ok(vec![
+                Literal::F32 { data: out, dims: vec![k] },
+                Literal::I32 { data: mask, dims: vec![b] },
+                Literal::F32 { data: vec![bal], dims: vec![1] },
+            ])
+        }
+        other => Err(Error::msg(format!("no executor for kernel '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_falls_back_to_builtin_without_artifacts() {
+        let rt = Runtime::load("definitely/not/a/dir").unwrap();
+        assert!(!rt.loaded_from_disk());
+        assert!(rt.platform().contains("absent"));
+        assert_eq!(rt.names().len(), 7);
+    }
+
+    #[test]
+    fn call_type_checks_inputs() {
+        let mut rt = Runtime::load("nope").unwrap();
+        // Wrong arity.
+        assert!(rt.call("pn_counter_merge", &[]).is_err());
+        // Wrong dtype.
+        let zeros_i = vec![0i32; 8 * 1024];
+        let zeros_f = vec![0f32; 8 * 1024];
+        let bad = Runtime::lit_i32_2d(&zeros_i, 8, 1024).unwrap();
+        let good = Runtime::lit_f32_2d(&zeros_f, 8, 1024).unwrap();
+        assert!(rt.call("pn_counter_merge", &[bad, good.clone()]).is_err());
+        // Unknown kernel.
+        assert!(rt.call("nope", &[]).is_err());
+        assert_eq!(rt.calls, 0, "failed calls are not counted");
+        let good2 = Runtime::lit_f32_2d(&zeros_f, 8, 1024).unwrap();
+        assert!(rt.call("pn_counter_merge", &[good, good2]).is_ok());
+        assert_eq!(rt.calls, 1);
+    }
+
+    #[test]
+    fn guard_scan_matches_paper_rule() {
+        let (mask, bal) = guard_scan(100.0, &[-40.0, -40.0, -40.0, 10.0, -20.0]);
+        assert_eq!(mask, vec![1, 1, 0, 1, 1]);
+        assert!((bal - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicates_and_drops_oob() {
+        let out = scatter_add(&[0.0, 0.0], &[1, 1, 9], &[2.0, 3.0, 7.0]);
+        assert_eq!(out, vec![0.0, 5.0]);
     }
 }

@@ -1,20 +1,29 @@
-//! PJRT runtime: loads the AOT-compiled Pallas/JAX artifacts
-//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
-//! them from Rust. Python never runs on this path.
+//! Kernel runtime: executes the exported batch kernels that the paper's
+//! FPGA-resident accelerators implement (Fig 1's Dispatcher targets).
 //!
-//! * [`artifacts`] — manifest parsing + artifact registry.
-//! * [`exec`] — the PJRT CPU client wrapper (compile once, execute many).
-//! * [`accel`] — typed batch operators mirroring the paper's FPGA-resident
-//!   accelerators (Fig 1's Dispatcher targets), with padding to the fixed
-//!   export shapes.
+//! The seed drove AOT-compiled Pallas/JAX artifacts through PJRT; the
+//! offline crate set has no `xla` (or `anyhow`) bindings, so the executor
+//! is now a **std-only reference implementation** whose per-kernel
+//! semantics mirror `python/compile/kernels` exactly (pinned by the
+//! `runtime_kernels` integration tests against the scalar engine). The
+//! artifact manifest written by `python -m compile.aot` is still parsed and
+//! used for call-site type checking when present.
+//!
+//! * [`artifacts`] — manifest parsing + builtin export signatures.
+//! * [`exec`] — the signature-checked executor (load once, execute many).
+//! * [`accel`] — typed batch operators with padding to the fixed AOT export
+//!   shapes (N=8 replicas, K=1024 keys, B=256 burst, W=512 words).
+//! * [`error`] — minimal context-chaining error type (no `anyhow` offline).
 
 pub mod accel;
 pub mod artifacts;
+pub mod error;
 pub mod exec;
 
 pub use accel::Accelerator;
 pub use artifacts::{Manifest, Signature};
-pub use exec::Runtime;
+pub use error::{Context, Error, Result};
+pub use exec::{Literal, Runtime};
 
 /// Default artifact directory relative to the repo root.
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";

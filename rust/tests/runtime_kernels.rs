@@ -1,6 +1,7 @@
-//! Integration: PJRT-executed Pallas artifacts vs the Rust scalar engine —
-//! L1 == L3 exactly. Requires `make artifacts` (the Makefile test target
-//! guarantees it).
+//! Integration: the kernel runtime vs the Rust scalar engine — batch
+//! semantics == scalar semantics exactly. Runs against the AOT manifest
+//! when `artifacts/` exists and against the builtin signatures otherwise
+//! (the reference executor needs no compiled artifacts).
 
 use safardb::rdt::crdt::counter::{PnCounter, OP_DECREMENT, OP_INCREMENT};
 use safardb::rdt::Rdt;
@@ -9,7 +10,7 @@ use safardb::runtime::{Accelerator, Runtime};
 use safardb::util::rng::Rng;
 
 fn accel() -> Accelerator {
-    Accelerator::new(Runtime::load("artifacts").expect("run `make artifacts` first"))
+    Accelerator::new(Runtime::load("artifacts").expect("runtime load"))
 }
 
 #[test]
@@ -128,8 +129,7 @@ fn smallbank_fused_kernel_guards_and_applies() {
 #[test]
 fn oversized_inputs_rejected() {
     let mut acc = accel();
-    assert!(acc.account_guard(1.0, &vec![0.0; 4096]).is_err());
-    assert!(acc
-        .kv_burst_apply(&vec![0.0; 4096], &[0], &[0.0])
-        .is_err());
+    let too_many = vec![0.0f32; 4096];
+    assert!(acc.account_guard(1.0, &too_many).is_err());
+    assert!(acc.kv_burst_apply(&too_many, &[0], &[0.0]).is_err());
 }
