@@ -11,7 +11,7 @@ pub mod params;
 
 pub use params::{ExecParams, PowerParams, SystemParams};
 
-use crate::rdt::RdtKind;
+use crate::rdt::{Category, RdtKind};
 
 /// Which system a run models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +46,17 @@ impl SystemKind {
     pub fn params_for(&self, cfg: &SimConfig) -> SystemParams {
         cfg.params_override.unwrap_or_else(|| self.params())
     }
+}
+
+/// Which replication path (paper plane, §4) serves a transaction
+/// category. The engine holds one trait object per kind
+/// (`engine::path::ReplicationPath`) and routes by [`SimConfig::path_for`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicationPathKind {
+    /// Relaxed plane: landing zones + summarizer (§4.1–§4.2).
+    Relaxed,
+    /// Strongly-ordered plane: Mu SMR, or Raft for Waverunner (§4.3–§4.4).
+    Strong,
 }
 
 /// How a transaction category is propagated to remote replicas
@@ -227,6 +238,22 @@ impl SimConfig {
         c
     }
 
+    /// Category → replication-path routing. Waverunner replicates every
+    /// update through Raft — no hybrid consistency, which is the point of
+    /// the Fig 12 comparison (§5.2). Summarization (§5.4) diverts
+    /// conflicting ops onto the relaxed path, trading integrity staleness
+    /// for performance.
+    pub fn path_for(&self, category: Category) -> ReplicationPathKind {
+        if self.system == SystemKind::Waverunner {
+            return ReplicationPathKind::Strong;
+        }
+        match category {
+            Category::Reducible | Category::Irreducible => ReplicationPathKind::Relaxed,
+            Category::Conflicting if self.summarize_threshold > 1 => ReplicationPathKind::Relaxed,
+            Category::Conflicting => ReplicationPathKind::Strong,
+        }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.n_replicas < 2 {
             return Err(format!("n_replicas must be >= 2, got {}", self.n_replicas));
@@ -352,6 +379,24 @@ mod tests {
         assert!(c.apply_kv("nope = 1").is_err());
         assert!(c.apply_kv("replicas").is_err());
         assert!(c.apply_kv("replicas = x").is_err());
+    }
+
+    #[test]
+    fn path_routing_matches_planes() {
+        let c = SimConfig::safardb(WorkloadKind::SmallBank);
+        assert_eq!(c.path_for(Category::Reducible), ReplicationPathKind::Relaxed);
+        assert_eq!(c.path_for(Category::Irreducible), ReplicationPathKind::Relaxed);
+        assert_eq!(c.path_for(Category::Conflicting), ReplicationPathKind::Strong);
+
+        // §5.4: summarization diverts conflicting ops off the SMR path.
+        let mut batched = c.clone();
+        batched.summarize_threshold = 8;
+        assert_eq!(batched.path_for(Category::Conflicting), ReplicationPathKind::Relaxed);
+
+        // Waverunner replicates everything through Raft (§5.2).
+        let w = SimConfig::waverunner(WorkloadKind::Ycsb);
+        assert_eq!(w.path_for(Category::Reducible), ReplicationPathKind::Strong);
+        assert_eq!(w.path_for(Category::Conflicting), ReplicationPathKind::Strong);
     }
 
     #[test]

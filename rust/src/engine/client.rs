@@ -1,0 +1,81 @@
+//! Client plane: closed-loop client slots — quota accounting, workload
+//! generation, per-origin sequence numbers, and the request-side read
+//! costs (including the hybrid host cache, Figs 15–17).
+//!
+//! The pending-request maps for *forwarded* ops live with the strong path
+//! (`engine::strong`), which owns their retry protocol; this plane only
+//! tracks how many slots are in flight via `ReplicaCore::clients_in_flight`.
+
+use crate::config::SimConfig;
+use crate::engine::path::ReplicaCore;
+use crate::mem::LruCache;
+use crate::rdt::OpCall;
+use crate::sim::Time;
+use crate::workload::{Generator, WorkItem};
+
+pub struct ClientPlane {
+    gen: Generator,
+    /// Remaining ops this replica's slots may issue (cluster-assigned;
+    /// redistributed away from crashed replicas).
+    pub quota: u64,
+    op_seq: u64,
+    /// Hybrid mode: host LLC model for host-resident keys.
+    host_cache: Option<LruCache>,
+}
+
+impl ClientPlane {
+    pub fn new(cfg: &SimConfig) -> Self {
+        ClientPlane {
+            gen: Generator::new(cfg),
+            quota: 0,
+            op_seq: 0,
+            host_cache: cfg.hybrid.map(|h| LruCache::new(h.host_cache_keys)),
+        }
+    }
+
+    /// Total keyspace the generator addresses (sizes the data plane).
+    pub fn keyspace(&self) -> u64 {
+        self.gen.keyspace()
+    }
+
+    /// Consume one quota slot and draw the next request, or `None` when the
+    /// quota is spent (the slot retires).
+    pub fn next_op(&mut self, core: &mut ReplicaCore, now: Time) -> Option<WorkItem> {
+        if self.quota == 0 {
+            return None;
+        }
+        self.quota -= 1;
+        self.op_seq += 1;
+        // LWW timestamps compose (time, origin) so they are globally unique
+        // and merge deterministically (Table A.1 "unique timestamps").
+        let ts = ((now.max(1)) << 8) | core.id as u64;
+        let mut item = self.gen.next(&mut core.rng, &core.plane, ts);
+        item.op.origin = core.id;
+        item.op.seq = self.op_seq;
+        core.clients_in_flight += 1;
+        Some(item)
+    }
+
+    /// Read cost of answering a query, after the paths' refresh fold:
+    /// host-resident keys go through the LLC model and pay the PCIe
+    /// response hop; on-fabric state is warm.
+    pub fn query_read_cost(&mut self, core: &ReplicaCore, op: &OpCall, host_side: bool) -> u64 {
+        if host_side {
+            let hit = self.host_cache.as_mut().map(|c| c.access(op.b)).unwrap_or(false);
+            core.sys.mem.host_keyed_read_ns(hit) + core.sys.mem.pcie_ns // response back over PCIe
+        } else {
+            core.warm_read_ns()
+        }
+    }
+
+    /// Read cost of the permissibility precheck (§2.1) — same keyed read,
+    /// no response egress.
+    pub fn check_read_cost(&mut self, core: &ReplicaCore, op: &OpCall, host_side: bool) -> u64 {
+        if host_side {
+            let hit = self.host_cache.as_mut().map(|c| c.access(op.b)).unwrap_or(false);
+            core.sys.mem.host_keyed_read_ns(hit)
+        } else {
+            core.warm_read_ns()
+        }
+    }
+}

@@ -150,7 +150,7 @@ impl Cluster {
             if let Some((node, at)) = snapshot_at {
                 if self.q.now() >= at {
                     let t = self.q.now();
-                    if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed) {
+                    if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed()) {
                         let (plane, logs) = self.replicas[donor].snapshot_state();
                         self.replicas[node].install_snapshot(plane, logs, t);
                     }
@@ -168,13 +168,12 @@ impl Cluster {
                     let t = self.q.now();
                     self.q.push(t, node, EventKind::Crash);
                     // Redistribute the crashed node's remaining quota.
-                    let remaining = self.replicas[node].quota;
-                    self.replicas[node].quota = 0;
+                    let remaining = self.replicas[node].take_quota();
                     let live: Vec<NodeId> = (0..n).filter(|&i| i != node).collect();
                     for (j, &r) in live.iter().enumerate() {
                         let share = remaining / live.len() as u64
                             + if j < (remaining % live.len() as u64) as usize { 1 } else { 0 };
-                        self.replicas[r].quota += share;
+                        self.replicas[r].grant_quota(share);
                     }
                     fault_pending = None;
                 }
@@ -197,23 +196,23 @@ impl Cluster {
         // convergence is checked on fully-propagated replicas.
         self.metrics.makespan_ns = self.metrics.makespan_from(&self.replicas);
         for (i, r) in self.replicas.iter_mut().enumerate() {
-            if !r.crashed {
+            if !r.crashed() {
                 r.flush_all_pending();
             }
-            self.metrics.busy_ns[i] = r.busy_total;
-            self.metrics.executions += r.executions;
-            self.metrics.rejected += r.rejected;
+            self.metrics.busy_ns[i] = r.busy_total();
+            self.metrics.executions += r.executions();
+            self.metrics.rejected += r.rejected();
         }
 
         self.metrics.events = events;
         let power = power::estimate(&self.cfg.system.params_for(&self.cfg).power, &self.metrics);
         let digests: Vec<u64> = self.replicas.iter().map(|r| r.digest()).collect();
-        let dumps: Vec<String> = self.replicas.iter().map(|r| r.plane.debug_dump()).collect();
-        let crashed: Vec<bool> = self.replicas.iter().map(|r| r.crashed).collect();
+        let dumps: Vec<String> = self.replicas.iter().map(|r| r.plane_dump()).collect();
+        let crashed: Vec<bool> = self.replicas.iter().map(|r| r.crashed()).collect();
         let invariants_ok = self
             .replicas
             .iter()
-            .filter(|r| !r.crashed)
+            .filter(|r| !r.crashed())
             .all(|r| r.invariant_ok());
         let leader = self.current_leader();
 
@@ -230,22 +229,26 @@ impl Cluster {
     }
 
     fn all_quota_spent(&self) -> bool {
-        self.replicas.iter().all(|r| r.quota == 0 || r.crashed)
+        self.replicas.iter().all(|r| r.quota() == 0 || r.crashed())
     }
 
     fn no_pending_clients(&self) -> bool {
-        // Completed counts only client-slot completions; quotas all spent +
-        // every issued op responded == target reached (crashed replicas'
-        // redistributed quotas included).
-        true // refined by drain flag flip timing; conservative
+        // A client slot is pending from the event that consumes its quota
+        // until its response is recorded — forwarded/SMR ops stay pending
+        // across events. The drain flag must not flip while any live
+        // replica still owes a response: background timers (heartbeats,
+        // pollers) may be exactly what those completions are waiting on.
+        // Crashed replicas' slots died with them (their in-flight count is
+        // reset at crash time; their quota was redistributed).
+        self.replicas.iter().all(|r| r.crashed() || r.in_flight() == 0)
     }
 
     fn current_leader(&self) -> NodeId {
         // The smallest live replica's own view (they agree at quiescence).
         self.replicas
             .iter()
-            .find(|r| !r.crashed)
-            .map(|r| r.leader)
+            .find(|r| !r.crashed())
+            .map(|r| r.leader())
             .unwrap_or(0)
     }
 }
@@ -255,7 +258,7 @@ impl RunMetrics {
         // System execution time: until the last client op completed (the
         // leader's busy time dominates this for WRDTs — appendix D.1 —
         // but fault recovery delays count too, which Fig 14 needs).
-        let busy_bound = replicas.iter().map(|r| r.busy_total).max().unwrap_or(0);
+        let busy_bound = replicas.iter().map(|r| r.busy_total()).max().unwrap_or(0);
         self.last_completion_ns.max(busy_bound).max(1)
     }
 }

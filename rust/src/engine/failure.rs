@@ -1,0 +1,145 @@
+//! Leader-switch / failure plane (§3, §4.4): the heartbeat tracker and
+//! scanner, crash/recover handling, smallest-live-ID election, and the
+//! permission switch. Owns the membership view every replication path
+//! consults (via the [`Membership`] trait) and reports failures,
+//! recoveries, and leadership changes into the paths as
+//! [`MembershipEvent`]s.
+
+use crate::config::SystemKind;
+use crate::engine::path::{Membership, MembershipEvent, ReplicaCore, ReplicationPath, TokenCtx};
+use crate::engine::Ctx;
+use crate::net::verbs::{ReadTarget, Verb};
+use crate::sim::{EventKind, NodeId, TimerKind};
+use crate::smr::election::{HbVerdict, HeartbeatTracker};
+
+pub struct FailurePlane {
+    tracker: HeartbeatTracker,
+    /// RDMA-exposed heartbeat counter peers read one-sidedly.
+    pub hb_counter: u64,
+}
+
+impl FailurePlane {
+    pub fn new(id: NodeId, n: usize, hb_fail_threshold: u32) -> Self {
+        FailurePlane { tracker: HeartbeatTracker::new(id, n, hb_fail_threshold), hb_counter: 0 }
+    }
+
+    pub fn boot(&mut self, core: &ReplicaCore, ctx: &mut Ctx, base: u64) {
+        // Heartbeat scanning runs for every object class: WRDTs need it for
+        // leader election; CRDTs need it for membership (a crashed peer
+        // must leave the relaxed-path fan-out set — Fig 14 e/f).
+        ctx.q.push(base + core.heartbeat_period_ns, core.id, EventKind::Timer(TimerKind::HeartbeatScan));
+    }
+
+    pub fn on_crash(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx) {
+        core.crashed = true;
+        ctx.net.set_crashed(core.id, true);
+        // In-flight client slots die with the replica; their quota was
+        // consumed and is redistributed by the cluster.
+        core.clients_in_flight = 0;
+    }
+
+    pub fn on_recover(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx) {
+        core.crashed = false;
+        ctx.net.set_crashed(core.id, false);
+        core.busy_until = ctx.q.now();
+        // Heartbeat resumes; peers will observe Recovered.
+        ctx.q.push(ctx.q.now() + core.heartbeat_period_ns, core.id, EventKind::Timer(TimerKind::HeartbeatScan));
+    }
+
+    /// Heartbeat scanner tick: bump our own counter, read every peer's.
+    pub fn on_scan(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx) {
+        self.hb_counter += 1;
+        // Hamband's scanner is a software thread competing with the
+        // app (§5.3 "In Hamband, this update occurs in the
+        // foreground"); SafarDB's is fabric logic.
+        if core.system == SystemKind::Hamband {
+            core.occupy(ctx.q.now(), core.exec().software_overhead_ns);
+        }
+        let peers = core.peers();
+        for peer in peers {
+            let tok = core.token(TokenCtx::Heartbeat { peer });
+            let verb = Verb::read(ReadTarget::Heartbeat, tok);
+            ctx.metrics.verbs += 1;
+            ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, true);
+        }
+        if !ctx.draining {
+            ctx.q.push(ctx.q.now() + core.heartbeat_period_ns, core.id, EventKind::Timer(TimerKind::HeartbeatScan));
+        }
+    }
+
+    /// One heartbeat observation of `peer` (`None` = read never completed).
+    pub fn on_heartbeat(
+        &mut self,
+        core: &mut ReplicaCore,
+        strong: &mut dyn ReplicationPath,
+        ctx: &mut Ctx,
+        peer: NodeId,
+        value: Option<u64>,
+    ) {
+        let verdict = match value {
+            Some(v) => self.tracker.observe(peer, v),
+            None => self.tracker.observe_timeout(peer),
+        };
+        match verdict {
+            HbVerdict::JustFailed => {
+                if std::env::var_os("SAFARDB_DEBUG").is_some() {
+                    eprintln!("[{}ns] r{}: declared r{} FAILED", ctx.q.now(), core.id, peer);
+                }
+                if peer == core.leader {
+                    self.leader_switch(core, strong, ctx);
+                } else if core.is_leader() {
+                    strong.on_membership(core, ctx, &*self, MembershipEvent::PeerFailed { peer });
+                }
+            }
+            HbVerdict::Recovered => {
+                if core.is_leader() {
+                    strong.on_membership(core, ctx, &*self, MembershipEvent::PeerRecovered { peer });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// The leader failed: elect, fence the old leader's QP, open the new
+    /// one (Permission Switch, Fig 13), and hand the paths the new view.
+    fn leader_switch(&mut self, core: &mut ReplicaCore, strong: &mut dyn ReplicationPath, ctx: &mut Ctx) {
+        let old = core.leader;
+        let new = self.tracker.elect_leader();
+        if new == old {
+            return;
+        }
+        if std::env::var_os("SAFARDB_DEBUG").is_some() {
+            eprintln!(
+                "[{}ns] r{}: leader switch {} -> {} (live {:?})",
+                ctx.q.now(),
+                core.id,
+                old,
+                new,
+                self.tracker.live_set()
+            );
+        }
+        // Permission switch: close the old leader's QP, open the new one.
+        // FPGA: direct QP-register pokes, ns-scale; RNIC: driver + PCIe.
+        let lat = core.sys.fabric.perm_switch.sample(&mut core.rng);
+        ctx.metrics.perm_switch.record(lat);
+        ctx.qps.switch_leader(core.id, old, new);
+        core.occupy(ctx.q.now(), lat);
+        core.leader = new;
+        strong.on_membership(core, ctx, &*self, MembershipEvent::LeaderSwitched);
+    }
+
+}
+
+impl Membership for FailurePlane {
+    fn live_set(&self) -> Vec<NodeId> {
+        self.tracker.live_set()
+    }
+
+    fn live_peers(&self, me: NodeId) -> Vec<NodeId> {
+        self.tracker.live_set().into_iter().filter(|&i| i != me).collect()
+    }
+
+    fn elect_leader(&self) -> NodeId {
+        self.tracker.elect_leader()
+    }
+}

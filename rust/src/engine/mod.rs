@@ -1,12 +1,27 @@
-//! The replication engine (Layer 3 proper): replica actors over the DES,
-//! the cluster builder/run loop, the opcode dispatcher, hybrid storage,
-//! and the summarization batcher.
+//! The replication engine (Layer 3 proper), decomposed along the paper's
+//! planes (§3–§4):
+//!
+//! * `replica`  — thin coordinator: owns the shared core + routes events;
+//! * `client`   — closed-loop client slots, quota, request-side costs;
+//! * `relaxed`  — landing zones, summarization buffer, flush/propagation
+//!   (§4.1–§4.2, §5.4);
+//! * `strong`   — Mu instances, Raft, forwarding/requester bookkeeping
+//!   (§4.3–§4.4, §5.2);
+//! * `failure`  — heartbeat tracker, election, crash/recover/snapshot (§3);
+//! * `path`     — the [`ReplicationPath`] trait + shared `ReplicaCore`;
+//! * `cluster`  — builder/run loop; `store` — the unified data plane.
 
+pub mod client;
 pub mod cluster;
+pub mod failure;
+pub mod path;
+pub mod relaxed;
 pub mod replica;
 pub mod store;
+pub mod strong;
 
 pub use cluster::{Cluster, RunReport};
+pub use path::{Membership, ReplicationPath};
 
 use crate::metrics::RunMetrics;
 use crate::net::{Network, QpTable};

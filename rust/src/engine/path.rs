@@ -1,0 +1,358 @@
+//! The pluggable replication-path layer (§3–§4, Design Principle #3).
+//!
+//! The paper's replication engine is plane-structured: a *relaxed* path for
+//! the reducible/irreducible RDT categories (landing zones + summarizer,
+//! §4.1–§4.2), a *strongly-ordered* path for conflicting categories (Mu
+//! SMR, or Raft for the Waverunner baseline, §4.3–§4.4), and a
+//! leader-switch/failure plane that owns membership. [`ReplicationPath`] is
+//! the seam between them: category routing comes in (as a [`Submission`]),
+//! verbs and completion tokens go out. `SimConfig::path_for` decides which
+//! path serves each category and [`build_paths`] turns a config into the
+//! two trait objects the replica coordinator owns — adding a new consensus
+//! backend means implementing this trait, not editing a god-struct.
+
+use crate::config::{ExecParams, SimConfig, SystemKind, SystemParams};
+use crate::engine::store::DataPlane;
+use crate::engine::Ctx;
+use crate::mem::MemKind;
+use crate::net::verbs::{ReadData, ReadTarget, Verb};
+use crate::rdt::{Category, OpCall};
+use crate::sim::{EventKind, NodeId, Time, TimerKind};
+use crate::smr::log::ReplicationLog;
+use crate::util::hasher::FastMap;
+use crate::util::rng::Rng;
+use crate::workload::WorkItem;
+
+use crate::engine::strong::StrongToken;
+
+/// Completion-token bookkeeping: which plane owns an outstanding verb.
+/// The tokens themselves live next to the plane that consumes them
+/// ([`StrongToken`] in `engine::strong`; heartbeat tokens belong to the
+/// failure plane); this enum is only the routing envelope the coordinator
+/// dispatches on.
+#[derive(Clone, Copy, Debug)]
+pub enum TokenCtx {
+    /// Owned by the strongly-ordered path (Mu rounds, leader forwards).
+    Strong(StrongToken),
+    /// Heartbeat read of a peer (failure plane).
+    Heartbeat { peer: NodeId },
+    /// Fire-and-forget — no completion expected, so never stored in the
+    /// token map (keeps it from growing with every relaxed fan-out).
+    Ignore,
+}
+
+/// A locally admitted update op handed to a replication path, carrying the
+/// request-side cost accumulated so far (ingress, software dispatch,
+/// refresh fold, permissibility read).
+#[derive(Clone, Copy, Debug)]
+pub struct Submission {
+    pub op: OpCall,
+    pub category: Category,
+    /// Hybrid mode: the op's key lives in host memory behind PCIe.
+    pub host_side: bool,
+    /// Pre-costs to charge together with the local apply.
+    pub cost: u64,
+    pub arrival: Time,
+    pub client: usize,
+}
+
+/// Membership changes the failure plane reports into the paths.
+#[derive(Clone, Copy, Debug)]
+pub enum MembershipEvent {
+    /// A non-leader peer crossed the failure threshold (observer leads).
+    PeerFailed { peer: NodeId },
+    /// A failed peer's heartbeat resumed (observer leads).
+    PeerRecovered { peer: NodeId },
+    /// The permission switch completed; `core.leader` holds the new view.
+    LeaderSwitched,
+}
+
+/// Read-only membership view the failure plane exposes to the paths.
+pub trait Membership {
+    /// Live replicas as this replica sees them (self always included).
+    fn live_set(&self) -> Vec<NodeId>;
+    /// Live peers (self excluded) — the fan-out set.
+    fn live_peers(&self, me: NodeId) -> Vec<NodeId>;
+    /// Election rule: the live replica with the smallest ID (§4.4).
+    fn elect_leader(&self) -> NodeId;
+}
+
+/// One replication path: a plane that turns admitted ops into verbs and
+/// completions back into client responses. Implemented by the relaxed
+/// plane (`engine::relaxed`) and the strongly-ordered plane
+/// (`engine::strong`); the failure plane is the coordinator of membership,
+/// not a path.
+pub trait ReplicationPath: Send {
+    /// Arm background timers at boot (`base` desynchronizes replicas).
+    fn boot(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64);
+
+    /// Second boot wave — timers that arm after the heartbeat scanner
+    /// (boot push order is part of the deterministic event-stream
+    /// contract).
+    fn boot_late(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _base: u64) {}
+
+    /// Cost of refreshing visible state before a query/permissibility
+    /// check under this path's propagation mode (Design Principle #2).
+    fn refresh_cost(&mut self, core: &mut ReplicaCore) -> u64;
+
+    /// Full client-request takeover. Waverunner's Raft path serves/redirects
+    /// every client op itself (§5.2); everyone else returns false and the
+    /// standard category-routed flow applies.
+    fn handle_client(
+        &mut self,
+        _core: &mut ReplicaCore,
+        _ctx: &mut Ctx,
+        _mb: &dyn Membership,
+        _client: usize,
+        _item: WorkItem,
+        _arrival: Time,
+    ) -> bool {
+        false
+    }
+
+    /// Route a locally admitted update into this path.
+    fn submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, sub: Submission);
+
+    /// An arriving verb whose payload this path owns.
+    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, src: NodeId, verb: Verb);
+
+    /// ACK/NACK for a token this path owns.
+    fn on_completion(
+        &mut self,
+        _core: &mut ReplicaCore,
+        _ctx: &mut Ctx,
+        _mb: &dyn Membership,
+        _token: TokenCtx,
+        _ok: bool,
+    ) {
+    }
+
+    /// Read response for a token this path owns.
+    fn on_read_resp(
+        &mut self,
+        _core: &mut ReplicaCore,
+        _ctx: &mut Ctx,
+        _mb: &dyn Membership,
+        _token: TokenCtx,
+        _data: ReadData,
+    ) {
+    }
+
+    /// One of this path's timers fired.
+    fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind);
+
+    /// Answer a one-sided read of path-owned state (the NIC answers from
+    /// memory without the app).
+    fn serve_read(&self, _target: ReadTarget) -> Option<ReadData> {
+        None
+    }
+
+    /// Membership change reported by the failure plane.
+    fn on_membership(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _mb: &dyn Membership, _ev: MembershipEvent) {}
+
+    /// Zero-cost apply of landed-but-unapplied state at quiescence, so
+    /// convergence checks see fully-propagated replicas.
+    fn flush_pending(&mut self, plane: &mut DataPlane);
+
+    /// Drop landed-but-unapplied buffers (snapshot install replaces state).
+    fn clear_landed(&mut self) {}
+
+    /// Committed-log snapshot for recovery transfer (strong path only).
+    fn snapshot_logs(&self) -> Vec<ReplicationLog> {
+        Vec::new()
+    }
+
+    /// Install a committed-log snapshot (strong path only).
+    fn install_logs(&mut self, _logs: Vec<ReplicationLog>) {}
+
+    /// One-line diagnostic fragment for runaway-loop debugging.
+    fn debug_status(&self) -> String {
+        String::new()
+    }
+}
+
+/// Build the two replication paths a configuration selects: the relaxed
+/// plane parameterized by the reducible/irreducible propagation modes, and
+/// the strongly-ordered plane parameterized by the conflicting mode (Mu)
+/// or the system kind (Waverunner's Raft).
+pub fn build_paths(
+    cfg: &SimConfig,
+    id: NodeId,
+    groups: usize,
+) -> (Box<dyn ReplicationPath>, Box<dyn ReplicationPath>) {
+    (
+        Box::new(crate::engine::relaxed::RelaxedPath::new(cfg)),
+        Box::new(crate::engine::strong::StrongPath::new(cfg, id, groups)),
+    )
+}
+
+/// State shared by every plane: identity, cost models, the data plane, the
+/// busy clock, the completion-token table, and the leader view. Handed by
+/// the coordinator into every plane call, so planes stay borrow-disjoint.
+pub struct ReplicaCore {
+    pub id: NodeId,
+    pub n: usize,
+    pub sys: SystemParams,
+    pub system: SystemKind,
+    pub summarize_threshold: u32,
+    pub poll_interval_ns: u64,
+    pub heartbeat_period_ns: u64,
+
+    pub plane: DataPlane,
+    pub crashed: bool,
+    pub busy_until: Time,
+    pub busy_total: u64,
+
+    /// Shared deterministic stream (workload generation + latency samples).
+    pub rng: Rng,
+
+    /// This replica's view of who leads (maintained by the failure plane).
+    pub leader: NodeId,
+
+    /// Client slots that consumed quota but have not been responded to yet
+    /// (drives the cluster's drain-flag flip).
+    pub clients_in_flight: u64,
+
+    next_token: u64,
+    pub tokens: FastMap<u64, TokenCtx>,
+
+    pub executions: u64,
+    pub rejected: u64,
+}
+
+impl ReplicaCore {
+    pub fn new(id: NodeId, cfg: &SimConfig, plane: DataPlane, rng: Rng) -> Self {
+        ReplicaCore {
+            id,
+            n: cfg.n_replicas,
+            sys: cfg.system.params_for(cfg),
+            system: cfg.system,
+            summarize_threshold: cfg.summarize_threshold,
+            poll_interval_ns: cfg.poll_interval_ns,
+            heartbeat_period_ns: cfg.heartbeat_period_ns,
+            plane,
+            crashed: false,
+            busy_until: 0,
+            busy_total: 0,
+            rng,
+            leader: 0,
+            clients_in_flight: 0,
+            next_token: (id as u64) << 48,
+            tokens: FastMap::default(),
+            executions: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn exec(&self) -> &ExecParams {
+        &self.sys.exec
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.id == self.leader
+    }
+
+    /// Every other replica, live or not (heartbeat scan targets).
+    pub fn peers(&self) -> Vec<NodeId> {
+        (0..self.n).filter(|&i| i != self.id).collect()
+    }
+
+    /// Advance the local busy clock by `cost` starting no earlier than `at`.
+    /// Returns the completion time.
+    pub fn occupy(&mut self, at: Time, cost: u64) -> Time {
+        let start = at.max(self.busy_until);
+        self.busy_until = start + cost;
+        self.busy_total += cost;
+        self.busy_until
+    }
+
+    /// State read cost of the local object (own state is warm).
+    pub fn warm_read_ns(&self) -> u64 {
+        match self.exec().state_mem {
+            MemKind::HostDram => self.sys.mem.cache_hit_ns,
+            k => self.sys.mem.local_read_ns(k),
+        }
+    }
+
+    /// Landing-zone memory kind for write-propagated items.
+    pub fn landing_mem(&self) -> MemKind {
+        match self.exec().state_mem {
+            MemKind::HostDram => MemKind::HostDram,
+            _ => MemKind::Hbm,
+        }
+    }
+
+    /// Peers run the same system; their landing zone mirrors ours.
+    pub fn landing_mem_for_peer(&self) -> MemKind {
+        self.landing_mem()
+    }
+
+    pub fn write_state_cost(&self, host_side: bool) -> u64 {
+        if host_side {
+            self.sys.mem.dram_ns + self.sys.mem.pcie_ns
+        } else {
+            self.sys.mem.local_write_ns(self.exec().state_mem)
+        }
+    }
+
+    pub fn apply_remote(&mut self, op: &OpCall) {
+        self.executions += 1;
+        self.plane.apply(op);
+    }
+
+    /// Allocate a completion token. `Ignore` tokens still consume a number
+    /// (verbs carry them on the wire) but are not stored — no completion
+    /// will ever look them up.
+    pub fn token(&mut self, ctx: TokenCtx) -> u64 {
+        let t = self.next_token;
+        self.next_token += 1;
+        if !matches!(ctx, TokenCtx::Ignore) {
+            self.tokens.insert(t, ctx);
+        }
+        t
+    }
+
+    /// Host-issued verbs pay an extra PCIe hop before the NIC.
+    pub fn charge_pcie_hop(&mut self, now: Time) {
+        let pcie = self.sys.mem.pcie_ns;
+        self.busy_total += pcie;
+        self.busy_until = self.busy_until.max(now) + pcie;
+    }
+
+    /// Respond to a client slot: record metrics and re-arm the closed loop.
+    pub fn complete_client(&mut self, ctx: &mut Ctx, client: usize, arrival: Time, done: Time) {
+        ctx.metrics.response.record(done - arrival);
+        ctx.metrics.completed[self.id] += 1;
+        ctx.metrics.completed_sum += 1;
+        ctx.metrics.last_completion_ns = ctx.metrics.last_completion_ns.max(done);
+        // Saturating: a slot that died in a crash may see a stale reply
+        // after recovery (its in-flight count was reset at crash time).
+        self.clients_in_flight = self.clients_in_flight.saturating_sub(1);
+        ctx.q.push(done, self.id, EventKind::ClientArrive { client });
+    }
+
+    /// Send one verb to every peer in `peers`, serializing initiator-side
+    /// costs (Hamband's CQE wait makes this expensive; SafarDB pipelines).
+    pub fn fan_out(
+        &mut self,
+        ctx: &mut Ctx,
+        peers: &[NodeId],
+        make: impl Fn(u64) -> Verb,
+        want_completion: bool,
+        ctx_of: impl Fn() -> TokenCtx,
+    ) {
+        let start = ctx.q.now().max(self.busy_until);
+        let mut cursor = start;
+        for &dst in peers {
+            let tok = self.token(ctx_of());
+            let verb = make(tok);
+            ctx.metrics.verbs += 1;
+            let out = ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, cursor, self.id, dst, verb, want_completion);
+            cursor = out.initiator_free_at;
+        }
+        // Initiator-side verb-issue time is real busy time on the replica
+        // (the Hamband CQE serialization shows up exactly here).
+        self.busy_total += cursor - start;
+        self.busy_until = cursor;
+    }
+}

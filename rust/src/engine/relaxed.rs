@@ -1,0 +1,346 @@
+//! Relaxed replication path (§4.1–§4.2, §5.4): landing zones for reducible
+//! and irreducible ops, the summarization buffer, and the flush/propagation
+//! machinery.
+//!
+//! Reducible ops land in per-origin contribution slots and fold on access
+//! or on a poll (propagation mode §4.1); irreducible ops ride per-origin
+//! FIFO queues (§4.2); summarization (§5.4) batches local applies and
+//! ships type-correct aggregates, optionally diverting *conflicting* ops
+//! off the SMR path (the integrity/staleness trade-off).
+
+use crate::config::{PropagationMode, SimConfig};
+use crate::engine::path::{Membership, ReplicaCore, ReplicationPath, Submission, TokenCtx};
+use crate::engine::store::DataPlane;
+use crate::engine::Ctx;
+use crate::mem::MemKind;
+use crate::net::verbs::{Payload, Verb, VerbKind};
+use crate::rdt::{Category, OpCall};
+use crate::sim::{EventKind, NodeId, Time, TimerKind};
+
+pub struct RelaxedPath {
+    prop_red: PropagationMode,
+    prop_irr: PropagationMode,
+    /// Landing zones (HBM): written by remote one-sided verbs, drained by
+    /// pollers or on access.
+    pending_reducible: Vec<OpCall>,
+    pending_irreducible: Vec<OpCall>,
+    /// Locally applied ops awaiting one aggregated propagation (§5.4).
+    sum_buffer: Vec<(OpCall, Time)>,
+}
+
+impl RelaxedPath {
+    pub fn new(cfg: &SimConfig) -> Self {
+        RelaxedPath {
+            prop_red: cfg.prop_reducible,
+            prop_irr: cfg.prop_irreducible,
+            pending_reducible: Vec::new(),
+            pending_irreducible: Vec::new(),
+            sum_buffer: Vec::new(),
+        }
+    }
+
+    fn drain_reducible_cost(&mut self, core: &mut ReplicaCore) -> u64 {
+        let items: Vec<OpCall> = self.pending_reducible.drain(..).collect();
+        if items.is_empty() {
+            return 0;
+        }
+        // Landed summaries are contiguous slots: one burst read + execute.
+        let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
+        for op in items {
+            cost += core.exec().op_exec_ns;
+            core.apply_remote(&op);
+        }
+        cost
+    }
+
+    fn drain_irreducible_cost(&mut self, core: &mut ReplicaCore) -> u64 {
+        let items: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
+        if items.is_empty() {
+            return 0;
+        }
+        // Per-origin FIFO queues: burst-read each queue head run.
+        let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
+        for op in items {
+            cost += core.exec().op_exec_ns;
+            core.apply_remote(&op);
+        }
+        cost
+    }
+
+    fn flush_summaries(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, host_side: bool) {
+        if self.sum_buffer.is_empty() {
+            return;
+        }
+        let now = ctx.q.now();
+        let items: Vec<(OpCall, Time)> = self.sum_buffer.drain(..).collect();
+        for (_, applied_at) in &items {
+            ctx.metrics.staleness.add((now.saturating_sub(*applied_at)) as f64);
+        }
+        // Summarize under the data plane's type-correct rule.
+        let ops: Vec<OpCall> = items.iter().map(|(o, _)| *o).collect();
+        let agg = summarize(core.plane.summarize_rule(), &ops);
+        let origin = core.id;
+        let mode = self.prop_red;
+        let mem = core.landing_mem_for_peer();
+        if host_side {
+            core.charge_pcie_hop(now);
+        }
+        let peers = mb.live_peers(core.id);
+        for op in agg {
+            match mode {
+                PropagationMode::Rpc => {
+                    core.fan_out(
+                        ctx,
+                        &peers,
+                        |t| Verb::rpc(Payload::Summary { origin, ops: 1, value: op }, t),
+                        false,
+                        || TokenCtx::Ignore,
+                    );
+                }
+                _ => {
+                    core.fan_out(
+                        ctx,
+                        &peers,
+                        |t| Verb::write(mem, Payload::Summary { origin, ops: 1, value: op }, t),
+                        false,
+                        || TokenCtx::Ignore,
+                    );
+                }
+            }
+        }
+    }
+
+    fn propagate_irreducible(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, host_side: bool) {
+        if host_side {
+            core.charge_pcie_hop(ctx.q.now());
+        }
+        let mem = core.landing_mem_for_peer();
+        let peers = mb.live_peers(core.id);
+        match self.prop_irr {
+            PropagationMode::Rpc => {
+                core.fan_out(ctx, &peers, |t| Verb::rpc(Payload::QueueAppend { op }, t), false, || TokenCtx::Ignore);
+            }
+            _ => {
+                core.fan_out(ctx, &peers, |t| Verb::write(mem, Payload::QueueAppend { op }, t), false, || {
+                    TokenCtx::Ignore
+                });
+            }
+        }
+    }
+}
+
+impl ReplicationPath for RelaxedPath {
+    fn boot(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64) {
+        if self.prop_red == PropagationMode::WriteBuffered {
+            ctx.q.push(base + core.poll_interval_ns, core.id, EventKind::Timer(TimerKind::PollReducible));
+        }
+        if self.prop_irr == PropagationMode::WriteNoBuffer || self.prop_irr == PropagationMode::WriteBuffered {
+            ctx.q.push(base + core.poll_interval_ns, core.id, EventKind::Timer(TimerKind::PollIrreducible));
+        }
+    }
+
+    fn boot_late(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64) {
+        // The summarize flusher arms after the heartbeat scanner.
+        if core.summarize_threshold > 1 {
+            ctx.q.push(base + 4 * core.poll_interval_ns, core.id, EventKind::Timer(TimerKind::SummarizeFlush));
+        }
+    }
+
+    fn refresh_cost(&mut self, core: &mut ReplicaCore) -> u64 {
+        let mut cost = 0;
+        // Reducible contribution fold (§4.1): no-buffer pays a fold from
+        // the landing memory; buffered/RPC read warm on-fabric state
+        // (the Design Principle #2 story).
+        if self.prop_red == PropagationMode::WriteNoBuffer {
+            cost += core.sys.mem.fold_read_ns(core.landing_mem(), core.n);
+            cost += self.drain_reducible_cost(core);
+        }
+        // Irreducible queue drain (§4.2 config 1 polls; no-buffer also
+        // drains on access).
+        if self.prop_irr == PropagationMode::WriteNoBuffer {
+            cost += self.drain_irreducible_cost(core);
+        }
+        cost
+    }
+
+    fn submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, sub: Submission) {
+        let Submission { mut op, category, host_side, mut cost, arrival, client } = sub;
+        if category == Category::Conflicting {
+            // §5.4 Summarization: "instead of updating the remote replicas
+            // via RDMA *or coordination* ... we only update the local
+            // state" — batching trades integrity staleness for performance.
+            // The op was locally permissible; it applies locally and ships
+            // as a normalized delta in the next summary flush.
+            op = normalize_for_summary(&core.plane, op);
+        }
+        cost += core.exec().op_exec_ns + core.write_state_cost(host_side);
+        core.executions += 1;
+        core.plane.apply(&op);
+        // Op-based relaxed semantics: respond after the local commit;
+        // propagation proceeds off the response path but still occupies
+        // the replica (throughput, not latency).
+        let t_apply = core.occupy(arrival, cost);
+        let done = core.occupy(t_apply, core.exec().client_overhead_ns / 2);
+        core.complete_client(ctx, client, arrival, done);
+        match category {
+            Category::Irreducible => self.propagate_irreducible(core, ctx, mb, op, host_side),
+            _ => {
+                self.sum_buffer.push((op, t_apply));
+                if self.sum_buffer.len() as u32 >= core.summarize_threshold {
+                    self.flush_summaries(core, ctx, mb, host_side);
+                }
+            }
+        }
+    }
+
+    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, _src: NodeId, verb: Verb) {
+        let is_rpc = matches!(verb.kind, VerbKind::Rpc | VerbKind::RpcWriteThrough);
+        match verb.payload {
+            Payload::Summary { value, .. } => {
+                if is_rpc {
+                    // Dispatcher invokes the accelerator directly (Fig 1).
+                    let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
+                    core.occupy(ctx.q.now(), cost);
+                    core.apply_remote(&value);
+                } else {
+                    self.pending_reducible.push(value);
+                }
+            }
+            Payload::QueueAppend { op } => {
+                if is_rpc {
+                    let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
+                    core.occupy(ctx.q.now(), cost);
+                    core.apply_remote(&op);
+                } else {
+                    self.pending_irreducible.push(op);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind) {
+        match t {
+            TimerKind::PollReducible => {
+                let cost = core.exec().poll_tick_ns + self.drain_reducible_cost(core);
+                core.occupy(ctx.q.now(), cost);
+                if !ctx.draining {
+                    ctx.q.push(ctx.q.now() + core.poll_interval_ns, core.id, EventKind::Timer(t));
+                }
+            }
+            TimerKind::PollIrreducible => {
+                let cost = core.exec().poll_tick_ns + self.drain_irreducible_cost(core);
+                core.occupy(ctx.q.now(), cost);
+                if !ctx.draining {
+                    ctx.q.push(ctx.q.now() + core.poll_interval_ns, core.id, EventKind::Timer(t));
+                }
+            }
+            TimerKind::SummarizeFlush => {
+                if !self.sum_buffer.is_empty() {
+                    self.flush_summaries(core, ctx, mb, false);
+                }
+                if !ctx.draining {
+                    ctx.q.push(ctx.q.now() + 4 * core.poll_interval_ns, core.id, EventKind::Timer(t));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn flush_pending(&mut self, plane: &mut DataPlane) {
+        let red: Vec<OpCall> = self.pending_reducible.drain(..).collect();
+        for op in red {
+            plane.apply(&op);
+        }
+        let irr: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
+        for op in irr {
+            plane.apply(&op);
+        }
+    }
+
+    fn clear_landed(&mut self) {
+        self.pending_reducible.clear();
+        self.pending_irreducible.clear();
+        self.sum_buffer.clear();
+    }
+
+    fn debug_status(&self) -> String {
+        format!(
+            "pend_red={} pend_irr={} sum_buf={}",
+            self.pending_reducible.len(),
+            self.pending_irreducible.len(),
+            self.sum_buffer.len()
+        )
+    }
+}
+
+/// Rewrite a locally-validated conflicting op into its commutative delta
+/// form for summarized propagation (§5.4): debits become negative
+/// deposits. Only meaningful for scalar-balance types; other conflicting
+/// ops pass through unchanged (their apply is set-idempotent).
+pub fn normalize_for_summary(plane: &DataPlane, mut op: OpCall) -> OpCall {
+    use crate::engine::store::{KvKind, KV_WITHDRAW, KV_WRITE};
+    match plane {
+        DataPlane::Kv(kv) if kv.kind == KvKind::SmallBank && op.opcode == KV_WITHDRAW => {
+            op.opcode = KV_WRITE;
+            op.x = -op.x;
+            op
+        }
+        DataPlane::Micro(r) if r.kind() == crate::rdt::RdtKind::Account => {
+            use crate::rdt::wrdt::account::{OP_DEPOSIT, OP_WITHDRAW};
+            if op.opcode == OP_WITHDRAW {
+                op.opcode = OP_DEPOSIT;
+                op.x = -op.x;
+            }
+            op
+        }
+        _ => op,
+    }
+}
+
+/// How a reducible op stream aggregates (§2.1 "summarizable").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SummarizeRule {
+    /// Sum deltas per (opcode, key): counters, deposits.
+    SumDelta,
+    /// Keep only the highest-timestamp write per key: LWW registers, YCSB.
+    LastWrite,
+    /// Not scalar-summable (set inserts): ship the batch as-is — still one
+    /// verb per op on the wire, but flushed together.
+    ShipAll,
+}
+
+/// Aggregate a run of reducible ops under a type-correct rule.
+pub fn summarize(rule: SummarizeRule, ops: &[OpCall]) -> Vec<OpCall> {
+    use std::collections::BTreeMap;
+    match rule {
+        SummarizeRule::ShipAll => ops.to_vec(),
+        SummarizeRule::SumDelta => {
+            let mut agg: BTreeMap<(u8, u64), OpCall> = BTreeMap::new();
+            for op in ops {
+                let e = agg.entry((op.opcode, op.b)).or_insert_with(|| {
+                    let mut z = *op;
+                    z.a = 0;
+                    z.x = 0.0;
+                    z
+                });
+                e.a += op.a;
+                e.x += op.x;
+                e.seq = e.seq.max(op.seq);
+            }
+            agg.into_values().collect()
+        }
+        SummarizeRule::LastWrite => {
+            let mut best: BTreeMap<u64, OpCall> = BTreeMap::new();
+            for op in ops {
+                let e = best.entry(op.b).or_insert(*op);
+                // op.a is the LWW timestamp for both the micro register and
+                // the YCSB KV path.
+                if op.a > e.a {
+                    *e = *op;
+                }
+            }
+            best.into_values().collect()
+        }
+    }
+}

@@ -1,358 +1,111 @@
-//! One replica: FPGA card + host (SafarDB), CPU node (Hamband), or
-//! SmartNIC node (Waverunner) — selected purely by `SystemParams` and
-//! propagation modes. Holds the real data plane, the per-group replication
-//! logs and Mu instances, the heartbeat tracker, the summarization buffer,
-//! and the pending-request maps. All latency flows through the fabric and
-//! memory models; all state mutation is real and checked by the
-//! convergence/integrity tests.
+//! One replica: a thin coordinator over the paper's planes. FPGA card +
+//! host (SafarDB), CPU node (Hamband), or SmartNIC node (Waverunner) —
+//! selected purely by `SystemParams` and the propagation modes, which pick
+//! the [`ReplicationPath`] trait objects serving each RDT category.
+//!
+//! The coordinator owns the shared [`ReplicaCore`] (data plane, busy clock,
+//! token table, leader view) and routes `EventKind`s:
+//!
+//! * client arrivals  → `engine::client` (slots, quota, request costs),
+//!   then by category into a path (`SimConfig::path_for`);
+//! * verb deliveries  → the path owning the payload (`Payload::plane`);
+//! * completions      → the path owning the token (`TokenCtx`);
+//! * timers           → the plane that armed them;
+//! * crash/recover    → `engine::failure` (heartbeats, election, snapshot).
+//!
+//! All latency flows through the fabric and memory models; all state
+//! mutation is real and checked by the convergence/integrity tests.
 
-use crate::util::hasher::FastMap;
-
-use crate::config::{PropagationMode, SimConfig, SystemKind, SystemParams};
+use crate::config::{ReplicationPathKind, SimConfig};
+use crate::engine::client::ClientPlane;
+use crate::engine::failure::FailurePlane;
+use crate::engine::path::{self, ReplicaCore, ReplicationPath, Submission, TokenCtx};
 use crate::engine::store::{DataPlane, KV_READ};
 use crate::engine::Ctx;
-use crate::mem::{LruCache, MemKind};
-use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
-use crate::rdt::{Category, OpCall};
+use crate::mem::MemKind;
+use crate::net::verbs::{Payload, PayloadPlane, ReadData, ReadTarget, Verb, VerbKind};
+use crate::rdt::Category;
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
-use crate::smr::election::{HbVerdict, HeartbeatTracker};
 use crate::smr::log::ReplicationLog;
-use crate::smr::mu::{MuInstance, Resp, Round, Step};
-use crate::smr::raft::{RaftFollower, RaftLeader, RaftStep};
 use crate::util::rng::Rng;
-use crate::workload::{Generator, Placement, WorkItem};
+use crate::workload::{Placement, WorkItem};
 
-/// Completion-token bookkeeping.
+/// Category → path routing, resolved from the config at construction so
+/// the hot loop never re-derives it.
 #[derive(Clone, Copy, Debug)]
-enum TokenCtx {
-    /// Mu fan-out response: (group, round_id at fan-out time).
-    Mu { group: u8, round_id: u64 },
-    /// Heartbeat read of a peer.
-    Heartbeat { peer: NodeId },
-    /// Forwarded conflicting op awaiting a LeaderReply.
-    Forward { request_id: u64 },
-    /// Raft AppendEntries awaiting follower acks.
-    #[allow(dead_code)]
-    Raft { term: u64, index: u64 },
-    /// Fire-and-forget (relaxed propagation) — completion ignored.
-    Ignore,
+struct PathRoutes {
+    reducible: ReplicationPathKind,
+    irreducible: ReplicationPathKind,
+    conflicting: ReplicationPathKind,
 }
 
-/// A client request in flight (origin side).
-#[derive(Clone, Copy, Debug)]
-struct PendingClient {
-    client: usize,
-    arrival: Time,
-    retries: u8,
-    op: OpCall,
-}
+impl PathRoutes {
+    fn resolve(cfg: &SimConfig) -> Self {
+        PathRoutes {
+            reducible: cfg.path_for(Category::Reducible),
+            irreducible: cfg.path_for(Category::Irreducible),
+            conflicting: cfg.path_for(Category::Conflicting),
+        }
+    }
 
-/// Leader side: who to answer once a conflicting op commits.
-#[derive(Clone, Copy, Debug)]
-enum Requester {
-    Local { client: usize, arrival: Time },
-    Remote { reply_to: NodeId, request_id: u64 },
+    fn for_category(&self, category: Category) -> ReplicationPathKind {
+        match category {
+            Category::Reducible => self.reducible,
+            Category::Irreducible => self.irreducible,
+            Category::Conflicting => self.conflicting,
+        }
+    }
 }
 
 pub struct Replica {
-    pub id: NodeId,
-    n: usize,
-    sys: SystemParams,
-    system: SystemKind,
-    prop_red: PropagationMode,
-    prop_irr: PropagationMode,
-    prop_con: PropagationMode,
-    summarize_threshold: u32,
-    poll_interval_ns: u64,
-    heartbeat_period_ns: u64,
-
-    pub plane: DataPlane,
-    pub crashed: bool,
-    busy_until: Time,
-    pub busy_total: u64,
-
-    // client loop
-    gen: Generator,
-    rng: Rng,
-    pub quota: u64,
-    op_seq: u64,
-
-    // relaxed-path landing zones (HBM) and summarizer
-    pending_reducible: Vec<OpCall>,
-    pending_irreducible: Vec<OpCall>,
-    sum_buffer: Vec<(OpCall, Time)>,
-
-    // conflicting path
-    pub leader: NodeId,
-    mu: Vec<MuInstance>,
-    pub logs: Vec<ReplicationLog>,
-    round_id: Vec<u64>,
-    requesters: FastMap<(usize, u64), Requester>,
-    pending_fwd: FastMap<u64, PendingClient>,
-    next_request_id: u64,
-
-    // leader-switch plane
-    pub hb_counter: u64,
-    tracker: HeartbeatTracker,
-
-    // tokens
-    next_token: u64,
-    tokens: FastMap<u64, TokenCtx>,
-
-    // waverunner
-    raft_leader: Option<RaftLeader>,
-    raft_follower: RaftFollower,
-    raft_pending: FastMap<u64, Requester>, // index -> requester
-
-    // hybrid
-    host_cache: Option<LruCache>,
-    #[allow(dead_code)]
-    fpga_keys: u64,
-
-    // counters
-    pub executions: u64,
-    pub rejected: u64,
+    core: ReplicaCore,
+    client: ClientPlane,
+    relaxed: Box<dyn ReplicationPath>,
+    strong: Box<dyn ReplicationPath>,
+    failure: FailurePlane,
+    routes: PathRoutes,
 }
 
 impl Replica {
     pub fn new(id: NodeId, cfg: &SimConfig, root_rng: &mut Rng) -> Self {
-        let sys = cfg.system.params_for(cfg);
-        let gen = Generator::new(cfg);
-        let plane = DataPlane::for_workload(cfg.workload, gen.keyspace());
+        let client = ClientPlane::new(cfg);
+        let plane = DataPlane::for_workload(cfg.workload, client.keyspace());
         let groups = plane.sync_groups() as usize;
-        let host_cache = cfg.hybrid.map(|h| LruCache::new(h.host_cache_keys));
-        let fpga_keys = cfg.hybrid.map(|h| h.fpga_keys).unwrap_or(u64::MAX);
-        let raft_leader = if cfg.system == SystemKind::Waverunner && id == 0 {
-            Some(RaftLeader::new(cfg.n_replicas))
-        } else {
-            None
-        };
+        let rng = root_rng.fork(id as u64 + 1);
+        let core = ReplicaCore::new(id, cfg, plane, rng);
+        let (relaxed, strong) = path::build_paths(cfg, id, groups);
         Replica {
-            id,
-            n: cfg.n_replicas,
-            sys,
-            system: cfg.system,
-            prop_red: cfg.prop_reducible,
-            prop_irr: cfg.prop_irreducible,
-            prop_con: cfg.prop_conflicting,
-            summarize_threshold: cfg.summarize_threshold,
-            poll_interval_ns: cfg.poll_interval_ns,
-            heartbeat_period_ns: cfg.heartbeat_period_ns,
-            plane,
-            crashed: false,
-            busy_until: 0,
-            busy_total: 0,
-            gen,
-            rng: root_rng.fork(id as u64 + 1),
-            quota: 0,
-            op_seq: 0,
-            pending_reducible: Vec::new(),
-            pending_irreducible: Vec::new(),
-            sum_buffer: Vec::new(),
-            leader: 0,
-            mu: (0..groups).map(|g| MuInstance::new(g as u8, cfg.n_replicas)).collect(),
-            logs: (0..groups).map(|_| ReplicationLog::new()).collect(),
-            round_id: vec![0; groups],
-            requesters: FastMap::default(),
-            pending_fwd: FastMap::default(),
-            next_request_id: 1,
-            hb_counter: 0,
-            tracker: HeartbeatTracker::new(id, cfg.n_replicas, cfg.hb_fail_threshold),
-            next_token: (id as u64) << 48,
-            tokens: FastMap::default(),
-            raft_leader,
-            raft_follower: RaftFollower::new(),
-            raft_pending: FastMap::default(),
-            host_cache,
-            fpga_keys,
-            executions: 0,
-            rejected: 0,
+            core,
+            client,
+            relaxed,
+            strong,
+            failure: FailurePlane::new(id, cfg.n_replicas, cfg.hb_fail_threshold),
+            routes: PathRoutes::resolve(cfg),
         }
-    }
-
-    // ----- small helpers -------------------------------------------------
-
-    fn token(&mut self, ctx: TokenCtx) -> u64 {
-        let t = self.next_token;
-        self.next_token += 1;
-        self.tokens.insert(t, ctx);
-        t
-    }
-
-    fn peers(&self) -> Vec<NodeId> {
-        (0..self.n).filter(|&i| i != self.id).collect()
-    }
-
-    fn live_peers(&self) -> Vec<NodeId> {
-        self.tracker.live_set().into_iter().filter(|&i| i != self.id).collect()
-    }
-
-    pub fn is_leader(&self) -> bool {
-        self.id == self.leader
-    }
-
-    /// Advance the local busy clock by `cost` starting no earlier than `at`.
-    /// Returns the completion time.
-    fn occupy(&mut self, at: Time, cost: u64) -> Time {
-        let start = at.max(self.busy_until);
-        self.busy_until = start + cost;
-        self.busy_total += cost;
-        self.busy_until
-    }
-
-    fn exec(&self) -> &crate::config::ExecParams {
-        &self.sys.exec
-    }
-
-    /// State read cost of the local object (own state is warm).
-    fn warm_read_ns(&self) -> u64 {
-        match self.exec().state_mem {
-            MemKind::HostDram => self.sys.mem.cache_hit_ns,
-            k => self.sys.mem.local_read_ns(k),
-        }
-    }
-
-    /// Landing-zone memory kind for write-propagated items.
-    fn landing_mem(&self) -> MemKind {
-        match self.exec().state_mem {
-            MemKind::HostDram => MemKind::HostDram,
-            _ => MemKind::Hbm,
-        }
-    }
-
-    /// Cost of refreshing visible state before a query/permissibility check,
-    /// given the propagation mode in effect (the Design Principle #2 story:
-    /// no-buffer pays a fold from the landing memory; buffered/RPC read
-    /// warm on-fabric state).
-    fn refresh_cost(&mut self) -> u64 {
-        let mut cost = 0;
-        // Reducible contribution fold (§4.1).
-        if self.prop_red == PropagationMode::WriteNoBuffer {
-            cost += self.sys.mem.fold_read_ns(self.landing_mem(), self.n);
-            cost += self.drain_reducible_cost();
-        }
-        // Irreducible queue drain (§4.2 config 1 polls; no-buffer also
-        // drains on access).
-        if self.prop_irr == PropagationMode::WriteNoBuffer {
-            cost += self.drain_irreducible_cost();
-        }
-        // Conflicting log check (§4.3 config 1: "polling the log when the
-        // state is accessed to ensure the most up to date data").
-        if self.prop_con != PropagationMode::WriteThrough {
-            let per_group = self.sys.mem.local_read_ns(self.landing_mem());
-            cost += per_group * self.logs.len() as u64;
-            cost += self.drain_logs_cost();
-        }
-        cost
-    }
-
-    fn drain_reducible_cost(&mut self) -> u64 {
-        let items: Vec<OpCall> = self.pending_reducible.drain(..).collect();
-        if items.is_empty() {
-            return 0;
-        }
-        // Landed summaries are contiguous slots: one burst read + execute.
-        let mut cost = self.sys.mem.fold_read_ns(self.landing_mem(), items.len());
-        for op in items {
-            cost += self.exec().op_exec_ns;
-            self.apply_remote(&op);
-        }
-        cost
-    }
-
-    fn drain_irreducible_cost(&mut self) -> u64 {
-        let items: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
-        if items.is_empty() {
-            return 0;
-        }
-        // Per-origin FIFO queues: burst-read each queue head run.
-        let mut cost = self.sys.mem.fold_read_ns(self.landing_mem(), items.len());
-        for op in items {
-            cost += self.exec().op_exec_ns;
-            self.apply_remote(&op);
-        }
-        cost
-    }
-
-    fn drain_logs_cost(&mut self) -> u64 {
-        let mut cost = 0;
-        for g in 0..self.logs.len() {
-            for entry in self.logs[g].drain_unapplied() {
-                cost += self.exec().op_exec_ns + self.sys.mem.local_read_ns(self.landing_mem());
-                self.executions += 1;
-                self.plane.apply_forced(&entry.op);
-            }
-        }
-        cost
-    }
-
-    fn apply_remote(&mut self, op: &OpCall) {
-        self.executions += 1;
-        self.plane.apply(op);
-    }
-
-    /// Apply every pending remote item with zero cost — used only at
-    /// quiescence so convergence checks see fully-propagated state.
-    pub fn flush_all_pending(&mut self) {
-        let red: Vec<OpCall> = self.pending_reducible.drain(..).collect();
-        for op in red {
-            self.plane.apply(&op);
-        }
-        let irr: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
-        for op in irr {
-            self.plane.apply(&op);
-        }
-        for g in 0..self.logs.len() {
-            for e in self.logs[g].drain_unapplied() {
-                self.plane.apply_forced(&e.op);
-            }
-        }
-    }
-
-    /// Remaining summarization buffer flushed into the wire at quiescence.
-    pub fn has_unflushed_summaries(&self) -> bool {
-        !self.sum_buffer.is_empty()
     }
 
     // ----- boot ----------------------------------------------------------
 
     pub fn boot(&mut self, ctx: &mut Ctx, clients: usize, quota: u64) {
-        self.quota = quota;
+        self.client.quota = quota;
         for c in 0..clients {
-            ctx.q.push(ctx.q.now(), self.id, EventKind::ClientArrive { client: c });
+            ctx.q.push(ctx.q.now(), self.core.id, EventKind::ClientArrive { client: c });
         }
-        // Background machinery.
-        let base = self.id as u64 * 7; // desynchronize replicas
-        if self.prop_red == PropagationMode::WriteBuffered {
-            ctx.q.push(base + self.poll_interval_ns, self.id, EventKind::Timer(TimerKind::PollReducible));
-        }
-        if self.prop_irr == PropagationMode::WriteNoBuffer
-            || self.prop_irr == PropagationMode::WriteBuffered
-        {
-            ctx.q.push(base + self.poll_interval_ns, self.id, EventKind::Timer(TimerKind::PollIrreducible));
-        }
-        if self.prop_con != PropagationMode::WriteThrough && !self.logs.is_empty() {
-            for g in 0..self.logs.len() {
-                ctx.q.push(
-                    base + self.poll_interval_ns + g as u64,
-                    self.id,
-                    EventKind::Timer(TimerKind::PollLog(g as u8)),
-                );
-            }
-        }
-        // Heartbeat scanning runs for every object class: WRDTs need it for
-        // leader election; CRDTs need it for membership (a crashed peer
-        // must leave the relaxed-path fan-out set — Fig 14 e/f).
-        ctx.q.push(base + self.heartbeat_period_ns, self.id, EventKind::Timer(TimerKind::HeartbeatScan));
-        if self.summarize_threshold > 1 {
-            ctx.q.push(base + 4 * self.poll_interval_ns, self.id, EventKind::Timer(TimerKind::SummarizeFlush));
-        }
+        // Background machinery; `base` desynchronizes replicas. The boot
+        // push order (relaxed pollers, strong log pollers, heartbeat
+        // scanner, summarize flusher) is part of the deterministic
+        // event-stream contract — equal-time events fire in push order.
+        let base = self.core.id as u64 * 7;
+        self.relaxed.boot(&mut self.core, ctx, base);
+        self.strong.boot(&mut self.core, ctx, base);
+        self.failure.boot(&self.core, ctx, base);
+        self.relaxed.boot_late(&mut self.core, ctx, base);
     }
 
-    // ----- event dispatch --------------------------------------------------
+    // ----- event dispatch ------------------------------------------------
 
     pub fn handle(&mut self, ctx: &mut Ctx, kind: EventKind) {
-        if self.crashed && !matches!(kind, EventKind::Recover) {
+        if self.core.crashed && !matches!(kind, EventKind::Recover) {
             return;
         }
         match kind {
@@ -361,1015 +114,245 @@ impl Replica {
             EventKind::AckDeliver { token } => self.on_completion(ctx, token, true),
             EventKind::NackDeliver { token } => self.on_completion(ctx, token, false),
             EventKind::Timer(t) => self.on_timer(ctx, t),
-            EventKind::Crash => {
-                self.crashed = true;
-                ctx.net.set_crashed(self.id, true);
-            }
-            EventKind::Recover => {
-                self.crashed = false;
-                ctx.net.set_crashed(self.id, false);
-                self.busy_until = ctx.q.now();
-                // Heartbeat resumes; peers will observe Recovered.
-                ctx.q.push(ctx.q.now() + self.heartbeat_period_ns, self.id, EventKind::Timer(TimerKind::HeartbeatScan));
-            }
+            EventKind::Crash => self.failure.on_crash(&mut self.core, ctx),
+            EventKind::Recover => self.failure.on_recover(&mut self.core, ctx),
         }
     }
 
-    // ----- client path -----------------------------------------------------
+    // ----- client path ---------------------------------------------------
 
     fn on_client(&mut self, ctx: &mut Ctx, client: usize) {
-        if self.quota == 0 {
-            return; // slot retires
-        }
-        self.quota -= 1;
         let now = ctx.q.now();
-        self.op_seq += 1;
-        // LWW timestamps compose (time, origin) so they are globally unique
-        // and merge deterministically (Table A.1 "unique timestamps").
-        let ts = ((now.max(1)) << 8) | self.id as u64;
-        let mut item = self.gen.next(&mut self.rng, &self.plane, ts);
-        item.op.origin = self.id;
-        item.op.seq = self.op_seq;
+        let Some(item) = self.client.next_op(&mut self.core, now) else {
+            return; // quota spent: the slot retires
+        };
         self.process_client_op(ctx, client, item, now);
     }
 
     fn process_client_op(&mut self, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
-        // Waverunner: only the leader serves clients (§5.2); every update
-        // replicates through Raft regardless of RDT category (no hybrid
-        // consistency — that is the point of the Fig 12 comparison).
-        if self.system == SystemKind::Waverunner {
-            if self.raft_leader.is_none() {
-                self.waverunner_redirect(ctx, client, item, arrival);
-            } else {
-                self.waverunner_serve(ctx, client, item, arrival);
-            }
+        let Replica { core, client: cl, relaxed, strong, failure, routes } = self;
+
+        // A path may own client handling end to end (Waverunner's
+        // leader-only Raft service, §5.2).
+        if strong.handle_client(core, ctx, &*failure, client, item, arrival) {
             return;
         }
 
-        let ingress = self.exec().client_overhead_ns / 2;
-        let sw = self.exec().software_overhead_ns;
+        let ingress = core.exec().client_overhead_ns / 2;
+        let sw = core.exec().software_overhead_ns;
         let mut cost = ingress + sw;
 
         // Hybrid: host-resident keys pay the PCIe hop + host-side costs.
         let host_side = item.placement == Placement::Host;
         if host_side {
-            cost += self.sys.mem.pcie_ns; // FPGA ingress -> host handoff
+            cost += core.sys.mem.pcie_ns; // FPGA ingress -> host handoff
             cost += 120; // host software dispatch
         }
 
         let op = item.op;
         if op.is_query() || op.opcode == KV_READ {
-            if op.is_query() && !self.plane.has_query() {
+            if op.is_query() && !core.plane.has_query() {
                 // Movie has no query() (§5.2): the slot is a pure local
                 // no-op that never touches replicated state.
-                let done = self.occupy(arrival, cost + self.exec().client_overhead_ns / 2);
-                self.complete_client(ctx, client, arrival, done);
+                let done = core.occupy(arrival, cost + core.exec().client_overhead_ns / 2);
+                core.complete_client(ctx, client, arrival, done);
                 return;
             }
-            cost += self.query_cost(&op, host_side);
-            let done = self.occupy(arrival, cost + self.exec().client_overhead_ns / 2);
-            self.complete_client(ctx, client, arrival, done);
+            cost += relaxed.refresh_cost(core) + strong.refresh_cost(core);
+            cost += cl.query_read_cost(core, &op, host_side);
+            let done = core.occupy(arrival, cost + core.exec().client_overhead_ns / 2);
+            core.complete_client(ctx, client, arrival, done);
             return;
         }
 
         // Update: permissibility precheck at the issuing replica (§2.1).
-        cost += self.refresh_cost();
-        cost += self.read_for_check_cost(&op, host_side);
-        if !self.plane.permissible(&op) {
-            self.rejected += 1;
-            let done = self.occupy(arrival, cost + self.exec().client_overhead_ns / 2);
-            self.complete_client(ctx, client, arrival, done);
+        cost += relaxed.refresh_cost(core) + strong.refresh_cost(core);
+        cost += cl.check_read_cost(core, &op, host_side);
+        if !core.plane.permissible(&op) {
+            core.rejected += 1;
+            let done = core.occupy(arrival, cost + core.exec().client_overhead_ns / 2);
+            core.complete_client(ctx, client, arrival, done);
             return;
         }
 
-        match self.plane.category(op.opcode) {
-            Category::Reducible => {
-                cost += self.exec().op_exec_ns + self.write_state_cost(host_side);
-                self.executions += 1;
-                self.plane.apply(&op);
-                // Op-based relaxed semantics: respond after the local
-                // commit; propagation proceeds off the response path but
-                // still occupies the replica (throughput, not latency).
-                let t_apply = self.occupy(arrival, cost);
-                let done = self.occupy(t_apply, self.exec().client_overhead_ns / 2);
-                self.complete_client(ctx, client, arrival, done);
-                self.sum_buffer.push((op, t_apply));
-                if self.sum_buffer.len() as u32 >= self.summarize_threshold {
-                    self.flush_summaries(ctx, host_side);
-                }
-            }
-            Category::Irreducible => {
-                cost += self.exec().op_exec_ns + self.write_state_cost(host_side);
-                self.executions += 1;
-                self.plane.apply(&op);
-                let t_apply = self.occupy(arrival, cost);
-                let done = self.occupy(t_apply, self.exec().client_overhead_ns / 2);
-                self.complete_client(ctx, client, arrival, done);
-                self.propagate_irreducible(ctx, op, host_side);
-            }
-            Category::Conflicting => {
-                if self.summarize_threshold > 1 {
-                    // §5.4 Summarization: "instead of updating the remote
-                    // replicas via RDMA *or coordination* ... we only
-                    // update the local state" — batching trades integrity
-                    // staleness for performance. The op was locally
-                    // permissible; it applies locally and ships as a
-                    // normalized delta in the next summary flush.
-                    let op = normalize_for_summary(&self.plane, op);
-                    cost += self.exec().op_exec_ns + self.write_state_cost(host_side);
-                    self.executions += 1;
-                    self.plane.apply(&op);
-                    let t_apply = self.occupy(arrival, cost);
-                    let done = self.occupy(t_apply, self.exec().client_overhead_ns / 2);
-                    self.complete_client(ctx, client, arrival, done);
-                    self.sum_buffer.push((op, t_apply));
-                    if self.sum_buffer.len() as u32 >= self.summarize_threshold {
-                        self.flush_summaries(ctx, host_side);
-                    }
-                    return;
-                }
-                let _t = self.occupy(arrival, cost);
-                self.submit_conflicting(ctx, op, Requester::Local { client, arrival });
-            }
-        }
+        let category = core.plane.category(op.opcode);
+        let path: &mut dyn ReplicationPath = match routes.for_category(category) {
+            ReplicationPathKind::Relaxed => &mut **relaxed,
+            ReplicationPathKind::Strong => &mut **strong,
+        };
+        path.submit(core, ctx, &*failure, Submission { op, category, host_side, cost, arrival, client });
     }
 
-    fn complete_client(&mut self, ctx: &mut Ctx, client: usize, arrival: Time, done: Time) {
-        ctx.metrics.response.record(done - arrival);
-        ctx.metrics.completed[self.id] += 1;
-        ctx.metrics.completed_sum += 1;
-        ctx.metrics.last_completion_ns = ctx.metrics.last_completion_ns.max(done);
-        ctx.q.push(done, self.id, EventKind::ClientArrive { client });
-    }
-
-    fn query_cost(&mut self, op: &OpCall, host_side: bool) -> u64 {
-        let mut cost = self.refresh_cost();
-        if host_side {
-            let hit = self
-                .host_cache
-                .as_mut()
-                .map(|c| c.access(op.b))
-                .unwrap_or(false);
-            cost += self.sys.mem.host_keyed_read_ns(hit);
-            cost += self.sys.mem.pcie_ns; // response back over PCIe
-        } else if self.prop_red == PropagationMode::WriteNoBuffer
-            && matches!(self.plane, DataPlane::Micro(_))
-        {
-            // fold already charged in refresh_cost
-            cost += self.warm_read_ns();
-        } else {
-            cost += self.warm_read_ns();
-        }
-        cost
-    }
-
-    fn read_for_check_cost(&mut self, op: &OpCall, host_side: bool) -> u64 {
-        if host_side {
-            let hit = self
-                .host_cache
-                .as_mut()
-                .map(|c| c.access(op.b))
-                .unwrap_or(false);
-            self.sys.mem.host_keyed_read_ns(hit)
-        } else {
-            self.warm_read_ns()
-        }
-    }
-
-    fn write_state_cost(&self, host_side: bool) -> u64 {
-        if host_side {
-            self.sys.mem.dram_ns + self.sys.mem.pcie_ns
-        } else {
-            self.sys.mem.local_write_ns(self.exec().state_mem)
-        }
-    }
-
-    // ----- relaxed propagation ----------------------------------------------
-
-    /// Send one verb to every live peer, serializing initiator-side costs
-    /// (Hamband's CQE wait makes this expensive; SafarDB pipelines).
-    fn fan_out(&mut self, ctx: &mut Ctx, make: impl Fn(u64) -> Verb, want_completion: bool, ctx_of: impl Fn() -> TokenCtx) {
-        let peers = self.live_peers();
-        let start = ctx.q.now().max(self.busy_until);
-        let mut cursor = start;
-        for dst in peers {
-            let tok = self.token(ctx_of());
-            let verb = make(tok);
-            ctx.metrics.verbs += 1;
-            let out = ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, cursor, self.id, dst, verb, want_completion);
-            cursor = out.initiator_free_at;
-        }
-        // Initiator-side verb-issue time is real busy time on the replica
-        // (the Hamband CQE serialization shows up exactly here).
-        self.busy_total += cursor - start;
-        self.busy_until = cursor;
-    }
-
-    fn flush_summaries(&mut self, ctx: &mut Ctx, host_side: bool) {
-        if self.sum_buffer.is_empty() {
-            return;
-        }
-        let now = ctx.q.now();
-        let items: Vec<(OpCall, Time)> = self.sum_buffer.drain(..).collect();
-        for (_, applied_at) in &items {
-            ctx.metrics.staleness.add((now.saturating_sub(*applied_at)) as f64);
-        }
-        // Summarize under the data plane's type-correct rule.
-        let ops: Vec<OpCall> = items.iter().map(|(o, _)| *o).collect();
-        let agg = summarize(self.summarize_rule(), &ops);
-        let origin = self.id;
-        let mode = self.prop_red;
-        let mem = self.landing_mem_for_peer();
-        // Host-issued verbs pay an extra PCIe hop before the NIC.
-        if host_side {
-            let pcie = self.sys.mem.pcie_ns;
-            self.busy_total += pcie;
-            self.busy_until = self.busy_until.max(ctx.q.now()) + pcie;
-        }
-        for op in agg {
-            match mode {
-                PropagationMode::Rpc => {
-                    self.fan_out(ctx, |t| Verb::rpc(Payload::Summary { origin, ops: 1, value: op }, t), false, || TokenCtx::Ignore);
-                }
-                _ => {
-                    self.fan_out(
-                        ctx,
-                        |t| Verb::write(mem, Payload::Summary { origin, ops: 1, value: op }, t),
-                        false,
-                        || TokenCtx::Ignore,
-                    );
-                }
-            }
-        }
-    }
-
-    fn summarize_rule(&self) -> SummarizeRule {
-        self.plane.summarize_rule()
-    }
-
-    fn landing_mem_for_peer(&self) -> MemKind {
-        // Peers run the same system; their landing zone mirrors ours.
-        self.landing_mem()
-    }
-
-    fn propagate_irreducible(&mut self, ctx: &mut Ctx, op: OpCall, host_side: bool) {
-        if host_side {
-            let pcie = self.sys.mem.pcie_ns;
-            self.busy_total += pcie;
-            self.busy_until = self.busy_until.max(ctx.q.now()) + pcie;
-        }
-        let mem = self.landing_mem_for_peer();
-        match self.prop_irr {
-            PropagationMode::Rpc => {
-                self.fan_out(ctx, |t| Verb::rpc(Payload::QueueAppend { op }, t), false, || TokenCtx::Ignore);
-            }
-            _ => {
-                self.fan_out(ctx, |t| Verb::write(mem, Payload::QueueAppend { op }, t), false, || TokenCtx::Ignore);
-            }
-        }
-    }
-
-    // ----- conflicting path (Mu) ---------------------------------------------
-
-    fn submit_conflicting(&mut self, ctx: &mut Ctx, op: OpCall, req: Requester) {
-        if self.system == SystemKind::Waverunner {
-            self.waverunner_submit(ctx, op, req);
-            return;
-        }
-        self.requesters.insert((op.origin, op.seq), req);
-        if self.is_leader() {
-            let g = self.plane.sync_group(op.opcode) as usize;
-            let slot = self.logs[g].next_free_slot();
-            if let Some(round) = self.mu[g].submit(op, slot) {
-                self.fan_out_round(ctx, g, round);
-            }
-        } else {
-            // Forward to the leader (one RPC-sized write; §4.3).
-            let request_id = self.next_request_id;
-            self.next_request_id += 1;
-            if let Requester::Local { client, arrival } = req {
-                self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
-            }
-            let leader = self.leader;
-            let tok = self.token(TokenCtx::Forward { request_id });
-            let verb = Verb::write(
-                self.landing_mem_for_peer(),
-                Payload::LeaderForward { op, reply_to: self.id, request_id },
-                tok,
-            );
-            ctx.metrics.verbs += 1;
-            let start = ctx.q.now().max(self.busy_until);
-            let out = ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, start, self.id, leader, verb, true);
-            self.busy_total += out.initiator_free_at - start;
-            self.busy_until = out.initiator_free_at;
-        }
-    }
-
-    fn fan_out_round(&mut self, ctx: &mut Ctx, g: usize, round: Round) {
-        self.round_id[g] += 1;
-        let rid = self.round_id[g];
-        let group = g as u8;
-        let peers = self.live_peers();
-        self.mu[g].round_started(peers.len() as u32);
-        let use_wt = self.prop_con == PropagationMode::WriteThrough;
-        // Sequential SMR: the leader is execution-busy from the previous
-        // round's fan-out through this round's quorum (appendix D.1).
-        let now = ctx.q.now();
-        if now > self.busy_until {
-            self.busy_total += now - self.busy_until;
-            self.busy_until = now;
-        }
-        let start = ctx.q.now().max(self.busy_until);
-        let mut cursor = start;
-        for dst in peers {
-            let tok = self.token(TokenCtx::Mu { group, round_id: rid });
-            // All rounds want completions: writes for quorum ACKs, reads so
-            // crashed followers surface as NACKs (reads otherwise complete
-            // via ReadResp).
-            let verb = match round {
-                Round::ReadMinProposals => Verb::read(ReadTarget::MinProposal { group }, tok),
-                Round::WriteProposal { proposal } => {
-                    Verb::write(self.landing_mem_for_peer(), Payload::Propose { group, proposal }, tok)
-                        .on_leader_qp()
-                }
-                Round::ReadSlots { slot } => Verb::read(ReadTarget::LogSlot { group, slot }, tok),
-                Round::WriteLog { slot, proposal, op, adopted: _ } => {
-                    let payload = Payload::LogAppend { group, slot, proposal, op };
-                    if use_wt {
-                        Verb::rpc_write_through(payload, tok)
-                    } else {
-                        Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
-                    }
-                }
-            };
-            ctx.metrics.verbs += 1;
-            let out = ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, cursor, self.id, dst, verb, true);
-            cursor = out.initiator_free_at;
-        }
-        self.busy_total += cursor - start;
-        self.busy_until = cursor;
-    }
-
-    fn mu_step(&mut self, ctx: &mut Ctx, g: usize, step: Step) {
-        match step {
-            Step::Wait => {}
-            Step::Next(round) => {
-                if let Round::WriteLog { slot, proposal, op, adopted } = round {
-                    // Accept phase entry: the leader *executes* the
-                    // transaction before writing followers' logs (§4.4).
-                    // Its permissibility check here is authoritative — the
-                    // op sits at a fixed position in the total order.
-                    if !adopted && !self.plane.permissible(&op) {
-                        self.rejected += 1;
-                        self.mu[g].abort_current();
-                        if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
-                            self.answer_requester(ctx, req, false);
-                        }
-                        let next = self.logs[g].next_free_slot();
-                        if let Some(round) = self.mu[g].pump(next) {
-                            self.fan_out_round(ctx, g, round);
-                        }
-                        return;
-                    }
-                    // Execute locally unless this replica already applied
-                    // the entry (e.g. it drained it from its log as a
-                    // follower before winning the election).
-                    if self.logs[g].applied_upto <= slot {
-                        let exec_cost = self.exec().op_exec_ns + self.write_state_cost(false);
-                        self.occupy(ctx.q.now(), exec_cost);
-                        if adopted {
-                            self.plane.apply_forced(&op);
-                        } else {
-                            self.plane.apply(&op);
-                        }
-                        self.executions += 1;
-                    }
-                    self.logs[g].write_slot(slot, proposal, op);
-                    self.logs[g].applied_upto = self.logs[g].applied_upto.max(slot + 1);
-                }
-                self.fan_out_round(ctx, g, round)
-            }
-            Step::Commit { slot: _, proposal: _, op, adopted: _ } => {
-                // Quorum of followers acked the Accept write: committed.
-                // The SMR pipeline is sequential per group — the leader is
-                // execution-time-busy through the whole round (appendix
-                // D.1: the leader is the longest-running replica).
-                let now = ctx.q.now();
-                if now > self.busy_until {
-                    self.busy_total += now - self.busy_until;
-                    self.busy_until = now;
-                }
-                ctx.metrics.smr_commits += 1;
-                if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
-                    self.answer_requester(ctx, req, true);
-                }
-                // Pump the next queued conflicting op.
-                let slot = self.logs[g].next_free_slot();
-                if let Some(round) = self.mu[g].pump(slot) {
-                    self.fan_out_round(ctx, g, round);
-                }
-            }
-            Step::Stall => {
-                self.mu[g].reset_in_flight();
-                // Retry once the heartbeat scanner refreshes the live set.
-                ctx.q.push(
-                    ctx.q.now() + self.heartbeat_period_ns,
-                    self.id,
-                    EventKind::Timer(TimerKind::SmrTick(g as u8)),
-                );
-            }
-        }
-    }
-
-    // ----- verb arrivals -----------------------------------------------------
+    // ----- verb arrivals -------------------------------------------------
 
     fn on_verb(&mut self, ctx: &mut Ctx, src: NodeId, verb: Verb) {
-        let is_rpc = matches!(verb.kind, crate::net::verbs::VerbKind::Rpc | crate::net::verbs::VerbKind::RpcWriteThrough);
-        match verb.payload {
-            Payload::Raw { .. } => {}
-            Payload::Summary { value, .. } => {
-                if is_rpc {
-                    // Dispatcher invokes the accelerator directly (Fig 1).
-                    let cost = self.exec().op_exec_ns + self.sys.mem.local_write_ns(MemKind::Bram);
-                    self.occupy(ctx.q.now(), cost);
-                    self.apply_remote(&value);
-                } else {
-                    self.pending_reducible.push(value);
-                }
-            }
-            Payload::QueueAppend { op } => {
-                if is_rpc {
-                    let cost = self.exec().op_exec_ns + self.sys.mem.local_write_ns(MemKind::Bram);
-                    self.occupy(ctx.q.now(), cost);
-                    self.apply_remote(&op);
-                } else {
-                    self.pending_irreducible.push(op);
-                }
-            }
-            Payload::Propose { group, proposal } => {
-                self.logs[group as usize].bump_min_proposal(proposal);
-            }
-            Payload::LogAppend { group, slot, proposal, op } => {
-                let g = group as usize;
-                self.logs[g].write_slot(slot, proposal, op);
-                if is_rpc {
-                    // Write-through: follower state updated directly from
-                    // the network (§4.4 "at L"); log is already appended.
-                    let cost = self.exec().op_exec_ns + self.sys.mem.local_write_ns(MemKind::Bram);
-                    self.occupy(ctx.q.now(), cost);
-                    for e in self.logs[g].drain_unapplied() {
-                        self.executions += 1;
-                        self.plane.apply_forced(&e.op);
-                    }
-                }
-            }
-            Payload::LeaderForward { op, reply_to, request_id } => {
-                if self.system == SystemKind::Waverunner {
-                    // Redirected client request reaching the Raft leader.
-                    let sw = self.exec().software_overhead_ns;
-                    self.occupy(ctx.q.now(), sw);
-                    if op.is_query() || op.opcode == KV_READ {
-                        let cost = self.warm_read_ns() + self.exec().client_overhead_ns / 2;
-                        self.occupy(ctx.q.now(), cost);
-                        self.reply_remote(ctx, reply_to, request_id, true, true);
-                    } else {
-                        self.waverunner_submit(ctx, op, Requester::Remote { reply_to, request_id });
-                    }
-                } else if self.is_leader() {
-                    let sw = self.exec().software_overhead_ns;
-                    self.occupy(ctx.q.now(), sw);
-                    // Leader re-checks permissibility in total order context.
-                    self.submit_conflicting(ctx, op, Requester::Remote { reply_to, request_id });
-                } else {
-                    // Not the leader (stale forward): bounce.
-                    self.reply_remote(ctx, reply_to, request_id, false, false);
-                }
-            }
-            Payload::LeaderReply { request_id, handled, committed } => {
-                if let Some(p) = self.pending_fwd.remove(&request_id) {
-                    if handled {
-                        if !committed {
-                            self.rejected += 1;
-                        }
-                        let done = self.occupy(ctx.q.now(), self.exec().client_overhead_ns / 2);
-                        self.complete_client(ctx, p.client, p.arrival, done);
-                    } else {
-                        self.retry_forward(ctx, p);
-                    }
-                }
-            }
-            Payload::ReadReq { target } => {
-                // One-sided: the NIC answers from memory without the app.
+        if let Payload::ReadResp { data, .. } = verb.payload {
+            self.on_read_resp(ctx, verb.token, data);
+            return;
+        }
+        let Replica { core, relaxed, strong, failure, .. } = self;
+        match verb.payload.plane() {
+            PayloadPlane::Relaxed => relaxed.deliver(core, ctx, &*failure, src, verb),
+            PayloadPlane::Strong => strong.deliver(core, ctx, &*failure, src, verb),
+            PayloadPlane::OneSidedRead => {
+                let Payload::ReadReq { target } = verb.payload else { return };
+                // One-sided: the NIC answers from the memory of whichever
+                // plane owns the target, without involving the app.
                 let data = match target {
-                    ReadTarget::Heartbeat => ReadData::Heartbeat(self.hb_counter),
-                    ReadTarget::MinProposal { group } => {
-                        ReadData::MinProposal(self.logs[group as usize].min_proposal)
-                    }
-                    ReadTarget::LogSlot { group, slot } => ReadData::LogSlot(
-                        self.logs[group as usize].read_slot(slot).map(|e| (e.proposal, e.op)),
-                    ),
-                    ReadTarget::Raw { .. } => ReadData::Raw,
+                    ReadTarget::Heartbeat => ReadData::Heartbeat(failure.hb_counter),
+                    _ => strong.serve_read(target).unwrap_or(ReadData::Raw),
                 };
                 let resp = Verb {
-                    kind: crate::net::verbs::VerbKind::Read,
+                    kind: VerbKind::Read,
                     dst_mem: MemKind::Hbm,
                     payload: Payload::ReadResp { target, data },
                     token: verb.token,
                     leader_qp: false,
                 };
                 ctx.metrics.verbs += 1;
-                ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, ctx.q.now(), self.id, src, resp, false);
+                ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, resp, false);
             }
-            Payload::ReadResp { data, .. } => self.on_read_resp(ctx, verb.token, data),
-            Payload::RaftAppend { term, index, op } => {
-                if self.raft_follower.on_append(term, index, op) {
-                    for o in self.raft_follower.drain_apply() {
-                        self.apply_remote(&o);
-                    }
-                    let tok = self.token(TokenCtx::Ignore);
-                    let ack = Verb::write(
-                        self.landing_mem_for_peer(),
-                        Payload::RaftAck { term, index, from: self.id },
-                        tok,
-                    );
-                    ctx.metrics.verbs += 1;
-                    ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, ctx.q.now(), self.id, src, ack, false);
-                }
-            }
-            Payload::RaftAck { term, index, .. } => {
-                if let Some(rl) = self.raft_leader.as_mut() {
-                    if let RaftStep::Commit { index, op: _op } = rl.on_ack(term, index) {
-                        // Leader state was updated at submit; commit point
-                        // is the quorum ack.
-                        let done = self.occupy(ctx.q.now(), self.exec().op_exec_ns);
-                        ctx.metrics.smr_commits += 1;
-                        if let Some(req) = self.raft_pending.remove(&index) {
-                            match req {
-                                Requester::Local { client, arrival } => {
-                                    let t = self.occupy(done, self.exec().client_overhead_ns / 2);
-                                    self.complete_client(ctx, client, arrival, t);
-                                }
-                                Requester::Remote { reply_to, request_id } => {
-                                    self.reply_remote(ctx, reply_to, request_id, true, true);
-                                }
-                            }
-                        }
-                        if let Some((term, index, op)) = self.raft_leader.as_mut().unwrap().pump() {
-                            self.raft_fan_out(ctx, term, index, op);
-                        }
-                    }
-                }
-            }
-            Payload::ClientRedirect { .. } => {}
+            PayloadPlane::Completion | PayloadPlane::None => {}
         }
     }
 
-    fn answer_requester(&mut self, ctx: &mut Ctx, req: Requester, committed: bool) {
-        if !committed {
-            // rejected ops were already counted by the caller
-        }
-        match req {
-            Requester::Local { client, arrival } => {
-                let t = self.occupy(ctx.q.now(), self.exec().client_overhead_ns / 2);
-                self.complete_client(ctx, client, arrival, t);
-            }
-            Requester::Remote { reply_to, request_id } => {
-                self.reply_remote(ctx, reply_to, request_id, true, committed);
-            }
-        }
-    }
-
-    fn reply_remote(&mut self, ctx: &mut Ctx, reply_to: NodeId, request_id: u64, handled: bool, committed: bool) {
-        let tok = self.token(TokenCtx::Ignore);
-        let verb = Verb::write(
-            self.landing_mem_for_peer(),
-            Payload::LeaderReply { request_id, handled, committed },
-            tok,
-        );
-        ctx.metrics.verbs += 1;
-        let now = ctx.q.now().max(self.busy_until);
-        ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, now, self.id, reply_to, verb, false);
-    }
-
-    fn retry_forward(&mut self, ctx: &mut Ctx, mut p: PendingClient) {
-        p.retries += 1;
-        if p.retries > 8 {
-            // Give up: count as rejected so the run terminates.
-            self.rejected += 1;
-            let done = self.occupy(ctx.q.now(), self.exec().client_overhead_ns / 2);
-            self.complete_client(ctx, p.client, p.arrival, done);
-            return;
-        }
-        // Re-forward to the current leader view after a beat.
-        let request_id = self.next_request_id;
-        self.next_request_id += 1;
-        self.pending_fwd.insert(request_id, p);
-        let leader = self.tracker.elect_leader();
-        self.leader = leader;
-        let op = p.op;
-        if leader == self.id {
-            let pc = self.pending_fwd.remove(&request_id).unwrap();
-            self.submit_conflicting(ctx, op, Requester::Local { client: pc.client, arrival: pc.arrival });
-            return;
-        }
-        let tok = self.token(TokenCtx::Forward { request_id });
-        let verb = Verb::write(
-            self.landing_mem_for_peer(),
-            Payload::LeaderForward { op, reply_to: self.id, request_id },
-            tok,
-        );
-        ctx.metrics.verbs += 1;
-        let at = ctx.q.now() + self.heartbeat_period_ns;
-        let at = at.max(self.busy_until);
-        ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, at, self.id, leader, verb, true);
-    }
+    // ----- completion routing (token ownership) --------------------------
 
     fn on_read_resp(&mut self, ctx: &mut Ctx, token: u64, data: ReadData) {
-        let Some(tctx) = self.tokens.remove(&token) else { return };
-        match (tctx, data) {
-            (TokenCtx::Heartbeat { peer }, ReadData::Heartbeat(v)) => {
-                self.on_heartbeat(ctx, peer, Some(v));
-            }
-            (TokenCtx::Mu { group, round_id }, d) => {
-                let g = group as usize;
-                if round_id != self.round_id[g] {
-                    return; // stale round
+        let Replica { core, strong, failure, .. } = self;
+        let Some(tctx) = core.tokens.remove(&token) else { return };
+        match tctx {
+            TokenCtx::Heartbeat { peer } => {
+                if let ReadData::Heartbeat(v) = data {
+                    failure.on_heartbeat(core, &mut **strong, ctx, peer, Some(v));
                 }
-                let resp = match d {
-                    ReadData::MinProposal(p) => Resp::MinProposal(p),
-                    ReadData::LogSlot(s) => Resp::Slot(s),
-                    _ => Resp::Ack,
-                };
-                let step = self.mu[g].on_response(resp);
-                self.mu_step(ctx, g, step);
             }
-            _ => {}
+            TokenCtx::Strong(_) => strong.on_read_resp(core, ctx, &*failure, tctx, data),
+            TokenCtx::Ignore => {}
         }
     }
 
     fn on_completion(&mut self, ctx: &mut Ctx, token: u64, ok: bool) {
-        let Some(tctx) = self.tokens.remove(&token) else { return };
+        let Replica { core, strong, failure, .. } = self;
+        let Some(tctx) = core.tokens.remove(&token) else { return };
         match tctx {
-            TokenCtx::Mu { group, round_id } => {
-                let g = group as usize;
-                if round_id != self.round_id[g] {
-                    return;
-                }
-                let step = self.mu[g].on_response(if ok { Resp::Ack } else { Resp::Failure });
-                self.mu_step(ctx, g, step);
-            }
+            TokenCtx::Strong(_) => strong.on_completion(core, ctx, &*failure, tctx, ok),
             TokenCtx::Heartbeat { peer } => {
                 if !ok {
-                    self.on_heartbeat(ctx, peer, None);
+                    failure.on_heartbeat(core, &mut **strong, ctx, peer, None);
                 }
             }
-            TokenCtx::Forward { request_id } => {
-                if !ok {
-                    if let Some(p) = self.pending_fwd.remove(&request_id) {
-                        self.retry_forward(ctx, p);
-                    }
-                }
-            }
-            TokenCtx::Raft { .. } | TokenCtx::Ignore => {}
+            TokenCtx::Ignore => {}
         }
     }
 
-    // ----- leader switch plane -------------------------------------------------
+    // ----- timers --------------------------------------------------------
 
     fn on_timer(&mut self, ctx: &mut Ctx, t: TimerKind) {
+        let Replica { core, relaxed, strong, failure, .. } = self;
         match t {
-            TimerKind::PollReducible => {
-                let cost = self.exec().poll_tick_ns + self.drain_reducible_cost();
-                self.occupy(ctx.q.now(), cost);
-                if !ctx.draining {
-                    ctx.q.push(ctx.q.now() + self.poll_interval_ns, self.id, EventKind::Timer(t));
-                }
+            TimerKind::PollReducible | TimerKind::PollIrreducible | TimerKind::SummarizeFlush => {
+                relaxed.on_timer(core, ctx, &*failure, t)
             }
-            TimerKind::PollIrreducible => {
-                let cost = self.exec().poll_tick_ns + self.drain_irreducible_cost();
-                self.occupy(ctx.q.now(), cost);
-                if !ctx.draining {
-                    ctx.q.push(ctx.q.now() + self.poll_interval_ns, self.id, EventKind::Timer(t));
-                }
-            }
-            TimerKind::PollLog(_g) => {
-                let cost = self.exec().poll_tick_ns + self.drain_logs_cost();
-                self.occupy(ctx.q.now(), cost);
-                if !ctx.draining {
-                    ctx.q.push(ctx.q.now() + self.poll_interval_ns, self.id, EventKind::Timer(t));
-                }
-            }
-            TimerKind::SummarizeFlush => {
-                if !self.sum_buffer.is_empty() {
-                    self.flush_summaries(ctx, false);
-                }
-                if !ctx.draining {
-                    ctx.q.push(ctx.q.now() + 4 * self.poll_interval_ns, self.id, EventKind::Timer(t));
-                }
-            }
-            TimerKind::HeartbeatScan => {
-                self.hb_counter += 1;
-                // Hamband's scanner is a software thread competing with the
-                // app (§5.3 "In Hamband, this update occurs in the
-                // foreground"); SafarDB's is fabric logic.
-                if self.system == SystemKind::Hamband {
-                    self.occupy(ctx.q.now(), self.exec().software_overhead_ns);
-                }
-                let peers = self.peers();
-                for peer in peers {
-                    let tok = self.token(TokenCtx::Heartbeat { peer });
-                    let verb = Verb::read(ReadTarget::Heartbeat, tok);
-                    ctx.metrics.verbs += 1;
-                    ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, ctx.q.now(), self.id, peer, verb, true);
-                }
-                if !ctx.draining {
-                    ctx.q.push(ctx.q.now() + self.heartbeat_period_ns, self.id, EventKind::Timer(t));
-                }
-            }
-            TimerKind::SmrTick(g) => {
-                let g = g as usize;
-                if self.is_leader() {
-                    self.mu[g].set_cluster_size(self.tracker.live_set().len());
-                    let slot = self.logs[g].next_free_slot();
-                    if let Some(round) = self.mu[g].pump(slot) {
-                        self.fan_out_round(ctx, g, round);
-                    }
-                }
-            }
+            TimerKind::PollLog(_) | TimerKind::SmrTick(_) => strong.on_timer(core, ctx, &*failure, t),
+            TimerKind::HeartbeatScan => failure.on_scan(core, ctx),
             TimerKind::WorkDone => {}
         }
     }
 
-    fn on_heartbeat(&mut self, ctx: &mut Ctx, peer: NodeId, value: Option<u64>) {
-        let verdict = match value {
-            Some(v) => self.tracker.observe(peer, v),
-            None => self.tracker.observe_timeout(peer),
-        };
-        match verdict {
-            HbVerdict::JustFailed => {
-                if std::env::var_os("SAFARDB_DEBUG").is_some() {
-                    eprintln!("[{}ns] r{}: declared r{} FAILED", ctx.q.now(), self.id, peer);
-                }
-                if peer == self.leader {
-                    self.start_leader_switch(ctx);
-                } else if self.is_leader() {
-                    // Leader trims its follower list (background on SafarDB,
-                    // foreground cost charged above for Hamband).
-                    for g in 0..self.mu.len() {
-                        self.mu[g].set_cluster_size(self.tracker.live_set().len());
-                    }
-                }
-            }
-            HbVerdict::Recovered => {
-                if self.is_leader() {
-                    self.replay_log_to(ctx, peer);
-                    for g in 0..self.mu.len() {
-                        self.mu[g].set_cluster_size(self.tracker.live_set().len());
-                    }
-                }
-            }
-            _ => {}
-        }
+    // ----- cluster-facing surface ----------------------------------------
+
+    pub fn id(&self) -> NodeId {
+        self.core.id
     }
 
-    fn start_leader_switch(&mut self, ctx: &mut Ctx) {
-        let old = self.leader;
-        let new = self.tracker.elect_leader();
-        if new == old {
-            return;
-        }
-        if std::env::var_os("SAFARDB_DEBUG").is_some() {
-            eprintln!(
-                "[{}ns] r{}: leader switch {} -> {} (live {:?})",
-                ctx.q.now(), self.id, old, new, self.tracker.live_set()
-            );
-        }
-        // Permission switch: close the old leader's QP, open the new one.
-        // FPGA: direct QP-register pokes, ns-scale; RNIC: driver + PCIe.
-        let lat = self.sys.fabric.perm_switch.sample(&mut self.rng);
-        ctx.metrics.perm_switch.record(lat);
-        ctx.qps.switch_leader(self.id, old, new);
-        self.occupy(ctx.q.now(), lat);
-        self.leader = new;
-        if new == self.id {
-            ctx.metrics.elections += 1;
-            // Take over: re-replicate our log suffix first — the crashed
-            // leader may have written an Accept to only a subset of
-            // followers (including us), and Mu's slot-adoption only repairs
-            // slots we later propose into. Idempotent: followers reject
-            // equal/lower proposals and skip already-applied slots.
-            let peers = self.live_peers();
-            for peer in peers {
-                self.replay_log_to(ctx, peer);
-            }
-            for g in 0..self.mu.len() {
-                self.mu[g].set_cluster_size(self.tracker.live_set().len());
-                let slot = self.logs[g].next_free_slot();
-                if let Some(round) = self.mu[g].pump(slot) {
-                    self.fan_out_round(ctx, g, round);
-                }
-            }
-        }
-        // Any of our forwards pending at the dead leader: retry now.
-        let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
-        for (_, p) in pending {
-            self.retry_forward(ctx, p);
-        }
+    pub fn crashed(&self) -> bool {
+        self.core.crashed
     }
 
-    /// Recovery: re-issue committed entries to a returned follower (§3).
-    fn replay_log_to(&mut self, ctx: &mut Ctx, peer: NodeId) {
-        for g in 0..self.logs.len() {
-            let entries = self.logs[g].entries_from(0);
-            for (slot, e) in entries {
-                let tok = self.token(TokenCtx::Ignore);
-                let payload = Payload::LogAppend { group: g as u8, slot, proposal: e.proposal, op: e.op };
-                let verb = if self.prop_con == PropagationMode::WriteThrough {
-                    Verb::rpc_write_through(payload, tok)
-                } else {
-                    Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
-                };
-                ctx.metrics.verbs += 1;
-                ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, ctx.q.now(), self.id, peer, verb, false);
-            }
-        }
+    pub fn leader(&self) -> NodeId {
+        self.core.leader
     }
 
-    // ----- waverunner ------------------------------------------------------------
-
-    fn waverunner_redirect(&mut self, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
-        // Follower rejects; client re-sends to the leader (§5.2). Modeled
-        // as a forward carrying the client's retry round trip.
-        let request_id = self.next_request_id;
-        self.next_request_id += 1;
-        self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op: item.op });
-        let tok = self.token(TokenCtx::Forward { request_id });
-        let verb = Verb::write(
-            self.landing_mem_for_peer(),
-            Payload::LeaderForward { op: item.op, reply_to: self.id, request_id },
-            tok,
-        );
-        ctx.metrics.verbs += 1;
-        // Reject + client re-send penalty before the forward goes out.
-        let penalty = self.exec().client_overhead_ns + self.sys.fabric.wire_ns * 2;
-        let now = self.occupy(arrival, penalty);
-        ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, now, self.id, 0, verb, true);
+    pub fn busy_total(&self) -> u64 {
+        self.core.busy_total
     }
 
-    /// Raft-leader client service: reads are local; every update goes
-    /// through the replication pipeline.
-    fn waverunner_serve(&mut self, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
-        let ingress = self.exec().client_overhead_ns / 2;
-        let sw = self.exec().software_overhead_ns;
-        let op = item.op;
-        if op.is_query() || op.opcode == KV_READ {
-            let cost = ingress + sw + self.warm_read_ns() + self.exec().client_overhead_ns / 2;
-            let done = self.occupy(arrival, cost);
-            self.complete_client(ctx, client, arrival, done);
-            return;
-        }
-        self.occupy(arrival, ingress + sw);
-        self.waverunner_submit(ctx, op, Requester::Local { client, arrival });
+    pub fn executions(&self) -> u64 {
+        self.core.executions
     }
 
-    fn waverunner_submit(&mut self, ctx: &mut Ctx, op: OpCall, req: Requester) {
-        if self.raft_leader.is_none() {
-            return; // not the leader: redirects handle it
-        }
-        // The leader applies every update (its own and forwarded ones) at
-        // submit; followers apply from the replicated log.
-        let cost = self.exec().op_exec_ns + self.write_state_cost(false);
-        self.occupy(ctx.q.now(), cost);
-        self.executions += 1;
-        self.plane.apply(&op);
-        let rl = self.raft_leader.as_mut().unwrap();
-        let (index, fanout) = rl.submit(op);
-        self.raft_pending.insert(index, req);
-        if let Some((term, index, op)) = fanout {
-            self.raft_fan_out(ctx, term, index, op);
-        }
+    pub fn rejected(&self) -> u64 {
+        self.core.rejected
     }
 
-    fn raft_fan_out(&mut self, ctx: &mut Ctx, term: u64, index: u64, op: OpCall) {
-        self.fan_out(
-            ctx,
-            |t| Verb::write(MemKind::HostDram, Payload::RaftAppend { term, index, op }, t),
-            false,
-            || TokenCtx::Raft { term, index },
-        );
+    pub fn quota(&self) -> u64 {
+        self.client.quota
     }
 
-    // ----- inspection -----------------------------------------------------------
+    /// Client slots that consumed quota but have not been responded to.
+    pub fn in_flight(&self) -> u64 {
+        self.core.clients_in_flight
+    }
+
+    /// Drain this replica's remaining quota (crash redistribution).
+    pub fn take_quota(&mut self) -> u64 {
+        std::mem::take(&mut self.client.quota)
+    }
+
+    /// Grant extra quota (a crashed peer's redistributed share).
+    pub fn grant_quota(&mut self, extra: u64) {
+        self.client.quota += extra;
+    }
 
     pub fn digest(&self) -> u64 {
-        self.plane.state_digest()
+        self.core.plane.state_digest()
     }
 
     pub fn invariant_ok(&self) -> bool {
-        self.plane.invariant_ok()
+        self.core.plane.invariant_ok()
     }
 
-    pub fn tracker_live(&self) -> Vec<NodeId> {
-        self.tracker.live_set()
+    /// Human-readable data-plane dump (divergence diagnosis).
+    pub fn plane_dump(&self) -> String {
+        self.core.plane.debug_dump()
+    }
+
+    /// Apply every pending remote item with zero cost — used only at
+    /// quiescence so convergence checks see fully-propagated state.
+    pub fn flush_all_pending(&mut self) {
+        self.relaxed.flush_pending(&mut self.core.plane);
+        self.strong.flush_pending(&mut self.core.plane);
     }
 
     /// Install a recovery snapshot from a live donor (§3): state + logs
     /// replace the stale copies, landed-but-unapplied buffers clear, and
     /// the transfer occupies the replica for a modeled copy time.
-    pub fn install_snapshot(&mut self, plane: DataPlane, logs: Vec<crate::smr::log::ReplicationLog>, now: Time) {
-        self.plane = plane;
-        self.logs = logs;
-        self.pending_reducible.clear();
-        self.pending_irreducible.clear();
-        self.sum_buffer.clear();
-        self.busy_until = self.busy_until.max(now) + 50_000; // 50 µs transfer
-        self.busy_total += 50_000;
+    pub fn install_snapshot(&mut self, plane: DataPlane, logs: Vec<ReplicationLog>, now: Time) {
+        self.core.plane = plane;
+        self.strong.install_logs(logs);
+        self.relaxed.clear_landed();
+        self.core.busy_until = self.core.busy_until.max(now) + 50_000; // 50 µs transfer
+        self.core.busy_total += 50_000;
     }
 
     /// Donor side of the snapshot.
-    pub fn snapshot_state(&self) -> (DataPlane, Vec<crate::smr::log::ReplicationLog>) {
-        (self.plane.snapshot(), self.logs.clone())
+    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>) {
+        (self.core.plane.snapshot(), self.strong.snapshot_logs())
     }
 
     /// Diagnostic snapshot for runaway-loop debugging.
     pub fn debug_status(&self) -> String {
-        let mu_q: usize = self.mu.iter().map(|m| m.queue_len()).sum();
-        let mu_idle: Vec<bool> = self.mu.iter().map(|m| m.is_idle()).collect();
         format!(
-            "id={} crashed={} quota={} leader={} pending_fwd={} requesters={} mu_q={} mu_idle={:?} busy_until={}",
-            self.id, self.crashed, self.quota, self.leader,
-            self.pending_fwd.len(), self.requesters.len(), mu_q, mu_idle, self.busy_until
+            "id={} crashed={} quota={} in_flight={} leader={} {} {} busy_until={}",
+            self.core.id,
+            self.core.crashed,
+            self.client.quota,
+            self.core.clients_in_flight,
+            self.core.leader,
+            self.relaxed.debug_status(),
+            self.strong.debug_status(),
+            self.core.busy_until
         )
-    }
-}
-
-/// Rewrite a locally-validated conflicting op into its commutative delta
-/// form for summarized propagation (§5.4): debits become negative
-/// deposits. Only meaningful for scalar-balance types; other conflicting
-/// ops pass through unchanged (their apply is set-idempotent).
-pub fn normalize_for_summary(plane: &DataPlane, mut op: OpCall) -> OpCall {
-    use crate::engine::store::{KvKind, KV_WITHDRAW, KV_WRITE};
-    match plane {
-        DataPlane::Kv(kv) if kv.kind == KvKind::SmallBank && op.opcode == KV_WITHDRAW => {
-            op.opcode = KV_WRITE;
-            op.x = -op.x;
-            op
-        }
-        DataPlane::Micro(r) if r.kind() == crate::rdt::RdtKind::Account => {
-            use crate::rdt::wrdt::account::{OP_DEPOSIT, OP_WITHDRAW};
-            if op.opcode == OP_WITHDRAW {
-                op.opcode = OP_DEPOSIT;
-                op.x = -op.x;
-            }
-            op
-        }
-        _ => op,
-    }
-}
-
-/// How a reducible op stream aggregates (§2.1 "summarizable").
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SummarizeRule {
-    /// Sum deltas per (opcode, key): counters, deposits.
-    SumDelta,
-    /// Keep only the highest-timestamp write per key: LWW registers, YCSB.
-    LastWrite,
-    /// Not scalar-summable (set inserts): ship the batch as-is — still one
-    /// verb per op on the wire, but flushed together.
-    ShipAll,
-}
-
-/// Aggregate a run of reducible ops under a type-correct rule.
-pub fn summarize(rule: SummarizeRule, ops: &[OpCall]) -> Vec<OpCall> {
-    use std::collections::BTreeMap;
-    match rule {
-        SummarizeRule::ShipAll => ops.to_vec(),
-        SummarizeRule::SumDelta => {
-            let mut agg: BTreeMap<(u8, u64), OpCall> = BTreeMap::new();
-            for op in ops {
-                let e = agg.entry((op.opcode, op.b)).or_insert_with(|| {
-                    let mut z = *op;
-                    z.a = 0;
-                    z.x = 0.0;
-                    z
-                });
-                e.a += op.a;
-                e.x += op.x;
-                e.seq = e.seq.max(op.seq);
-            }
-            agg.into_values().collect()
-        }
-        SummarizeRule::LastWrite => {
-            let mut best: BTreeMap<u64, OpCall> = BTreeMap::new();
-            for op in ops {
-                let e = best.entry(op.b).or_insert(*op);
-                // op.a is the LWW timestamp for both the micro register and
-                // the YCSB KV path.
-                if op.a > e.a {
-                    *e = *op;
-                }
-            }
-            best.into_values().collect()
-        }
     }
 }

@@ -213,9 +213,9 @@ impl DataPlane {
     }
 
     /// Type-correct summarization rule for this plane's reducible ops
-    /// (see `engine::replica::summarize`).
-    pub fn summarize_rule(&self) -> crate::engine::replica::SummarizeRule {
-        use crate::engine::replica::SummarizeRule as R;
+    /// (see `engine::relaxed::summarize`).
+    pub fn summarize_rule(&self) -> crate::engine::relaxed::SummarizeRule {
+        use crate::engine::relaxed::SummarizeRule as R;
         match self {
             DataPlane::Micro(r) => match r.kind() {
                 RdtKind::GCounter | RdtKind::PnCounter | RdtKind::Account => R::SumDelta,

@@ -1,0 +1,706 @@
+//! Strongly-ordered replication path (§4.3–§4.4): Mu SMR instances per
+//! synchronization group, the replication logs, leader-forwarding and
+//! requester bookkeeping — plus the Waverunner baseline's Raft pipeline
+//! (§5.2), which replicates *every* update through this path.
+//!
+//! The path owns its completion tokens ([`StrongToken`]): Mu round
+//! responses and forwarded-op replies route back here via the coordinator's
+//! token table. The former `TokenCtx::Raft` variant is gone — Raft
+//! AppendEntries completions are logical (`Payload::RaftAck` verbs), so the
+//! fan-out rides fire-and-forget `Ignore` tokens like all other
+//! unacknowledged writes.
+
+use crate::config::{PropagationMode, SimConfig, SystemKind};
+use crate::engine::path::{Membership, MembershipEvent, ReplicaCore, ReplicationPath, Submission, TokenCtx};
+use crate::engine::store::{DataPlane, KV_READ};
+use crate::engine::Ctx;
+use crate::mem::MemKind;
+use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
+use crate::rdt::OpCall;
+use crate::sim::{EventKind, NodeId, Time, TimerKind};
+use crate::smr::log::ReplicationLog;
+use crate::smr::mu::{MuInstance, Resp, Round, Step};
+use crate::smr::raft::{RaftFollower, RaftLeader, RaftStep};
+use crate::util::hasher::FastMap;
+use crate::workload::WorkItem;
+
+/// Completion tokens owned by the strong path.
+#[derive(Clone, Copy, Debug)]
+pub enum StrongToken {
+    /// Mu fan-out response: (group, round_id at fan-out time).
+    Mu { group: u8, round_id: u64 },
+    /// Forwarded conflicting op awaiting a LeaderReply.
+    Forward { request_id: u64 },
+}
+
+/// A client request in flight (origin side).
+#[derive(Clone, Copy, Debug)]
+struct PendingClient {
+    client: usize,
+    arrival: Time,
+    retries: u8,
+    op: OpCall,
+}
+
+/// Leader side: who to answer once a conflicting op commits.
+#[derive(Clone, Copy, Debug)]
+enum Requester {
+    Local { client: usize, arrival: Time },
+    Remote { reply_to: NodeId, request_id: u64 },
+}
+
+pub struct StrongPath {
+    prop_con: PropagationMode,
+    /// One Mu instance + replication log per synchronization group.
+    mu: Vec<MuInstance>,
+    logs: Vec<ReplicationLog>,
+    round_id: Vec<u64>,
+    requesters: FastMap<(usize, u64), Requester>,
+    pending_fwd: FastMap<u64, PendingClient>,
+    next_request_id: u64,
+    // Waverunner baseline (Raft fast path, leader-only clients).
+    raft_leader: Option<RaftLeader>,
+    raft_follower: RaftFollower,
+    raft_pending: FastMap<u64, Requester>, // index -> requester
+}
+
+impl StrongPath {
+    pub fn new(cfg: &SimConfig, id: NodeId, groups: usize) -> Self {
+        let raft_leader = if cfg.system == SystemKind::Waverunner && id == 0 {
+            Some(RaftLeader::new(cfg.n_replicas))
+        } else {
+            None
+        };
+        StrongPath {
+            prop_con: cfg.prop_conflicting,
+            mu: (0..groups).map(|g| MuInstance::new(g as u8, cfg.n_replicas)).collect(),
+            logs: (0..groups).map(|_| ReplicationLog::new()).collect(),
+            round_id: vec![0; groups],
+            requesters: FastMap::default(),
+            pending_fwd: FastMap::default(),
+            next_request_id: 1,
+            raft_leader,
+            raft_follower: RaftFollower::new(),
+            raft_pending: FastMap::default(),
+        }
+    }
+
+    fn drain_logs_cost(&mut self, core: &mut ReplicaCore) -> u64 {
+        let mut cost = 0;
+        for g in 0..self.logs.len() {
+            for entry in self.logs[g].drain_unapplied() {
+                cost += core.exec().op_exec_ns + core.sys.mem.local_read_ns(core.landing_mem());
+                core.executions += 1;
+                core.plane.apply_forced(&entry.op);
+            }
+        }
+        cost
+    }
+
+    fn submit_conflicting(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
+        if core.system == SystemKind::Waverunner {
+            self.waverunner_submit(core, ctx, mb, op, req);
+            return;
+        }
+        self.requesters.insert((op.origin, op.seq), req);
+        if core.is_leader() {
+            let g = core.plane.sync_group(op.opcode) as usize;
+            let slot = self.logs[g].next_free_slot();
+            if let Some(round) = self.mu[g].submit(op, slot) {
+                self.fan_out_round(core, ctx, mb, g, round);
+            }
+        } else {
+            // Forward to the leader (one RPC-sized write; §4.3).
+            let request_id = self.next_request_id;
+            self.next_request_id += 1;
+            if let Requester::Local { client, arrival } = req {
+                self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
+            }
+            let leader = core.leader;
+            let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
+            let verb = Verb::write(
+                core.landing_mem_for_peer(),
+                Payload::LeaderForward { op, reply_to: core.id, request_id },
+                tok,
+            );
+            ctx.metrics.verbs += 1;
+            let start = ctx.q.now().max(core.busy_until);
+            let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, start, core.id, leader, verb, true);
+            core.busy_total += out.initiator_free_at - start;
+            core.busy_until = out.initiator_free_at;
+        }
+    }
+
+    fn fan_out_round(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize, round: Round) {
+        self.round_id[g] += 1;
+        let rid = self.round_id[g];
+        let group = g as u8;
+        let peers = mb.live_peers(core.id);
+        self.mu[g].round_started(peers.len() as u32);
+        let use_wt = self.prop_con == PropagationMode::WriteThrough;
+        // Sequential SMR: the leader is execution-busy from the previous
+        // round's fan-out through this round's quorum (appendix D.1).
+        let now = ctx.q.now();
+        if now > core.busy_until {
+            core.busy_total += now - core.busy_until;
+            core.busy_until = now;
+        }
+        let start = ctx.q.now().max(core.busy_until);
+        let mut cursor = start;
+        for dst in peers {
+            let tok = core.token(TokenCtx::Strong(StrongToken::Mu { group, round_id: rid }));
+            // All rounds want completions: writes for quorum ACKs, reads so
+            // crashed followers surface as NACKs (reads otherwise complete
+            // via ReadResp).
+            let verb = match round {
+                Round::ReadMinProposals => Verb::read(ReadTarget::MinProposal { group }, tok),
+                Round::WriteProposal { proposal } => {
+                    Verb::write(core.landing_mem_for_peer(), Payload::Propose { group, proposal }, tok)
+                        .on_leader_qp()
+                }
+                Round::ReadSlots { slot } => Verb::read(ReadTarget::LogSlot { group, slot }, tok),
+                Round::WriteLog { slot, proposal, op, adopted: _ } => {
+                    let payload = Payload::LogAppend { group, slot, proposal, op };
+                    if use_wt {
+                        Verb::rpc_write_through(payload, tok)
+                    } else {
+                        Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
+                    }
+                }
+            };
+            ctx.metrics.verbs += 1;
+            let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, cursor, core.id, dst, verb, true);
+            cursor = out.initiator_free_at;
+        }
+        core.busy_total += cursor - start;
+        core.busy_until = cursor;
+    }
+
+    fn mu_step(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize, step: Step) {
+        match step {
+            Step::Wait => {}
+            Step::Next(round) => {
+                if let Round::WriteLog { slot, proposal, op, adopted } = round {
+                    // Accept phase entry: the leader *executes* the
+                    // transaction before writing followers' logs (§4.4).
+                    // Its permissibility check here is authoritative — the
+                    // op sits at a fixed position in the total order.
+                    if !adopted && !core.plane.permissible(&op) {
+                        core.rejected += 1;
+                        self.mu[g].abort_current();
+                        if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
+                            self.answer_requester(core, ctx, req, false);
+                        }
+                        let next = self.logs[g].next_free_slot();
+                        if let Some(round) = self.mu[g].pump(next) {
+                            self.fan_out_round(core, ctx, mb, g, round);
+                        }
+                        return;
+                    }
+                    // Execute locally unless this replica already applied
+                    // the entry (e.g. it drained it from its log as a
+                    // follower before winning the election).
+                    if self.logs[g].applied_upto <= slot {
+                        let exec_cost = core.exec().op_exec_ns + core.write_state_cost(false);
+                        core.occupy(ctx.q.now(), exec_cost);
+                        if adopted {
+                            core.plane.apply_forced(&op);
+                        } else {
+                            core.plane.apply(&op);
+                        }
+                        core.executions += 1;
+                    }
+                    self.logs[g].write_slot(slot, proposal, op);
+                    self.logs[g].applied_upto = self.logs[g].applied_upto.max(slot + 1);
+                }
+                self.fan_out_round(core, ctx, mb, g, round)
+            }
+            Step::Commit { slot: _, proposal: _, op, adopted: _ } => {
+                // Quorum of followers acked the Accept write: committed.
+                // The SMR pipeline is sequential per group — the leader is
+                // execution-time-busy through the whole round (appendix
+                // D.1: the leader is the longest-running replica).
+                let now = ctx.q.now();
+                if now > core.busy_until {
+                    core.busy_total += now - core.busy_until;
+                    core.busy_until = now;
+                }
+                ctx.metrics.smr_commits += 1;
+                if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
+                    self.answer_requester(core, ctx, req, true);
+                }
+                // Pump the next queued conflicting op.
+                let slot = self.logs[g].next_free_slot();
+                if let Some(round) = self.mu[g].pump(slot) {
+                    self.fan_out_round(core, ctx, mb, g, round);
+                }
+            }
+            Step::Stall => {
+                self.mu[g].reset_in_flight();
+                // Retry once the heartbeat scanner refreshes the live set.
+                ctx.q.push(
+                    ctx.q.now() + core.heartbeat_period_ns,
+                    core.id,
+                    EventKind::Timer(TimerKind::SmrTick(g as u8)),
+                );
+            }
+        }
+    }
+
+    fn answer_requester(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, req: Requester, committed: bool) {
+        match req {
+            Requester::Local { client, arrival } => {
+                let t = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+                core.complete_client(ctx, client, arrival, t);
+            }
+            Requester::Remote { reply_to, request_id } => {
+                self.reply_remote(core, ctx, reply_to, request_id, true, committed);
+            }
+        }
+    }
+
+    fn reply_remote(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, reply_to: NodeId, request_id: u64, handled: bool, committed: bool) {
+        let tok = core.token(TokenCtx::Ignore);
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderReply { request_id, handled, committed },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let now = ctx.q.now().max(core.busy_until);
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, now, core.id, reply_to, verb, false);
+    }
+
+    fn retry_forward(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, mut p: PendingClient) {
+        p.retries += 1;
+        if p.retries > 8 {
+            // Give up: count as rejected so the run terminates.
+            core.rejected += 1;
+            let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+            core.complete_client(ctx, p.client, p.arrival, done);
+            return;
+        }
+        // Re-forward to the current leader view after a beat.
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        self.pending_fwd.insert(request_id, p);
+        let leader = mb.elect_leader();
+        core.leader = leader;
+        let op = p.op;
+        if leader == core.id {
+            let pc = self.pending_fwd.remove(&request_id).unwrap();
+            self.submit_conflicting(core, ctx, mb, op, Requester::Local { client: pc.client, arrival: pc.arrival });
+            return;
+        }
+        let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderForward { op, reply_to: core.id, request_id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let at = ctx.q.now() + core.heartbeat_period_ns;
+        let at = at.max(core.busy_until);
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, leader, verb, true);
+    }
+
+    /// Recovery: re-issue committed entries to a returned follower (§3).
+    fn replay_log_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId) {
+        for g in 0..self.logs.len() {
+            let entries = self.logs[g].entries_from(0);
+            for (slot, e) in entries {
+                let tok = core.token(TokenCtx::Ignore);
+                let payload = Payload::LogAppend { group: g as u8, slot, proposal: e.proposal, op: e.op };
+                let verb = if self.prop_con == PropagationMode::WriteThrough {
+                    Verb::rpc_write_through(payload, tok)
+                } else {
+                    Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
+                };
+                ctx.metrics.verbs += 1;
+                ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, false);
+            }
+        }
+    }
+
+    // ----- waverunner (Raft baseline, §5.2) ------------------------------
+
+    fn waverunner_redirect(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
+        // Follower rejects; client re-sends to the leader (§5.2). Modeled
+        // as a forward carrying the client's retry round trip.
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op: item.op });
+        let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderForward { op: item.op, reply_to: core.id, request_id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        // Reject + client re-send penalty before the forward goes out.
+        let penalty = core.exec().client_overhead_ns + core.sys.fabric.wire_ns * 2;
+        let now = core.occupy(arrival, penalty);
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, now, core.id, 0, verb, true);
+    }
+
+    /// Raft-leader client service: reads are local; every update goes
+    /// through the replication pipeline.
+    fn waverunner_serve(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, client: usize, item: WorkItem, arrival: Time) {
+        let ingress = core.exec().client_overhead_ns / 2;
+        let sw = core.exec().software_overhead_ns;
+        let op = item.op;
+        if op.is_query() || op.opcode == KV_READ {
+            let cost = ingress + sw + core.warm_read_ns() + core.exec().client_overhead_ns / 2;
+            let done = core.occupy(arrival, cost);
+            core.complete_client(ctx, client, arrival, done);
+            return;
+        }
+        core.occupy(arrival, ingress + sw);
+        self.waverunner_submit(core, ctx, mb, op, Requester::Local { client, arrival });
+    }
+
+    fn waverunner_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
+        if self.raft_leader.is_none() {
+            // Not the Raft leader, and Waverunner models no leader election
+            // (§5.2 runs fault-free; smallest-live-ID is a documented
+            // shortcut that never re-homes the RaftLeader). Every stranded
+            // request must still terminate — the cluster's drain flag now
+            // tracks in-flight slots for real: forwarded requests bounce so
+            // the origin retries (and gives up after 8 beats), local ones
+            // complete as rejected.
+            match req {
+                Requester::Remote { reply_to, request_id } => {
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false);
+                }
+                Requester::Local { client, arrival } => {
+                    core.rejected += 1;
+                    let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+                    core.complete_client(ctx, client, arrival, done);
+                }
+            }
+            return;
+        }
+        // The leader applies every update (its own and forwarded ones) at
+        // submit; followers apply from the replicated log.
+        let cost = core.exec().op_exec_ns + core.write_state_cost(false);
+        core.occupy(ctx.q.now(), cost);
+        core.executions += 1;
+        core.plane.apply(&op);
+        let rl = self.raft_leader.as_mut().unwrap();
+        let (index, fanout) = rl.submit(op);
+        self.raft_pending.insert(index, req);
+        if let Some((term, index, op)) = fanout {
+            self.raft_fan_out(core, ctx, mb, term, index, op);
+        }
+    }
+
+    fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, index: u64, op: OpCall) {
+        // The logical ack is the RaftAck verb, not a wire completion.
+        let peers = mb.live_peers(core.id);
+        core.fan_out(
+            ctx,
+            &peers,
+            |t| Verb::write(MemKind::HostDram, Payload::RaftAppend { term, index, op }, t),
+            false,
+            || TokenCtx::Ignore,
+        );
+    }
+}
+
+impl ReplicationPath for StrongPath {
+    fn boot(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64) {
+        if self.prop_con != PropagationMode::WriteThrough && !self.logs.is_empty() {
+            for g in 0..self.logs.len() {
+                ctx.q.push(
+                    base + core.poll_interval_ns + g as u64,
+                    core.id,
+                    EventKind::Timer(TimerKind::PollLog(g as u8)),
+                );
+            }
+        }
+    }
+
+    fn refresh_cost(&mut self, core: &mut ReplicaCore) -> u64 {
+        let mut cost = 0;
+        // Conflicting log check (§4.3 config 1: "polling the log when the
+        // state is accessed to ensure the most up to date data").
+        if self.prop_con != PropagationMode::WriteThrough {
+            let per_group = core.sys.mem.local_read_ns(core.landing_mem());
+            cost += per_group * self.logs.len() as u64;
+            cost += self.drain_logs_cost(core);
+        }
+        cost
+    }
+
+    fn handle_client(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        mb: &dyn Membership,
+        client: usize,
+        item: WorkItem,
+        arrival: Time,
+    ) -> bool {
+        // Waverunner: only the leader serves clients (§5.2); every update
+        // replicates through Raft regardless of RDT category (no hybrid
+        // consistency — that is the point of the Fig 12 comparison).
+        if core.system != SystemKind::Waverunner {
+            return false;
+        }
+        if self.raft_leader.is_none() {
+            self.waverunner_redirect(core, ctx, client, item, arrival);
+        } else {
+            self.waverunner_serve(core, ctx, mb, client, item, arrival);
+        }
+        true
+    }
+
+    fn submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, sub: Submission) {
+        let _t = core.occupy(sub.arrival, sub.cost);
+        self.submit_conflicting(core, ctx, mb, sub.op, Requester::Local { client: sub.client, arrival: sub.arrival });
+    }
+
+    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, src: NodeId, verb: Verb) {
+        let is_rpc = matches!(verb.kind, crate::net::verbs::VerbKind::Rpc | crate::net::verbs::VerbKind::RpcWriteThrough);
+        match verb.payload {
+            Payload::Propose { group, proposal } => {
+                self.logs[group as usize].bump_min_proposal(proposal);
+            }
+            Payload::LogAppend { group, slot, proposal, op } => {
+                let g = group as usize;
+                self.logs[g].write_slot(slot, proposal, op);
+                if is_rpc {
+                    // Write-through: follower state updated directly from
+                    // the network (§4.4 "at L"); log is already appended.
+                    let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
+                    core.occupy(ctx.q.now(), cost);
+                    for e in self.logs[g].drain_unapplied() {
+                        core.executions += 1;
+                        core.plane.apply_forced(&e.op);
+                    }
+                }
+            }
+            Payload::LeaderForward { op, reply_to, request_id } => {
+                if core.system == SystemKind::Waverunner {
+                    // Redirected client request reaching the Raft leader.
+                    let sw = core.exec().software_overhead_ns;
+                    core.occupy(ctx.q.now(), sw);
+                    if op.is_query() || op.opcode == KV_READ {
+                        let cost = core.warm_read_ns() + core.exec().client_overhead_ns / 2;
+                        core.occupy(ctx.q.now(), cost);
+                        self.reply_remote(core, ctx, reply_to, request_id, true, true);
+                    } else {
+                        self.waverunner_submit(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
+                    }
+                } else if core.is_leader() {
+                    let sw = core.exec().software_overhead_ns;
+                    core.occupy(ctx.q.now(), sw);
+                    // Leader re-checks permissibility in total order context.
+                    self.submit_conflicting(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
+                } else {
+                    // Not the leader (stale forward): bounce.
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false);
+                }
+            }
+            Payload::LeaderReply { request_id, handled, committed } => {
+                if let Some(p) = self.pending_fwd.remove(&request_id) {
+                    if handled {
+                        if !committed {
+                            core.rejected += 1;
+                        }
+                        let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+                        core.complete_client(ctx, p.client, p.arrival, done);
+                    } else {
+                        self.retry_forward(core, ctx, mb, p);
+                    }
+                }
+            }
+            Payload::RaftAppend { term, index, op } => {
+                if self.raft_follower.on_append(term, index, op) {
+                    for o in self.raft_follower.drain_apply() {
+                        core.apply_remote(&o);
+                    }
+                    let tok = core.token(TokenCtx::Ignore);
+                    let ack = Verb::write(
+                        core.landing_mem_for_peer(),
+                        Payload::RaftAck { term, index, from: core.id },
+                        tok,
+                    );
+                    ctx.metrics.verbs += 1;
+                    ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, ack, false);
+                }
+            }
+            Payload::RaftAck { term, index, .. } => {
+                if let Some(rl) = self.raft_leader.as_mut() {
+                    if let RaftStep::Commit { index, op: _op } = rl.on_ack(term, index) {
+                        // Leader state was updated at submit; commit point
+                        // is the quorum ack.
+                        let done = core.occupy(ctx.q.now(), core.exec().op_exec_ns);
+                        ctx.metrics.smr_commits += 1;
+                        if let Some(req) = self.raft_pending.remove(&index) {
+                            match req {
+                                Requester::Local { client, arrival } => {
+                                    let t = core.occupy(done, core.exec().client_overhead_ns / 2);
+                                    core.complete_client(ctx, client, arrival, t);
+                                }
+                                Requester::Remote { reply_to, request_id } => {
+                                    self.reply_remote(core, ctx, reply_to, request_id, true, true);
+                                }
+                            }
+                        }
+                        if let Some((term, index, op)) = self.raft_leader.as_mut().unwrap().pump() {
+                            self.raft_fan_out(core, ctx, mb, term, index, op);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_completion(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, token: TokenCtx, ok: bool) {
+        let TokenCtx::Strong(token) = token else { return };
+        match token {
+            StrongToken::Mu { group, round_id } => {
+                let g = group as usize;
+                if round_id != self.round_id[g] {
+                    return; // stale round
+                }
+                let step = self.mu[g].on_response(if ok { Resp::Ack } else { Resp::Failure });
+                self.mu_step(core, ctx, mb, g, step);
+            }
+            StrongToken::Forward { request_id } => {
+                if !ok {
+                    if let Some(p) = self.pending_fwd.remove(&request_id) {
+                        self.retry_forward(core, ctx, mb, p);
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_read_resp(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, token: TokenCtx, data: ReadData) {
+        // Only Mu rounds read remote state; Forward tokens ride writes.
+        let TokenCtx::Strong(StrongToken::Mu { group, round_id }) = token else { return };
+        let g = group as usize;
+        if round_id != self.round_id[g] {
+            return; // stale round
+        }
+        let resp = match data {
+            ReadData::MinProposal(p) => Resp::MinProposal(p),
+            ReadData::LogSlot(s) => Resp::Slot(s),
+            _ => Resp::Ack,
+        };
+        let step = self.mu[g].on_response(resp);
+        self.mu_step(core, ctx, mb, g, step);
+    }
+
+    fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind) {
+        match t {
+            TimerKind::PollLog(_g) => {
+                let cost = core.exec().poll_tick_ns + self.drain_logs_cost(core);
+                core.occupy(ctx.q.now(), cost);
+                if !ctx.draining {
+                    ctx.q.push(ctx.q.now() + core.poll_interval_ns, core.id, EventKind::Timer(t));
+                }
+            }
+            TimerKind::SmrTick(g) => {
+                let g = g as usize;
+                if core.is_leader() {
+                    self.mu[g].set_cluster_size(mb.live_set().len());
+                    let slot = self.logs[g].next_free_slot();
+                    if let Some(round) = self.mu[g].pump(slot) {
+                        self.fan_out_round(core, ctx, mb, g, round);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn serve_read(&self, target: ReadTarget) -> Option<ReadData> {
+        match target {
+            ReadTarget::MinProposal { group } => {
+                Some(ReadData::MinProposal(self.logs[group as usize].min_proposal))
+            }
+            ReadTarget::LogSlot { group, slot } => Some(ReadData::LogSlot(
+                self.logs[group as usize].read_slot(slot).map(|e| (e.proposal, e.op)),
+            )),
+            _ => None,
+        }
+    }
+
+    fn on_membership(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, ev: MembershipEvent) {
+        match ev {
+            MembershipEvent::PeerFailed { peer: _ } => {
+                // Leader trims its follower list (background on SafarDB,
+                // foreground cost charged by the failure plane for Hamband).
+                for g in 0..self.mu.len() {
+                    self.mu[g].set_cluster_size(mb.live_set().len());
+                }
+            }
+            MembershipEvent::PeerRecovered { peer } => {
+                self.replay_log_to(core, ctx, peer);
+                for g in 0..self.mu.len() {
+                    self.mu[g].set_cluster_size(mb.live_set().len());
+                }
+            }
+            MembershipEvent::LeaderSwitched => {
+                if core.is_leader() {
+                    ctx.metrics.elections += 1;
+                    // Take over: re-replicate our log suffix first — the
+                    // crashed leader may have written an Accept to only a
+                    // subset of followers (including us), and Mu's
+                    // slot-adoption only repairs slots we later propose
+                    // into. Idempotent: followers reject equal/lower
+                    // proposals and skip already-applied slots.
+                    let peers = mb.live_peers(core.id);
+                    for peer in peers {
+                        self.replay_log_to(core, ctx, peer);
+                    }
+                    for g in 0..self.mu.len() {
+                        self.mu[g].set_cluster_size(mb.live_set().len());
+                        let slot = self.logs[g].next_free_slot();
+                        if let Some(round) = self.mu[g].pump(slot) {
+                            self.fan_out_round(core, ctx, mb, g, round);
+                        }
+                    }
+                }
+                // Any of our forwards pending at the dead leader: retry now.
+                let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
+                for (_, p) in pending {
+                    self.retry_forward(core, ctx, mb, p);
+                }
+            }
+        }
+    }
+
+    fn flush_pending(&mut self, plane: &mut DataPlane) {
+        for g in 0..self.logs.len() {
+            for e in self.logs[g].drain_unapplied() {
+                plane.apply_forced(&e.op);
+            }
+        }
+    }
+
+    fn snapshot_logs(&self) -> Vec<ReplicationLog> {
+        self.logs.clone()
+    }
+
+    fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
+        self.logs = logs;
+    }
+
+    fn debug_status(&self) -> String {
+        let mu_q: usize = self.mu.iter().map(|m| m.queue_len()).sum();
+        let mu_idle: Vec<bool> = self.mu.iter().map(|m| m.is_idle()).collect();
+        format!(
+            "pending_fwd={} requesters={} raft_pending={} mu_q={} mu_idle={:?}",
+            self.pending_fwd.len(),
+            self.requesters.len(),
+            self.raft_pending.len(),
+            mu_q,
+            mu_idle
+        )
+    }
+}

@@ -117,7 +117,52 @@ pub fn default_threads() -> usize {
 /// the remaining queue and is re-raised with the failing job's index once
 /// the workers have stopped; the original panic message has already
 /// reached stderr at that point.
+///
+/// Per-cell wall-clock telemetry: every `RunReport` carries the cell's own
+/// simulation wall time (`wall_s`), and the sweep logs its slowest cell —
+/// work stealing is index-based, so one long cell can straggle an entire
+/// sweep tail and this names it.
 pub fn run_cells(jobs: Vec<CellJob>, threads: usize) -> Vec<(Cell, RunReport)> {
+    let labels: Vec<String> = jobs.iter().map(|(cfg, _)| cell_label(cfg)).collect();
+    let results = run_cells_inner(jobs, threads);
+    log_slowest_cell(&labels, &results);
+    results
+}
+
+fn cell_label(cfg: &SimConfig) -> String {
+    format!(
+        "{}/{} n={} upd={}%",
+        cfg.system.name(),
+        cfg.workload.name(),
+        cfg.n_replicas,
+        cfg.update_pct
+    )
+}
+
+/// Name the straggler so sweep-tail latency is diagnosable (ROADMAP item).
+fn log_slowest_cell(labels: &[String], results: &[(Cell, RunReport)]) {
+    if results.len() < 2 {
+        return;
+    }
+    let total: f64 = results.iter().map(|(_, r)| r.wall_s).sum();
+    let (slowest, wall) = results
+        .iter()
+        .enumerate()
+        .map(|(i, (_, r))| (i, r.wall_s))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("at least two cells");
+    eprintln!(
+        "[sweep] {} cells, {:.2}s total cell wall; slowest: cell {} ({}) at {:.2}s ({:.0}% of total)",
+        results.len(),
+        total,
+        slowest,
+        labels[slowest],
+        wall,
+        if total > 0.0 { wall / total * 100.0 } else { 0.0 }
+    );
+}
+
+fn run_cells_inner(jobs: Vec<CellJob>, threads: usize) -> Vec<(Cell, RunReport)> {
     let n = jobs.len();
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 || n <= 1 {

@@ -77,7 +77,40 @@ pub enum Payload {
     ClientRedirect { request_id: u64 },
 }
 
+/// Which engine plane consumes a payload on arrival — the replica
+/// coordinator's routing table, kept next to the payload definitions so a
+/// new payload cannot be added without declaring its owner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadPlane {
+    /// Relaxed path: landing zones + summarizer (§4.1–§4.2).
+    Relaxed,
+    /// Strongly-ordered path: Mu/Raft, forwards, replies (§4.3–§4.4).
+    Strong,
+    /// One-sided read the NIC answers from plane-owned memory.
+    OneSidedRead,
+    /// Read response, routed by its completion token's owner.
+    Completion,
+    /// No consumer (raw micro-benchmark traffic, client redirects).
+    None,
+}
+
 impl Payload {
+    /// Routing: which plane handles this payload at the destination.
+    pub fn plane(&self) -> PayloadPlane {
+        match self {
+            Payload::Summary { .. } | Payload::QueueAppend { .. } => PayloadPlane::Relaxed,
+            Payload::Propose { .. }
+            | Payload::LogAppend { .. }
+            | Payload::LeaderForward { .. }
+            | Payload::LeaderReply { .. }
+            | Payload::RaftAppend { .. }
+            | Payload::RaftAck { .. } => PayloadPlane::Strong,
+            Payload::ReadReq { .. } => PayloadPlane::OneSidedRead,
+            Payload::ReadResp { .. } => PayloadPlane::Completion,
+            Payload::Raw { .. } | Payload::ClientRedirect { .. } => PayloadPlane::None,
+        }
+    }
+
     /// Heartbeat-plane traffic rides its own QP / virtual lane (§4.4: the
     /// Heartbeat Scanner is independent fabric logic), so it is never
     /// queued behind bulk replication on the in-order data channel.
@@ -191,5 +224,30 @@ mod tests {
     fn wire_bytes_include_headers() {
         let w = Verb::write(MemKind::Hbm, Payload::Raw { bytes: 100 }, 0);
         assert_eq!(w.wire_bytes(), 158);
+    }
+
+    #[test]
+    fn payload_plane_routing_is_total() {
+        let op = OpCall::new(0, 1, 2, 0.5);
+        let cases: Vec<(Payload, PayloadPlane)> = vec![
+            (Payload::Summary { origin: 0, ops: 1, value: op }, PayloadPlane::Relaxed),
+            (Payload::QueueAppend { op }, PayloadPlane::Relaxed),
+            (Payload::Propose { group: 0, proposal: 1 }, PayloadPlane::Strong),
+            (Payload::LogAppend { group: 0, slot: 0, proposal: 1, op }, PayloadPlane::Strong),
+            (Payload::LeaderForward { op, reply_to: 1, request_id: 2 }, PayloadPlane::Strong),
+            (Payload::LeaderReply { request_id: 2, handled: true, committed: true }, PayloadPlane::Strong),
+            (Payload::RaftAppend { term: 1, index: 0, op }, PayloadPlane::Strong),
+            (Payload::RaftAck { term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
+            (Payload::ReadReq { target: ReadTarget::Heartbeat }, PayloadPlane::OneSidedRead),
+            (
+                Payload::ReadResp { target: ReadTarget::Heartbeat, data: ReadData::Heartbeat(1) },
+                PayloadPlane::Completion,
+            ),
+            (Payload::Raw { bytes: 8 }, PayloadPlane::None),
+            (Payload::ClientRedirect { request_id: 3 }, PayloadPlane::None),
+        ];
+        for (p, want) in cases {
+            assert_eq!(p.plane(), want, "{p:?}");
+        }
     }
 }
