@@ -9,7 +9,7 @@
 
 pub mod params;
 
-pub use params::{ExecParams, PowerParams, SystemParams};
+pub use params::{ConsensusBackend, ExecParams, PowerParams, SystemParams};
 
 use crate::rdt::{Category, RdtKind};
 
@@ -166,6 +166,20 @@ pub struct SimConfig {
     pub prop_reducible: PropagationMode,
     pub prop_irreducible: PropagationMode,
     pub prop_conflicting: PropagationMode,
+    /// Consensus engine on the strongly-ordered path (Mu / Raft / Paxos).
+    /// Waverunner's strong path *is* its SmartNIC Raft pipeline, so that
+    /// system pins Raft; everything else defaults to Mu.
+    pub backend: ConsensusBackend,
+    /// Bookkeeping for kv parsing: true once a `backend =` line was
+    /// applied. `system = waverunner` implies Raft only while the backend
+    /// is *not* an explicit user choice — across multiple `apply_kv` calls
+    /// (the CLI applies one per argument) — so an explicit-but-incompatible
+    /// pick surfaces through `validate()` instead of being overridden.
+    pub backend_explicit: bool,
+    /// Per-path batching: up to this many queued submissions coalesce into
+    /// one wire verb (relaxed fan-out and leader-side log appends). 1 =
+    /// batching off, bit-identical to the pre-batching engine.
+    pub batch_size: u32,
     /// Reducible ops aggregated locally before one propagation (§5.4; 1 =
     /// propagate every op).
     pub summarize_threshold: u32,
@@ -194,6 +208,9 @@ impl SimConfig {
             prop_reducible: PropagationMode::Rpc,
             prop_irreducible: PropagationMode::Rpc,
             prop_conflicting: PropagationMode::WriteThrough,
+            backend: ConsensusBackend::Mu,
+            backend_explicit: false,
+            batch_size: 1,
             summarize_threshold: 1,
             seed: 0xC0FFEE,
             fault: None,
@@ -235,6 +252,7 @@ impl SimConfig {
     pub fn waverunner(workload: WorkloadKind) -> Self {
         let mut c = SimConfig::new(SystemKind::Waverunner, workload);
         c.n_replicas = 3;
+        c.backend = ConsensusBackend::Raft;
         c
     }
 
@@ -272,6 +290,32 @@ impl SimConfig {
         }
         if self.summarize_threshold == 0 {
             return Err("summarize_threshold must be >= 1".into());
+        }
+        if self.batch_size == 0 {
+            return Err("batch_size must be >= 1 (1 = batching off)".into());
+        }
+        if self.batch_size > 1024 {
+            return Err(format!("batch_size must be <= 1024, got {}", self.batch_size));
+        }
+        if self.system == SystemKind::Waverunner && self.backend != ConsensusBackend::Raft {
+            return Err(format!(
+                "Waverunner's strong path is its SmartNIC Raft pipeline; backend '{}' \
+                 is not selectable for it",
+                self.backend.name()
+            ));
+        }
+        if self.backend == ConsensusBackend::Raft
+            && self.system != SystemKind::Waverunner
+            && self.fault.is_some()
+        {
+            // The stand-alone Raft backend has promotion-on-election but no
+            // follower-log snapshot/truncation recovery (ROADMAP open item):
+            // crash runs would *silently* diverge, so reject them outright.
+            return Err(
+                "the stand-alone raft backend does not support fault injection yet; \
+                 use backend mu or paxos for crash runs"
+                    .into(),
+            );
         }
         if self.system != SystemKind::SafarDb {
             let rpc = [self.prop_reducible, self.prop_irreducible]
@@ -319,11 +363,26 @@ impl SimConfig {
                 "poll_interval_ns" => {
                     self.poll_interval_ns = v.parse().map_err(|_| bad("poll_interval_ns"))?
                 }
+                "backend" => {
+                    self.backend = ConsensusBackend::parse(v).ok_or_else(|| bad("backend"))?;
+                    self.backend_explicit = true;
+                }
+                "batch" | "batch_size" => {
+                    self.batch_size = v.parse().map_err(|_| bad("batch_size"))?
+                }
                 "system" => {
                     self.system = match v {
                         "safardb" => SystemKind::SafarDb,
                         "hamband" => SystemKind::Hamband,
-                        "waverunner" => SystemKind::Waverunner,
+                        "waverunner" => {
+                            // Waverunner's strong path is its Raft pipeline;
+                            // an explicit backend choice (any apply_kv call)
+                            // wins and is judged by validate() instead.
+                            if !self.backend_explicit {
+                                self.backend = ConsensusBackend::Raft;
+                            }
+                            SystemKind::Waverunner
+                        }
                         _ => return Err(bad("system")),
                     }
                 }
@@ -397,6 +456,56 @@ mod tests {
         let w = SimConfig::waverunner(WorkloadKind::Ycsb);
         assert_eq!(w.path_for(Category::Reducible), ReplicationPathKind::Strong);
         assert_eq!(w.path_for(Category::Conflicting), ReplicationPathKind::Strong);
+    }
+
+    #[test]
+    fn backend_and_batch_knobs() {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        assert_eq!(c.backend, ConsensusBackend::Mu, "default backend is Mu");
+        assert_eq!(c.batch_size, 1, "batching defaults off");
+        c.apply_kv("backend = paxos\nbatch = 8\n").unwrap();
+        assert_eq!(c.backend, ConsensusBackend::Paxos);
+        assert_eq!(c.batch_size, 8);
+        c.validate().expect("paxos + batching validates");
+        assert!(c.apply_kv("backend = zab").is_err());
+
+        c.batch_size = 0;
+        assert!(c.validate().is_err(), "batch_size 0 rejected");
+        c.batch_size = 2048;
+        assert!(c.validate().is_err(), "batch_size cap enforced");
+
+        // Waverunner's strong path is its Raft pipeline — backend pinned.
+        let mut w = SimConfig::waverunner(WorkloadKind::Ycsb);
+        assert_eq!(w.backend, ConsensusBackend::Raft);
+        w.backend = ConsensusBackend::Paxos;
+        assert!(w.validate().is_err());
+
+        // Stand-alone Raft has no crash recovery: fault runs must error
+        // loudly instead of silently diverging.
+        let mut r = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        r.backend = ConsensusBackend::Raft;
+        r.validate().expect("fault-free raft is fine");
+        r.fault = Some(FaultSpec::CrashAtFraction { node: 1, fraction_pct: 30 });
+        assert!(r.validate().is_err(), "raft + fault injection rejected");
+        r.backend = ConsensusBackend::Paxos;
+        r.validate().expect("paxos supports crash runs");
+
+        // kv: selecting waverunner implies raft, but an explicit backend
+        // choice wins in either key order — even split across apply_kv
+        // calls, as the CLI applies one per argument — and is then
+        // rejected by validate instead of silently overridden.
+        let mut k = SimConfig::safardb(WorkloadKind::Ycsb);
+        k.apply_kv("system = waverunner").unwrap();
+        assert_eq!(k.backend, ConsensusBackend::Raft, "waverunner implies raft");
+        let mut k2 = SimConfig::safardb(WorkloadKind::Ycsb);
+        k2.apply_kv("backend = mu\nsystem = waverunner").unwrap();
+        assert_eq!(k2.backend, ConsensusBackend::Mu, "explicit choice preserved");
+        assert!(k2.validate().is_err(), "incompatible combination surfaces");
+        let mut k3 = SimConfig::safardb(WorkloadKind::Ycsb);
+        k3.apply_kv("backend = mu").unwrap();
+        k3.apply_kv("system = waverunner").unwrap();
+        assert_eq!(k3.backend, ConsensusBackend::Mu, "explicitness survives across calls");
+        assert!(k3.validate().is_err());
     }
 
     #[test]

@@ -7,6 +7,49 @@
 use crate::mem::{MemKind, MemParams};
 use crate::net::fabric::FabricParams;
 
+/// Which consensus engine serves the strongly-ordered path (§4.3–§4.4).
+///
+/// The `ReplicationPath` seam (engine/path.rs) makes the ordering protocol
+/// a plug-in: Mu is the paper's latency-optimized SMR, Raft is the
+/// Waverunner baseline's pipeline (also selectable stand-alone), and Paxos
+/// is an APUS-style RDMA Multi-Paxos — the leader writes log entries into
+/// per-follower landing regions with one-sided verbs and counts doorbell
+/// (write-completion) ACKs toward a majority quorum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsensusBackend {
+    /// Mu SMR: Prepare (read min-proposals / write proposal / read slots)
+    /// then Accept, one round pipeline per synchronization group.
+    Mu,
+    /// Raft-style leader pipeline: AppendEntries fan-out, logical ACK
+    /// verbs, majority commit (Waverunner's strong path, §5.2).
+    Raft,
+    /// APUS-style RDMA Paxos: one-sided log writes into follower landing
+    /// regions; quorum = majority of write completions (doorbells).
+    Paxos,
+}
+
+impl ConsensusBackend {
+    pub const ALL: [ConsensusBackend; 3] =
+        [ConsensusBackend::Mu, ConsensusBackend::Raft, ConsensusBackend::Paxos];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConsensusBackend::Mu => "mu",
+            ConsensusBackend::Raft => "raft",
+            ConsensusBackend::Paxos => "paxos",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mu" => Some(ConsensusBackend::Mu),
+            "raft" => Some(ConsensusBackend::Raft),
+            "paxos" => Some(ConsensusBackend::Paxos),
+            _ => None,
+        }
+    }
+}
+
 /// Execution-cost model for the replica's compute element.
 #[derive(Clone, Copy, Debug)]
 pub struct ExecParams {
@@ -148,6 +191,15 @@ mod tests {
         assert!(!w.fabric.wait_ack, "SmartNIC pipeline");
         assert_eq!(w.exec.state_mem, MemKind::HostDram, "app in software");
         assert!(w.fabric.remote_landing_ns > 0, "PCIe hop to host state");
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in ConsensusBackend::ALL {
+            assert_eq!(ConsensusBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ConsensusBackend::parse("PAXOS"), Some(ConsensusBackend::Paxos));
+        assert_eq!(ConsensusBackend::parse("epaxos"), None);
     }
 
     #[test]

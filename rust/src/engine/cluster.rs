@@ -151,8 +151,8 @@ impl Cluster {
                 if self.q.now() >= at {
                     let t = self.q.now();
                     if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed()) {
-                        let (plane, logs) = self.replicas[donor].snapshot_state();
-                        self.replicas[node].install_snapshot(plane, logs, t);
+                        let (plane, logs, leader) = self.replicas[donor].snapshot_state();
+                        self.replicas[node].install_snapshot(plane, logs, leader, &mut self.qps, t);
                     }
                     snapshot_at = None;
                 }

@@ -7,6 +7,8 @@
 //!   (§4.1–§4.2, §5.4);
 //! * `strong`   — Mu instances, Raft, forwarding/requester bookkeeping
 //!   (§4.3–§4.4, §5.2);
+//! * `paxos`    — APUS-style RDMA-Paxos strong path (backend = paxos):
+//!   one-sided log writes, doorbell-completion quorums;
 //! * `failure`  — heartbeat tracker, election, crash/recover/snapshot (§3);
 //! * `path`     — the [`ReplicationPath`] trait + shared `ReplicaCore`;
 //! * `cluster`  — builder/run loop; `store` — the unified data plane.
@@ -15,6 +17,7 @@ pub mod client;
 pub mod cluster;
 pub mod failure;
 pub mod path;
+pub mod paxos;
 pub mod relaxed;
 pub mod replica;
 pub mod store;

@@ -23,22 +23,44 @@ use crate::util::hasher::FastMap;
 use crate::util::rng::Rng;
 use crate::workload::WorkItem;
 
+use crate::config::ConsensusBackend;
+use crate::engine::paxos::PaxosToken;
 use crate::engine::strong::StrongToken;
 
 /// Completion-token bookkeeping: which plane owns an outstanding verb.
 /// The tokens themselves live next to the plane that consumes them
-/// ([`StrongToken`] in `engine::strong`; heartbeat tokens belong to the
-/// failure plane); this enum is only the routing envelope the coordinator
-/// dispatches on.
+/// ([`StrongToken`] in `engine::strong`, [`PaxosToken`] in
+/// `engine::paxos`; heartbeat tokens belong to the failure plane); this
+/// enum is only the routing envelope the coordinator dispatches on.
 #[derive(Clone, Copy, Debug)]
 pub enum TokenCtx {
     /// Owned by the strongly-ordered path (Mu rounds, leader forwards).
     Strong(StrongToken),
+    /// Owned by the Paxos strong path (doorbell-acked appends, forwards).
+    Paxos(PaxosToken),
     /// Heartbeat read of a peer (failure plane).
     Heartbeat { peer: NodeId },
     /// Fire-and-forget — no completion expected, so never stored in the
     /// token map (keeps it from growing with every relaxed fan-out).
     Ignore,
+}
+
+/// A client request in flight at its origin replica while its conflicting
+/// op is forwarded to (and retried against) the strong-path leader. Shared
+/// by every consensus backend.
+#[derive(Clone, Copy, Debug)]
+pub struct PendingClient {
+    pub client: usize,
+    pub arrival: Time,
+    pub retries: u8,
+    pub op: OpCall,
+}
+
+/// Leader side: who to answer once a conflicting op commits.
+#[derive(Clone, Copy, Debug)]
+pub enum Requester {
+    Local { client: usize, arrival: Time },
+    Remote { reply_to: NodeId, request_id: u64 },
 }
 
 /// A locally admitted update op handed to a replication path, carrying the
@@ -173,17 +195,21 @@ pub trait ReplicationPath: Send {
 
 /// Build the two replication paths a configuration selects: the relaxed
 /// plane parameterized by the reducible/irreducible propagation modes, and
-/// the strongly-ordered plane parameterized by the conflicting mode (Mu)
-/// or the system kind (Waverunner's Raft).
+/// the strongly-ordered plane picked by the consensus backend — Mu/Raft
+/// share `StrongPath`, APUS-style Paxos is its own `ReplicationPath` impl
+/// (the trait boundary is the extension point, not a god-struct edit).
 pub fn build_paths(
     cfg: &SimConfig,
     id: NodeId,
     groups: usize,
 ) -> (Box<dyn ReplicationPath>, Box<dyn ReplicationPath>) {
-    (
-        Box::new(crate::engine::relaxed::RelaxedPath::new(cfg)),
-        Box::new(crate::engine::strong::StrongPath::new(cfg, id, groups)),
-    )
+    let strong: Box<dyn ReplicationPath> = match cfg.backend {
+        ConsensusBackend::Paxos => Box::new(crate::engine::paxos::PaxosPath::new(cfg, id)),
+        ConsensusBackend::Mu | ConsensusBackend::Raft => {
+            Box::new(crate::engine::strong::StrongPath::new(cfg, id, groups))
+        }
+    };
+    (Box::new(crate::engine::relaxed::RelaxedPath::new(cfg)), strong)
 }
 
 /// State shared by every plane: identity, cost models, the data plane, the
@@ -264,6 +290,15 @@ impl ReplicaCore {
         self.busy_until = start + cost;
         self.busy_total += cost;
         self.busy_until
+    }
+
+    /// Batched work: `items` per-item increments charged as one occupancy
+    /// window — the per-path coalescer's cost model. k submissions sharing
+    /// one wire verb pay their verb-issue/setup cost once (charged by the
+    /// single `fan_out` call that follows); only the per-item term (memory
+    /// reads, entry appends) scales with the batch.
+    pub fn occupy_batch(&mut self, at: Time, per_item: u64, items: usize) -> Time {
+        self.occupy(at, per_item * items as u64)
     }
 
     /// State read cost of the local object (own state is warm).

@@ -1,0 +1,464 @@
+//! APUS-style RDMA-Paxos strong path — the third consensus backend behind
+//! the [`ReplicationPath`] seam (`backend = paxos`), and the proof that a
+//! new ordering engine drops in without touching the coordinator.
+//!
+//! Protocol (stable-leader fast path):
+//! * the leader executes a conflicting op in total order (authoritative
+//!   permissibility, like Mu's Accept), appends it to its log, and writes
+//!   the entry batch into every follower's *landing region* with one
+//!   one-sided verb per follower (`Payload::PaxosAppend`, leader-write QP);
+//! * followers are passive memory on the critical path: the ACK is the
+//!   write completion itself (the doorbell), and a majority of completions
+//!   commits the batch — no logical ack verbs, no follower CPU;
+//! * followers' landing regions apply commit-gated: entries are drained at
+//!   quiescence (or when a follower is promoted/recovered), never
+//!   speculatively, so a leadership change can truncate an uncommitted
+//!   tail without un-applying state;
+//! * on leader failure the smallest-live-ID replica takes over (the
+//!   Permission Switch fences the deposed leader's QP), adopts a higher
+//!   ballot, drains its own log, and mirrors it to every peer with one
+//!   `Payload::PaxosReplay` (an exact-log overwrite, possibly empty).
+//!
+//! Per-path batching is native here: up to `batch_size` queued entries
+//! ride one landing-region write.
+
+use crate::config::SimConfig;
+use crate::engine::path::{
+    Membership, MembershipEvent, PendingClient, ReplicaCore, ReplicationPath, Requester,
+    Submission, TokenCtx,
+};
+use crate::engine::store::DataPlane;
+use crate::engine::Ctx;
+use crate::net::verbs::{Payload, Verb};
+use crate::rdt::OpCall;
+use crate::sim::{EventKind, NodeId, Time, TimerKind};
+use crate::smr::log::ReplicationLog;
+use crate::smr::paxos::{PaxosAcceptor, PaxosLeader, PaxosStep};
+use crate::util::hasher::FastMap;
+use crate::workload::WorkItem;
+
+/// Completion tokens owned by the Paxos path.
+#[derive(Clone, Copy, Debug)]
+pub enum PaxosToken {
+    /// Doorbell for one follower's landing-region write: ballot + round
+    /// nonce at issue time (the nonce rejects doorbells from stalled,
+    /// re-pumped rounds that repeat ballot and slots) + the batch's first
+    /// slot.
+    Append { ballot: u64, round: u64, start_slot: u64 },
+    /// Forwarded conflicting op awaiting a LeaderReply.
+    Forward { request_id: u64 },
+}
+
+pub struct PaxosPath {
+    /// One total replication log (one consensus instance; sync groups
+    /// share the order — strictly stronger than Mu's per-group orders).
+    log: ReplicationLog,
+    leader_sm: PaxosLeader,
+    acceptor: PaxosAcceptor,
+    batch: usize,
+    /// Leader side: slot -> who to answer at commit.
+    requesters: FastMap<u64, Requester>,
+    /// Origin side: forwarded ops awaiting replies.
+    pending_fwd: FastMap<u64, PendingClient>,
+    next_request_id: u64,
+}
+
+impl PaxosPath {
+    pub fn new(cfg: &SimConfig, id: NodeId) -> Self {
+        PaxosPath {
+            log: ReplicationLog::new(),
+            leader_sm: PaxosLeader::new(id, cfg.n_replicas, cfg.batch_size as usize),
+            acceptor: PaxosAcceptor::new(),
+            batch: cfg.batch_size as usize,
+            requesters: FastMap::default(),
+            pending_fwd: FastMap::default(),
+            next_request_id: 1,
+        }
+    }
+
+    /// Leader-side entry: execute in total order, append, replicate.
+    fn leader_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
+        if !core.plane.permissible(&op) {
+            core.rejected += 1;
+            self.answer_requester(core, ctx, req, false);
+            return;
+        }
+        let exec_cost = core.exec().op_exec_ns + core.write_state_cost(false);
+        core.occupy(ctx.q.now(), exec_cost);
+        core.plane.apply(&op);
+        core.executions += 1;
+        let slot = self.log.next_free_slot();
+        self.log.write_slot(slot, self.leader_sm.ballot, op);
+        self.log.applied_upto = self.log.applied_upto.max(slot + 1);
+        self.requesters.insert(slot, req);
+        self.leader_sm.submit(slot, op);
+        self.try_fan_out(core, ctx, mb);
+    }
+
+    /// Start the next landing-region write batch if the pipeline is free.
+    fn try_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+        let Some((ballot, round, start_slot, ops)) = self.leader_sm.pump() else { return };
+        // Sequential pipeline: the leader stays execution-busy through the
+        // round, exactly like Mu (appendix D.1 — leader-bound throughput).
+        let now = ctx.q.now();
+        if now > core.busy_until {
+            core.busy_total += now - core.busy_until;
+            core.busy_until = now;
+        }
+        // Batch assembly: one log read per coalesced entry (the verb-issue
+        // setup is charged once by the fan_out below).
+        let per_entry = core.sys.mem.local_read_ns(core.landing_mem());
+        core.occupy_batch(now, per_entry, ops.len());
+        if ops.len() > 1 {
+            ctx.metrics.coalesced += ops.len() as u64 - 1;
+        }
+        let peers = mb.live_peers(core.id);
+        self.leader_sm.round_started(peers.len() as u32);
+        let mem = core.landing_mem_for_peer();
+        core.fan_out(
+            ctx,
+            &peers,
+            |t| {
+                Verb::write(
+                    mem,
+                    Payload::PaxosAppend { ballot, start_slot, ops: ops.clone() },
+                    t,
+                )
+                .on_leader_qp()
+            },
+            true,
+            || TokenCtx::Paxos(PaxosToken::Append { ballot, round, start_slot }),
+        );
+        // Sole survivor: no doorbells will ever arrive, and none are
+        // needed — the leader's local append is the whole majority.
+        if let Some((start, ops)) = self.leader_sm.commit_if_solo() {
+            self.commit_batch(core, ctx, mb, start, ops);
+        }
+    }
+
+    fn commit_batch(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, start_slot: u64, ops: Vec<OpCall>) {
+        let now = ctx.q.now();
+        if now > core.busy_until {
+            core.busy_total += now - core.busy_until;
+            core.busy_until = now;
+        }
+        ctx.metrics.smr_commits += ops.len() as u64;
+        for i in 0..ops.len() as u64 {
+            if let Some(req) = self.requesters.remove(&(start_slot + i)) {
+                self.answer_requester(core, ctx, req, true);
+            }
+        }
+        self.try_fan_out(core, ctx, mb);
+    }
+
+    fn answer_requester(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, req: Requester, committed: bool) {
+        match req {
+            Requester::Local { client, arrival } => {
+                let t = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+                core.complete_client(ctx, client, arrival, t);
+            }
+            Requester::Remote { reply_to, request_id } => {
+                self.reply_remote(core, ctx, reply_to, request_id, true, committed);
+            }
+        }
+    }
+
+    fn reply_remote(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, reply_to: NodeId, request_id: u64, handled: bool, committed: bool) {
+        let tok = core.token(TokenCtx::Ignore);
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderReply { request_id, handled, committed },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let now = ctx.q.now().max(core.busy_until);
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, now, core.id, reply_to, verb, false);
+    }
+
+    /// Forward a conflicting op from this (non-leader) replica to the
+    /// leader; same retry protocol as the Mu/Raft strong path.
+    fn forward_to_leader(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, op: OpCall, req: Requester) {
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        if let Requester::Local { client, arrival } = req {
+            self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
+        }
+        let leader = core.leader;
+        let tok = core.token(TokenCtx::Paxos(PaxosToken::Forward { request_id }));
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderForward { op, reply_to: core.id, request_id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let start = ctx.q.now().max(core.busy_until);
+        let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, start, core.id, leader, verb, true);
+        core.busy_total += out.initiator_free_at - start;
+        core.busy_until = out.initiator_free_at;
+    }
+
+    fn retry_forward(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, mut p: PendingClient) {
+        p.retries += 1;
+        if p.retries > 8 {
+            core.rejected += 1;
+            let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+            core.complete_client(ctx, p.client, p.arrival, done);
+            return;
+        }
+        let leader = mb.elect_leader();
+        core.leader = leader;
+        let op = p.op;
+        if leader == core.id {
+            self.leader_submit(core, ctx, mb, op, Requester::Local { client: p.client, arrival: p.arrival });
+            return;
+        }
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        self.pending_fwd.insert(request_id, p);
+        let tok = core.token(TokenCtx::Paxos(PaxosToken::Forward { request_id }));
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderForward { op, reply_to: core.id, request_id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let at = (ctx.q.now() + core.heartbeat_period_ns).max(core.busy_until);
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, leader, verb, true);
+    }
+
+    /// Promoted or recovering peers get the leader's log as one exact
+    /// mirror write (empty log replays too — it truncates stale tails).
+    fn replay_log_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId) {
+        let ops: Vec<OpCall> = self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect();
+        let ballot = self.leader_sm.ballot;
+        let tok = core.token(TokenCtx::Ignore);
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::PaxosReplay { ballot, ops },
+            tok,
+        )
+        .on_leader_qp();
+        ctx.metrics.verbs += 1;
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, false);
+    }
+
+    /// Apply this replica's own log tail (a follower promoted to leader
+    /// must execute everything it accepted before serving in total order).
+    fn drain_own_log(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx) {
+        let entries = self.log.drain_unapplied();
+        if entries.is_empty() {
+            return;
+        }
+        let per = core.exec().op_exec_ns + core.sys.mem.local_read_ns(core.landing_mem());
+        core.occupy_batch(ctx.q.now(), per, entries.len());
+        for e in entries {
+            core.executions += 1;
+            core.plane.apply_forced(&e.op);
+        }
+    }
+}
+
+impl ReplicationPath for PaxosPath {
+    fn boot(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _base: u64) {
+        // Followers are passive landing regions: no pollers. Visibility of
+        // conflicting state at followers is commit-gated (quiescence drain
+        // or promotion), so there is nothing to arm.
+    }
+
+    fn refresh_cost(&mut self, _core: &mut ReplicaCore) -> u64 {
+        // The landing-region head is a register read in fabric logic; the
+        // strong log is not speculatively folded into follower state (see
+        // module docs), so queries pay nothing here.
+        0
+    }
+
+    fn handle_client(
+        &mut self,
+        _core: &mut ReplicaCore,
+        _ctx: &mut Ctx,
+        _mb: &dyn Membership,
+        _client: usize,
+        _item: WorkItem,
+        _arrival: Time,
+    ) -> bool {
+        false
+    }
+
+    fn submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, sub: Submission) {
+        core.occupy(sub.arrival, sub.cost);
+        let req = Requester::Local { client: sub.client, arrival: sub.arrival };
+        if core.is_leader() {
+            self.leader_submit(core, ctx, mb, sub.op, req);
+        } else {
+            self.forward_to_leader(core, ctx, sub.op, req);
+        }
+    }
+
+    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, _src: NodeId, verb: Verb) {
+        match verb.payload {
+            Payload::PaxosAppend { ballot, start_slot, ops } => {
+                // One-sided landing: no follower compute on the fast path.
+                if !self.acceptor.accept(ballot) {
+                    return; // stale-ballot leader (also fenced at the QP)
+                }
+                for (i, op) in ops.into_iter().enumerate() {
+                    self.log.write_slot(start_slot + i as u64, ballot, op);
+                }
+            }
+            Payload::PaxosReplay { ballot, ops } => {
+                if !self.acceptor.accept(ballot) {
+                    return;
+                }
+                // Exact mirror of the (new) leader's log: stale tails
+                // truncate. Entries already applied locally stay applied —
+                // `applied_upto` survives within the mirrored length.
+                let keep_applied = self.log.applied_upto.min(ops.len() as u64);
+                let mut log = ReplicationLog::new();
+                for (slot, op) in ops.into_iter().enumerate() {
+                    log.write_slot(slot as u64, ballot, op);
+                }
+                log.applied_upto = keep_applied;
+                self.log = log;
+            }
+            Payload::LeaderForward { op, reply_to, request_id } => {
+                if core.is_leader() {
+                    let sw = core.exec().software_overhead_ns;
+                    core.occupy(ctx.q.now(), sw);
+                    self.leader_submit(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
+                } else {
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false);
+                }
+            }
+            Payload::LeaderReply { request_id, handled, committed } => {
+                if let Some(p) = self.pending_fwd.remove(&request_id) {
+                    if handled {
+                        if !committed {
+                            core.rejected += 1;
+                        }
+                        let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
+                        core.complete_client(ctx, p.client, p.arrival, done);
+                    } else {
+                        self.retry_forward(core, ctx, mb, p);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_completion(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, token: TokenCtx, ok: bool) {
+        let TokenCtx::Paxos(token) = token else { return };
+        match token {
+            PaxosToken::Append { ballot, round, start_slot } => {
+                if !core.is_leader() {
+                    return; // deposed mid-round; takeover handles the rest
+                }
+                match self.leader_sm.on_completion(ballot, round, start_slot, ok) {
+                    PaxosStep::Wait => {}
+                    PaxosStep::Commit { start_slot, ops } => {
+                        self.commit_batch(core, ctx, mb, start_slot, ops);
+                    }
+                    PaxosStep::Stall => {
+                        self.leader_sm.reset_in_flight();
+                        // Retry once the heartbeat scanner refreshes the
+                        // live set (same recovery cadence as Mu).
+                        ctx.q.push(
+                            ctx.q.now() + core.heartbeat_period_ns,
+                            core.id,
+                            EventKind::Timer(TimerKind::SmrTick(0)),
+                        );
+                    }
+                }
+            }
+            PaxosToken::Forward { request_id } => {
+                if !ok {
+                    if let Some(p) = self.pending_fwd.remove(&request_id) {
+                        self.retry_forward(core, ctx, mb, p);
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind) {
+        if let TimerKind::SmrTick(_) = t {
+            if core.is_leader() {
+                self.leader_sm.set_cluster_size(mb.live_set().len());
+                self.try_fan_out(core, ctx, mb);
+            }
+        }
+    }
+
+    fn on_membership(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, ev: MembershipEvent) {
+        match ev {
+            MembershipEvent::PeerFailed { peer: _ } => {
+                if core.is_leader() {
+                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                }
+            }
+            MembershipEvent::PeerRecovered { peer } => {
+                if core.is_leader() {
+                    self.replay_log_to(core, ctx, peer);
+                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                }
+            }
+            MembershipEvent::LeaderSwitched => {
+                if core.is_leader() {
+                    // Takeover: outbid every ballot seen, execute our own
+                    // accepted tail, then mirror our log to every live
+                    // peer — the one-sided analogue of Mu's replay, which
+                    // also truncates minority-written uncommitted tails.
+                    ctx.metrics.elections += 1;
+                    self.leader_sm.reset_in_flight();
+                    self.leader_sm.assume_leadership(core.id, self.acceptor.promised);
+                    self.acceptor.accept(self.leader_sm.ballot);
+                    self.drain_own_log(core, ctx);
+                    let peers = mb.live_peers(core.id);
+                    for peer in peers {
+                        self.replay_log_to(core, ctx, peer);
+                    }
+                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                    self.try_fan_out(core, ctx, mb);
+                }
+                // Any of our forwards pending at the dead leader: retry.
+                let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
+                for (_, p) in pending {
+                    self.retry_forward(core, ctx, mb, p);
+                }
+            }
+        }
+    }
+
+    fn flush_pending(&mut self, plane: &mut DataPlane) {
+        for e in self.log.drain_unapplied() {
+            plane.apply_forced(&e.op);
+        }
+    }
+
+    fn snapshot_logs(&self) -> Vec<ReplicationLog> {
+        vec![self.log.clone()]
+    }
+
+    fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
+        self.log = logs.into_iter().next().unwrap_or_default();
+        // Pipeline state died with the crash; requesters' client slots were
+        // reset by the failure plane.
+        self.leader_sm.clear();
+        self.requesters = FastMap::default();
+        self.pending_fwd = FastMap::default();
+    }
+
+    fn debug_status(&self) -> String {
+        format!(
+            "paxos ballot={} q={} in_flight={} pending_fwd={} requesters={} log_len={} applied={} batch={}",
+            self.leader_sm.ballot,
+            self.leader_sm.queue_len(),
+            self.leader_sm.in_flight(),
+            self.pending_fwd.len(),
+            self.requesters.len(),
+            self.log.len(),
+            self.log.applied_upto,
+            self.batch
+        )
+    }
+}

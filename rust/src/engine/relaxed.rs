@@ -20,12 +20,20 @@ use crate::sim::{EventKind, NodeId, Time, TimerKind};
 pub struct RelaxedPath {
     prop_red: PropagationMode,
     prop_irr: PropagationMode,
+    /// Fan-out coalescer bound: up to this many queued submissions merge
+    /// into one wire verb (1 = off, bit-identical to the unbatched engine).
+    batch: usize,
     /// Landing zones (HBM): written by remote one-sided verbs, drained by
     /// pollers or on access.
     pending_reducible: Vec<OpCall>,
     pending_irreducible: Vec<OpCall>,
     /// Locally applied ops awaiting one aggregated propagation (§5.4).
     sum_buffer: Vec<(OpCall, Time)>,
+    /// Coalescer outboxes (batch > 1): summaries / queue appends waiting to
+    /// share a verb. Flushed when a full batch accumulates and by the
+    /// `BatchFlush` timer, so a partial batch never stalls propagation.
+    out_sum: Vec<OpCall>,
+    out_irr: Vec<OpCall>,
 }
 
 impl RelaxedPath {
@@ -33,9 +41,12 @@ impl RelaxedPath {
         RelaxedPath {
             prop_red: cfg.prop_reducible,
             prop_irr: cfg.prop_irreducible,
+            batch: cfg.batch_size as usize,
             pending_reducible: Vec::new(),
             pending_irreducible: Vec::new(),
             sum_buffer: Vec::new(),
+            out_sum: Vec::new(),
+            out_irr: Vec::new(),
         }
     }
 
@@ -79,12 +90,29 @@ impl RelaxedPath {
         // Summarize under the data plane's type-correct rule.
         let ops: Vec<OpCall> = items.iter().map(|(o, _)| *o).collect();
         let agg = summarize(core.plane.summarize_rule(), &ops);
-        let origin = core.id;
-        let mode = self.prop_red;
-        let mem = core.landing_mem_for_peer();
         if host_side {
             core.charge_pcie_hop(now);
         }
+        if self.batch > 1 {
+            // Fan-out coalescer: queue, ship full batches immediately; the
+            // BatchFlush timer sweeps partial ones.
+            self.out_sum.extend(agg);
+            while self.out_sum.len() >= self.batch {
+                let chunk: Vec<OpCall> = self.out_sum.drain(..self.batch).collect();
+                self.ship_summary_chunk(core, ctx, mb, chunk);
+            }
+            // Draining: no sweeper may fire after us (the post-drain
+            // SummarizeFlush can outlive the last BatchFlush — its period
+            // is 4x), so a partial remainder must ship now or never.
+            if ctx.draining && !self.out_sum.is_empty() {
+                let rest: Vec<OpCall> = self.out_sum.drain(..).collect();
+                self.ship_summary_chunk(core, ctx, mb, rest);
+            }
+            return;
+        }
+        let origin = core.id;
+        let mode = self.prop_red;
+        let mem = core.landing_mem_for_peer();
         let peers = mb.live_peers(core.id);
         for op in agg {
             match mode {
@@ -110,9 +138,78 @@ impl RelaxedPath {
         }
     }
 
+    /// Ship one coalesced summary chunk (`<= batch` entries, one verb per
+    /// live peer). A landing-zone read per entry occupies the replica and
+    /// the verb-issue setup is paid once; k-1 verb issues are saved
+    /// relative to unbatched.
+    fn ship_summary_chunk(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, chunk: Vec<OpCall>) {
+        if chunk.is_empty() {
+            return;
+        }
+        let origin = core.id;
+        let per = core.sys.mem.local_read_ns(core.landing_mem());
+        core.occupy_batch(ctx.q.now(), per, chunk.len());
+        ctx.metrics.coalesced += chunk.len() as u64 - 1;
+        let mem = core.landing_mem_for_peer();
+        let peers = mb.live_peers(core.id);
+        match self.prop_red {
+            PropagationMode::Rpc => core.fan_out(
+                ctx,
+                &peers,
+                |t| Verb::rpc(Payload::SummaryBatch { origin, values: chunk.clone() }, t),
+                false,
+                || TokenCtx::Ignore,
+            ),
+            _ => core.fan_out(
+                ctx,
+                &peers,
+                |t| Verb::write(mem, Payload::SummaryBatch { origin, values: chunk.clone() }, t),
+                false,
+                || TokenCtx::Ignore,
+            ),
+        }
+    }
+
+    /// Ship one coalesced irreducible chunk (FIFO order preserved inside
+    /// the batch and by the in-order channel across batches).
+    fn ship_queue_chunk(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, chunk: Vec<OpCall>) {
+        if chunk.is_empty() {
+            return;
+        }
+        let per = core.sys.mem.local_read_ns(core.landing_mem());
+        core.occupy_batch(ctx.q.now(), per, chunk.len());
+        ctx.metrics.coalesced += chunk.len() as u64 - 1;
+        let mem = core.landing_mem_for_peer();
+        let peers = mb.live_peers(core.id);
+        match self.prop_irr {
+            PropagationMode::Rpc => core.fan_out(
+                ctx,
+                &peers,
+                |t| Verb::rpc(Payload::QueueBatch { ops: chunk.clone() }, t),
+                false,
+                || TokenCtx::Ignore,
+            ),
+            _ => core.fan_out(
+                ctx,
+                &peers,
+                |t| Verb::write(mem, Payload::QueueBatch { ops: chunk.clone() }, t),
+                false,
+                || TokenCtx::Ignore,
+            ),
+        }
+    }
+
     fn propagate_irreducible(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, host_side: bool) {
         if host_side {
             core.charge_pcie_hop(ctx.q.now());
+        }
+        if self.batch > 1 {
+            self.out_irr.push(op);
+            while self.out_irr.len() >= self.batch {
+                let chunk: Vec<OpCall> = self.out_irr.drain(..self.batch).collect();
+                self.ship_queue_chunk(core, ctx, mb, chunk);
+            }
+            return;
         }
         let mem = core.landing_mem_for_peer();
         let peers = mb.live_peers(core.id);
@@ -140,6 +237,17 @@ impl ReplicationPath for RelaxedPath {
     }
 
     fn boot_late(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64) {
+        // The coalescer sweeper arms after the heartbeat scanner; while the
+        // replica is live and not draining one is always pending, so a
+        // partial batch is shipped at most one poll interval late (and the
+        // post-drain firing empties the outboxes before quiescence). A
+        // crash kills the chain, which is safe: the crashed replica's
+        // quota is drained and never re-granted, so after recovery no
+        // submission can ever reach the outboxes again (and the pre-crash
+        // residue is cleared with the snapshot install).
+        if self.batch > 1 {
+            ctx.q.push(base + 2 * core.poll_interval_ns, core.id, EventKind::Timer(TimerKind::BatchFlush));
+        }
         // The summarize flusher arms after the heartbeat scanner.
         if core.summarize_threshold > 1 {
             ctx.q.push(base + 4 * core.poll_interval_ns, core.id, EventKind::Timer(TimerKind::SummarizeFlush));
@@ -215,6 +323,28 @@ impl ReplicationPath for RelaxedPath {
                     self.pending_irreducible.push(op);
                 }
             }
+            Payload::SummaryBatch { values, .. } => {
+                if is_rpc {
+                    let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
+                    core.occupy_batch(ctx.q.now(), per, values.len());
+                    for v in values {
+                        core.apply_remote(&v);
+                    }
+                } else {
+                    self.pending_reducible.extend(values);
+                }
+            }
+            Payload::QueueBatch { ops } => {
+                if is_rpc {
+                    let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
+                    core.occupy_batch(ctx.q.now(), per, ops.len());
+                    for op in ops {
+                        core.apply_remote(&op);
+                    }
+                } else {
+                    self.pending_irreducible.extend(ops);
+                }
+            }
             _ => {}
         }
     }
@@ -243,6 +373,21 @@ impl ReplicationPath for RelaxedPath {
                     ctx.q.push(ctx.q.now() + 4 * core.poll_interval_ns, core.id, EventKind::Timer(t));
                 }
             }
+            TimerKind::BatchFlush => {
+                while !self.out_sum.is_empty() {
+                    let take = self.out_sum.len().min(self.batch);
+                    let chunk: Vec<OpCall> = self.out_sum.drain(..take).collect();
+                    self.ship_summary_chunk(core, ctx, mb, chunk);
+                }
+                while !self.out_irr.is_empty() {
+                    let take = self.out_irr.len().min(self.batch);
+                    let chunk: Vec<OpCall> = self.out_irr.drain(..take).collect();
+                    self.ship_queue_chunk(core, ctx, mb, chunk);
+                }
+                if !ctx.draining {
+                    ctx.q.push(ctx.q.now() + core.poll_interval_ns, core.id, EventKind::Timer(t));
+                }
+            }
             _ => {}
         }
     }
@@ -262,14 +407,18 @@ impl ReplicationPath for RelaxedPath {
         self.pending_reducible.clear();
         self.pending_irreducible.clear();
         self.sum_buffer.clear();
+        self.out_sum.clear();
+        self.out_irr.clear();
     }
 
     fn debug_status(&self) -> String {
         format!(
-            "pend_red={} pend_irr={} sum_buf={}",
+            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={}",
             self.pending_reducible.len(),
             self.pending_irreducible.len(),
-            self.sum_buffer.len()
+            self.sum_buffer.len(),
+            self.out_sum.len(),
+            self.out_irr.len()
         )
     }
 }

@@ -227,7 +227,9 @@ impl Replica {
                     failure.on_heartbeat(core, &mut **strong, ctx, peer, Some(v));
                 }
             }
-            TokenCtx::Strong(_) => strong.on_read_resp(core, ctx, &*failure, tctx, data),
+            TokenCtx::Strong(_) | TokenCtx::Paxos(_) => {
+                strong.on_read_resp(core, ctx, &*failure, tctx, data)
+            }
             TokenCtx::Ignore => {}
         }
     }
@@ -236,7 +238,9 @@ impl Replica {
         let Replica { core, strong, failure, .. } = self;
         let Some(tctx) = core.tokens.remove(&token) else { return };
         match tctx {
-            TokenCtx::Strong(_) => strong.on_completion(core, ctx, &*failure, tctx, ok),
+            TokenCtx::Strong(_) | TokenCtx::Paxos(_) => {
+                strong.on_completion(core, ctx, &*failure, tctx, ok)
+            }
             TokenCtx::Heartbeat { peer } => {
                 if !ok {
                     failure.on_heartbeat(core, &mut **strong, ctx, peer, None);
@@ -251,9 +255,10 @@ impl Replica {
     fn on_timer(&mut self, ctx: &mut Ctx, t: TimerKind) {
         let Replica { core, relaxed, strong, failure, .. } = self;
         match t {
-            TimerKind::PollReducible | TimerKind::PollIrreducible | TimerKind::SummarizeFlush => {
-                relaxed.on_timer(core, ctx, &*failure, t)
-            }
+            TimerKind::PollReducible
+            | TimerKind::PollIrreducible
+            | TimerKind::SummarizeFlush
+            | TimerKind::BatchFlush => relaxed.on_timer(core, ctx, &*failure, t),
             TimerKind::PollLog(_) | TimerKind::SmrTick(_) => strong.on_timer(core, ctx, &*failure, t),
             TimerKind::HeartbeatScan => failure.on_scan(core, ctx),
             TimerKind::WorkDone => {}
@@ -327,18 +332,33 @@ impl Replica {
 
     /// Install a recovery snapshot from a live donor (§3): state + logs
     /// replace the stale copies, landed-but-unapplied buffers clear, and
-    /// the transfer occupies the replica for a modeled copy time.
-    pub fn install_snapshot(&mut self, plane: DataPlane, logs: Vec<ReplicationLog>, now: Time) {
+    /// the transfer occupies the replica for a modeled copy time. The
+    /// donor's *leader view* installs too — a crashed ex-leader would
+    /// otherwise come back believing it still leads and stall against the
+    /// cluster's permission fences; adopting the view re-fences its QPs
+    /// (a no-op when the views already agree, e.g. follower recovery).
+    pub fn install_snapshot(
+        &mut self,
+        plane: DataPlane,
+        logs: Vec<ReplicationLog>,
+        leader: NodeId,
+        qps: &mut crate::net::QpTable,
+        now: Time,
+    ) {
         self.core.plane = plane;
         self.strong.install_logs(logs);
         self.relaxed.clear_landed();
+        if self.core.leader != leader {
+            qps.switch_leader(self.core.id, self.core.leader, leader);
+            self.core.leader = leader;
+        }
         self.core.busy_until = self.core.busy_until.max(now) + 50_000; // 50 µs transfer
         self.core.busy_total += 50_000;
     }
 
-    /// Donor side of the snapshot.
-    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>) {
-        (self.core.plane.snapshot(), self.strong.snapshot_logs())
+    /// Donor side of the snapshot (state, strong logs, leader view).
+    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>, NodeId) {
+        (self.core.plane.snapshot(), self.strong.snapshot_logs(), self.core.leader)
     }
 
     /// Diagnostic snapshot for runaway-loop debugging.

@@ -1,7 +1,11 @@
 //! Strongly-ordered replication path (§4.3–§4.4): Mu SMR instances per
 //! synchronization group, the replication logs, leader-forwarding and
-//! requester bookkeeping — plus the Waverunner baseline's Raft pipeline
-//! (§5.2), which replicates *every* update through this path.
+//! requester bookkeeping — plus the Raft pipeline, serving both the
+//! Waverunner baseline (§5.2, which replicates *every* update through this
+//! path with leader-only clients) and the stand-alone `backend = raft`
+//! configuration (category-routed like Mu, leader-authoritative
+//! permissibility, batched AppendEntries). The APUS-style Paxos backend
+//! lives in its own plane, `engine::paxos`.
 //!
 //! The path owns its completion tokens ([`StrongToken`]): Mu round
 //! responses and forwarded-op replies route back here via the coordinator's
@@ -10,8 +14,11 @@
 //! fan-out rides fire-and-forget `Ignore` tokens like all other
 //! unacknowledged writes.
 
-use crate::config::{PropagationMode, SimConfig, SystemKind};
-use crate::engine::path::{Membership, MembershipEvent, ReplicaCore, ReplicationPath, Submission, TokenCtx};
+use crate::config::{ConsensusBackend, PropagationMode, SimConfig, SystemKind};
+use crate::engine::path::{
+    Membership, MembershipEvent, PendingClient, ReplicaCore, ReplicationPath, Requester,
+    Submission, TokenCtx,
+};
 use crate::engine::store::{DataPlane, KV_READ};
 use crate::engine::Ctx;
 use crate::mem::MemKind;
@@ -33,24 +40,12 @@ pub enum StrongToken {
     Forward { request_id: u64 },
 }
 
-/// A client request in flight (origin side).
-#[derive(Clone, Copy, Debug)]
-struct PendingClient {
-    client: usize,
-    arrival: Time,
-    retries: u8,
-    op: OpCall,
-}
-
-/// Leader side: who to answer once a conflicting op commits.
-#[derive(Clone, Copy, Debug)]
-enum Requester {
-    Local { client: usize, arrival: Time },
-    Remote { reply_to: NodeId, request_id: u64 },
-}
-
 pub struct StrongPath {
     prop_con: PropagationMode,
+    /// Mu or Raft (Paxos lives in `engine::paxos`). Waverunner pins Raft.
+    backend: ConsensusBackend,
+    /// Leader-side log-entry batching bound (1 = off).
+    batch: usize,
     /// One Mu instance + replication log per synchronization group.
     mu: Vec<MuInstance>,
     logs: Vec<ReplicationLog>,
@@ -66,13 +61,20 @@ pub struct StrongPath {
 
 impl StrongPath {
     pub fn new(cfg: &SimConfig, id: NodeId, groups: usize) -> Self {
-        let raft_leader = if cfg.system == SystemKind::Waverunner && id == 0 {
-            Some(RaftLeader::new(cfg.n_replicas))
+        // The Raft pipeline serves both Waverunner (whose preset pins
+        // backend = Raft) and the stand-alone Raft backend; node 0 leads
+        // fault-free runs either way.
+        let raft_leader = if cfg.backend == ConsensusBackend::Raft
+            && id == crate::smr::raft::initial_leader()
+        {
+            Some(RaftLeader::with_batch(cfg.n_replicas, cfg.batch_size as usize))
         } else {
             None
         };
         StrongPath {
             prop_con: cfg.prop_conflicting,
+            backend: cfg.backend,
+            batch: cfg.batch_size as usize,
             mu: (0..groups).map(|g| MuInstance::new(g as u8, cfg.n_replicas)).collect(),
             logs: (0..groups).map(|_| ReplicationLog::new()).collect(),
             round_id: vec![0; groups],
@@ -102,6 +104,10 @@ impl StrongPath {
             self.waverunner_submit(core, ctx, mb, op, req);
             return;
         }
+        if self.backend == ConsensusBackend::Raft {
+            self.raft_submit(core, ctx, mb, op, req);
+            return;
+        }
         self.requesters.insert((op.origin, op.seq), req);
         if core.is_leader() {
             let g = core.plane.sync_group(op.opcode) as usize;
@@ -110,24 +116,68 @@ impl StrongPath {
                 self.fan_out_round(core, ctx, mb, g, round);
             }
         } else {
-            // Forward to the leader (one RPC-sized write; §4.3).
-            let request_id = self.next_request_id;
-            self.next_request_id += 1;
-            if let Requester::Local { client, arrival } = req {
-                self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
-            }
-            let leader = core.leader;
-            let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
-            let verb = Verb::write(
-                core.landing_mem_for_peer(),
-                Payload::LeaderForward { op, reply_to: core.id, request_id },
-                tok,
-            );
-            ctx.metrics.verbs += 1;
-            let start = ctx.q.now().max(core.busy_until);
-            let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, start, core.id, leader, verb, true);
-            core.busy_total += out.initiator_free_at - start;
-            core.busy_until = out.initiator_free_at;
+            self.forward_conflicting(core, ctx, op, req);
+        }
+    }
+
+    /// Forward a conflicting op to the leader (one RPC-sized write; §4.3).
+    fn forward_conflicting(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, op: OpCall, req: Requester) {
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        if let Requester::Local { client, arrival } = req {
+            self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
+        }
+        let leader = core.leader;
+        let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::LeaderForward { op, reply_to: core.id, request_id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        let start = ctx.q.now().max(core.busy_until);
+        let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, start, core.id, leader, verb, true);
+        core.busy_total += out.initiator_free_at - start;
+        core.busy_until = out.initiator_free_at;
+    }
+
+    // ----- stand-alone Raft backend (non-Waverunner) ---------------------
+
+    /// Promote this replica to Raft leader if it isn't one yet (election
+    /// takeover, or an origin-side retry that self-elected first).
+    fn ensure_raft_leader(&mut self, mb: &dyn Membership) {
+        if self.raft_leader.is_none() {
+            let term = self.raft_follower.term + 1;
+            let next = self.raft_follower.log_len();
+            self.raft_leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
+        }
+    }
+
+    /// Generic Raft leader entry: unlike Waverunner's (which replicates
+    /// even locally-rejected applies to mirror §5.2), the stand-alone
+    /// backend gives the leader Mu-equivalent authority — an op that fails
+    /// permissibility in total-order position is rejected, not replicated;
+    /// followers then apply the log unconditionally (`apply_forced`).
+    fn raft_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
+        if !core.is_leader() {
+            self.forward_conflicting(core, ctx, op, req);
+            return;
+        }
+        self.ensure_raft_leader(mb);
+        if !core.plane.permissible(&op) {
+            core.rejected += 1;
+            self.answer_requester(core, ctx, req, false);
+            return;
+        }
+        let cost = core.exec().op_exec_ns + core.write_state_cost(false);
+        core.occupy(ctx.q.now(), cost);
+        core.executions += 1;
+        core.plane.apply(&op);
+        let rl = self.raft_leader.as_mut().expect("just ensured");
+        let (index, fanout) = rl.submit(op);
+        self.raft_pending.insert(index, req);
+        if let Some((term, start, ops)) = fanout {
+            self.raft_fan_out(core, ctx, mb, term, start, ops);
         }
     }
 
@@ -389,27 +439,85 @@ impl StrongPath {
         let rl = self.raft_leader.as_mut().unwrap();
         let (index, fanout) = rl.submit(op);
         self.raft_pending.insert(index, req);
-        if let Some((term, index, op)) = fanout {
-            self.raft_fan_out(core, ctx, mb, term, index, op);
+        if let Some((term, start, ops)) = fanout {
+            self.raft_fan_out(core, ctx, mb, term, start, ops);
         }
     }
 
-    fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, index: u64, op: OpCall) {
+    /// Follower-side apply after an accepted AppendEntries. Waverunner
+    /// replays the leader's raw op stream (its leader replicates even
+    /// locally-rejected applies, so followers re-run the same `apply`
+    /// decisions); the stand-alone backend ships only leader-accepted ops,
+    /// which followers execute unconditionally like Mu's log drain.
+    fn raft_follower_apply(&mut self, core: &mut ReplicaCore) {
+        let forced = core.system != SystemKind::Waverunner;
+        for o in self.raft_follower.drain_apply() {
+            if forced {
+                core.executions += 1;
+                core.plane.apply_forced(&o);
+            } else {
+                core.apply_remote(&o);
+            }
+        }
+    }
+
+    fn raft_ack(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, src: NodeId, term: u64, index: u64) {
+        let tok = core.token(TokenCtx::Ignore);
+        let ack = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::RaftAck { term, index, from: core.id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, ack, false);
+    }
+
+    fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, start: u64, ops: Vec<OpCall>) {
         // The logical ack is the RaftAck verb, not a wire completion.
         let peers = mb.live_peers(core.id);
-        core.fan_out(
-            ctx,
-            &peers,
-            |t| Verb::write(MemKind::HostDram, Payload::RaftAppend { term, index, op }, t),
-            false,
-            || TokenCtx::Ignore,
-        );
+        let mem = if core.system == SystemKind::Waverunner {
+            MemKind::HostDram // SmartNIC fast path still lands in host state
+        } else {
+            core.landing_mem_for_peer()
+        };
+        if ops.len() == 1 {
+            let op = ops[0];
+            core.fan_out(
+                ctx,
+                &peers,
+                |t| Verb::write(mem, Payload::RaftAppend { term, index: start, op }, t),
+                false,
+                || TokenCtx::Ignore,
+            );
+        } else {
+            // Leader-side log-entry batching: one AppendEntries wire verb
+            // carries the whole contiguous run.
+            ctx.metrics.coalesced += ops.len() as u64 - 1;
+            core.fan_out(
+                ctx,
+                &peers,
+                |t| {
+                    Verb::write(
+                        mem,
+                        Payload::RaftAppendBatch { term, start_index: start, ops: ops.clone() },
+                        t,
+                    )
+                },
+                false,
+                || TokenCtx::Ignore,
+            );
+        }
     }
 }
 
 impl ReplicationPath for StrongPath {
     fn boot(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, base: u64) {
-        if self.prop_con != PropagationMode::WriteThrough && !self.logs.is_empty() {
+        // Log pollers are a Mu follower concern; Raft followers apply at
+        // delivery (the SmartNIC interrupt path), so they arm nothing.
+        if self.backend == ConsensusBackend::Mu
+            && self.prop_con != PropagationMode::WriteThrough
+            && !self.logs.is_empty()
+        {
             for g in 0..self.logs.len() {
                 ctx.q.push(
                     base + core.poll_interval_ns + g as u64,
@@ -423,8 +531,9 @@ impl ReplicationPath for StrongPath {
     fn refresh_cost(&mut self, core: &mut ReplicaCore) -> u64 {
         let mut cost = 0;
         // Conflicting log check (§4.3 config 1: "polling the log when the
-        // state is accessed to ensure the most up to date data").
-        if self.prop_con != PropagationMode::WriteThrough {
+        // state is accessed to ensure the most up to date data") — a Mu
+        // structure; Raft followers are already current at delivery.
+        if self.backend == ConsensusBackend::Mu && self.prop_con != PropagationMode::WriteThrough {
             let per_group = core.sys.mem.local_read_ns(core.landing_mem());
             cost += per_group * self.logs.len() as u64;
             cost += self.drain_logs_cost(core);
@@ -517,39 +626,39 @@ impl ReplicationPath for StrongPath {
             }
             Payload::RaftAppend { term, index, op } => {
                 if self.raft_follower.on_append(term, index, op) {
-                    for o in self.raft_follower.drain_apply() {
-                        core.apply_remote(&o);
-                    }
-                    let tok = core.token(TokenCtx::Ignore);
-                    let ack = Verb::write(
-                        core.landing_mem_for_peer(),
-                        Payload::RaftAck { term, index, from: core.id },
-                        tok,
-                    );
-                    ctx.metrics.verbs += 1;
-                    ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, ack, false);
+                    self.raft_follower_apply(core);
+                    self.raft_ack(core, ctx, src, term, index);
+                }
+            }
+            Payload::RaftAppendBatch { term, start_index, ops } => {
+                if self.raft_follower.on_append_batch(term, start_index, &ops) {
+                    self.raft_follower_apply(core);
+                    // One ack for the whole batch, on its last index.
+                    self.raft_ack(core, ctx, src, term, start_index + ops.len() as u64 - 1);
                 }
             }
             Payload::RaftAck { term, index, .. } => {
                 if let Some(rl) = self.raft_leader.as_mut() {
-                    if let RaftStep::Commit { index, op: _op } = rl.on_ack(term, index) {
+                    if let RaftStep::Commit { start_index, ops } = rl.on_ack(term, index) {
                         // Leader state was updated at submit; commit point
                         // is the quorum ack.
                         let done = core.occupy(ctx.q.now(), core.exec().op_exec_ns);
-                        ctx.metrics.smr_commits += 1;
-                        if let Some(req) = self.raft_pending.remove(&index) {
-                            match req {
-                                Requester::Local { client, arrival } => {
-                                    let t = core.occupy(done, core.exec().client_overhead_ns / 2);
-                                    core.complete_client(ctx, client, arrival, t);
-                                }
-                                Requester::Remote { reply_to, request_id } => {
-                                    self.reply_remote(core, ctx, reply_to, request_id, true, true);
+                        ctx.metrics.smr_commits += ops.len() as u64;
+                        for i in 0..ops.len() as u64 {
+                            if let Some(req) = self.raft_pending.remove(&(start_index + i)) {
+                                match req {
+                                    Requester::Local { client, arrival } => {
+                                        let t = core.occupy(done, core.exec().client_overhead_ns / 2);
+                                        core.complete_client(ctx, client, arrival, t);
+                                    }
+                                    Requester::Remote { reply_to, request_id } => {
+                                        self.reply_remote(core, ctx, reply_to, request_id, true, true);
+                                    }
                                 }
                             }
                         }
-                        if let Some((term, index, op)) = self.raft_leader.as_mut().unwrap().pump() {
-                            self.raft_fan_out(core, ctx, mb, term, index, op);
+                        if let Some((term, start, ops)) = self.raft_leader.as_mut().unwrap().pump() {
+                            self.raft_fan_out(core, ctx, mb, term, start, ops);
                         }
                     }
                 }
@@ -638,31 +747,64 @@ impl ReplicationPath for StrongPath {
                 for g in 0..self.mu.len() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                 }
+                if let Some(rl) = self.raft_leader.as_mut() {
+                    rl.set_cluster_size(mb.live_set().len());
+                }
             }
             MembershipEvent::PeerRecovered { peer } => {
                 self.replay_log_to(core, ctx, peer);
                 for g in 0..self.mu.len() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                 }
+                if let Some(rl) = self.raft_leader.as_mut() {
+                    rl.set_cluster_size(mb.live_set().len());
+                }
             }
             MembershipEvent::LeaderSwitched => {
                 if core.is_leader() {
                     ctx.metrics.elections += 1;
-                    // Take over: re-replicate our log suffix first — the
-                    // crashed leader may have written an Accept to only a
-                    // subset of followers (including us), and Mu's
-                    // slot-adoption only repairs slots we later propose
-                    // into. Idempotent: followers reject equal/lower
-                    // proposals and skip already-applied slots.
-                    let peers = mb.live_peers(core.id);
-                    for peer in peers {
-                        self.replay_log_to(core, ctx, peer);
-                    }
-                    for g in 0..self.mu.len() {
-                        self.mu[g].set_cluster_size(mb.live_set().len());
-                        let slot = self.logs[g].next_free_slot();
-                        if let Some(round) = self.mu[g].pump(slot) {
-                            self.fan_out_round(core, ctx, mb, g, round);
+                    if self.backend == ConsensusBackend::Raft {
+                        // Stand-alone Raft takeover: adopt the accepted log
+                        // at a higher term and re-replicate it (followers
+                        // overwrite-accept higher terms; idempotent).
+                        if core.system != SystemKind::Waverunner && self.raft_leader.is_none() {
+                            self.ensure_raft_leader(mb);
+                            let term = self.raft_leader.as_ref().expect("promoted").term;
+                            let entries: Vec<OpCall> = self.raft_follower.entries().to_vec();
+                            // Replay in batch_size chunks: the election-time
+                            // log re-ship coalesces like any other append.
+                            let step = self.batch.max(1);
+                            let mut start = 0usize;
+                            while start < entries.len() {
+                                let end = (start + step).min(entries.len());
+                                self.raft_fan_out(
+                                    core,
+                                    ctx,
+                                    mb,
+                                    term,
+                                    start as u64,
+                                    entries[start..end].to_vec(),
+                                );
+                                start = end;
+                            }
+                        }
+                    } else {
+                        // Take over: re-replicate our log suffix first — the
+                        // crashed leader may have written an Accept to only a
+                        // subset of followers (including us), and Mu's
+                        // slot-adoption only repairs slots we later propose
+                        // into. Idempotent: followers reject equal/lower
+                        // proposals and skip already-applied slots.
+                        let peers = mb.live_peers(core.id);
+                        for peer in peers {
+                            self.replay_log_to(core, ctx, peer);
+                        }
+                        for g in 0..self.mu.len() {
+                            self.mu[g].set_cluster_size(mb.live_set().len());
+                            let slot = self.logs[g].next_free_slot();
+                            if let Some(round) = self.mu[g].pump(slot) {
+                                self.fan_out_round(core, ctx, mb, g, round);
+                            }
                         }
                     }
                 }

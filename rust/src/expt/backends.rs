@@ -1,0 +1,58 @@
+//! Backends — the consensus-backend × batch-size comparison the paper's
+//! Mu-vs-Raft evaluation gestures at, extended with the APUS-style Paxos
+//! strong path: Account (the §2.1 WRDT running example, one sync group)
+//! and SmallBank (debit-heavy KV) under `backend ∈ {mu, raft, paxos}` and
+//! `batch_size ∈ {1, 4, 16}`, 3–8 nodes at 25% updates.
+//!
+//! Expected shape: Paxos's single one-sided write round beats Mu's
+//! four-round Prepare/Accept on commit latency at equal batch size; Raft
+//! pays the logical-ack round trip; batching trades per-op wire cost for
+//! small queueing delay on every backend. The CI backend matrix runs one
+//! leg per backend via `--backend` (`common::set_backend_filter`).
+
+use crate::config::{ConsensusBackend, SimConfig, WorkloadKind};
+use crate::expt::common::{backend_filter, cell_ops, f3, nodes, run_cells_tagged};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+pub const BATCH_SWEEP: &[u32] = &[1, 4, 16];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let backends: Vec<ConsensusBackend> = match backend_filter() {
+        Some(b) => vec![b],
+        None => ConsensusBackend::ALL.to_vec(),
+    };
+    let mut tables = Vec::new();
+    for workload in [WorkloadKind::Micro(RdtKind::Account), WorkloadKind::SmallBank] {
+        let mut t = Table::new(
+            &format!("Backends — consensus × batch on {}", workload.name()),
+            &["backend", "batch", "nodes", "rt_us", "tput_ops_us", "smr_commits", "coalesced"],
+        );
+        let mut jobs = Vec::new();
+        for &backend in &backends {
+            for &batch in BATCH_SWEEP {
+                for &n in nodes(quick) {
+                    let mut cfg = SimConfig::safardb(workload);
+                    cfg.backend = backend;
+                    cfg.batch_size = batch;
+                    cfg.n_replicas = n;
+                    cfg.update_pct = 25;
+                    jobs.push(((backend, batch, n), (cfg, cell_ops(quick))));
+                }
+            }
+        }
+        for ((backend, batch, n), cell, rep) in run_cells_tagged(jobs) {
+            t.row(vec![
+                backend.name().into(),
+                batch.to_string(),
+                n.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+                rep.metrics.smr_commits.to_string(),
+                rep.metrics.coalesced.to_string(),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}

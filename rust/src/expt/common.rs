@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::SimConfig;
+use crate::config::{ConsensusBackend, SimConfig};
 use crate::engine::cluster::{self, RunReport};
 use crate::util::table::Table;
 
@@ -71,6 +71,25 @@ pub fn run_cell(mut cfg: SimConfig, ops: u64) -> (Cell, RunReport) {
 /// Globally configured worker count for [`run_cells_auto`] (0 = unset:
 /// resolve from `SAFARDB_THREADS` / available parallelism at call time).
 static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Consensus-backend restriction for backend-aware sweeps (the CLI's
+/// `--backend mu|raft|paxos` knob; 0 = all backends).
+static BACKEND: AtomicUsize = AtomicUsize::new(0);
+
+/// Restrict backend-aware sweeps (currently `expt backends`) to one
+/// consensus backend — the CI matrix runs one leg per backend.
+pub fn set_backend_filter(b: ConsensusBackend) {
+    let idx = ConsensusBackend::ALL.iter().position(|&x| x == b).expect("known backend");
+    BACKEND.store(idx + 1, Ordering::SeqCst);
+}
+
+/// The configured backend restriction, if any.
+pub fn backend_filter() -> Option<ConsensusBackend> {
+    match BACKEND.load(Ordering::SeqCst) {
+        0 => None,
+        i => Some(ConsensusBackend::ALL[i - 1]),
+    }
+}
 
 /// Pin the worker count for subsequent [`run_cells_auto`] calls (the CLI's
 /// `--threads N` knob lands here).

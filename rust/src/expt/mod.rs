@@ -7,6 +7,7 @@
 //! paper-vs-measured.
 
 pub mod ablation;
+pub mod backends;
 pub mod common;
 pub mod fig06;
 pub mod fig07;
@@ -31,7 +32,7 @@ use crate::util::table::Table;
 /// Every experiment id, in paper order.
 pub const ALL: &[&str] = &[
     "table2_1", "tableC_1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation",
+    "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation", "backends",
 ];
 
 /// Canonical experiment id for `id`, accepting zero-padded aliases
@@ -73,6 +74,7 @@ pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
         "fig25_26" => fig25_26::run(quick),
         "fig27" => fig27::run(quick),
         "ablation" => ablation::run(quick),
+        "backends" => backends::run(quick),
         _ => return None,
     };
     Some(tables)

@@ -1,7 +1,8 @@
 //! SafarDB launcher.
 //!
 //! ```text
-//! safardb expt <id|all> [--quick] [--threads N]   reproduce a paper table/figure
+//! safardb expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]
+//!                                                 reproduce a paper table/figure
 //! safardb list                                    list experiment ids
 //! safardb run [config.kv] [k=v ...]               run one cluster config, print report
 //! safardb runtime-check [dir]                     load + execute the kernel runtime
@@ -12,7 +13,7 @@
 //! `SAFARDB_THREADS` environment variable, or all available cores, in that
 //! order); tables are bit-identical for any thread count.
 
-use safardb::config::{SimConfig, WorkloadKind};
+use safardb::config::{ConsensusBackend, SimConfig, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::expt;
 use safardb::rdt::RdtKind;
@@ -31,7 +32,7 @@ fn main() {
         Some("runtime-check") => cmd_runtime_check(&args[1..]),
         _ => {
             eprintln!("usage: safardb <expt|list|run|runtime-check> [...]");
-            eprintln!("  expt <id|all> [--quick] [--threads N]");
+            eprintln!("  expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]");
             eprintln!("                           reproduce a paper table/figure (see `safardb list`)");
             eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
             eprintln!("  runtime-check [dir]      verify the kernel runtime loads and executes");
@@ -48,15 +49,37 @@ fn parse_threads(v: &str) -> Option<usize> {
     }
 }
 
+fn parse_backend(v: &str) -> Option<ConsensusBackend> {
+    ConsensusBackend::parse(v)
+}
+
 fn cmd_expt(args: &[String]) -> i32 {
     let mut quick = false;
     let mut threads: Option<usize> = None;
+    let mut backend: Option<ConsensusBackend> = None;
     let mut ids: Vec<&str> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let a = args[i].as_str();
         if a == "--quick" {
             quick = true;
+        } else if a == "--backend" {
+            i += 1;
+            let Some(v) = args.get(i) else {
+                eprintln!("--backend requires a value (mu|raft|paxos)");
+                return 2;
+            };
+            let Some(b) = parse_backend(v) else {
+                eprintln!("bad --backend value '{v}' (want mu|raft|paxos)");
+                return 2;
+            };
+            backend = Some(b);
+        } else if let Some(v) = a.strip_prefix("--backend=") {
+            let Some(b) = parse_backend(v) else {
+                eprintln!("bad --backend value '{v}' (want mu|raft|paxos)");
+                return 2;
+            };
+            backend = Some(b);
         } else if a == "--threads" {
             i += 1;
             let Some(v) = args.get(i) else {
@@ -84,6 +107,22 @@ fn cmd_expt(args: &[String]) -> i32 {
     }
     if let Some(n) = threads {
         expt::common::set_threads(n);
+    }
+    if let Some(b) = backend {
+        // Only the `backends` sweep consults the filter; accepting it
+        // elsewhere would silently emit unfiltered (default-backend) CSVs
+        // under a backend-filtered invocation.
+        let ids_for_check: Vec<&str> = if ids.is_empty() || ids == ["all"] {
+            expt::ALL.to_vec()
+        } else {
+            ids.clone()
+        };
+        if ids_for_check.iter().any(|id| expt::canonical(id) != Some("backends")) {
+            eprintln!("--backend only applies to `expt backends`");
+            return 2;
+        }
+        expt::common::set_backend_filter(b);
+        eprintln!("[backend filter: {}]", b.name());
     }
     eprintln!("[sweep executor: {} worker thread(s)]", expt::common::configured_threads());
     let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
@@ -160,9 +199,12 @@ fn cmd_run(args: &[String]) -> i32 {
         return 2;
     }
     let sys = cfg.system;
+    let backend = cfg.backend;
+    let batch = cfg.batch_size;
     let name = cfg.workload.name();
     let rep = cluster::run(cfg);
     println!("system      : {}", sys.name());
+    println!("backend     : {} (batch {})", backend.name(), batch);
     println!("workload    : {name}");
     println!(
         "response    : {:.3} us (p50 {:.3}, p99 {:.3})",

@@ -21,6 +21,12 @@ pub struct RunMetrics {
     pub smr_commits: u64,
     /// Verbs put on the wire.
     pub verbs: u64,
+    /// Per-path batching merge count: every *batch* of k coalesced
+    /// submissions adds k-1, independent of how many peers its fan-out
+    /// targets (total wire verbs saved = coalesced × fan-out width).
+    /// Always 0 at `batch_size` 1 — the unbatched engine never emits
+    /// batch verbs.
+    pub coalesced: u64,
     /// Transactions executed (local + remote applies) for power accounting.
     pub executions: u64,
     /// Permission-switch latencies sampled during leader changes (Fig 13).
@@ -47,6 +53,7 @@ impl RunMetrics {
             rejected: 0,
             smr_commits: 0,
             verbs: 0,
+            coalesced: 0,
             executions: 0,
             perm_switch: Histogram::new(),
             staleness: Summary::new(),

@@ -55,6 +55,11 @@ pub enum Payload {
     Summary { origin: NodeId, ops: u32, value: OpCall },
     /// Irreducible op appended to the per-origin FIFO queue (§4.2).
     QueueAppend { op: OpCall },
+    /// Batched reducible summaries: up to `batch_size` coalesced
+    /// contributions ride one wire verb (per-path batching).
+    SummaryBatch { origin: NodeId, values: Vec<OpCall> },
+    /// Batched irreducible queue append: one verb, FIFO order preserved.
+    QueueBatch { ops: Vec<OpCall> },
     /// Mu: write the next proposal number at a follower (Prepare).
     Propose { group: u8, proposal: u64 },
     /// Mu: append a committed entry to the replication log (Accept).
@@ -71,8 +76,19 @@ pub enum Payload {
     ReadResp { target: ReadTarget, data: ReadData },
     /// Raft (Waverunner baseline): AppendEntries carrying one op.
     RaftAppend { term: u64, index: u64, op: OpCall },
+    /// Raft leader-side log-entry batching: one AppendEntries carrying a
+    /// contiguous run of entries starting at `start_index`.
+    RaftAppendBatch { term: u64, start_index: u64, ops: Vec<OpCall> },
     /// Raft follower ack.
     RaftAck { term: u64, index: u64, from: NodeId },
+    /// APUS-style Paxos: leader's one-sided write of a contiguous batch of
+    /// log entries into a follower's landing region. The ACK is the write
+    /// completion itself (doorbell) — no logical ack verb exists.
+    PaxosAppend { ballot: u64, start_slot: u64, ops: Vec<OpCall> },
+    /// Paxos leadership replay: the new leader rewrites its entire log
+    /// (possibly empty) at `ballot`; the follower's landing region becomes
+    /// an exact mirror (entries beyond the replayed length truncate).
+    PaxosReplay { ballot: u64, ops: Vec<OpCall> },
     /// Client redirect (Waverunner: follower rejects, client re-sends).
     ClientRedirect { request_id: u64 },
 }
@@ -98,13 +114,19 @@ impl Payload {
     /// Routing: which plane handles this payload at the destination.
     pub fn plane(&self) -> PayloadPlane {
         match self {
-            Payload::Summary { .. } | Payload::QueueAppend { .. } => PayloadPlane::Relaxed,
+            Payload::Summary { .. }
+            | Payload::QueueAppend { .. }
+            | Payload::SummaryBatch { .. }
+            | Payload::QueueBatch { .. } => PayloadPlane::Relaxed,
             Payload::Propose { .. }
             | Payload::LogAppend { .. }
             | Payload::LeaderForward { .. }
             | Payload::LeaderReply { .. }
             | Payload::RaftAppend { .. }
-            | Payload::RaftAck { .. } => PayloadPlane::Strong,
+            | Payload::RaftAppendBatch { .. }
+            | Payload::RaftAck { .. }
+            | Payload::PaxosAppend { .. }
+            | Payload::PaxosReplay { .. } => PayloadPlane::Strong,
             Payload::ReadReq { .. } => PayloadPlane::OneSidedRead,
             Payload::ReadResp { .. } => PayloadPlane::Completion,
             Payload::Raw { .. } | Payload::ClientRedirect { .. } => PayloadPlane::None,
@@ -128,6 +150,10 @@ impl Payload {
             Payload::Raw { bytes } => *bytes,
             Payload::Summary { value, .. } => value.wire_bytes() + 8,
             Payload::QueueAppend { op } => op.wire_bytes(),
+            Payload::SummaryBatch { values, .. } => {
+                values.iter().map(|v| v.wire_bytes()).sum::<u64>() + 8
+            }
+            Payload::QueueBatch { ops } => ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 8,
             Payload::Propose { .. } => 16,
             Payload::LogAppend { op, .. } => op.wire_bytes() + 24,
             Payload::LeaderForward { op, .. } => op.wire_bytes() + 16,
@@ -135,7 +161,16 @@ impl Payload {
             Payload::ReadReq { .. } => 16,
             Payload::ReadResp { .. } => 48,
             Payload::RaftAppend { op, .. } => op.wire_bytes() + 24,
+            Payload::RaftAppendBatch { ops, .. } => {
+                ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 24
+            }
             Payload::RaftAck { .. } => 24,
+            Payload::PaxosAppend { ops, .. } => {
+                ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 24
+            }
+            Payload::PaxosReplay { ops, .. } => {
+                ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 16
+            }
             Payload::ClientRedirect { .. } => 16,
         }
     }
@@ -227,17 +262,40 @@ mod tests {
     }
 
     #[test]
+    fn batched_payloads_save_headers_on_the_wire() {
+        let op = OpCall::new(0, 1, 2, 0.5);
+        let one = Payload::SummaryBatch { origin: 0, values: vec![op] }.wire_bytes();
+        let four = Payload::SummaryBatch { origin: 0, values: vec![op; 4] }.wire_bytes();
+        assert_eq!(four - one, 3 * op.wire_bytes(), "payload grows per entry");
+        let k_verbs = 4 * Verb::write(MemKind::Hbm, Payload::QueueAppend { op }, 0).wire_bytes();
+        let batch =
+            Verb::write(MemKind::Hbm, Payload::QueueBatch { ops: vec![op; 4] }, 0).wire_bytes();
+        assert!(batch < k_verbs, "one batched verb beats 4 singles: {batch} vs {k_verbs}");
+    }
+
+    #[test]
     fn payload_plane_routing_is_total() {
         let op = OpCall::new(0, 1, 2, 0.5);
         let cases: Vec<(Payload, PayloadPlane)> = vec![
             (Payload::Summary { origin: 0, ops: 1, value: op }, PayloadPlane::Relaxed),
             (Payload::QueueAppend { op }, PayloadPlane::Relaxed),
+            (Payload::SummaryBatch { origin: 0, values: vec![op, op] }, PayloadPlane::Relaxed),
+            (Payload::QueueBatch { ops: vec![op] }, PayloadPlane::Relaxed),
             (Payload::Propose { group: 0, proposal: 1 }, PayloadPlane::Strong),
             (Payload::LogAppend { group: 0, slot: 0, proposal: 1, op }, PayloadPlane::Strong),
             (Payload::LeaderForward { op, reply_to: 1, request_id: 2 }, PayloadPlane::Strong),
             (Payload::LeaderReply { request_id: 2, handled: true, committed: true }, PayloadPlane::Strong),
             (Payload::RaftAppend { term: 1, index: 0, op }, PayloadPlane::Strong),
+            (
+                Payload::RaftAppendBatch { term: 1, start_index: 0, ops: vec![op, op] },
+                PayloadPlane::Strong,
+            ),
             (Payload::RaftAck { term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
+            (
+                Payload::PaxosAppend { ballot: 1, start_slot: 0, ops: vec![op] },
+                PayloadPlane::Strong,
+            ),
+            (Payload::PaxosReplay { ballot: 2, ops: vec![] }, PayloadPlane::Strong),
             (Payload::ReadReq { target: ReadTarget::Heartbeat }, PayloadPlane::OneSidedRead),
             (
                 Payload::ReadResp { target: ReadTarget::Heartbeat, data: ReadData::Heartbeat(1) },

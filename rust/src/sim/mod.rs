@@ -31,6 +31,9 @@ pub enum TimerKind {
     PollLog(u8),
     /// Summarization flush deadline (§5.4 Summarization).
     SummarizeFlush,
+    /// Per-path batching: drain the relaxed plane's fan-out coalescer so a
+    /// partially filled batch never stalls propagation.
+    BatchFlush,
     /// Leader-switch plane: heartbeat scanner tick (§4.4).
     HeartbeatScan,
     /// Retry driving the SMR pipeline (leader waiting for quorum timeout).

@@ -8,9 +8,14 @@
 //! * [`election`] — the Leader Switch Plane: heartbeat tracking, failure
 //!   detection, smallest-live-ID election.
 //! * [`raft`] — the simplified Raft used by the Waverunner baseline
-//!   (leader-only client handling).
+//!   (leader-only client handling) and selectable as a stand-alone
+//!   strong-path backend.
+//! * [`paxos`] — APUS-style RDMA Multi-Paxos: one-sided log writes into
+//!   follower landing regions, quorum by write-completion doorbells (the
+//!   second strong-path backend behind the `ReplicationPath` seam).
 
 pub mod election;
 pub mod log;
 pub mod mu;
+pub mod paxos;
 pub mod raft;

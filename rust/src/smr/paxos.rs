@@ -1,0 +1,339 @@
+//! APUS-style RDMA Multi-Paxos leader automaton (the second strong-path
+//! backend; cf. "Reliable Replication Protocols on SmartNICs" — the
+//! offload-friendly Paxos family).
+//!
+//! The stable-leader fast path replicates by *memory placement*, not
+//! messaging: the leader writes contiguous log entries straight into each
+//! follower's landing region with one-sided RDMA writes and counts the
+//! write completions ("doorbells") toward a majority quorum — followers
+//! are passive memory on the critical path. Entries batch natively: one
+//! in-flight write covers up to `batch` queued ops.
+//!
+//! Like [`super::mu`], the automaton is pure: the engine
+//! (`engine::paxos`) owns slots/logs/fabric and feeds completions back.
+//! Ballots encode `(round << 8) | leader_id` so two successive leaders can
+//! never collide on a ballot number; the engine fences deposed leaders at
+//! the QP level (the Permission Switch) and followers additionally reject
+//! writes carrying a stale ballot.
+
+use std::collections::VecDeque;
+
+use crate::rdt::OpCall;
+use crate::sim::NodeId;
+
+/// Compose a ballot: monotone round, leader id in the low byte.
+pub fn ballot(round: u64, leader: NodeId) -> u64 {
+    (round << 8) | (leader as u64 & 0xFF)
+}
+
+/// The round a ballot belongs to.
+pub fn ballot_round(b: u64) -> u64 {
+    b >> 8
+}
+
+/// What the engine should do after feeding a write completion.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PaxosStep {
+    /// Keep feeding completions.
+    Wait,
+    /// Majority of landing-region writes completed: the batch is chosen.
+    Commit { start_slot: u64, ops: Vec<OpCall> },
+    /// Quorum unreachable with the current follower set; the engine resets
+    /// and retries after the membership view refreshes.
+    Stall,
+}
+
+/// Leader-side pipeline: one in-flight batch of contiguous log slots.
+#[derive(Debug)]
+pub struct PaxosLeader {
+    pub ballot: u64,
+    n: usize,
+    batch: usize,
+    in_flight: Option<(u64, Vec<OpCall>, u32, u32)>, // (start, ops, acks, fails)
+    targeted: u32,
+    /// Monotone per-pump nonce: a doorbell left over from an aborted
+    /// (stalled) round must not count toward the retried round's quorum,
+    /// even though ballot and start_slot repeat — Mu's `round_id` guard,
+    /// one-sided edition.
+    round_id: u64,
+    queue: VecDeque<(u64, OpCall)>, // (slot, op) — slots are contiguous
+    pub committed: u64,
+}
+
+impl PaxosLeader {
+    pub fn new(id: NodeId, n: usize, batch: usize) -> Self {
+        PaxosLeader {
+            ballot: ballot(1, id),
+            n,
+            batch: batch.max(1),
+            in_flight: None,
+            targeted: 0,
+            round_id: 0,
+            queue: VecDeque::new(),
+            committed: 0,
+        }
+    }
+
+    /// Follower write-completions needed (leader's local append is its own
+    /// majority vote, exactly as in Mu).
+    fn quorum_followers(&self) -> u32 {
+        (self.n / 2) as u32
+    }
+
+    pub fn set_cluster_size(&mut self, n: usize) {
+        self.n = n;
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.in_flight.is_none() && self.queue.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn in_flight(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    /// Take over leadership: adopt a ballot strictly above everything seen
+    /// (`seen` is the acceptor-side promise), keyed to this leader's id.
+    pub fn assume_leadership(&mut self, id: NodeId, seen: u64) {
+        let round = ballot_round(self.ballot.max(seen)) + 1;
+        self.ballot = ballot(round, id);
+    }
+
+    /// Queue an op at its assigned log slot (the engine appends to its own
+    /// log first, so slots arrive contiguous and monotone).
+    pub fn submit(&mut self, slot: u64, op: OpCall) {
+        debug_assert!(
+            match self.queue.back() {
+                Some(&(s, _)) => s + 1 == slot,
+                None => true,
+            },
+            "paxos slots must be contiguous"
+        );
+        self.queue.push_back((slot, op));
+    }
+
+    /// Start the next batch if the pipeline is free: drains up to `batch`
+    /// queued entries and returns `(ballot, round, start_slot, ops)` to
+    /// fan out. The round nonce must ride the completion tokens.
+    pub fn pump(&mut self) -> Option<(u64, u64, u64, Vec<OpCall>)> {
+        if self.in_flight.is_some() {
+            return None;
+        }
+        let (start, _) = *self.queue.front()?;
+        let take = self.queue.len().min(self.batch);
+        let ops: Vec<OpCall> = self.queue.drain(..take).map(|(_, op)| op).collect();
+        self.round_id += 1;
+        self.in_flight = Some((start, ops.clone(), 0, 0));
+        Some((self.ballot, self.round_id, start, ops))
+    }
+
+    /// The engine reports how many followers the fan-out targeted.
+    pub fn round_started(&mut self, targeted: u32) {
+        self.targeted = targeted;
+    }
+
+    /// Feed one write completion (`ok` = ACK doorbell, else NACK) for the
+    /// in-flight batch identified by `(b, round, start_slot)`.
+    pub fn on_completion(&mut self, b: u64, round: u64, start_slot: u64, ok: bool) -> PaxosStep {
+        if b != self.ballot || round != self.round_id {
+            // Pre-takeover write, or a doorbell from a round that stalled
+            // and was re-pumped (same ballot and slots, older nonce).
+            return PaxosStep::Wait;
+        }
+        let need = self.quorum_followers();
+        let targeted = self.targeted;
+        let Some((start, ops, acks, fails)) = &mut self.in_flight else {
+            return PaxosStep::Wait; // completion after commit/stall
+        };
+        if *start != start_slot {
+            return PaxosStep::Wait;
+        }
+        if ok {
+            *acks += 1;
+        } else {
+            *fails += 1;
+        }
+        if *acks >= need {
+            let start = *start;
+            let ops = std::mem::take(ops);
+            self.in_flight = None;
+            self.committed += ops.len() as u64;
+            return PaxosStep::Commit { start_slot: start, ops };
+        }
+        let healthy_remaining = targeted.saturating_sub(*acks + *fails);
+        if *acks + healthy_remaining < need {
+            return PaxosStep::Stall;
+        }
+        PaxosStep::Wait
+    }
+
+    /// With no live followers the leader's own local append already *is*
+    /// the majority (cluster of one): commit the in-flight batch without
+    /// waiting for doorbells that can never arrive.
+    pub fn commit_if_solo(&mut self) -> Option<(u64, Vec<OpCall>)> {
+        if self.quorum_followers() > 0 {
+            return None;
+        }
+        let (start, ops, _, _) = self.in_flight.take()?;
+        self.committed += ops.len() as u64;
+        Some((start, ops))
+    }
+
+    /// Abandon the in-flight batch (stall/leader change): entries return to
+    /// the queue head, keeping their slots.
+    pub fn reset_in_flight(&mut self) {
+        if let Some((start, ops, _, _)) = self.in_flight.take() {
+            for (i, op) in ops.into_iter().enumerate().rev() {
+                self.queue.push_front((start + i as u64, op));
+            }
+        }
+    }
+
+    /// Drop all pipeline state (recovery snapshot install).
+    pub fn clear(&mut self) {
+        self.in_flight = None;
+        self.queue.clear();
+    }
+}
+
+/// Acceptor-side ballot promise: one register per replica. Real APUS keeps
+/// this check in NIC/driver logic next to the landing region; writes with
+/// stale ballots are ignored even if they land (belt to the QP fence's
+/// suspenders).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PaxosAcceptor {
+    pub promised: u64,
+}
+
+impl PaxosAcceptor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accept a write at ballot `b`? Adopts `b` when it is >= the promise.
+    pub fn accept(&mut self, b: u64) -> bool {
+        if b >= self.promised {
+            self.promised = b;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(n: u64) -> OpCall {
+        OpCall::new(1, n, 0, 0.0)
+    }
+
+    #[test]
+    fn ballots_are_unique_per_leader_and_monotone() {
+        assert!(ballot(2, 1) > ballot(1, 7));
+        assert_ne!(ballot(3, 1), ballot(3, 2));
+        assert_eq!(ballot_round(ballot(9, 4)), 9);
+    }
+
+    #[test]
+    fn majority_of_doorbells_commits() {
+        let mut l = PaxosLeader::new(0, 4, 1); // quorum = 2 follower doorbells
+        l.submit(0, op(42));
+        let (b, r, start, ops) = l.pump().unwrap();
+        assert_eq!((start, ops.len()), (0, 1));
+        l.round_started(3);
+        assert_eq!(l.on_completion(b, r, start, true), PaxosStep::Wait);
+        let s = l.on_completion(b, r, start, true);
+        assert_eq!(s, PaxosStep::Commit { start_slot: 0, ops: vec![op(42)] });
+        assert_eq!(l.committed, 1);
+        assert!(l.is_idle());
+    }
+
+    #[test]
+    fn batches_drain_up_to_batch_size() {
+        let mut l = PaxosLeader::new(0, 4, 2);
+        for slot in 0..3 {
+            l.submit(slot, op(slot));
+        }
+        let (b, r, start, ops) = l.pump().unwrap();
+        assert_eq!((start, ops.len()), (0, 2), "two entries coalesce");
+        assert!(l.pump().is_none(), "pipeline busy");
+        l.round_started(3);
+        l.on_completion(b, r, start, true);
+        let s = l.on_completion(b, r, start, true);
+        assert_eq!(s, PaxosStep::Commit { start_slot: 0, ops: vec![op(0), op(1)] });
+        let (_, _, start2, ops2) = l.pump().unwrap();
+        assert_eq!((start2, ops2.len()), (2, 1), "tail entry follows");
+    }
+
+    #[test]
+    fn stalls_when_quorum_impossible_and_requeues() {
+        let mut l = PaxosLeader::new(0, 4, 1); // need 2 follower doorbells
+        l.submit(0, op(1));
+        let (b, r, start, _) = l.pump().unwrap();
+        l.round_started(3);
+        assert_eq!(l.on_completion(b, r, start, false), PaxosStep::Wait);
+        let s = l.on_completion(b, r, start, false); // 1 healthy left < 2
+        assert_eq!(s, PaxosStep::Stall);
+        l.reset_in_flight();
+        assert_eq!(l.queue_len(), 1, "entry requeued at its slot");
+        let (_, _, start_again, _) = l.pump().unwrap();
+        assert_eq!(start_again, 0);
+    }
+
+    #[test]
+    fn stale_ballot_completions_ignored() {
+        let mut l = PaxosLeader::new(0, 4, 1);
+        l.submit(0, op(1));
+        let (b, r, start, _) = l.pump().unwrap();
+        l.round_started(3);
+        assert_eq!(l.on_completion(b + 256, r, start, true), PaxosStep::Wait);
+        assert_eq!(l.on_completion(b, r, start + 7, true), PaxosStep::Wait);
+        assert_eq!(l.on_completion(b, r, start, true), PaxosStep::Wait, "only 1 real ack");
+    }
+
+    #[test]
+    fn doorbell_from_aborted_round_never_counts_for_the_retry() {
+        // Stall with one real ACK still in flight, retry the same slots at
+        // the same ballot: the late doorbell must not reach quorum for the
+        // new round (the round nonce, not ballot/slot, is the guard).
+        let mut l = PaxosLeader::new(0, 5, 1); // need 2 follower doorbells
+        l.submit(0, op(9));
+        let (b, r1, start, _) = l.pump().unwrap();
+        l.round_started(4);
+        for _ in 0..3 {
+            let _ = l.on_completion(b, r1, start, false);
+        }
+        l.reset_in_flight();
+        l.set_cluster_size(2); // crashed peers left the live set; need 1
+        let (b2, r2, start2, _) = l.pump().unwrap();
+        assert_eq!((b2, start2), (b, start), "same ballot and slot re-fly");
+        assert_ne!(r1, r2);
+        l.round_started(1);
+        assert_eq!(l.on_completion(b, r1, start, true), PaxosStep::Wait, "stale doorbell");
+        assert!(matches!(l.on_completion(b2, r2, start2, true), PaxosStep::Commit { .. }));
+    }
+
+    #[test]
+    fn takeover_outbids_everything_seen() {
+        let mut l = PaxosLeader::new(2, 4, 1);
+        let old = ballot(5, 0);
+        l.assume_leadership(2, old);
+        assert!(l.ballot > old);
+        assert_eq!(l.ballot & 0xFF, 2, "ballot carries the leader id");
+    }
+
+    #[test]
+    fn acceptor_promises_monotonically() {
+        let mut a = PaxosAcceptor::new();
+        assert!(a.accept(ballot(1, 0)));
+        assert!(a.accept(ballot(1, 0)), "equal ballot re-accepted (same leader)");
+        assert!(a.accept(ballot(2, 1)));
+        assert!(!a.accept(ballot(1, 0)), "stale leader rejected");
+    }
+}

@@ -13,62 +13,91 @@ use std::collections::VecDeque;
 use crate::rdt::OpCall;
 use crate::sim::NodeId;
 
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum RaftStep {
     Wait,
-    /// Entry at `index` is committed: apply + respond to the client.
-    Commit { index: u64, op: OpCall },
+    /// The in-flight batch starting at `start_index` is committed: apply +
+    /// respond to each entry's client.
+    Commit { start_index: u64, ops: Vec<OpCall> },
 }
 
-/// Leader-side replication pipeline. One in-flight entry at a time
-/// (Waverunner's packet-serial fast path), queueing behind it.
+/// Leader-side replication pipeline. One in-flight *batch* at a time
+/// (Waverunner's packet-serial fast path is batch size 1), queueing behind
+/// it; `pump` drains up to `batch` queued entries into one AppendEntries.
 #[derive(Debug)]
 pub struct RaftLeader {
     pub term: u64,
     n: usize,
+    batch: usize,
     next_index: u64,
-    in_flight: Option<(u64, OpCall, u32)>, // (index, op, acks)
+    in_flight: Option<(u64, Vec<OpCall>, u32)>, // (start_index, ops, acks)
     queue: VecDeque<(u64, OpCall)>,
     pub committed: u64,
 }
 
 impl RaftLeader {
     pub fn new(n: usize) -> Self {
-        RaftLeader { term: 1, n, next_index: 0, in_flight: None, queue: VecDeque::new(), committed: 0 }
+        Self::with_batch(n, 1)
+    }
+
+    pub fn with_batch(n: usize, batch: usize) -> Self {
+        RaftLeader {
+            term: 1,
+            n,
+            batch: batch.max(1),
+            next_index: 0,
+            in_flight: None,
+            queue: VecDeque::new(),
+            committed: 0,
+        }
+    }
+
+    /// A follower taking over after an election (generic Raft backend):
+    /// next entries append after the adopted log, at a higher term.
+    pub fn promote(n: usize, batch: usize, term: u64, next_index: u64) -> Self {
+        let mut l = Self::with_batch(n, batch);
+        l.term = term;
+        l.next_index = next_index;
+        l
     }
 
     fn majority_acks(&self) -> u32 {
         (self.n / 2) as u32 // leader's own log write is the +1 vote
     }
 
-    /// Client op arrives at the leader. The entry's log index is assigned
-    /// immediately (so callers can key pending requests on it); the
-    /// AppendEntries fan-out is returned only if the pipeline was empty.
-    pub fn submit(&mut self, op: OpCall) -> (u64, Option<(u64, u64, OpCall)>) {
-        let index = self.next_index;
-        self.next_index += 1;
-        if self.in_flight.is_some() {
-            self.queue.push_back((index, op));
-            return (index, None);
-        }
-        self.in_flight = Some((index, op, 0));
-        (index, Some((self.term, index, op)))
+    pub fn set_cluster_size(&mut self, n: usize) {
+        self.n = n;
     }
 
-    /// Follower ack for `index`.
+    /// Client op arrives at the leader. The entry's log index is assigned
+    /// immediately (so callers can key pending requests on it); an
+    /// AppendEntries fan-out is returned only if the pipeline was empty.
+    pub fn submit(&mut self, op: OpCall) -> (u64, Option<(u64, u64, Vec<OpCall>)>) {
+        let index = self.next_index;
+        self.next_index += 1;
+        self.queue.push_back((index, op));
+        if self.in_flight.is_some() {
+            return (index, None);
+        }
+        (index, self.pump())
+    }
+
+    /// Follower ack for the *last* index of the in-flight batch (followers
+    /// ack a batch once, after appending all of it).
     pub fn on_ack(&mut self, term: u64, index: u64) -> RaftStep {
         if term != self.term {
             return RaftStep::Wait;
         }
         let majority = self.majority_acks();
         match &mut self.in_flight {
-            Some((idx, op, acks)) if *idx == index => {
+            Some((start, ops, acks)) if *start + ops.len() as u64 - 1 == index => {
                 *acks += 1;
                 if *acks >= majority {
-                    let (i, o) = (*idx, *op);
+                    let start = *start;
+                    let ops = std::mem::take(ops);
                     self.in_flight = None;
-                    self.committed += 1;
-                    RaftStep::Commit { index: i, op: o }
+                    self.committed += ops.len() as u64;
+                    RaftStep::Commit { start_index: start, ops }
                 } else {
                     RaftStep::Wait
                 }
@@ -77,14 +106,17 @@ impl RaftLeader {
         }
     }
 
-    /// After a commit, start the next queued entry if any.
-    pub fn pump(&mut self) -> Option<(u64, u64, OpCall)> {
+    /// After a commit, start the next queued batch (up to `batch` entries)
+    /// if any.
+    pub fn pump(&mut self) -> Option<(u64, u64, Vec<OpCall>)> {
         if self.in_flight.is_some() {
             return None;
         }
-        let (index, op) = self.queue.pop_front()?;
-        self.in_flight = Some((index, op, 0));
-        Some((self.term, index, op))
+        let (start, _) = *self.queue.front()?;
+        let take = self.queue.len().min(self.batch);
+        let ops: Vec<OpCall> = self.queue.drain(..take).map(|(_, op)| op).collect();
+        self.in_flight = Some((start, ops.clone(), 0));
+        Some((self.term, start, ops))
     }
 
     pub fn queue_len(&self) -> usize {
@@ -123,11 +155,39 @@ impl RaftFollower {
         true
     }
 
+    /// Batched AppendEntries: contiguous run starting at `start`; accepted
+    /// all-or-nothing (a gap rejects the whole batch).
+    pub fn on_append_batch(&mut self, term: u64, start: u64, ops: &[OpCall]) -> bool {
+        if term < self.term || start as usize > self.entries.len() {
+            return false;
+        }
+        self.term = term;
+        for (i, op) in ops.iter().enumerate() {
+            let idx = start as usize + i;
+            if idx == self.entries.len() {
+                self.entries.push(*op);
+            } else {
+                self.entries[idx] = *op;
+            }
+        }
+        true
+    }
+
     /// Apply contiguous entries (followers apply on the leader's heels).
     pub fn drain_apply(&mut self) -> Vec<OpCall> {
         let out: Vec<OpCall> = self.entries[self.applied as usize..].to_vec();
         self.applied = self.entries.len() as u64;
         out
+    }
+
+    /// Accepted log length (a promoted leader appends after this point).
+    pub fn log_len(&self) -> u64 {
+        self.entries.len() as u64
+    }
+
+    /// Full accepted log (a promoted leader's takeover replay source).
+    pub fn entries(&self) -> &[OpCall] {
+        &self.entries
     }
 
     /// Waverunner followers reject client requests (redirect to leader).
@@ -153,10 +213,11 @@ mod tests {
     fn three_node_commit_needs_one_follower_ack() {
         let mut l = RaftLeader::new(3);
         let (idx, fanout) = l.submit(op(1));
-        let (term, fidx, _) = fanout.unwrap();
+        let (term, fidx, ops) = fanout.unwrap();
         assert_eq!((term, fidx, idx), (1, 0, 0));
+        assert_eq!(ops, vec![op(1)]);
         let s = l.on_ack(1, 0);
-        assert_eq!(s, RaftStep::Commit { index: 0, op: op(1) });
+        assert_eq!(s, RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
     }
 
     #[test]
@@ -167,9 +228,37 @@ mod tests {
         assert_eq!(idx2, 1, "index assigned immediately");
         assert!(fanout2.is_none(), "queued behind in-flight");
         l.on_ack(1, 0);
-        let (_, idx, o) = l.pump().unwrap();
+        let (_, idx, ops) = l.pump().unwrap();
         assert_eq!(idx, 1);
-        assert_eq!(o.a, 2);
+        assert_eq!(ops[0].a, 2);
+    }
+
+    #[test]
+    fn batched_leader_coalesces_queued_entries() {
+        let mut l = RaftLeader::with_batch(3, 2);
+        // Empty pipeline: the first submit fans out alone.
+        let (_, f1) = l.submit(op(1));
+        assert_eq!(f1.unwrap().2.len(), 1);
+        l.submit(op(2));
+        l.submit(op(3));
+        // Batch acked on its last index only.
+        assert_eq!(l.on_ack(1, 0), RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
+        let (_, start, ops) = l.pump().unwrap();
+        assert_eq!((start, ops.len()), (1, 2), "two queued entries coalesce");
+        assert_eq!(l.on_ack(1, 1), RaftStep::Wait, "mid-batch index ignored");
+        let s = l.on_ack(1, 2);
+        assert_eq!(s, RaftStep::Commit { start_index: 1, ops: vec![op(2), op(3)] });
+        assert_eq!(l.committed, 3);
+    }
+
+    #[test]
+    fn follower_batch_append_all_or_nothing() {
+        let mut f = RaftFollower::new();
+        assert!(f.on_append_batch(1, 0, &[op(1), op(2)]));
+        assert!(!f.on_append_batch(1, 5, &[op(9)]), "gap rejected");
+        assert!(f.on_append_batch(1, 2, &[op(3)]));
+        assert_eq!(f.log_len(), 3);
+        assert_eq!(f.drain_apply().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Cross-backend equivalence suite — the "Replication-Aware
+//! Linearizability"-style oracle for the consensus backends: identical
+//! fixed-seed workloads must drive Mu, Raft, and Paxos to the same
+//! abstract RDT state.
+//!
+//! What "same" can mean is type-dependent, and the assertions are chosen
+//! to be exact where exactness is *constructible*:
+//!
+//! * CRDT workloads (counter/sets) never route to the strong path and are
+//!   commutative, so all three backends must be **bit-identical** — same
+//!   digests, same event count, same completions.
+//! * A rejection-proof Account workload (total worst-case withdrawal
+//!   volume below the seed balance, so no interleaving can reject) makes
+//!   the conflicting path itself byte-comparable: every backend, at every
+//!   batch size, must land on identical final store digests and commit
+//!   counts.
+//! * Heavy WRDT workloads (Account/Auction at realistic mixes) keep the
+//!   per-backend guarantees — convergence, integrity, full completion —
+//!   but not byte-equality: permissibility outcomes are
+//!   interleaving-dependent by design (the same reason
+//!   `prop_summarization_preserves_state` carves out Account), and each
+//!   backend schedules time differently.
+
+use safardb::config::{ConsensusBackend, SimConfig, WorkloadKind};
+use safardb::engine::cluster::{self, RunReport};
+use safardb::rdt::RdtKind;
+
+fn run_backend(mut cfg: SimConfig, backend: ConsensusBackend) -> RunReport {
+    cfg.backend = backend;
+    let rep = cluster::run(cfg);
+    assert!(rep.converged(), "{}: replicas diverged: {:?}", backend.name(), rep.digests);
+    assert!(rep.invariants_ok, "{}: integrity violated", backend.name());
+    rep
+}
+
+#[test]
+fn crdt_workloads_are_bit_identical_across_backends() {
+    // No conflicting ops → the strong path never runs, and no backend may
+    // perturb the event stream even at boot (no stray timers, no refresh
+    // cost). The strongest possible cross-backend assertion holds.
+    for rdt in [RdtKind::PnCounter, RdtKind::GSet, RdtKind::TwoPSet] {
+        for seed in [0xE0_0001u64, 0xE0_0002] {
+            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+            cfg.total_ops = 8_000;
+            cfg.update_pct = 30;
+            cfg.seed = seed;
+            let reps: Vec<RunReport> =
+                ConsensusBackend::ALL.iter().map(|&b| run_backend(cfg.clone(), b)).collect();
+            for rep in &reps[1..] {
+                assert_eq!(
+                    reps[0].digests,
+                    rep.digests,
+                    "{}: backend changed CRDT state",
+                    rdt.name()
+                );
+                assert_eq!(
+                    reps[0].metrics.events,
+                    rep.metrics.events,
+                    "{}: backend perturbed the event stream",
+                    rdt.name()
+                );
+                assert_eq!(reps[0].metrics.total_completed(), rep.metrics.total_completed());
+            }
+        }
+    }
+}
+
+/// Account workload that cannot reject in *any* interleaving: at 100%
+/// updates and 12 total ops, worst case is 12 withdrawals at the
+/// generator's 80-unit cap = 960, below the 1000 seed balance. With the
+/// rejected-set pinned (empty), the final balance is the order-free sum of
+/// the issued deltas — byte-comparable across backends and batch sizes.
+fn rejection_proof_account(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 100;
+    cfg.total_ops = 12;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn conflicting_path_digests_identical_across_backends() {
+    for seed in [0xACC_0001u64, 0xACC_0002, 0xACC_0003] {
+        let cfg = rejection_proof_account(seed);
+        let reps: Vec<RunReport> =
+            ConsensusBackend::ALL.iter().map(|&b| run_backend(cfg.clone(), b)).collect();
+        for (i, rep) in reps.iter().enumerate() {
+            assert_eq!(rep.metrics.rejected, 0, "workload is rejection-proof by construction");
+            assert_eq!(
+                reps[0].digests[0], rep.digests[0],
+                "{}: conflicting-path state diverged from mu (seed {seed:#x})",
+                ConsensusBackend::ALL[i].name()
+            );
+            assert_eq!(
+                reps[0].metrics.smr_commits, rep.metrics.smr_commits,
+                "{}: commit count diverged (seed {seed:#x})",
+                ConsensusBackend::ALL[i].name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_runs_reproduce_unbatched_digests_on_conflicting_path() {
+    // Leader-side log-entry batching may re-time commits, never change
+    // them: with rejections pinned off, any batch size must reproduce the
+    // unbatched digest under every backend.
+    for backend in ConsensusBackend::ALL {
+        let base = run_backend(rejection_proof_account(0xBA_7C4), backend);
+        for batch in [4u32, 16] {
+            let mut cfg = rejection_proof_account(0xBA_7C4);
+            cfg.batch_size = batch;
+            let rep = run_backend(cfg, backend);
+            assert_eq!(
+                base.digests[0],
+                rep.digests[0],
+                "{} batch={batch}: batching changed outcomes",
+                backend.name()
+            );
+            assert_eq!(base.metrics.rejected, rep.metrics.rejected);
+        }
+    }
+}
+
+#[test]
+fn wrdt_workloads_converge_under_every_backend() {
+    // Realistic conflicting mixes: rejections are interleaving-dependent,
+    // so the oracle is per-backend convergence + integrity + full
+    // completion, with the strong path demonstrably exercised.
+    for rdt in [RdtKind::Account, RdtKind::Auction] {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+        cfg.n_replicas = 4;
+        cfg.update_pct = 30;
+        cfg.total_ops = 10_000;
+        cfg.seed = 0xE9_0000 + rdt as u64;
+        let target = cfg.total_ops / cfg.n_replicas as u64 * cfg.n_replicas as u64;
+        for backend in ConsensusBackend::ALL {
+            let rep = run_backend(cfg.clone(), backend);
+            assert_eq!(
+                rep.metrics.total_completed(),
+                target,
+                "{}/{}: lost client completions",
+                backend.name(),
+                rdt.name()
+            );
+            assert!(
+                rep.metrics.smr_commits > 0,
+                "{}/{}: strong path unexercised",
+                backend.name(),
+                rdt.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_knob_reaches_the_wire() {
+    // Sanity that the knob actually swaps protocols (not just labels):
+    // Paxos acks ride wire completions (no RaftAck verbs), Raft acks are
+    // logical verbs, and per-op verb counts differ accordingly.
+    let cfg = |b: ConsensusBackend| {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        c.n_replicas = 3;
+        c.update_pct = 50;
+        c.total_ops = 3_000;
+        c.backend = b;
+        c
+    };
+    let mu = cluster::run(cfg(ConsensusBackend::Mu));
+    let raft = cluster::run(cfg(ConsensusBackend::Raft));
+    let paxos = cluster::run(cfg(ConsensusBackend::Paxos));
+    assert!(mu.metrics.smr_commits > 0);
+    assert!(raft.metrics.smr_commits > 0);
+    assert!(paxos.metrics.smr_commits > 0);
+    // Mu's 4-round pipeline puts strictly more verbs on the wire per
+    // commit than Paxos's single one-sided write round.
+    let mu_rate = mu.metrics.verbs as f64 / mu.metrics.smr_commits as f64;
+    let paxos_rate = paxos.metrics.verbs as f64 / paxos.metrics.smr_commits as f64;
+    assert!(
+        mu_rate > paxos_rate,
+        "expected Mu to spend more verbs per commit: mu={mu_rate:.2} paxos={paxos_rate:.2}"
+    );
+}

@@ -1,0 +1,123 @@
+//! Per-path batching determinism: coalescing queued submissions into one
+//! wire verb may re-time propagation, but it must never change outcomes.
+//!
+//! The property is asserted where it is *constructible*: commutative CRDT
+//! workloads (sums/unions are order-free and rejection-free, so the final
+//! state is a pure function of the issued op multiset, which is seed-fixed
+//! regardless of timing). The conflicting-path analogue lives in
+//! `backend_equivalence.rs` (`batched_runs_reproduce_unbatched_digests_*`)
+//! on a rejection-proof Account workload. A latency-monotonicity sanity
+//! check rides along on every emitted histogram: quantiles must be
+//! monotone (p50 <= p99 <= max), batched or not.
+
+use safardb::config::{SimConfig, WorkloadKind};
+use safardb::engine::cluster::{self, RunReport};
+use safardb::prop_assert;
+use safardb::rdt::RdtKind;
+use safardb::util::prop;
+
+fn latency_monotone(rep: &RunReport) -> bool {
+    let h = &rep.metrics.response;
+    h.p50() <= h.p99() && h.p99() <= h.max()
+}
+
+#[test]
+fn prop_batching_changes_timing_never_outcomes() {
+    prop::check("batching-determinism", 0xba7c4, 10, |rng| {
+        let rdt =
+            *rng.choose(&[RdtKind::PnCounter, RdtKind::GSet, RdtKind::PnSet, RdtKind::TwoPSet]);
+        let seed = rng.next_u64();
+        let n = 3 + rng.gen_range(5) as usize;
+        let update_pct = 20 + rng.gen_range(40) as u8;
+        let run_at = |batch: u32| {
+            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+            cfg.n_replicas = n;
+            cfg.update_pct = update_pct;
+            cfg.total_ops = 6_000;
+            cfg.seed = seed;
+            cfg.batch_size = batch;
+            let rep = cluster::run(cfg);
+            assert!(
+                rep.converged() && rep.invariants_ok,
+                "{} n={n} u={update_pct} batch={batch}: basic guarantees broke",
+                rdt.name()
+            );
+            rep
+        };
+        let base = run_at(1);
+        prop_assert!(
+            base.metrics.coalesced == 0,
+            "batch_size=1 must never emit batch verbs (coalesced={})",
+            base.metrics.coalesced
+        );
+        prop_assert!(latency_monotone(&base), "unbatched histogram quantiles not monotone");
+        for batch in [4u32, 16] {
+            let rep = run_at(batch);
+            prop_assert!(
+                rep.digests[0] == base.digests[0],
+                "{} n={n} u={update_pct} batch={batch}: batching changed the converged \
+                 state ({:#x} vs {:#x})",
+                rdt.name(),
+                rep.digests[0],
+                base.digests[0]
+            );
+            prop_assert!(
+                rep.metrics.total_completed() == base.metrics.total_completed(),
+                "{} batch={batch}: client completions diverged",
+                rdt.name()
+            );
+            prop_assert!(
+                latency_monotone(&rep),
+                "{} batch={batch}: histogram quantiles not monotone",
+                rdt.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn coalescer_engages_under_pressure_and_only_when_enabled() {
+    // 8 closed-loop slots at 100% reducible updates submit several ops per
+    // poll interval, so the coalescer must merge; with batch_size=1 the
+    // batch payloads must never appear.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 100;
+    cfg.clients_per_replica = 8;
+    cfg.total_ops = 8_000;
+    cfg.batch_size = 8;
+    let batched = cluster::run(cfg.clone());
+    assert!(batched.converged() && batched.invariants_ok);
+    assert!(
+        batched.metrics.coalesced > 0,
+        "no merges despite 100% updates over 8 slots per replica"
+    );
+    assert!(latency_monotone(&batched));
+
+    cfg.batch_size = 1;
+    let unbatched = cluster::run(cfg);
+    assert_eq!(unbatched.metrics.coalesced, 0, "unbatched run emitted batch verbs");
+    assert_eq!(
+        unbatched.digests[0], batched.digests[0],
+        "coalescing changed the converged counter state"
+    );
+    assert_eq!(unbatched.metrics.total_completed(), batched.metrics.total_completed());
+}
+
+#[test]
+fn irreducible_fifo_survives_batching() {
+    // PN-Set correctness depends on per-origin insert/remove order; the
+    // QueueBatch payload must preserve FIFO inside and across chunks.
+    for batch in [1u32, 4, 16] {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnSet));
+        cfg.n_replicas = 5;
+        cfg.update_pct = 60;
+        cfg.total_ops = 8_000;
+        cfg.seed = 0xF1F0;
+        cfg.batch_size = batch;
+        let rep = cluster::run(cfg);
+        assert!(rep.converged(), "batch={batch}: diverged {:?}", rep.digests);
+        assert!(rep.invariants_ok, "batch={batch}");
+    }
+}

@@ -7,7 +7,7 @@
 
 use std::fmt::Write as _;
 
-use safardb::config::{FaultSpec, SimConfig, SystemKind, WorkloadKind};
+use safardb::config::{ConsensusBackend, FaultSpec, SimConfig, SystemKind, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::prop_assert;
 use safardb::rdt::RdtKind;
@@ -145,6 +145,16 @@ fn digest_pins_are_stable() {
              regenerate it, and commit the new file."
         ),
         Err(_) => {
+            // CI must never silently re-baseline: a missing pin file there
+            // means the committed guard was deleted (or never landed), and
+            // auto-writing would accept whatever the current build produces.
+            if std::env::var("CI").map(|v| v == "true" || v == "1").unwrap_or(false) {
+                panic!(
+                    "tests/data/digest_pins.txt is missing and CI=true. CI never \
+                     re-baselines digest pins; run this test locally once to \
+                     generate the file and commit it. Current table:\n{table}"
+                );
+            }
             if let Some(parent) = pin_path.parent() {
                 let _ = std::fs::create_dir_all(parent);
             }
@@ -156,4 +166,65 @@ fn digest_pins_are_stable() {
             );
         }
     }
+}
+
+// ----- Paxos backend failure coverage ----------------------------------
+//
+// The APUS-style strong path must survive the same §3 fault model as Mu:
+// follower crash-then-recover (snapshot + leader replay), and the harder
+// leader-crash cases — mid-quorum crash with re-election, and an
+// ex-leader returning as a follower (the donor's leader view installs
+// with the snapshot so it cannot come back believing it still leads).
+
+fn paxos_cfg(rdt: safardb::rdt::RdtKind) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+    cfg.backend = ConsensusBackend::Paxos;
+    cfg
+}
+
+#[test]
+fn paxos_follower_crash_then_recover_converges() {
+    for rdt in [RdtKind::Account, RdtKind::Auction] {
+        let mut cfg = paxos_cfg(rdt);
+        cfg.n_replicas = 4;
+        cfg.update_pct = 25;
+        cfg.total_ops = 8_000;
+        cfg.fault = Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 });
+        let rep = cluster::run(cfg);
+        assert!(!rep.crashed[2], "{}: node 2 must be back", rdt.name());
+        assert!(rep.converged(), "{}: diverged: {:?}", rdt.name(), rep.digests);
+        assert!(rep.invariants_ok, "{}: integrity broke", rdt.name());
+        assert!(rep.metrics.smr_commits > 0, "{}: paxos path unexercised", rdt.name());
+    }
+}
+
+#[test]
+fn paxos_leader_crash_mid_quorum_re_elects() {
+    let mut cfg = paxos_cfg(RdtKind::Account);
+    cfg.n_replicas = 5;
+    cfg.update_pct = 40;
+    cfg.total_ops = 12_000;
+    cfg.fault = Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 });
+    let rep = cluster::run(cfg);
+    assert!(rep.crashed[0], "initial leader stays down");
+    assert_ne!(rep.leader, 0, "a successor leads");
+    assert!(rep.metrics.elections >= 1, "re-election happened");
+    assert!(rep.converged(), "diverged: {:?}\n{}", rep.digests, rep.dumps.join("\n---\n"));
+    assert!(rep.invariants_ok, "integrity broke after leader crash");
+    assert!(rep.metrics.smr_commits > 0);
+}
+
+#[test]
+fn paxos_leader_crash_then_recover_rejoins_as_follower() {
+    let mut cfg = paxos_cfg(RdtKind::Account);
+    cfg.n_replicas = 4;
+    cfg.update_pct = 30;
+    cfg.total_ops = 10_000;
+    cfg.fault = Some(FaultSpec::CrashThenRecover { node: 0, crash_pct: 30, recover_pct: 60 });
+    let rep = cluster::run(cfg);
+    assert!(!rep.crashed[0], "ex-leader recovered");
+    assert_eq!(rep.leader, 1, "leadership stays with the elected successor");
+    assert!(rep.metrics.elections >= 1);
+    assert!(rep.converged(), "diverged: {:?}\n{}", rep.digests, rep.dumps.join("\n---\n"));
+    assert!(rep.invariants_ok, "integrity broke across recovery");
 }
