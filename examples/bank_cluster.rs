@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example bank_cluster`
 
-use safardb::config::{FaultSpec, SimConfig, WorkloadKind};
+use safardb::config::{FaultSchedule, SimConfig, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::rdt::RdtKind;
 
@@ -14,7 +14,7 @@ fn main() {
     cfg.n_replicas = 8;
     cfg.update_pct = 25;
     cfg.total_ops = 200_000;
-    cfg.fault = Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 50 });
+    cfg.fault = FaultSchedule::crash_leader_at(50);
 
     println!("Bank Account, 8 replicas, 25% updates, leader crash at 50%...\n");
     let rep = cluster::run(cfg);

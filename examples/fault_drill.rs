@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example fault_drill`
 
-use safardb::config::{FaultSpec, SimConfig, SystemKind, WorkloadKind};
+use safardb::config::{FaultSchedule, SimConfig, SystemKind, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::rdt::RdtKind;
 
@@ -12,10 +12,10 @@ fn main() {
     println!("{:<26} {:>10} {:>10} {:>9} {:>10} {:>6}", "scenario", "rt_us", "tput", "elections", "p50switch", "conv");
     for system in [SystemKind::SafarDb, SystemKind::Hamband] {
         for (label, rdt, fault) in [
-            ("baseline", RdtKind::Account, None),
-            ("follower-crash", RdtKind::Account, Some(FaultSpec::CrashAtFraction { node: 3, fraction_pct: 50 })),
-            ("leader-crash", RdtKind::Account, Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 50 })),
-            ("crdt-replica-crash", RdtKind::TwoPSet, Some(FaultSpec::CrashAtFraction { node: 2, fraction_pct: 50 })),
+            ("baseline", RdtKind::Account, FaultSchedule::none()),
+            ("follower-crash", RdtKind::Account, FaultSchedule::crash_at(3, 50)),
+            ("leader-crash", RdtKind::Account, FaultSchedule::crash_leader_at(50)),
+            ("crdt-replica-crash", RdtKind::TwoPSet, FaultSchedule::crash_at(2, 50)),
         ] {
             let mut cfg = match system {
                 SystemKind::SafarDb => SimConfig::safardb(WorkloadKind::Micro(rdt)),

@@ -77,16 +77,267 @@ pub enum PropagationMode {
     WriteThrough,
 }
 
-/// Fault injection plan (Fig 14, §3 fault model).
+/// One fault action in a [`FaultSchedule`] (§3 fault model, generalized:
+/// crash-stop, crash-recover, link partitions, packet loss, delay spikes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FaultSpec {
-    /// Crash a specific node once a fraction of ops have completed.
-    CrashAtFraction { node: usize, fraction_pct: u8 },
-    /// Crash whoever is leader at that point (Fig 14 c/d).
-    CrashLeaderAtFraction { fraction_pct: u8 },
-    /// Crash a follower, then bring it back ("return to functionality",
-    /// §3): the leader detects the resumed heartbeat and replays its log.
-    CrashThenRecover { node: usize, crash_pct: u8, recover_pct: u8 },
+pub enum FaultAction {
+    /// Crash a node (`None` = whoever leads at the trigger point).
+    Crash { node: Option<usize> },
+    /// Bring a crashed node back ("return to functionality", §3): the
+    /// cluster snapshots a live donor into it and the leader's
+    /// heartbeat-driven log replay covers the rest.
+    Recover { node: usize },
+    /// Cut the `a <-> b` link in both directions. Senders observe the cut
+    /// like they observe a crash: verbs NACK after the retransmission
+    /// timeout (and still occupy the in-order channel — no free lane).
+    PartitionLinks { a: usize, b: usize },
+    /// Repair every cut link; the current leader replays its strong log to
+    /// the formerly unreachable side (anti-entropy on heal).
+    HealLinks,
+    /// Silently lose the next `count` verbs on the directed `src -> dst`
+    /// link (completion-carrying verbs still NACK at the retransmission
+    /// timeout, so initiators observe the loss).
+    DropNext { src: usize, dst: usize, count: u32 },
+    /// Multiply the one-way latency of the directed `src -> dst` link by
+    /// `factor_pct`/100 until `until_pct` % of ops have completed.
+    DelaySpike { src: usize, dst: usize, factor_pct: u32, until_pct: u8 },
+}
+
+impl FaultAction {
+    /// Round-trips through [`FaultSchedule::parse`] when prefixed with
+    /// `@pct`; also the per-incident label in chaos telemetry/CSV.
+    pub fn label(&self) -> String {
+        match *self {
+            FaultAction::Crash { node: Some(n) } => format!("crash:{n}"),
+            FaultAction::Crash { node: None } => "crash:leader".into(),
+            FaultAction::Recover { node } => format!("recover:{node}"),
+            FaultAction::PartitionLinks { a, b } => format!("partition:{a}-{b}"),
+            FaultAction::HealLinks => "heal".into(),
+            FaultAction::DropNext { src, dst, count } => format!("drop:{src}-{dst}x{count}"),
+            FaultAction::DelaySpike { src, dst, factor_pct, until_pct } => {
+                format!("delay:{src}-{dst}x{factor_pct}u{until_pct}")
+            }
+        }
+    }
+}
+
+/// A fault action armed at a completed-ops watermark (`at_pct` % of the
+/// run's op target).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimedFault {
+    pub at_pct: u8,
+    pub action: FaultAction,
+}
+
+/// Deterministic fault-injection plan: an ordered list of timed actions.
+/// Empty = fault-free (bit-identical to the engine with no fault plumbing).
+/// Parseable from kv/CLI — see [`FaultSchedule::parse`] for the grammar.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    pub incidents: Vec<TimedFault>,
+}
+
+impl FaultSchedule {
+    pub fn none() -> Self {
+        FaultSchedule::default()
+    }
+
+    pub fn single(at_pct: u8, action: FaultAction) -> Self {
+        FaultSchedule { incidents: vec![TimedFault { at_pct, action }] }
+    }
+
+    pub fn push(&mut self, at_pct: u8, action: FaultAction) -> &mut Self {
+        self.incidents.push(TimedFault { at_pct, action });
+        self
+    }
+
+    /// Fig 14 a/b: crash `node` once `pct` % of ops completed.
+    pub fn crash_at(node: usize, pct: u8) -> Self {
+        Self::single(pct, FaultAction::Crash { node: Some(node) })
+    }
+
+    /// Fig 14 c/d: crash whoever leads at the watermark.
+    pub fn crash_leader_at(pct: u8) -> Self {
+        Self::single(pct, FaultAction::Crash { node: None })
+    }
+
+    /// §3 "return to functionality": crash then recover the same node.
+    pub fn crash_then_recover(node: usize, crash_pct: u8, recover_pct: u8) -> Self {
+        let mut s = Self::crash_at(node, crash_pct);
+        s.push(recover_pct, FaultAction::Recover { node });
+        s
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.incidents.is_empty()
+    }
+
+    /// Whether the schedule contains link-level faults (partition / drop /
+    /// delay). These switch the relaxed path into tracked-completion mode
+    /// (retry until ACK + at-most-once dedup); crash-only schedules keep
+    /// the classic fire-and-forget fan-out so existing digests hold.
+    pub fn has_link_faults(&self) -> bool {
+        self.incidents.iter().any(|i| {
+            matches!(
+                i.action,
+                FaultAction::PartitionLinks { .. }
+                    | FaultAction::HealLinks
+                    | FaultAction::DropNext { .. }
+                    | FaultAction::DelaySpike { .. }
+            )
+        })
+    }
+
+    /// Human-readable round-trip form (`crash@40:0,partition@50:0-2,...`).
+    pub fn label(&self) -> String {
+        if self.incidents.is_empty() {
+            return "none".into();
+        }
+        self.incidents
+            .iter()
+            .map(|i| {
+                let a = i.action.label();
+                match a.split_once(':') {
+                    Some((kind, args)) => format!("{kind}@{}:{args}", i.at_pct),
+                    None => format!("{a}@{}", i.at_pct),
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Parse a comma-separated schedule. Grammar (one incident per item):
+    ///
+    /// ```text
+    /// crash@<pct>:<node|leader>      partition@<pct>:<a>-<b>
+    /// recover@<pct>:<node>           heal@<pct>
+    /// drop@<pct>:<src>-<dst>x<count>
+    /// delay@<pct>:<src>-<dst>x<factor_pct>u<until_pct>
+    /// ```
+    ///
+    /// `none` (or an empty string) parses to the empty schedule.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(FaultSchedule::none());
+        }
+        let mut out = FaultSchedule::none();
+        for item in s.split(',') {
+            let item = item.trim();
+            let bad = |why: &str| format!("fault incident '{item}': {why}");
+            let (head, args) = match item.split_once(':') {
+                Some((h, a)) => (h, Some(a)),
+                None => (item, None),
+            };
+            let (kind, pct) =
+                head.split_once('@').ok_or_else(|| bad("expected <kind>@<pct>"))?;
+            let at_pct: u8 = pct.parse().map_err(|_| bad("bad percentage"))?;
+            let node = |v: &str| v.parse::<usize>().map_err(|_| bad("bad node id"));
+            let pair = |v: &str| -> Result<(usize, usize), String> {
+                let (a, b) = v.split_once('-').ok_or_else(|| bad("expected <a>-<b>"))?;
+                Ok((node(a)?, node(b)?))
+            };
+            let action = match kind {
+                "crash" => {
+                    let v = args.ok_or_else(|| bad("crash needs :<node|leader>"))?;
+                    if v == "leader" {
+                        FaultAction::Crash { node: None }
+                    } else {
+                        FaultAction::Crash { node: Some(node(v)?) }
+                    }
+                }
+                "recover" => {
+                    FaultAction::Recover { node: node(args.ok_or_else(|| bad("recover needs :<node>"))?)? }
+                }
+                "partition" => {
+                    let (a, b) = pair(args.ok_or_else(|| bad("partition needs :<a>-<b>"))?)?;
+                    FaultAction::PartitionLinks { a, b }
+                }
+                "heal" => {
+                    if args.is_some() {
+                        return Err(bad("heal takes no arguments"));
+                    }
+                    FaultAction::HealLinks
+                }
+                "drop" => {
+                    let v = args.ok_or_else(|| bad("drop needs :<src>-<dst>x<count>"))?;
+                    let (links, count) = v.split_once('x').ok_or_else(|| bad("expected x<count>"))?;
+                    let (src, dst) = pair(links)?;
+                    let count: u32 = count.parse().map_err(|_| bad("bad drop count"))?;
+                    FaultAction::DropNext { src, dst, count }
+                }
+                "delay" => {
+                    let v = args.ok_or_else(|| bad("delay needs :<src>-<dst>x<factor_pct>u<until_pct>"))?;
+                    let (links, rest) = v.split_once('x').ok_or_else(|| bad("expected x<factor>"))?;
+                    let (src, dst) = pair(links)?;
+                    let (factor, until) =
+                        rest.split_once('u').ok_or_else(|| bad("expected u<until_pct>"))?;
+                    let factor_pct: u32 = factor.parse().map_err(|_| bad("bad delay factor"))?;
+                    let until_pct: u8 = until.parse().map_err(|_| bad("bad until pct"))?;
+                    FaultAction::DelaySpike { src, dst, factor_pct, until_pct }
+                }
+                other => return Err(bad(&format!("unknown fault kind '{other}'"))),
+            };
+            out.push(at_pct, action);
+        }
+        Ok(out)
+    }
+
+    /// Structural validation against a cluster size.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let chk = |id: usize, what: &str| {
+            if id >= n {
+                Err(format!("fault schedule: {what} {id} out of range (n = {n})"))
+            } else {
+                Ok(())
+            }
+        };
+        for inc in &self.incidents {
+            if inc.at_pct > 100 {
+                return Err(format!("fault schedule: at_pct {} > 100", inc.at_pct));
+            }
+            match inc.action {
+                FaultAction::Crash { node: Some(nd) } => chk(nd, "crash node")?,
+                FaultAction::Crash { node: None } => {}
+                FaultAction::Recover { node } => chk(node, "recover node")?,
+                FaultAction::PartitionLinks { a, b } => {
+                    chk(a, "partition endpoint")?;
+                    chk(b, "partition endpoint")?;
+                    if a == b {
+                        return Err("fault schedule: partition endpoints must differ".into());
+                    }
+                }
+                FaultAction::HealLinks => {}
+                FaultAction::DropNext { src, dst, count } => {
+                    chk(src, "drop src")?;
+                    chk(dst, "drop dst")?;
+                    if src == dst {
+                        return Err("fault schedule: drop endpoints must differ".into());
+                    }
+                    if count == 0 {
+                        return Err("fault schedule: drop count must be >= 1".into());
+                    }
+                }
+                FaultAction::DelaySpike { src, dst, factor_pct, until_pct } => {
+                    chk(src, "delay src")?;
+                    chk(dst, "delay dst")?;
+                    if src == dst {
+                        return Err("fault schedule: delay endpoints must differ".into());
+                    }
+                    if factor_pct == 0 {
+                        return Err("fault schedule: delay factor must be >= 1 %".into());
+                    }
+                    if until_pct > 100 {
+                        return Err(format!("fault schedule: delay until {until_pct} > 100"));
+                    }
+                    if until_pct < inc.at_pct {
+                        return Err("fault schedule: delay ends before it starts".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Hybrid-mode layout (Figs 15–17): part of the keyspace FPGA-resident,
@@ -184,7 +435,8 @@ pub struct SimConfig {
     /// propagate every op).
     pub summarize_threshold: u32,
     pub seed: u64,
-    pub fault: Option<FaultSpec>,
+    /// Deterministic fault-injection plan (empty = fault-free).
+    pub fault: FaultSchedule,
     pub hybrid: Option<HybridConfig>,
     /// Background poll interval for buffered/queue/log pollers (ns).
     pub poll_interval_ns: u64,
@@ -213,7 +465,7 @@ impl SimConfig {
             batch_size: 1,
             summarize_threshold: 1,
             seed: 0xC0FFEE,
-            fault: None,
+            fault: FaultSchedule::none(),
             hybrid: None,
             poll_interval_ns: 400,
             heartbeat_period_ns: 20_000,
@@ -304,19 +556,7 @@ impl SimConfig {
                 self.backend.name()
             ));
         }
-        if self.backend == ConsensusBackend::Raft
-            && self.system != SystemKind::Waverunner
-            && self.fault.is_some()
-        {
-            // The stand-alone Raft backend has promotion-on-election but no
-            // follower-log snapshot/truncation recovery (ROADMAP open item):
-            // crash runs would *silently* diverge, so reject them outright.
-            return Err(
-                "the stand-alone raft backend does not support fault injection yet; \
-                 use backend mu or paxos for crash runs"
-                    .into(),
-            );
-        }
+        self.fault.validate(self.n_replicas)?;
         if self.system != SystemKind::SafarDb {
             let rpc = [self.prop_reducible, self.prop_irreducible]
                 .iter()
@@ -366,6 +606,10 @@ impl SimConfig {
                 "backend" => {
                     self.backend = ConsensusBackend::parse(v).ok_or_else(|| bad("backend"))?;
                     self.backend_explicit = true;
+                }
+                "fault" => {
+                    self.fault = FaultSchedule::parse(v)
+                        .map_err(|e| format!("line {}: {e}", lineno + 1))?
                 }
                 "batch" | "batch_size" => {
                     self.batch_size = v.parse().map_err(|_| bad("batch_size"))?
@@ -480,13 +724,13 @@ mod tests {
         w.backend = ConsensusBackend::Paxos;
         assert!(w.validate().is_err());
 
-        // Stand-alone Raft has no crash recovery: fault runs must error
-        // loudly instead of silently diverging.
+        // Every backend supports fault injection (generic Raft gained
+        // snapshot-install + term-bumped replay recovery).
         let mut r = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
         r.backend = ConsensusBackend::Raft;
         r.validate().expect("fault-free raft is fine");
-        r.fault = Some(FaultSpec::CrashAtFraction { node: 1, fraction_pct: 30 });
-        assert!(r.validate().is_err(), "raft + fault injection rejected");
+        r.fault = FaultSchedule::crash_at(1, 30);
+        r.validate().expect("raft crash runs are supported now");
         r.backend = ConsensusBackend::Paxos;
         r.validate().expect("paxos supports crash runs");
 
@@ -506,6 +750,68 @@ mod tests {
         k3.apply_kv("system = waverunner").unwrap();
         assert_eq!(k3.backend, ConsensusBackend::Mu, "explicitness survives across calls");
         assert!(k3.validate().is_err());
+    }
+
+    #[test]
+    fn fault_schedule_parses_and_round_trips() {
+        let s = FaultSchedule::parse(
+            "crash@40:leader,partition@50:0-2,drop@55:1-3x5,delay@60:0-1x300u80,heal@70,recover@80:2",
+        )
+        .unwrap();
+        assert_eq!(s.incidents.len(), 6);
+        assert_eq!(s.incidents[0].at_pct, 40);
+        assert_eq!(s.incidents[0].action, FaultAction::Crash { node: None });
+        assert_eq!(s.incidents[1].action, FaultAction::PartitionLinks { a: 0, b: 2 });
+        assert_eq!(s.incidents[2].action, FaultAction::DropNext { src: 1, dst: 3, count: 5 });
+        assert_eq!(
+            s.incidents[3].action,
+            FaultAction::DelaySpike { src: 0, dst: 1, factor_pct: 300, until_pct: 80 }
+        );
+        assert_eq!(s.incidents[4].action, FaultAction::HealLinks);
+        assert_eq!(s.incidents[5].action, FaultAction::Recover { node: 2 });
+        assert!(s.has_link_faults());
+
+        // label() round-trips through parse().
+        assert_eq!(FaultSchedule::parse(&s.label()).unwrap(), s);
+        assert_eq!(FaultSchedule::parse("none").unwrap(), FaultSchedule::none());
+        assert_eq!(FaultSchedule::none().label(), "none");
+        assert!(!FaultSchedule::crash_then_recover(1, 30, 60).has_link_faults());
+
+        for bad in [
+            "crash@40",          // crash needs a target
+            "crash@x:1",         // bad pct
+            "partition@50:0",    // missing endpoint
+            "heal@70:1",         // heal takes no args
+            "drop@30:0-1",       // missing count
+            "delay@30:0-1x300",  // missing until
+            "explode@10:0",      // unknown kind
+        ] {
+            assert!(FaultSchedule::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn fault_schedule_validation_bounds() {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        c.fault = FaultSchedule::parse("crash@40:7").unwrap();
+        assert!(c.validate().is_err(), "node out of range for n=4");
+        c.fault = FaultSchedule::parse("partition@50:1-1").unwrap();
+        assert!(c.validate().is_err(), "self-partition rejected");
+        c.fault = FaultSchedule::parse("delay@60:0-1x300u40").unwrap();
+        assert!(c.validate().is_err(), "delay window ends before it starts");
+        c.fault = FaultSchedule::parse("drop@30:0-1x0").unwrap();
+        assert!(c.validate().is_err(), "zero drop count rejected");
+        c.fault =
+            FaultSchedule::parse("partition@40:1-2,crash@50:leader,heal@70").unwrap();
+        c.validate().expect("well-formed multi-fault schedule");
+
+        // kv plumbing.
+        let mut k = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        k.apply_kv("fault = crash@40:0,recover@60:0").unwrap();
+        assert_eq!(k.fault, FaultSchedule::crash_then_recover(0, 40, 60));
+        assert!(k.apply_kv("fault = crash@40").is_err());
+        k.apply_kv("fault = none").unwrap();
+        assert!(k.fault.is_empty());
     }
 
     #[test]

@@ -1,16 +1,38 @@
 //! Cluster builder and run loop: N replicas over the simulated fabric,
-//! closed-loop clients, fault injection, termination + quiescence drain,
-//! and report assembly (response time / throughput / power — the paper's
-//! metrics, §5).
+//! closed-loop clients, deterministic multi-fault injection (the chaos
+//! harness), termination + quiescence drain, and report assembly
+//! (response time / throughput / power — the paper's metrics, §5 — plus
+//! the per-incident fault timeline).
 
-use crate::config::{FaultSpec, SimConfig};
+use crate::config::{FaultAction, SimConfig};
 use crate::engine::replica::Replica;
 use crate::engine::Ctx;
 use crate::metrics::RunMetrics;
 use crate::net::{Network, QpTable};
 use crate::power::{self, PowerReport};
-use crate::sim::{EventKind, EventQueue, NodeId};
+use crate::sim::{EventKind, EventQueue, NetFault, NodeId};
 use crate::util::rng::Rng;
+
+/// Post-run telemetry for one fired fault incident (chaos harness).
+#[derive(Clone, Debug)]
+pub struct FaultIncidentReport {
+    /// `kind:args` form of the fired action (leader crashes resolve to the
+    /// concrete node).
+    pub label: String,
+    /// Virtual time the incident was injected.
+    pub injected_ns: u64,
+    /// First heartbeat-tracker failure declaration of an affected node
+    /// after injection (None: nothing to detect, or never detected —
+    /// e.g. a partition healed inside the detection window).
+    pub detect_ns: Option<u64>,
+    /// Unavailability window: crash of the leader → until the successor's
+    /// election completes; other crashes → until detection excludes the
+    /// node from fan-outs; partition → until the heal. 0 when the
+    /// incident costs no availability (recover/heal/drop/delay).
+    pub unavailable_ns: u64,
+    /// Elections completed between this incident and the next (or run end).
+    pub elections: u64,
+}
 
 /// Everything an experiment needs from one run.
 #[derive(Debug)]
@@ -22,6 +44,8 @@ pub struct RunReport {
     pub crashed: Vec<bool>,
     pub invariants_ok: bool,
     pub leader: NodeId,
+    /// Per-incident fault timeline (empty for fault-free runs).
+    pub fault_timeline: Vec<FaultIncidentReport>,
     /// Per-replica human-readable state dumps (divergence diagnosis).
     pub dumps: Vec<String>,
     /// Wall-clock seconds the simulation itself took (engine §Perf).
@@ -51,6 +75,20 @@ impl RunReport {
     }
 }
 
+/// One fired incident, recorded while the run is live; the public
+/// [`FaultIncidentReport`] is derived from these at quiescence.
+struct FiredIncident {
+    label: String,
+    injected_ns: u64,
+    /// Nodes whose failure declaration counts as "detected".
+    subjects: Vec<NodeId>,
+    /// The crashed node led at injection time (unavailability ends at the
+    /// successor's election).
+    leader_crash: bool,
+    partition: bool,
+    heal: bool,
+}
+
 pub struct Cluster {
     cfg: SimConfig,
     replicas: Vec<Replica>,
@@ -69,7 +107,7 @@ impl Cluster {
         let mem = cfg.system.params_for(&cfg).mem;
         Cluster {
             net: Network::new(cfg.n_replicas, mem),
-            qps: QpTable::full_mesh(cfg.n_replicas),
+            qps: QpTable::leader_fenced(cfg.n_replicas, crate::smr::raft::initial_leader()),
             q: EventQueue::new(),
             metrics: RunMetrics::new(cfg.n_replicas),
             replicas,
@@ -92,27 +130,29 @@ impl Cluster {
             replica.boot(&mut ctx, self.cfg.clients_per_replica, per_replica);
         }
 
-        // Fault injection plan: translate fraction -> completed-op watermark.
-        let fault_at = self.cfg.fault.map(|f| match f {
-            FaultSpec::CrashAtFraction { node, fraction_pct } => {
-                (node, target * fraction_pct as u64 / 100, None)
-            }
-            FaultSpec::CrashLeaderAtFraction { fraction_pct } => {
-                (usize::MAX, target * fraction_pct as u64 / 100, None) // resolved at trigger
-            }
-            FaultSpec::CrashThenRecover { node, crash_pct, recover_pct } => (
-                node,
-                target * crash_pct as u64 / 100,
-                Some(target * recover_pct as u64 / 100),
-            ),
-        });
-        let mut fault_pending = fault_at;
-        let mut recover_pending: Option<(usize, u64)> = None;
+        // Compile the fault schedule into completed-op watermarks, fired
+        // in (watermark, schedule-position) order — deterministic and
+        // seed-reproducible like everything else in the event stream.
+        let mut armed: Vec<(u64, FaultAction)> = self
+            .cfg
+            .fault
+            .incidents
+            .iter()
+            .map(|inc| (target * inc.at_pct as u64 / 100, inc.action))
+            .collect();
+        armed.sort_by_key(|&(at, _)| at); // stable: schedule order breaks ties
+        let mut next_arm = 0usize;
+        // DelaySpike end watermarks, armed as spikes fire.
+        let mut delay_restores: Vec<(u64, NodeId, NodeId)> = Vec::new();
+        // Pending recovery snapshot transfers (node, install time).
         // Snapshot transfer runs after the cluster has re-included the
         // returned node (heartbeat detection window), so no relaxed op can
         // fall between the snapshot point and re-inclusion.
-        let mut snapshot_at: Option<(usize, u64)> = None;
+        let mut snapshots: Vec<(NodeId, u64)> = Vec::new();
         let grace_ns = self.cfg.heartbeat_period_ns * (self.cfg.hb_fail_threshold as u64 + 4);
+        // Links currently cut (heal-time anti-entropy set).
+        let mut cut_links: Vec<(NodeId, NodeId)> = Vec::new();
+        let mut timeline: Vec<FiredIncident> = Vec::new();
 
         let mut draining = false;
         let mut events: u64 = 0;
@@ -135,61 +175,70 @@ impl Cluster {
 
             let completed = self.metrics.total_completed();
 
-            // Trigger the recovery once its watermark passes: the returned
-            // replica pulls a snapshot from a live donor (relaxed state)
-            // and the leader's heartbeat-driven log replay covers anything
-            // committed during the transfer (§3).
-            if let Some((node, at)) = recover_pending {
-                if completed >= at {
-                    let t = self.q.now();
-                    self.q.push(t, node, EventKind::Recover);
-                    snapshot_at = Some((node, t + grace_ns));
-                    recover_pending = None;
-                }
-            }
-            if let Some((node, at)) = snapshot_at {
-                if self.q.now() >= at {
+            // Pending recovery snapshot installs: the returned replica
+            // pulls state + logs + dedup ledger from a live donor; the
+            // leader's heartbeat-driven replay covers anything committed
+            // during the transfer (§3).
+            if !snapshots.is_empty() && snapshots.iter().any(|&(_, at)| self.q.now() >= at) {
+                let due: Vec<NodeId> = snapshots
+                    .iter()
+                    .filter(|&&(_, at)| self.q.now() >= at)
+                    .map(|&(node, _)| node)
+                    .collect();
+                snapshots.retain(|&(_, at)| self.q.now() < at);
+                for node in due {
                     let t = self.q.now();
                     if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed()) {
-                        let (plane, logs, leader) = self.replicas[donor].snapshot_state();
-                        self.replicas[node].install_snapshot(plane, logs, leader, &mut self.qps, t);
+                        let (plane, logs, leader, seen) = self.replicas[donor].snapshot_state();
+                        self.replicas[node].install_snapshot(plane, logs, leader, seen, &mut self.qps, t);
                     }
-                    snapshot_at = None;
                 }
             }
 
-            // Trigger the crash once the watermark passes.
-            if let Some((node, at, recover)) = fault_pending {
-                if completed >= at {
-                    let node = if node == usize::MAX { self.current_leader() } else { node };
-                    if let Some(rec_at) = recover {
-                        recover_pending = Some((node, rec_at));
+            // Fire schedule incidents whose watermark has passed.
+            while next_arm < armed.len() && completed >= armed[next_arm].0 {
+                let (_, action) = armed[next_arm];
+                next_arm += 1;
+                self.fire_incident(
+                    action,
+                    target,
+                    grace_ns,
+                    &mut timeline,
+                    &mut snapshots,
+                    &mut delay_restores,
+                );
+            }
+
+            // End delay-spike windows whose until-watermark has passed.
+            if !delay_restores.is_empty() {
+                let t = self.q.now();
+                let mut i = 0;
+                while i < delay_restores.len() {
+                    let (at, src, dst) = delay_restores[i];
+                    if completed >= at {
+                        self.q.push(t, 0, EventKind::Fault(NetFault::DelayRestore { src, dst }));
+                        delay_restores.swap_remove(i);
+                    } else {
+                        i += 1;
                     }
-                    let t = self.q.now();
-                    self.q.push(t, node, EventKind::Crash);
-                    // Redistribute the crashed node's remaining quota.
-                    let remaining = self.replicas[node].take_quota();
-                    let live: Vec<NodeId> = (0..n).filter(|&i| i != node).collect();
-                    for (j, &r) in live.iter().enumerate() {
-                        let share = remaining / live.len() as u64
-                            + if j < (remaining % live.len() as u64) as usize { 1 } else { 0 };
-                        self.replicas[r].grant_quota(share);
-                    }
-                    fault_pending = None;
                 }
             }
 
-            if !draining && self.all_quota_spent() && self.no_pending_clients() {
-                draining = true;
+            self.maybe_begin_drain(&mut draining);
+
+            // Link-level fault actions are consumed by the cluster's
+            // network actor, not a replica.
+            if let EventKind::Fault(nf) = &ev.kind {
+                let nf = *nf;
+                self.apply_net_fault(nf, &mut cut_links, draining);
+                continue;
             }
 
             let dest = ev.dest;
             let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, dest, draining);
             replica.handle(&mut ctx, ev.kind);
 
-            if !draining && self.all_quota_spent() && self.no_pending_clients() {
-                draining = true;
-            }
+            self.maybe_begin_drain(&mut draining);
         }
 
         // Quiescence: force-flush remaining landed-but-unapplied state so
@@ -205,6 +254,7 @@ impl Cluster {
         }
 
         self.metrics.events = events;
+        let fault_timeline = self.assemble_timeline(&timeline);
         let power = power::estimate(&self.cfg.system.params_for(&self.cfg).power, &self.metrics);
         let digests: Vec<u64> = self.replicas.iter().map(|r| r.digest()).collect();
         let dumps: Vec<String> = self.replicas.iter().map(|r| r.plane_dump()).collect();
@@ -224,7 +274,246 @@ impl Cluster {
             crashed,
             invariants_ok,
             leader,
+            fault_timeline,
             wall_s: wall_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Fire one scheduled incident at the current virtual time.
+    fn fire_incident(
+        &mut self,
+        action: FaultAction,
+        target: u64,
+        grace_ns: u64,
+        timeline: &mut Vec<FiredIncident>,
+        snapshots: &mut Vec<(NodeId, u64)>,
+        delay_restores: &mut Vec<(u64, NodeId, NodeId)>,
+    ) {
+        let t = self.q.now();
+        let n = self.cfg.n_replicas;
+        match action {
+            FaultAction::Crash { node } => {
+                let node = node.unwrap_or_else(|| self.current_leader());
+                if self.replicas[node].crashed() {
+                    return; // double-crash in a hand-written schedule: no-op
+                }
+                let leader_crash = node == self.current_leader();
+                self.q.push(t, node, EventKind::Crash);
+                // Redistribute the crashed node's remaining quota over the
+                // still-live replicas.
+                let remaining = self.replicas[node].take_quota();
+                let live: Vec<NodeId> =
+                    (0..n).filter(|&i| i != node && !self.replicas[i].crashed()).collect();
+                if !live.is_empty() {
+                    for (j, &r) in live.iter().enumerate() {
+                        let share = remaining / live.len() as u64
+                            + if j < (remaining % live.len() as u64) as usize { 1 } else { 0 };
+                        self.replicas[r].grant_quota(share);
+                    }
+                }
+                timeline.push(FiredIncident {
+                    label: format!("crash:{node}"),
+                    injected_ns: t,
+                    subjects: vec![node],
+                    leader_crash,
+                    partition: false,
+                    heal: false,
+                });
+            }
+            FaultAction::Recover { node } => {
+                if self.replicas[node].crashed() {
+                    self.q.push(t, node, EventKind::Recover);
+                    snapshots.push((node, t + grace_ns));
+                }
+                timeline.push(FiredIncident {
+                    label: format!("recover:{node}"),
+                    injected_ns: t,
+                    subjects: Vec::new(),
+                    leader_crash: false,
+                    partition: false,
+                    heal: false,
+                });
+            }
+            FaultAction::PartitionLinks { a, b } => {
+                self.q.push(t, 0, EventKind::Fault(NetFault::Partition { a, b }));
+                timeline.push(FiredIncident {
+                    label: format!("partition:{a}-{b}"),
+                    injected_ns: t,
+                    subjects: vec![a, b],
+                    leader_crash: false,
+                    partition: true,
+                    heal: false,
+                });
+            }
+            FaultAction::HealLinks => {
+                self.q.push(t, 0, EventKind::Fault(NetFault::Heal));
+                timeline.push(FiredIncident {
+                    label: "heal".into(),
+                    injected_ns: t,
+                    subjects: Vec::new(),
+                    leader_crash: false,
+                    partition: false,
+                    heal: true,
+                });
+            }
+            FaultAction::DropNext { src, dst, count } => {
+                self.q.push(t, 0, EventKind::Fault(NetFault::DropNext { src, dst, count }));
+                timeline.push(FiredIncident {
+                    label: format!("drop:{src}-{dst}x{count}"),
+                    injected_ns: t,
+                    subjects: Vec::new(),
+                    leader_crash: false,
+                    partition: false,
+                    heal: false,
+                });
+            }
+            FaultAction::DelaySpike { src, dst, factor_pct, until_pct } => {
+                self.q.push(t, 0, EventKind::Fault(NetFault::DelaySpike { src, dst, factor_pct }));
+                delay_restores.push((target * until_pct as u64 / 100, src, dst));
+                timeline.push(FiredIncident {
+                    label: format!("delay:{src}-{dst}x{factor_pct}u{until_pct}"),
+                    injected_ns: t,
+                    subjects: Vec::new(),
+                    leader_crash: false,
+                    partition: false,
+                    heal: false,
+                });
+            }
+        }
+    }
+
+    /// Apply a link-level fault action to the network actor. On heal, the
+    /// current leader replays its strong log to every peer it was cut off
+    /// from — a short partition can open a silent gap there (a round
+    /// committed by the other majority members), and heartbeat recovery
+    /// only covers partitions long enough to be detected.
+    fn apply_net_fault(&mut self, nf: NetFault, cut_links: &mut Vec<(NodeId, NodeId)>, draining: bool) {
+        match nf {
+            NetFault::Partition { a, b } => {
+                self.net.set_partitioned(a, b, true);
+                cut_links.push((a, b));
+            }
+            NetFault::Heal => {
+                self.net.heal_all();
+                let pairs = std::mem::take(cut_links);
+                let leader = self.current_leader();
+                if self.replicas[leader].crashed() {
+                    return;
+                }
+                // Partition-minority imposters first: a node that
+                // self-elected but never confirmed (fenced by everyone
+                // else's permission switch) re-fences itself toward the
+                // rightful leader and re-routes whatever it parked — a
+                // quiescent imposter would otherwise never notice.
+                for r in 0..self.cfg.n_replicas {
+                    if r != leader
+                        && !self.replicas[r].crashed()
+                        && self.replicas[r].leader() == r
+                    {
+                        let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, r, draining);
+                        replica.abdicate_unconfirmed_leadership(&mut ctx, leader);
+                    }
+                }
+                for (a, b) in pairs {
+                    let peer = match (a == leader, b == leader) {
+                        (true, _) => b,
+                        (_, true) => a,
+                        _ => continue, // follower-follower cut: no log owner
+                    };
+                    if self.replicas[peer].crashed() {
+                        continue;
+                    }
+                    let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, leader, draining);
+                    replica.replay_strong_to(&mut ctx, peer);
+                }
+            }
+            NetFault::DropNext { src, dst, count } => self.net.arm_drop(src, dst, count),
+            NetFault::DelaySpike { src, dst, factor_pct } => {
+                self.net.set_delay_pct(src, dst, factor_pct)
+            }
+            NetFault::DelayRestore { src, dst } => self.net.set_delay_pct(src, dst, 100),
+        }
+    }
+
+    /// Derive the public per-incident reports from the fired timeline and
+    /// the heartbeat/election telemetry the run collected.
+    fn assemble_timeline(&self, timeline: &[FiredIncident]) -> Vec<FaultIncidentReport> {
+        timeline
+            .iter()
+            .enumerate()
+            .map(|(i, inc)| {
+                let window_end =
+                    timeline.get(i + 1).map(|nx| nx.injected_ns).unwrap_or(u64::MAX);
+                let detect_ns = if inc.subjects.is_empty() {
+                    None
+                } else {
+                    self.metrics
+                        .detections
+                        .iter()
+                        .filter(|&&(t, subj, _)| t >= inc.injected_ns && inc.subjects.contains(&subj))
+                        .map(|&(t, _, _)| t)
+                        .min()
+                };
+                let elections = self
+                    .metrics
+                    .election_times
+                    .iter()
+                    .filter(|&&t| t >= inc.injected_ns && t < window_end)
+                    .count() as u64;
+                let unavailable_ns = if inc.leader_crash {
+                    self.metrics
+                        .election_times
+                        .iter()
+                        .find(|&&t| t >= inc.injected_ns)
+                        .map(|&t| t - inc.injected_ns)
+                        .or_else(|| detect_ns.map(|d| d - inc.injected_ns))
+                        .unwrap_or(0)
+                } else if inc.partition {
+                    timeline[i + 1..]
+                        .iter()
+                        .find(|x| x.heal)
+                        .map(|h| h.injected_ns - inc.injected_ns)
+                        .unwrap_or_else(|| {
+                            self.metrics.makespan_ns.saturating_sub(inc.injected_ns)
+                        })
+                } else {
+                    detect_ns.map(|d| d - inc.injected_ns).unwrap_or(0)
+                };
+                FaultIncidentReport {
+                    label: inc.label.clone(),
+                    injected_ns: inc.injected_ns,
+                    detect_ns,
+                    unavailable_ns,
+                    elections,
+                }
+            })
+            .collect()
+    }
+
+    /// Flip the drain flag once all client work is accounted for. In chaos
+    /// mode (link faults in the schedule) the flip also triggers one final
+    /// leader anti-entropy replay to every live peer: a drop or partition
+    /// may have eaten the *last* strong append to some follower, and with
+    /// no further traffic nothing else would repair it before the
+    /// convergence check.
+    fn maybe_begin_drain(&mut self, draining: &mut bool) {
+        if *draining || !(self.all_quota_spent() && self.no_pending_clients()) {
+            return;
+        }
+        *draining = true;
+        if !self.cfg.fault.has_link_faults() {
+            return;
+        }
+        let leader = self.current_leader();
+        if self.replicas[leader].crashed() {
+            return;
+        }
+        for peer in 0..self.cfg.n_replicas {
+            if peer == leader || self.replicas[peer].crashed() {
+                continue;
+            }
+            let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, leader, true);
+            replica.replay_strong_to(&mut ctx, peer);
         }
     }
 

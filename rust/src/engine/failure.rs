@@ -85,6 +85,9 @@ impl FailurePlane {
                 if std::env::var_os("SAFARDB_DEBUG").is_some() {
                     eprintln!("[{}ns] r{}: declared r{} FAILED", ctx.q.now(), core.id, peer);
                 }
+                // Fault-timeline telemetry: the chaos harness derives each
+                // incident's detection latency from these observations.
+                ctx.metrics.detections.push((ctx.q.now(), peer, core.id));
                 if peer == core.leader {
                     self.leader_switch(core, strong, ctx);
                 } else if core.is_leader() {
@@ -92,6 +95,7 @@ impl FailurePlane {
                 }
             }
             HbVerdict::Recovered => {
+                ctx.metrics.recoveries.push((ctx.q.now(), peer, core.id));
                 if core.is_leader() {
                     strong.on_membership(core, ctx, &*self, MembershipEvent::PeerRecovered { peer });
                 }
@@ -126,6 +130,12 @@ impl FailurePlane {
         core.occupy(ctx.q.now(), lat);
         core.leader = new;
         strong.on_membership(core, ctx, &*self, MembershipEvent::LeaderSwitched);
+        if new != core.id {
+            // Ask the new leader for a log replay: its own takeover
+            // broadcast may have been fenced here if our permission switch
+            // ran after it (the broadcast covers the reverse ordering).
+            core.request_sync(ctx, new);
+        }
     }
 
 }

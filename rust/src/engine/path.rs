@@ -15,7 +15,7 @@ use crate::config::{ExecParams, SimConfig, SystemKind, SystemParams};
 use crate::engine::store::DataPlane;
 use crate::engine::Ctx;
 use crate::mem::MemKind;
-use crate::net::verbs::{ReadData, ReadTarget, Verb};
+use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
 use crate::rdt::{Category, OpCall};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::smr::log::ReplicationLog;
@@ -38,6 +38,9 @@ pub enum TokenCtx {
     Strong(StrongToken),
     /// Owned by the Paxos strong path (doorbell-acked appends, forwards).
     Paxos(PaxosToken),
+    /// Owned by the relaxed path's chaos-mode reliable fan-out: `id` keys
+    /// the retry entry that re-ships a propagation NACKed by a faulty link.
+    Relaxed { id: u64 },
     /// Heartbeat read of a peer (failure plane).
     Heartbeat { peer: NodeId },
     /// Fire-and-forget — no completion expected, so never stored in the
@@ -186,6 +189,28 @@ pub trait ReplicationPath: Send {
 
     /// Install a committed-log snapshot (strong path only).
     fn install_logs(&mut self, _logs: Vec<ReplicationLog>) {}
+
+    /// At-most-once dedup ledger for the chaos-mode relaxed path: which
+    /// `(origin, seq)` ops the donor's snapshot already folded in. Empty
+    /// outside link-fault runs.
+    fn snapshot_relaxed_seen(&self) -> Vec<(usize, u64)> {
+        Vec::new()
+    }
+
+    /// Install the donor's dedup ledger alongside its state snapshot.
+    fn install_relaxed_seen(&mut self, _seen: Vec<(usize, u64)>) {}
+
+    /// Anti-entropy: replay this path's committed log to one peer (leader
+    /// side, after a heal or recovery re-included the peer). Default no-op
+    /// for paths without a log.
+    fn replay_to(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _mb: &dyn Membership, _peer: NodeId) {}
+
+    /// Heal-time nudge for a partition-minority imposter: if this path
+    /// self-elected but never confirmed its leadership (no Prepare quorum /
+    /// lease), hand leadership to `rightful` and re-route anything parked.
+    /// Confirmed leaderships ignore the nudge — a majority already backs
+    /// them. Default no-op.
+    fn abdicate_if_unconfirmed(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _mb: &dyn Membership, _rightful: NodeId) {}
 
     /// One-line diagnostic fragment for runaway-loop debugging.
     fn debug_status(&self) -> String {
@@ -345,6 +370,29 @@ impl ReplicaCore {
             self.tokens.insert(t, ctx);
         }
         t
+    }
+
+    /// Fire-and-forget `SyncRequest` to `leader`: "replay your committed
+    /// log to me". Sent after a permission switch, on abdication, and when
+    /// a slot-addressed append reveals a gap — the one anti-entropy pull
+    /// shared by every strong backend.
+    pub fn request_sync(&mut self, ctx: &mut Ctx, leader: NodeId) {
+        let tok = self.token(TokenCtx::Ignore);
+        let verb = Verb::write(
+            self.landing_mem_for_peer(),
+            Payload::SyncRequest { from: self.id },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        ctx.net.issue(ctx.q, ctx.qps, &self.sys.fabric, ctx.q.now(), self.id, leader, verb, false);
+    }
+
+    /// Arm the chaos-mode reply watchdog for a pending forward (callers
+    /// gate on their chaos flag): if the leader's reply is lost on a
+    /// faulty link, the `ForwardCheck` timer re-forwards.
+    pub fn arm_forward_watchdog(&self, ctx: &mut Ctx, request_id: u64) {
+        let at = ctx.q.now() + self.heartbeat_period_ns * 8;
+        ctx.q.push(at, self.id, EventKind::Timer(TimerKind::ForwardCheck { request_id }));
     }
 
     /// Host-issued verbs pay an extra PCIe hop before the NIC.

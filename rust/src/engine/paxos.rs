@@ -47,6 +47,9 @@ pub enum PaxosToken {
     Append { ballot: u64, round: u64, start_slot: u64 },
     /// Forwarded conflicting op awaiting a LeaderReply.
     Forward { request_id: u64 },
+    /// Leadership-lease probe doorbell (a takeover replay write). The wave
+    /// nonce discards votes from a superseded campaign.
+    Lease { wave: u64 },
 }
 
 pub struct PaxosPath {
@@ -56,6 +59,24 @@ pub struct PaxosPath {
     leader_sm: PaxosLeader,
     acceptor: PaxosAcceptor,
     batch: usize,
+    /// Chaos mode (link faults in the schedule): forwarded ops arm a
+    /// reply watchdog, since a LeaderReply lost on a faulty link would
+    /// otherwise strand its origin-side client slot forever.
+    chaos: bool,
+    /// Leadership lease: a promoted leader's takeover replay writes double
+    /// as lease probes — a majority of doorbells confirms the cluster's
+    /// permission switches accepted this leadership. Until then
+    /// submissions park (no apply, no append), so a fenced partition-side
+    /// imposter mutates nothing and abdicates cleanly once a smaller live
+    /// node is back in view. The boot leader holds the lease.
+    lease: bool,
+    lease_wave: u64,
+    lease_votes: u32,
+    parked: Vec<(OpCall, Requester)>,
+    /// Chaos-mode exactly-once ledger for forwarded ops (see
+    /// `engine::strong`): verdicts of already-ordered `(origin, seq)`
+    /// pairs, so a re-forward after a lost reply does not execute twice.
+    done_fwd: FastMap<(usize, u64), bool>,
     /// Leader side: slot -> who to answer at commit.
     requesters: FastMap<u64, Requester>,
     /// Origin side: forwarded ops awaiting replies.
@@ -70,16 +91,108 @@ impl PaxosPath {
             leader_sm: PaxosLeader::new(id, cfg.n_replicas, cfg.batch_size as usize),
             acceptor: PaxosAcceptor::new(),
             batch: cfg.batch_size as usize,
+            chaos: cfg.fault.has_link_faults(),
+            lease: true,
+            lease_wave: 0,
+            lease_votes: 0,
+            parked: Vec::new(),
+            done_fwd: FastMap::default(),
             requesters: FastMap::default(),
             pending_fwd: FastMap::default(),
             next_request_id: 1,
         }
     }
 
+    /// One lease-campaign wave. The first wave mirrors our log to every
+    /// live peer with a completion-tracked replay write (takeover
+    /// anti-entropy and probe in one); retry waves send an empty append
+    /// probe instead — the doorbell is the vote, the log already shipped,
+    /// and an empty *replay* would truncate a voter's log. A follower
+    /// whose permission switch elected us lets the write through; everyone
+    /// else fences it. Solo leaders grant themselves the lease.
+    fn paxos_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, first: bool) {
+        self.lease_wave += 1;
+        self.lease_votes = 0;
+        if mb.live_set().len() / 2 == 0 {
+            self.paxos_grant_lease(core, ctx, mb);
+            return;
+        }
+        let wave = self.lease_wave;
+        let ballot = self.leader_sm.ballot;
+        let ops: Vec<OpCall> = if first {
+            self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect()
+        } else {
+            Vec::new()
+        };
+        for peer in mb.live_peers(core.id) {
+            let tok = core.token(TokenCtx::Paxos(PaxosToken::Lease { wave }));
+            let payload = if first {
+                Payload::PaxosReplay { ballot, ops: ops.clone() }
+            } else {
+                Payload::PaxosAppend { ballot, start_slot: 0, ops: Vec::new() }
+            };
+            let verb = Verb::write(core.landing_mem_for_peer(), payload, tok).on_leader_qp();
+            ctx.metrics.verbs += 1;
+            ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, true);
+        }
+        // Campaign-retry chain: probes are fenced at followers whose
+        // permission switch has not happened yet.
+        ctx.q.push(
+            ctx.q.now() + core.heartbeat_period_ns,
+            core.id,
+            EventKind::Timer(TimerKind::SmrTick(0)),
+        );
+    }
+
+    /// Majority confirmed: adopt the ballot locally, execute our accepted
+    /// tail, and serve — first the submissions that parked during the
+    /// campaign, then normal traffic.
+    fn paxos_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+        self.lease = true;
+        self.acceptor.accept(self.leader_sm.ballot);
+        self.drain_own_log(core, ctx);
+        self.leader_sm.set_cluster_size(mb.live_set().len());
+        let parked = std::mem::take(&mut self.parked);
+        for (op, req) in parked {
+            self.leader_submit(core, ctx, mb, op, req);
+        }
+        self.try_fan_out(core, ctx, mb);
+    }
+
+    /// A promoted-but-unleased "leader" learned a smaller live node exists
+    /// (the partition healed; we were the minority imposter). Nothing was
+    /// applied or appended while parked — not even the acceptor promise
+    /// moved, so the rightful leader's writes were never rejected here.
+    /// Abdication is a pure re-route of the parked ops.
+    fn paxos_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
+        ctx.qps.switch_leader(core.id, core.leader, rightful);
+        core.leader = rightful;
+        self.lease = true; // inert until the next promotion resets it
+        // Pull the committed log we may have missed while self-elected.
+        core.request_sync(ctx, rightful);
+        let parked = std::mem::take(&mut self.parked);
+        for (op, req) in parked {
+            match req {
+                Requester::Local { .. } => self.forward_to_leader(core, ctx, op, req),
+                Requester::Remote { reply_to, request_id } => {
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false)
+                }
+            }
+        }
+    }
+
     /// Leader-side entry: execute in total order, append, replicate.
     fn leader_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
+        if !self.lease {
+            // Leadership not confirmed by a doorbell majority yet: park.
+            self.parked.push((op, req));
+            return;
+        }
         if !core.plane.permissible(&op) {
             core.rejected += 1;
+            if self.chaos {
+                self.done_fwd.insert((op.origin, op.seq), false);
+            }
             self.answer_requester(core, ctx, req, false);
             return;
         }
@@ -143,6 +256,11 @@ impl PaxosPath {
             core.busy_until = now;
         }
         ctx.metrics.smr_commits += ops.len() as u64;
+        if self.chaos {
+            for o in &ops {
+                self.done_fwd.insert((o.origin, o.seq), true);
+            }
+        }
         for i in 0..ops.len() as u64 {
             if let Some(req) = self.requesters.remove(&(start_slot + i)) {
                 self.answer_requester(core, ctx, req, true);
@@ -182,6 +300,9 @@ impl PaxosPath {
         self.next_request_id += 1;
         if let Requester::Local { client, arrival } = req {
             self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
+            if self.chaos {
+                core.arm_forward_watchdog(ctx, request_id);
+            }
         }
         let leader = core.leader;
         let tok = core.token(TokenCtx::Paxos(PaxosToken::Forward { request_id }));
@@ -215,6 +336,9 @@ impl PaxosPath {
         let request_id = self.next_request_id;
         self.next_request_id += 1;
         self.pending_fwd.insert(request_id, p);
+        if self.chaos {
+            core.arm_forward_watchdog(ctx, request_id);
+        }
         let tok = core.token(TokenCtx::Paxos(PaxosToken::Forward { request_id }));
         let verb = Verb::write(
             core.landing_mem_for_peer(),
@@ -294,12 +418,18 @@ impl ReplicationPath for PaxosPath {
         }
     }
 
-    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, _src: NodeId, verb: Verb) {
+    fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, src: NodeId, verb: Verb) {
         match verb.payload {
             Payload::PaxosAppend { ballot, start_slot, ops } => {
                 // One-sided landing: no follower compute on the fast path.
                 if !self.acceptor.accept(ballot) {
                     return; // stale-ballot leader (also fenced at the QP)
+                }
+                // A batch landing beyond our append point means an earlier
+                // landing-region write never arrived (fenced pre-switch or
+                // eaten by fault injection): pull a replay from the sender.
+                if start_slot > self.log.next_free_slot() {
+                    core.request_sync(ctx, src);
                 }
                 for (i, op) in ops.into_iter().enumerate() {
                     self.log.write_slot(start_slot + i as u64, ballot, op);
@@ -324,6 +454,14 @@ impl ReplicationPath for PaxosPath {
                 if core.is_leader() {
                     let sw = core.exec().software_overhead_ns;
                     core.occupy(ctx.q.now(), sw);
+                    // Chaos-mode exactly-once: a duplicate of an op we
+                    // already ordered answers with the recorded verdict.
+                    if self.chaos {
+                        if let Some(&committed) = self.done_fwd.get(&(op.origin, op.seq)) {
+                            self.reply_remote(core, ctx, reply_to, request_id, true, committed);
+                            return;
+                        }
+                    }
                     self.leader_submit(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
                 } else {
                     self.reply_remote(core, ctx, reply_to, request_id, false, false);
@@ -340,6 +478,14 @@ impl ReplicationPath for PaxosPath {
                     } else {
                         self.retry_forward(core, ctx, mb, p);
                     }
+                }
+            }
+            Payload::SyncRequest { from } => {
+                // A follower completed its permission switch toward us and
+                // wants the committed log (an exact ballot-gated mirror;
+                // idempotent when it is already current).
+                if core.is_leader() {
+                    self.replay_log_to(core, ctx, from);
                 }
             }
             _ => {}
@@ -377,15 +523,52 @@ impl ReplicationPath for PaxosPath {
                     }
                 }
             }
+            PaxosToken::Lease { wave } => {
+                // A doorbell on a lease probe is a vote: the follower's
+                // permission switch accepted this leadership. NACKs need no
+                // action — the campaign-retry chain re-probes.
+                if self.lease || wave != self.lease_wave || !core.is_leader() {
+                    return;
+                }
+                if ok {
+                    self.lease_votes += 1;
+                    if self.lease_votes as usize >= mb.live_set().len() / 2 {
+                        self.paxos_grant_lease(core, ctx, mb);
+                    }
+                }
+            }
         }
     }
 
     fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind) {
-        if let TimerKind::SmrTick(_) = t {
-            if core.is_leader() {
-                self.leader_sm.set_cluster_size(mb.live_set().len());
-                self.try_fan_out(core, ctx, mb);
+        match t {
+            TimerKind::SmrTick(_) => {
+                if core.is_leader() {
+                    if !self.lease {
+                        // Still campaigning: abdicate if the heal brought a
+                        // smaller live node back into view (we were a
+                        // partition-minority imposter), else re-probe.
+                        let rightful = mb.elect_leader();
+                        if rightful != core.id {
+                            self.paxos_abdicate(core, ctx, rightful);
+                        } else {
+                            self.paxos_campaign(core, ctx, mb, false);
+                        }
+                        return;
+                    }
+                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                    self.try_fan_out(core, ctx, mb);
+                }
             }
+            TimerKind::ForwardCheck { request_id } => {
+                // Chaos-mode watchdog: the reply was lost on a faulty
+                // link — re-forward (at-least-once; the leader re-checks
+                // permissibility in total-order position).
+                if let Some(p) = self.pending_fwd.remove(&request_id) {
+                    self.retry_forward(core, ctx, mb, p);
+                }
+            }
+            _ => {}
         }
     }
 
@@ -404,21 +587,18 @@ impl ReplicationPath for PaxosPath {
             }
             MembershipEvent::LeaderSwitched => {
                 if core.is_leader() {
-                    // Takeover: outbid every ballot seen, execute our own
-                    // accepted tail, then mirror our log to every live
-                    // peer — the one-sided analogue of Mu's replay, which
-                    // also truncates minority-written uncommitted tails.
+                    // Takeover: outbid every ballot seen, then campaign for
+                    // the lease — the completion-tracked mirror of our log
+                    // to every live peer (the one-sided analogue of Mu's
+                    // Prepare, which also truncates minority-written
+                    // uncommitted tails). Executing our accepted tail and
+                    // serving wait for the doorbell majority.
                     ctx.metrics.elections += 1;
+                    ctx.metrics.election_times.push(ctx.q.now());
                     self.leader_sm.reset_in_flight();
                     self.leader_sm.assume_leadership(core.id, self.acceptor.promised);
-                    self.acceptor.accept(self.leader_sm.ballot);
-                    self.drain_own_log(core, ctx);
-                    let peers = mb.live_peers(core.id);
-                    for peer in peers {
-                        self.replay_log_to(core, ctx, peer);
-                    }
-                    self.leader_sm.set_cluster_size(mb.live_set().len());
-                    self.try_fan_out(core, ctx, mb);
+                    self.lease = false;
+                    self.paxos_campaign(core, ctx, mb, true);
                 }
                 // Any of our forwards pending at the dead leader: retry.
                 let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
@@ -426,6 +606,19 @@ impl ReplicationPath for PaxosPath {
                     self.retry_forward(core, ctx, mb, p);
                 }
             }
+        }
+    }
+
+    fn replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, peer: NodeId) {
+        // Heal-time anti-entropy: mirror the committed log onto the peer a
+        // partition may have starved (ballot-gated, exact overwrite —
+        // idempotent when the peer is already current).
+        self.replay_log_to(core, ctx, peer);
+    }
+
+    fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
+        if core.is_leader() && !self.lease {
+            self.paxos_abdicate(core, ctx, rightful);
         }
     }
 
@@ -446,11 +639,13 @@ impl ReplicationPath for PaxosPath {
         self.leader_sm.clear();
         self.requesters = FastMap::default();
         self.pending_fwd = FastMap::default();
+        self.lease = true;
+        self.parked.clear();
     }
 
     fn debug_status(&self) -> String {
         format!(
-            "paxos ballot={} q={} in_flight={} pending_fwd={} requesters={} log_len={} applied={} batch={}",
+            "paxos ballot={} q={} in_flight={} pending_fwd={} requesters={} log_len={} applied={} batch={} lease={} parked={}",
             self.leader_sm.ballot,
             self.leader_sm.queue_len(),
             self.leader_sm.in_flight(),
@@ -458,7 +653,9 @@ impl ReplicationPath for PaxosPath {
             self.requesters.len(),
             self.log.len(),
             self.log.applied_upto,
-            self.batch
+            self.batch,
+            self.lease,
+            self.parked.len()
         )
     }
 }

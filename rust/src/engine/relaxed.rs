@@ -16,6 +16,20 @@ use crate::mem::MemKind;
 use crate::net::verbs::{Payload, Verb, VerbKind};
 use crate::rdt::{Category, OpCall};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
+use crate::util::hasher::FastMap;
+
+/// Chaos-mode retransmit budget per tracked propagation verb. A peer that
+/// NACKs this many paced retries is treated as gone for good — crashed
+/// peers are excluded from convergence (or resynced by snapshot install),
+/// so dropping the entry is safe and bounds the event stream.
+const RETRY_CAP: u32 = 64;
+
+/// One tracked propagation awaiting its ACK (chaos mode only).
+struct RetryEntry {
+    dst: NodeId,
+    verb: Verb,
+    attempts: u32,
+}
 
 pub struct RelaxedPath {
     prop_red: PropagationMode,
@@ -23,6 +37,12 @@ pub struct RelaxedPath {
     /// Fan-out coalescer bound: up to this many queued submissions merge
     /// into one wire verb (1 = off, bit-identical to the unbatched engine).
     batch: usize,
+    /// Chaos mode: the schedule contains link faults (partition / drop /
+    /// delay), so propagation verbs track completions and retry on NACK
+    /// until acknowledged, and applies dedup on `(origin, seq)`. Off for
+    /// empty and crash-only schedules — the classic fire-and-forget path,
+    /// bit-identical to the pre-chaos engine.
+    reliable: bool,
     /// Landing zones (HBM): written by remote one-sided verbs, drained by
     /// pollers or on access.
     pending_reducible: Vec<OpCall>,
@@ -34,6 +54,14 @@ pub struct RelaxedPath {
     /// `BatchFlush` timer, so a partial batch never stalls propagation.
     out_sum: Vec<OpCall>,
     out_irr: Vec<OpCall>,
+    /// Chaos mode: in-flight tracked propagations, keyed by retry id.
+    retry: FastMap<u64, RetryEntry>,
+    next_retry_id: u64,
+    /// Chaos mode: at-most-once ledger of `(origin, seq)` ops this replica
+    /// already folded in — retried deliveries and post-snapshot stragglers
+    /// must not double-apply. Transferred from the donor on snapshot
+    /// install (the donor knows exactly which ops its state contains).
+    seen: FastMap<(usize, u64), ()>,
 }
 
 impl RelaxedPath {
@@ -42,12 +70,65 @@ impl RelaxedPath {
             prop_red: cfg.prop_reducible,
             prop_irr: cfg.prop_irreducible,
             batch: cfg.batch_size as usize,
+            reliable: cfg.fault.has_link_faults(),
             pending_reducible: Vec::new(),
             pending_irreducible: Vec::new(),
             sum_buffer: Vec::new(),
             out_sum: Vec::new(),
             out_irr: Vec::new(),
+            retry: FastMap::default(),
+            next_retry_id: 1,
+            seen: FastMap::default(),
         }
+    }
+
+    /// Chaos-mode at-most-once gate: true when `op` has not been applied
+    /// through the relaxed path yet. Always true outside chaos mode (the
+    /// reliable in-order fabric never duplicates).
+    fn mark_fresh(&mut self, op: &OpCall) -> bool {
+        if !self.reliable {
+            return true;
+        }
+        let key = (op.origin, op.seq);
+        if self.seen.contains_key(&key) {
+            return false;
+        }
+        self.seen.insert(key, ());
+        true
+    }
+
+    /// Propagation fan-out, switching between the classic fire-and-forget
+    /// path and the chaos-mode tracked path. Chaos mode targets *every*
+    /// peer, not just the live view: a partitioned peer may be mis-declared
+    /// dead, and the NACK-retry loop is what reaches it after the heal
+    /// (crashed peers burn their retry budget and resync via snapshot).
+    fn fan_out_relaxed(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        mb: &dyn Membership,
+        make: impl Fn(u64) -> Verb,
+    ) {
+        if !self.reliable {
+            let peers = mb.live_peers(core.id);
+            core.fan_out(ctx, &peers, make, false, || TokenCtx::Ignore);
+            return;
+        }
+        let peers = core.peers();
+        let start = ctx.q.now().max(core.busy_until);
+        let mut cursor = start;
+        for dst in peers {
+            let id = self.next_retry_id;
+            self.next_retry_id += 1;
+            let tok = core.token(TokenCtx::Relaxed { id });
+            let verb = make(tok);
+            self.retry.insert(id, RetryEntry { dst, verb: verb.clone(), attempts: 0 });
+            ctx.metrics.verbs += 1;
+            let out = ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, cursor, core.id, dst, verb, true);
+            cursor = out.initiator_free_at;
+        }
+        core.busy_total += cursor - start;
+        core.busy_until = cursor;
     }
 
     fn drain_reducible_cost(&mut self, core: &mut ReplicaCore) -> u64 {
@@ -58,8 +139,10 @@ impl RelaxedPath {
         // Landed summaries are contiguous slots: one burst read + execute.
         let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
         for op in items {
-            cost += core.exec().op_exec_ns;
-            core.apply_remote(&op);
+            if self.mark_fresh(&op) {
+                cost += core.exec().op_exec_ns;
+                core.apply_remote(&op);
+            }
         }
         cost
     }
@@ -72,8 +155,10 @@ impl RelaxedPath {
         // Per-origin FIFO queues: burst-read each queue head run.
         let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
         for op in items {
-            cost += core.exec().op_exec_ns;
-            core.apply_remote(&op);
+            if self.mark_fresh(&op) {
+                cost += core.exec().op_exec_ns;
+                core.apply_remote(&op);
+            }
         }
         cost
     }
@@ -113,28 +198,14 @@ impl RelaxedPath {
         let origin = core.id;
         let mode = self.prop_red;
         let mem = core.landing_mem_for_peer();
-        let peers = mb.live_peers(core.id);
         for op in agg {
-            match mode {
-                PropagationMode::Rpc => {
-                    core.fan_out(
-                        ctx,
-                        &peers,
-                        |t| Verb::rpc(Payload::Summary { origin, ops: 1, value: op }, t),
-                        false,
-                        || TokenCtx::Ignore,
-                    );
+            self.fan_out_relaxed(core, ctx, mb, |t| {
+                let payload = Payload::Summary { origin, ops: 1, value: op };
+                match mode {
+                    PropagationMode::Rpc => Verb::rpc(payload, t),
+                    _ => Verb::write(mem, payload, t),
                 }
-                _ => {
-                    core.fan_out(
-                        ctx,
-                        &peers,
-                        |t| Verb::write(mem, Payload::Summary { origin, ops: 1, value: op }, t),
-                        false,
-                        || TokenCtx::Ignore,
-                    );
-                }
-            }
+            });
         }
     }
 
@@ -151,23 +222,14 @@ impl RelaxedPath {
         core.occupy_batch(ctx.q.now(), per, chunk.len());
         ctx.metrics.coalesced += chunk.len() as u64 - 1;
         let mem = core.landing_mem_for_peer();
-        let peers = mb.live_peers(core.id);
-        match self.prop_red {
-            PropagationMode::Rpc => core.fan_out(
-                ctx,
-                &peers,
-                |t| Verb::rpc(Payload::SummaryBatch { origin, values: chunk.clone() }, t),
-                false,
-                || TokenCtx::Ignore,
-            ),
-            _ => core.fan_out(
-                ctx,
-                &peers,
-                |t| Verb::write(mem, Payload::SummaryBatch { origin, values: chunk.clone() }, t),
-                false,
-                || TokenCtx::Ignore,
-            ),
-        }
+        let mode = self.prop_red;
+        self.fan_out_relaxed(core, ctx, mb, |t| {
+            let payload = Payload::SummaryBatch { origin, values: chunk.clone() };
+            match mode {
+                PropagationMode::Rpc => Verb::rpc(payload, t),
+                _ => Verb::write(mem, payload, t),
+            }
+        });
     }
 
     /// Ship one coalesced irreducible chunk (FIFO order preserved inside
@@ -180,23 +242,14 @@ impl RelaxedPath {
         core.occupy_batch(ctx.q.now(), per, chunk.len());
         ctx.metrics.coalesced += chunk.len() as u64 - 1;
         let mem = core.landing_mem_for_peer();
-        let peers = mb.live_peers(core.id);
-        match self.prop_irr {
-            PropagationMode::Rpc => core.fan_out(
-                ctx,
-                &peers,
-                |t| Verb::rpc(Payload::QueueBatch { ops: chunk.clone() }, t),
-                false,
-                || TokenCtx::Ignore,
-            ),
-            _ => core.fan_out(
-                ctx,
-                &peers,
-                |t| Verb::write(mem, Payload::QueueBatch { ops: chunk.clone() }, t),
-                false,
-                || TokenCtx::Ignore,
-            ),
-        }
+        let mode = self.prop_irr;
+        self.fan_out_relaxed(core, ctx, mb, |t| {
+            let payload = Payload::QueueBatch { ops: chunk.clone() };
+            match mode {
+                PropagationMode::Rpc => Verb::rpc(payload, t),
+                _ => Verb::write(mem, payload, t),
+            }
+        });
     }
 
     fn propagate_irreducible(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, host_side: bool) {
@@ -212,17 +265,14 @@ impl RelaxedPath {
             return;
         }
         let mem = core.landing_mem_for_peer();
-        let peers = mb.live_peers(core.id);
-        match self.prop_irr {
-            PropagationMode::Rpc => {
-                core.fan_out(ctx, &peers, |t| Verb::rpc(Payload::QueueAppend { op }, t), false, || TokenCtx::Ignore);
+        let mode = self.prop_irr;
+        self.fan_out_relaxed(core, ctx, mb, |t| {
+            let payload = Payload::QueueAppend { op };
+            match mode {
+                PropagationMode::Rpc => Verb::rpc(payload, t),
+                _ => Verb::write(mem, payload, t),
             }
-            _ => {
-                core.fan_out(ctx, &peers, |t| Verb::write(mem, Payload::QueueAppend { op }, t), false, || {
-                    TokenCtx::Ignore
-                });
-            }
-        }
+        });
     }
 }
 
@@ -284,6 +334,12 @@ impl ReplicationPath for RelaxedPath {
         cost += core.exec().op_exec_ns + core.write_state_cost(host_side);
         core.executions += 1;
         core.plane.apply(&op);
+        // Chaos mode: our own ops enter the ledger too — a snapshot donor's
+        // state contains its *local* applies as well, and the recovering
+        // node must not re-apply their still-in-flight retried copies.
+        // (Summarized aggregates inherit the max member seq, so the raw
+        // entries recorded here cover them.)
+        let _ = self.mark_fresh(&op);
         // Op-based relaxed semantics: respond after the local commit;
         // propagation proceeds off the response path but still occupies
         // the replica (throughput, not latency).
@@ -309,7 +365,9 @@ impl ReplicationPath for RelaxedPath {
                     // Dispatcher invokes the accelerator directly (Fig 1).
                     let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy(ctx.q.now(), cost);
-                    core.apply_remote(&value);
+                    if self.mark_fresh(&value) {
+                        core.apply_remote(&value);
+                    }
                 } else {
                     self.pending_reducible.push(value);
                 }
@@ -318,7 +376,9 @@ impl ReplicationPath for RelaxedPath {
                 if is_rpc {
                     let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy(ctx.q.now(), cost);
-                    core.apply_remote(&op);
+                    if self.mark_fresh(&op) {
+                        core.apply_remote(&op);
+                    }
                 } else {
                     self.pending_irreducible.push(op);
                 }
@@ -328,7 +388,9 @@ impl ReplicationPath for RelaxedPath {
                     let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy_batch(ctx.q.now(), per, values.len());
                     for v in values {
-                        core.apply_remote(&v);
+                        if self.mark_fresh(&v) {
+                            core.apply_remote(&v);
+                        }
                     }
                 } else {
                     self.pending_reducible.extend(values);
@@ -339,7 +401,9 @@ impl ReplicationPath for RelaxedPath {
                     let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy_batch(ctx.q.now(), per, ops.len());
                     for op in ops {
-                        core.apply_remote(&op);
+                        if self.mark_fresh(&op) {
+                            core.apply_remote(&op);
+                        }
                     }
                 } else {
                     self.pending_irreducible.extend(ops);
@@ -392,33 +456,92 @@ impl ReplicationPath for RelaxedPath {
         }
     }
 
+    fn on_completion(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        _mb: &dyn Membership,
+        token: TokenCtx,
+        ok: bool,
+    ) {
+        // Chaos-mode tracked propagation: ACK retires the retry entry; a
+        // NACK (partition / drop / crash) re-ships the same payload after a
+        // heartbeat beat, off the busy clock — the soft RNIC retransmits in
+        // fabric logic. The budget bounds retries to peers that are really
+        // gone; their state resyncs via snapshot install instead.
+        let TokenCtx::Relaxed { id } = token else { return };
+        let Some(mut entry) = self.retry.remove(&id) else { return };
+        if ok {
+            return;
+        }
+        entry.attempts += 1;
+        if entry.attempts > RETRY_CAP {
+            return;
+        }
+        let next_id = self.next_retry_id;
+        self.next_retry_id += 1;
+        let tok = core.token(TokenCtx::Relaxed { id: next_id });
+        entry.verb.token = tok;
+        let verb = entry.verb.clone();
+        let dst = entry.dst;
+        self.retry.insert(next_id, entry);
+        ctx.metrics.verbs += 1;
+        let at = ctx.q.now() + core.heartbeat_period_ns;
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, dst, verb, true);
+    }
+
     fn flush_pending(&mut self, plane: &mut DataPlane) {
         let red: Vec<OpCall> = self.pending_reducible.drain(..).collect();
         for op in red {
-            plane.apply(&op);
+            if self.mark_fresh(&op) {
+                plane.apply(&op);
+            }
         }
         let irr: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
         for op in irr {
-            plane.apply(&op);
+            if self.mark_fresh(&op) {
+                plane.apply(&op);
+            }
         }
     }
 
     fn clear_landed(&mut self) {
-        self.pending_reducible.clear();
-        self.pending_irreducible.clear();
+        // Pre-crash local residue (unsent summaries, coalescer outboxes)
+        // and in-flight retries die with the snapshot install in any mode.
         self.sum_buffer.clear();
         self.out_sum.clear();
         self.out_irr.clear();
+        self.retry = FastMap::default();
+        if self.reliable {
+            // Chaos mode keeps the landed-but-unapplied buffers: retried
+            // deliveries may have landed just before the install, and the
+            // donor's `seen` ledger (installed right after this call)
+            // filters exactly the ones its snapshot already contains.
+            return;
+        }
+        self.pending_reducible.clear();
+        self.pending_irreducible.clear();
+    }
+
+    fn snapshot_relaxed_seen(&self) -> Vec<(usize, u64)> {
+        let mut v: Vec<(usize, u64)> = self.seen.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn install_relaxed_seen(&mut self, seen: Vec<(usize, u64)>) {
+        self.seen = seen.into_iter().map(|k| (k, ())).collect();
     }
 
     fn debug_status(&self) -> String {
         format!(
-            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={}",
+            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={} retry={}",
             self.pending_reducible.len(),
             self.pending_irreducible.len(),
             self.sum_buffer.len(),
             self.out_sum.len(),
-            self.out_irr.len()
+            self.out_irr.len(),
+            self.retry.len()
         )
     }
 }

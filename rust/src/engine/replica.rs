@@ -116,6 +116,9 @@ impl Replica {
             EventKind::Timer(t) => self.on_timer(ctx, t),
             EventKind::Crash => self.failure.on_crash(&mut self.core, ctx),
             EventKind::Recover => self.failure.on_recover(&mut self.core, ctx),
+            // Link-level fault actions are consumed by the cluster's
+            // network actor before dispatch; a replica never sees them.
+            EventKind::Fault(_) => {}
         }
     }
 
@@ -230,17 +233,18 @@ impl Replica {
             TokenCtx::Strong(_) | TokenCtx::Paxos(_) => {
                 strong.on_read_resp(core, ctx, &*failure, tctx, data)
             }
-            TokenCtx::Ignore => {}
+            TokenCtx::Relaxed { .. } | TokenCtx::Ignore => {}
         }
     }
 
     fn on_completion(&mut self, ctx: &mut Ctx, token: u64, ok: bool) {
-        let Replica { core, strong, failure, .. } = self;
+        let Replica { core, relaxed, strong, failure, .. } = self;
         let Some(tctx) = core.tokens.remove(&token) else { return };
         match tctx {
             TokenCtx::Strong(_) | TokenCtx::Paxos(_) => {
                 strong.on_completion(core, ctx, &*failure, tctx, ok)
             }
+            TokenCtx::Relaxed { .. } => relaxed.on_completion(core, ctx, &*failure, tctx, ok),
             TokenCtx::Heartbeat { peer } => {
                 if !ok {
                     failure.on_heartbeat(core, &mut **strong, ctx, peer, None);
@@ -259,7 +263,9 @@ impl Replica {
             | TimerKind::PollIrreducible
             | TimerKind::SummarizeFlush
             | TimerKind::BatchFlush => relaxed.on_timer(core, ctx, &*failure, t),
-            TimerKind::PollLog(_) | TimerKind::SmrTick(_) => strong.on_timer(core, ctx, &*failure, t),
+            TimerKind::PollLog(_) | TimerKind::SmrTick(_) | TimerKind::ForwardCheck { .. } => {
+                strong.on_timer(core, ctx, &*failure, t)
+            }
             TimerKind::HeartbeatScan => failure.on_scan(core, ctx),
             TimerKind::WorkDone => {}
         }
@@ -342,12 +348,17 @@ impl Replica {
         plane: DataPlane,
         logs: Vec<ReplicationLog>,
         leader: NodeId,
+        relaxed_seen: Vec<(usize, u64)>,
         qps: &mut crate::net::QpTable,
         now: Time,
     ) {
         self.core.plane = plane;
         self.strong.install_logs(logs);
         self.relaxed.clear_landed();
+        // Chaos mode: the donor's at-most-once ledger says exactly which
+        // relaxed ops its snapshot contains, so retried deliveries landing
+        // around the install neither double-apply nor get lost.
+        self.relaxed.install_relaxed_seen(relaxed_seen);
         if self.core.leader != leader {
             qps.switch_leader(self.core.id, self.core.leader, leader);
             self.core.leader = leader;
@@ -356,9 +367,32 @@ impl Replica {
         self.core.busy_total += 50_000;
     }
 
-    /// Donor side of the snapshot (state, strong logs, leader view).
-    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>, NodeId) {
-        (self.core.plane.snapshot(), self.strong.snapshot_logs(), self.core.leader)
+    /// Donor side of the snapshot (state, strong logs, leader view, dedup
+    /// ledger).
+    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>, NodeId, Vec<(usize, u64)>) {
+        (
+            self.core.plane.snapshot(),
+            self.strong.snapshot_logs(),
+            self.core.leader,
+            self.relaxed.snapshot_relaxed_seen(),
+        )
+    }
+
+    /// Heal-time anti-entropy (chaos harness): replay this replica's
+    /// strong-path log to a peer the healed partition may have starved.
+    /// Called by the cluster on the current leader only.
+    pub fn replay_strong_to(&mut self, ctx: &mut Ctx, peer: NodeId) {
+        let Replica { core, strong, failure, .. } = self;
+        strong.replay_to(core, ctx, &*failure, peer);
+    }
+
+    /// Heal-time imposter nudge (chaos harness): if this replica
+    /// self-elected inside a partition minority and never confirmed its
+    /// leadership, hand it to `rightful` now (a quiescent imposter has no
+    /// stalled round to trigger abdication on its own).
+    pub fn abdicate_unconfirmed_leadership(&mut self, ctx: &mut Ctx, rightful: NodeId) {
+        let Replica { core, strong, failure, .. } = self;
+        strong.abdicate_if_unconfirmed(core, ctx, &*failure, rightful);
     }
 
     /// Diagnostic snapshot for runaway-loop debugging.

@@ -44,19 +44,46 @@ pub struct StrongPath {
     prop_con: PropagationMode,
     /// Mu or Raft (Paxos lives in `engine::paxos`). Waverunner pins Raft.
     backend: ConsensusBackend,
+    system: SystemKind,
     /// Leader-side log-entry batching bound (1 = off).
     batch: usize,
-    /// One Mu instance + replication log per synchronization group.
+    /// Chaos mode (schedule has link faults): forwarded ops arm a reply
+    /// watchdog and the Raft leader gets a periodic re-pump tick, since
+    /// lossy links can eat the logical acks the pipeline waits on.
+    chaos: bool,
+    /// One Mu instance + replication log per synchronization group. Under
+    /// `backend = raft` the group-0 log doubles as a mirror of the Raft
+    /// log (proposal = term, kept fully applied) so snapshot transfer and
+    /// anti-entropy replay work exactly like Mu/Paxos.
     mu: Vec<MuInstance>,
     logs: Vec<ReplicationLog>,
     round_id: Vec<u64>,
     requesters: FastMap<(usize, u64), Requester>,
     pending_fwd: FastMap<u64, PendingClient>,
     next_request_id: u64,
-    // Waverunner baseline (Raft fast path, leader-only clients).
+    /// Mu leadership confirmation: false from a promotion until the first
+    /// WriteProposal round reaches quorum. A never-confirmed "leader" whose
+    /// rounds stall while a smaller live node exists is a partition-side
+    /// imposter and abdicates (it cannot have applied anything — Mu applies
+    /// only at the Accept phase, which confirmation precedes).
+    mu_confirmed: bool,
+    /// Chaos-mode exactly-once ledger for forwarded ops: verdicts of
+    /// already-ordered `(origin, seq)` pairs. A lost LeaderReply makes the
+    /// origin's watchdog re-forward; without this the duplicate would
+    /// execute twice in total order (converged but double-debited).
+    done_fwd: FastMap<(usize, u64), bool>,
+    // Raft fast path (Waverunner baseline + stand-alone backend).
     raft_leader: Option<RaftLeader>,
     raft_follower: RaftFollower,
     raft_pending: FastMap<u64, Requester>, // index -> requester
+    /// Raft leadership lease: a promoted leader must collect a majority of
+    /// append acks (its takeover replay / an empty probe) before serving —
+    /// submissions park below until then, so a fenced partition-side
+    /// imposter never applies or replicates anything and can abdicate
+    /// cleanly. The boot leader holds the lease by construction.
+    raft_lease: bool,
+    raft_votes: FastMap<usize, ()>,
+    raft_parked: Vec<(OpCall, Requester)>,
 }
 
 impl StrongPath {
@@ -74,17 +101,39 @@ impl StrongPath {
         StrongPath {
             prop_con: cfg.prop_conflicting,
             backend: cfg.backend,
+            system: cfg.system,
             batch: cfg.batch_size as usize,
+            chaos: cfg.fault.has_link_faults(),
             mu: (0..groups).map(|g| MuInstance::new(g as u8, cfg.n_replicas)).collect(),
             logs: (0..groups).map(|_| ReplicationLog::new()).collect(),
             round_id: vec![0; groups],
             requesters: FastMap::default(),
             pending_fwd: FastMap::default(),
             next_request_id: 1,
+            mu_confirmed: true,
+            done_fwd: FastMap::default(),
             raft_leader,
             raft_follower: RaftFollower::new(),
             raft_pending: FastMap::default(),
+            raft_lease: true,
+            raft_votes: FastMap::default(),
+            raft_parked: Vec::new(),
         }
+    }
+
+    /// Mirror a run of Raft entries into the group-0 replication log so the
+    /// generic snapshot/replay machinery sees the Raft log. The mirror is
+    /// kept fully applied — Raft applies through its own automaton — so the
+    /// Mu-style quiescence drain never double-executes.
+    fn raft_mirror_append(&mut self, start: u64, term: u64, ops: &[OpCall]) {
+        if self.logs.is_empty() {
+            self.logs.push(ReplicationLog::new());
+        }
+        let log = &mut self.logs[0];
+        for (i, op) in ops.iter().enumerate() {
+            log.write_slot(start + i as u64, term, *op);
+        }
+        log.applied_upto = log.applied_upto.max(log.next_free_slot());
     }
 
     fn drain_logs_cost(&mut self, core: &mut ReplicaCore) -> u64 {
@@ -126,6 +175,9 @@ impl StrongPath {
         self.next_request_id += 1;
         if let Requester::Local { client, arrival } = req {
             self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op });
+            if self.chaos {
+                core.arm_forward_watchdog(ctx, request_id);
+            }
         }
         let leader = core.leader;
         let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
@@ -144,12 +196,103 @@ impl StrongPath {
     // ----- stand-alone Raft backend (non-Waverunner) ---------------------
 
     /// Promote this replica to Raft leader if it isn't one yet (election
-    /// takeover, or an origin-side retry that self-elected first).
-    fn ensure_raft_leader(&mut self, mb: &dyn Membership) {
-        if self.raft_leader.is_none() {
-            let term = self.raft_follower.term + 1;
-            let next = self.raft_follower.log_len();
-            self.raft_leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
+    /// takeover, or an origin-side retry that self-elected first). The
+    /// promotion opens a lease campaign: the adopted log is re-replicated
+    /// at the bumped term (an empty probe when there is nothing to
+    /// replay), and follower acks become the lease votes.
+    fn ensure_raft_leader(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+        if self.raft_leader.is_some() {
+            return;
+        }
+        let term = self.raft_follower.term + 1;
+        let next = self.raft_follower.log_len();
+        self.raft_leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
+        self.raft_lease = false;
+        self.raft_votes = FastMap::default();
+        self.raft_campaign(core, ctx, mb);
+        if !self.raft_lease {
+            // Campaign-retry chain: probes may be fenced at followers that
+            // have not run their permission switch yet.
+            ctx.q.push(
+                ctx.q.now() + core.heartbeat_period_ns,
+                core.id,
+                EventKind::Timer(TimerKind::SmrTick(0)),
+            );
+        }
+    }
+
+    /// One lease-campaign wave: term-bumped replay of the adopted log to
+    /// every live peer (followers overwrite-accept, which is idempotent),
+    /// or an empty probe batch when the log is empty. Solo leaders grant
+    /// themselves the lease — there is no one left to vote.
+    fn raft_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+        if mb.live_set().len() / 2 == 0 {
+            self.raft_grant_lease(core, ctx, mb);
+            return;
+        }
+        let entries: Vec<OpCall> = self.raft_follower.entries().to_vec();
+        let term = self.raft_leader.as_ref().expect("campaigning leader").term;
+        let peers = mb.live_peers(core.id);
+        if entries.is_empty() {
+            for peer in peers {
+                self.raft_send_to(core, ctx, peer, term, 0, Vec::new());
+            }
+            return;
+        }
+        let step = self.batch.max(1);
+        let mut start = 0usize;
+        while start < entries.len() {
+            let end = (start + step).min(entries.len());
+            self.raft_fan_out(core, ctx, mb, term, start as u64, entries[start..end].to_vec());
+            start = end;
+        }
+    }
+
+    /// A follower acknowledged our current term: count it toward the
+    /// lease. Majority (of the live view) grants it and drains the parked
+    /// submissions through the normal leader entry.
+    fn raft_lease_vote(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, from: NodeId) {
+        if self.raft_lease {
+            return;
+        }
+        let Some(rl) = self.raft_leader.as_ref() else { return };
+        if rl.term != term {
+            return;
+        }
+        self.raft_votes.insert(from, ());
+        if self.raft_votes.len() >= mb.live_set().len() / 2 {
+            self.raft_grant_lease(core, ctx, mb);
+        }
+    }
+
+    fn raft_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+        self.raft_lease = true;
+        let parked = std::mem::take(&mut self.raft_parked);
+        for (op, req) in parked {
+            self.raft_submit(core, ctx, mb, op, req);
+        }
+    }
+
+    /// A promoted-but-unleased "leader" learned a smaller live node exists
+    /// (typically after a partition heals): it was a minority imposter.
+    /// Nothing was applied or replicated while parked, so abdication is a
+    /// pure re-route: adopt the rightful view, re-fence the QP row, and
+    /// push the parked ops back through the forward path.
+    fn raft_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
+        ctx.qps.switch_leader(core.id, core.leader, rightful);
+        core.leader = rightful;
+        self.raft_leader = None;
+        self.raft_lease = true;
+        self.raft_votes = FastMap::default();
+        core.request_sync(ctx, rightful);
+        let parked = std::mem::take(&mut self.raft_parked);
+        for (op, req) in parked {
+            match req {
+                Requester::Local { .. } => self.forward_conflicting(core, ctx, op, req),
+                Requester::Remote { reply_to, request_id } => {
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false)
+                }
+            }
         }
     }
 
@@ -163,9 +306,17 @@ impl StrongPath {
             self.forward_conflicting(core, ctx, op, req);
             return;
         }
-        self.ensure_raft_leader(mb);
+        self.ensure_raft_leader(core, ctx, mb);
+        if !self.raft_lease {
+            // Leadership not confirmed by a follower majority yet: park.
+            self.raft_parked.push((op, req));
+            return;
+        }
         if !core.plane.permissible(&op) {
             core.rejected += 1;
+            if self.chaos {
+                self.done_fwd.insert((op.origin, op.seq), false);
+            }
             self.answer_requester(core, ctx, req, false);
             return;
         }
@@ -174,7 +325,9 @@ impl StrongPath {
         core.executions += 1;
         core.plane.apply(&op);
         let rl = self.raft_leader.as_mut().expect("just ensured");
+        let term = rl.term;
         let (index, fanout) = rl.submit(op);
+        self.raft_mirror_append(index, term, &[op]);
         self.raft_pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
             self.raft_fan_out(core, ctx, mb, term, start, ops);
@@ -230,6 +383,12 @@ impl StrongPath {
         match step {
             Step::Wait => {}
             Step::Next(round) => {
+                // A WriteProposal quorum (the transition into ReadSlots)
+                // means a follower majority accepted this leadership —
+                // confirmation, in lease terms.
+                if matches!(round, Round::ReadSlots { .. }) {
+                    self.mu_confirmed = true;
+                }
                 if let Round::WriteLog { slot, proposal, op, adopted } = round {
                     // Accept phase entry: the leader *executes* the
                     // transaction before writing followers' logs (§4.4).
@@ -238,6 +397,9 @@ impl StrongPath {
                     if !adopted && !core.plane.permissible(&op) {
                         core.rejected += 1;
                         self.mu[g].abort_current();
+                        if self.chaos {
+                            self.done_fwd.insert((op.origin, op.seq), false);
+                        }
                         if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
                             self.answer_requester(core, ctx, req, false);
                         }
@@ -276,6 +438,9 @@ impl StrongPath {
                     core.busy_until = now;
                 }
                 ctx.metrics.smr_commits += 1;
+                if self.chaos {
+                    self.done_fwd.insert((op.origin, op.seq), true);
+                }
                 if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
                     self.answer_requester(core, ctx, req, true);
                 }
@@ -286,6 +451,19 @@ impl StrongPath {
                 }
             }
             Step::Stall => {
+                // A stalled round on a never-confirmed leadership, while a
+                // smaller live node exists, means this replica self-elected
+                // inside a partition minority and every correct replica
+                // fences its writes: abdicate. Nothing was applied (Mu
+                // executes only at Accept, past confirmation), so the
+                // queued ops simply re-route through the forward path.
+                if !self.mu_confirmed {
+                    let rightful = mb.elect_leader();
+                    if rightful != core.id {
+                        self.mu_abdicate(core, ctx, rightful);
+                        return;
+                    }
+                }
                 self.mu[g].reset_in_flight();
                 // Retry once the heartbeat scanner refreshes the live set.
                 ctx.q.push(
@@ -293,6 +471,28 @@ impl StrongPath {
                     core.id,
                     EventKind::Timer(TimerKind::SmrTick(g as u8)),
                 );
+            }
+        }
+    }
+
+    /// Mu abdication (see `Step::Stall`): adopt the rightful leader view,
+    /// re-fence our own QP row, and hand every queued conflicting op back
+    /// to the forward path (remote requesters bounce so origins retry).
+    fn mu_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
+        ctx.qps.switch_leader(core.id, core.leader, rightful);
+        core.leader = rightful;
+        self.mu_confirmed = true; // provisional reign over; next promotion resets
+        core.request_sync(ctx, rightful);
+        for g in 0..self.mu.len() {
+            self.mu[g].reset_in_flight();
+            for op in self.mu[g].take_queue() {
+                match self.requesters.remove(&(op.origin, op.seq)) {
+                    Some(req @ Requester::Local { .. }) => self.forward_conflicting(core, ctx, op, req),
+                    Some(Requester::Remote { reply_to, request_id }) => {
+                        self.reply_remote(core, ctx, reply_to, request_id, false, false)
+                    }
+                    None => {}
+                }
             }
         }
     }
@@ -349,6 +549,9 @@ impl StrongPath {
             tok,
         );
         ctx.metrics.verbs += 1;
+        if self.chaos {
+            core.arm_forward_watchdog(ctx, request_id);
+        }
         let at = ctx.q.now() + core.heartbeat_period_ns;
         let at = at.max(core.busy_until);
         ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, leader, verb, true);
@@ -372,6 +575,73 @@ impl StrongPath {
         }
     }
 
+    /// One AppendEntries (single or batched) to a single peer — the
+    /// directed half of `raft_fan_out`, used by recovery replay, the
+    /// RaftRejected backfill, and (with an empty batch) the lease probe.
+    fn raft_send_to(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        peer: NodeId,
+        term: u64,
+        start: u64,
+        ops: Vec<OpCall>,
+    ) {
+        let mem = if core.system == SystemKind::Waverunner {
+            MemKind::HostDram
+        } else {
+            core.landing_mem_for_peer()
+        };
+        let tok = core.token(TokenCtx::Ignore);
+        let payload = if ops.len() == 1 {
+            Payload::RaftAppend { term, index: start, op: ops[0] }
+        } else {
+            Payload::RaftAppendBatch { term, start_index: start, ops }
+        };
+        ctx.metrics.verbs += 1;
+        let verb = Verb::write(mem, payload, tok).on_leader_qp();
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, false);
+    }
+
+    /// Recovery / anti-entropy: re-ship the mirrored Raft log to one peer
+    /// from `from_index`, chunked like any other append. Followers
+    /// overwrite-accept (idempotent) and ack each chunk's last index, so a
+    /// chunk that completes the in-flight batch still counts toward its
+    /// quorum.
+    fn raft_replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId, from_index: u64) {
+        let entries = match self.logs.first() {
+            Some(l) => l.entries_from(from_index),
+            None => return,
+        };
+        if entries.is_empty() {
+            return;
+        }
+        let term = self.raft_leader.as_ref().map(|l| l.term).unwrap_or(self.raft_follower.term);
+        let first = entries[0].0;
+        let ops: Vec<OpCall> = entries.into_iter().map(|(_, e)| e.op).collect();
+        let step = self.batch.max(1);
+        let mut start = 0usize;
+        while start < ops.len() {
+            let end = (start + step).min(ops.len());
+            self.raft_send_to(core, ctx, peer, term, first + start as u64, ops[start..end].to_vec());
+            start = end;
+        }
+    }
+
+    /// Follower side of a gap: tell the leader where our log ends so it
+    /// backfills (classic Raft nextIndex back-up, collapsed to one step —
+    /// gaps only open when fault injection eats an append).
+    fn raft_reject(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, leader: NodeId, term: u64) {
+        let tok = core.token(TokenCtx::Ignore);
+        let verb = Verb::write(
+            core.landing_mem_for_peer(),
+            Payload::RaftRejected { term, from: core.id, log_len: self.raft_follower.log_len() },
+            tok,
+        );
+        ctx.metrics.verbs += 1;
+        ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, leader, verb, false);
+    }
+
     // ----- waverunner (Raft baseline, §5.2) ------------------------------
 
     fn waverunner_redirect(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
@@ -380,6 +650,9 @@ impl StrongPath {
         let request_id = self.next_request_id;
         self.next_request_id += 1;
         self.pending_fwd.insert(request_id, PendingClient { client, arrival, retries: 0, op: item.op });
+        if self.chaos {
+            core.arm_forward_watchdog(ctx, request_id);
+        }
         let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
         let verb = Verb::write(
             core.landing_mem_for_peer(),
@@ -437,7 +710,9 @@ impl StrongPath {
         core.executions += 1;
         core.plane.apply(&op);
         let rl = self.raft_leader.as_mut().unwrap();
+        let term = rl.term;
         let (index, fanout) = rl.submit(op);
+        self.raft_mirror_append(index, term, &[op]);
         self.raft_pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
             self.raft_fan_out(core, ctx, mb, term, start, ops);
@@ -485,7 +760,7 @@ impl StrongPath {
             core.fan_out(
                 ctx,
                 &peers,
-                |t| Verb::write(mem, Payload::RaftAppend { term, index: start, op }, t),
+                |t| Verb::write(mem, Payload::RaftAppend { term, index: start, op }, t).on_leader_qp(),
                 false,
                 || TokenCtx::Ignore,
             );
@@ -502,6 +777,7 @@ impl StrongPath {
                         Payload::RaftAppendBatch { term, start_index: start, ops: ops.clone() },
                         t,
                     )
+                    .on_leader_qp()
                 },
                 false,
                 || TokenCtx::Ignore,
@@ -525,6 +801,16 @@ impl ReplicationPath for StrongPath {
                     EventKind::Timer(TimerKind::PollLog(g as u8)),
                 );
             }
+        }
+        // Chaos mode: the Raft pipeline's logical acks can be eaten by
+        // lossy links, so every replica arms the re-pump tick (it only
+        // acts while this replica leads).
+        if self.chaos && self.backend == ConsensusBackend::Raft {
+            ctx.q.push(
+                base + core.heartbeat_period_ns,
+                core.id,
+                EventKind::Timer(TimerKind::SmrTick(0)),
+            );
         }
     }
 
@@ -577,6 +863,13 @@ impl ReplicationPath for StrongPath {
             }
             Payload::LogAppend { group, slot, proposal, op } => {
                 let g = group as usize;
+                // A slot beyond our append point means an earlier Accept
+                // write never landed here (fenced pre-switch, or eaten by
+                // fault injection): ask the sender for a replay. Never
+                // fires on a clean in-order fabric.
+                if slot > self.logs[g].next_free_slot() {
+                    core.request_sync(ctx, src);
+                }
                 self.logs[g].write_slot(slot, proposal, op);
                 if is_rpc {
                     // Write-through: follower state updated directly from
@@ -604,6 +897,16 @@ impl ReplicationPath for StrongPath {
                 } else if core.is_leader() {
                     let sw = core.exec().software_overhead_ns;
                     core.occupy(ctx.q.now(), sw);
+                    // Chaos-mode exactly-once: a duplicate of an op we
+                    // already ordered (its reply was eaten by a faulty
+                    // link) answers with the recorded verdict instead of
+                    // executing twice.
+                    if self.chaos {
+                        if let Some(&committed) = self.done_fwd.get(&(op.origin, op.seq)) {
+                            self.reply_remote(core, ctx, reply_to, request_id, true, committed);
+                            return;
+                        }
+                    }
                     // Leader re-checks permissibility in total order context.
                     self.submit_conflicting(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
                 } else {
@@ -626,24 +929,64 @@ impl ReplicationPath for StrongPath {
             }
             Payload::RaftAppend { term, index, op } => {
                 if self.raft_follower.on_append(term, index, op) {
+                    self.raft_mirror_append(index, term, &[op]);
                     self.raft_follower_apply(core);
                     self.raft_ack(core, ctx, src, term, index);
+                } else if term >= self.raft_follower.term && index > self.raft_follower.log_len() {
+                    self.raft_reject(core, ctx, src, term);
                 }
             }
             Payload::RaftAppendBatch { term, start_index, ops } => {
                 if self.raft_follower.on_append_batch(term, start_index, &ops) {
+                    self.raft_mirror_append(start_index, term, &ops);
                     self.raft_follower_apply(core);
-                    // One ack for the whole batch, on its last index.
-                    self.raft_ack(core, ctx, src, term, start_index + ops.len() as u64 - 1);
+                    // One ack for the whole batch, on its last index (an
+                    // empty batch is a lease probe — ack its start).
+                    let last = start_index + (ops.len() as u64).max(1) - 1;
+                    self.raft_ack(core, ctx, src, term, last);
+                } else if term >= self.raft_follower.term
+                    && start_index > self.raft_follower.log_len()
+                {
+                    self.raft_reject(core, ctx, src, term);
                 }
             }
-            Payload::RaftAck { term, index, .. } => {
+            Payload::RaftRejected { term, from, log_len } => {
+                // A follower told us where its log ends (fault injection
+                // ate an append): backfill from the mirrored log. The gap
+                // report also proves it accepted our term — a lease vote.
+                self.raft_lease_vote(core, ctx, mb, term, from);
+                let current = self.raft_leader.as_ref().is_some_and(|rl| rl.term == term);
+                if current {
+                    self.raft_replay_to(core, ctx, from, log_len);
+                }
+            }
+            Payload::SyncRequest { from } => {
+                // A follower completed its permission switch toward us and
+                // wants the committed log (our takeover broadcast may have
+                // been fenced at it). Idempotent on both backends.
+                if core.is_leader() {
+                    if self.backend == ConsensusBackend::Raft {
+                        self.raft_replay_to(core, ctx, from, 0);
+                    } else {
+                        self.replay_log_to(core, ctx, from);
+                    }
+                }
+            }
+            Payload::RaftAck { term, index, from } => {
+                // A current-term ack is also a lease vote for a freshly
+                // promoted leader (the follower accepted our authority).
+                self.raft_lease_vote(core, ctx, mb, term, from);
                 if let Some(rl) = self.raft_leader.as_mut() {
-                    if let RaftStep::Commit { start_index, ops } = rl.on_ack(term, index) {
+                    if let RaftStep::Commit { start_index, ops } = rl.on_ack(term, index, from) {
                         // Leader state was updated at submit; commit point
                         // is the quorum ack.
                         let done = core.occupy(ctx.q.now(), core.exec().op_exec_ns);
                         ctx.metrics.smr_commits += ops.len() as u64;
+                        if self.chaos {
+                            for o in &ops {
+                                self.done_fwd.insert((o.origin, o.seq), true);
+                            }
+                        }
                         for i in 0..ops.len() as u64 {
                             if let Some(req) = self.raft_pending.remove(&(start_index + i)) {
                                 match req {
@@ -714,6 +1057,42 @@ impl ReplicationPath for StrongPath {
                 }
             }
             TimerKind::SmrTick(g) => {
+                if self.backend == ConsensusBackend::Raft {
+                    // Chaos-mode re-pump: a dropped append or eaten logical
+                    // ack can wedge the one-in-flight pipeline, so the
+                    // leader periodically re-ships the in-flight batch.
+                    // Followers overwrite-accept duplicates and re-ack.
+                    // An unleased leader instead re-runs its campaign — or
+                    // abdicates once a smaller live node is back in view
+                    // (the partition healed and it was a minority imposter).
+                    if core.is_leader() {
+                        if !self.raft_lease && self.raft_leader.is_some() {
+                            let rightful = mb.elect_leader();
+                            if rightful != core.id {
+                                self.raft_abdicate(core, ctx, rightful);
+                            } else {
+                                self.raft_campaign(core, ctx, mb);
+                            }
+                        } else if let Some(rl) = self.raft_leader.as_mut() {
+                            rl.set_cluster_size(mb.live_set().len());
+                            if let Some((term, start, ops)) = rl.refanout() {
+                                self.raft_fan_out(core, ctx, mb, term, start, ops);
+                            }
+                        }
+                    }
+                    // Re-arm: permanently in chaos mode, and as a one-shot
+                    // chain while a lease campaign is still out (probes can
+                    // be fenced at followers that have not switched yet).
+                    let campaigning = !self.raft_lease && self.raft_leader.is_some();
+                    if (self.chaos || campaigning) && !ctx.draining {
+                        ctx.q.push(
+                            ctx.q.now() + core.heartbeat_period_ns,
+                            core.id,
+                            EventKind::Timer(t),
+                        );
+                    }
+                    return;
+                }
                 let g = g as usize;
                 if core.is_leader() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
@@ -721,6 +1100,15 @@ impl ReplicationPath for StrongPath {
                     if let Some(round) = self.mu[g].pump(slot) {
                         self.fan_out_round(core, ctx, mb, g, round);
                     }
+                }
+            }
+            TimerKind::ForwardCheck { request_id } => {
+                // Chaos-mode watchdog: the leader's reply never arrived
+                // (lost on a faulty link) — re-forward. At-least-once is
+                // safe: the leader re-checks permissibility in total-order
+                // position, and retry_forward gives up after its cap.
+                if let Some(p) = self.pending_fwd.remove(&request_id) {
+                    self.retry_forward(core, ctx, mb, p);
                 }
             }
             _ => {}
@@ -752,7 +1140,14 @@ impl ReplicationPath for StrongPath {
                 }
             }
             MembershipEvent::PeerRecovered { peer } => {
-                self.replay_log_to(core, ctx, peer);
+                if self.backend == ConsensusBackend::Raft {
+                    // Term-bumped replay of the mirrored Raft log: the
+                    // returned follower overwrite-accepts and applies the
+                    // tail its snapshot predates.
+                    self.raft_replay_to(core, ctx, peer, 0);
+                } else {
+                    self.replay_log_to(core, ctx, peer);
+                }
                 for g in 0..self.mu.len() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                 }
@@ -763,30 +1158,14 @@ impl ReplicationPath for StrongPath {
             MembershipEvent::LeaderSwitched => {
                 if core.is_leader() {
                     ctx.metrics.elections += 1;
+                    ctx.metrics.election_times.push(ctx.q.now());
                     if self.backend == ConsensusBackend::Raft {
                         // Stand-alone Raft takeover: adopt the accepted log
-                        // at a higher term and re-replicate it (followers
-                        // overwrite-accept higher terms; idempotent).
+                        // at a higher term and re-replicate it as the lease
+                        // campaign (followers overwrite-accept higher
+                        // terms; their acks double as lease votes).
                         if core.system != SystemKind::Waverunner && self.raft_leader.is_none() {
-                            self.ensure_raft_leader(mb);
-                            let term = self.raft_leader.as_ref().expect("promoted").term;
-                            let entries: Vec<OpCall> = self.raft_follower.entries().to_vec();
-                            // Replay in batch_size chunks: the election-time
-                            // log re-ship coalesces like any other append.
-                            let step = self.batch.max(1);
-                            let mut start = 0usize;
-                            while start < entries.len() {
-                                let end = (start + step).min(entries.len());
-                                self.raft_fan_out(
-                                    core,
-                                    ctx,
-                                    mb,
-                                    term,
-                                    start as u64,
-                                    entries[start..end].to_vec(),
-                                );
-                                start = end;
-                            }
+                            self.ensure_raft_leader(core, ctx, mb);
                         }
                     } else {
                         // Take over: re-replicate our log suffix first — the
@@ -794,7 +1173,11 @@ impl ReplicationPath for StrongPath {
                         // subset of followers (including us), and Mu's
                         // slot-adoption only repairs slots we later propose
                         // into. Idempotent: followers reject equal/lower
-                        // proposals and skip already-applied slots.
+                        // proposals and skip already-applied slots. The
+                        // Prepare phase is Mu's leadership confirmation:
+                        // until a WriteProposal round reaches quorum this
+                        // leadership is provisional (see mu_confirmed).
+                        self.mu_confirmed = false;
                         let peers = mb.live_peers(core.id);
                         for peer in peers {
                             self.replay_log_to(core, ctx, peer);
@@ -831,16 +1214,65 @@ impl ReplicationPath for StrongPath {
 
     fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
         self.logs = logs;
+        if self.backend != ConsensusBackend::Raft {
+            return;
+        }
+        // Raft recovery parity with Mu/Paxos: rebuild the follower
+        // automaton from the donor's mirrored log. The installed plane
+        // already contains every mirrored entry's effect, so the rebuilt
+        // log starts fully applied; the leader's replay covers anything
+        // committed after the snapshot point.
+        let entries = self.logs.first().map(|l| l.entries_from(0)).unwrap_or_default();
+        let term = entries.iter().map(|(_, e)| e.proposal).max().unwrap_or(1);
+        let ops: Vec<OpCall> = entries.into_iter().map(|(_, e)| e.op).collect();
+        self.raft_follower = RaftFollower::restore(term, ops);
+        if self.system != SystemKind::Waverunner {
+            // A recovered ex-leader rejoins as a follower (the donor's
+            // leader view installs with the snapshot); stale pipeline
+            // state must not answer ghosts of pre-crash requests.
+            self.raft_leader = None;
+        }
+        self.raft_pending = FastMap::default();
+        self.raft_lease = true;
+        self.raft_votes = FastMap::default();
+        self.raft_parked.clear();
+    }
+
+    fn replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, peer: NodeId) {
+        // Heal-time anti-entropy: a short partition can open a silent gap
+        // at `peer` (a round committed by the other majority members), so
+        // the leader re-ships its committed log. Idempotent on every
+        // backend: proposal-guarded slots (Mu) / overwrite-accept (Raft).
+        if self.backend == ConsensusBackend::Raft {
+            self.raft_replay_to(core, ctx, peer, 0);
+        } else {
+            self.replay_log_to(core, ctx, peer);
+        }
+    }
+
+    fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
+        if !core.is_leader() {
+            return;
+        }
+        if self.backend == ConsensusBackend::Raft {
+            if !self.raft_lease && self.raft_leader.is_some() {
+                self.raft_abdicate(core, ctx, rightful);
+            }
+        } else if !self.mu_confirmed {
+            self.mu_abdicate(core, ctx, rightful);
+        }
     }
 
     fn debug_status(&self) -> String {
         let mu_q: usize = self.mu.iter().map(|m| m.queue_len()).sum();
         let mu_idle: Vec<bool> = self.mu.iter().map(|m| m.is_idle()).collect();
         format!(
-            "pending_fwd={} requesters={} raft_pending={} mu_q={} mu_idle={:?}",
+            "pending_fwd={} requesters={} raft_pending={} raft_lease={} raft_parked={} mu_q={} mu_idle={:?}",
             self.pending_fwd.len(),
             self.requesters.len(),
             self.raft_pending.len(),
+            self.raft_lease,
+            self.raft_parked.len(),
             mu_q,
             mu_idle
         )

@@ -1,0 +1,129 @@
+//! Chaos — deterministic multi-fault schedules × consensus backend ×
+//! cluster size, reporting the paper's resilience story (§3 fault model,
+//! §5.3 crash experiments) as a per-incident fault timeline: injection
+//! time, heartbeat detection latency, unavailability window, and
+//! re-election count, alongside the run's response time / throughput.
+//!
+//! Every cell must converge with invariants intact (`run_cell` hard-fails
+//! otherwise), so this sweep doubles as the chaos acceptance gate: a
+//! leader crash *during* a partition, lossy links, and delay spikes all
+//! terminate in a consistent cluster on every backend. The CI smoke leg
+//! (`expt chaos --quick --threads 2`) runs one schedule per backend.
+
+use crate::config::{ConsensusBackend, FaultSchedule, SimConfig, WorkloadKind};
+use crate::expt::common::{backend_filter, f3, run_cells_tagged};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+/// Named schedules, in increasing nastiness. `quick` keeps the acceptance
+/// scenario only (leader crash mid-partition, then heal).
+fn schedules(quick: bool) -> &'static [(&'static str, &'static str)] {
+    const ALL: &[(&str, &str)] = &[
+        ("follower-crash", "crash@40:2"),
+        ("crash-recover", "crash@30:2,recover@60:2"),
+        ("partition-heal", "partition@35:1-2,heal@65"),
+        ("leader-crash-partitioned", "partition@40:1-2,crash@50:leader,heal@70"),
+        ("flaky-link", "drop@25:0-1x3,delay@35:0-2x300u65"),
+    ];
+    if quick {
+        &ALL[3..4]
+    } else {
+        ALL
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let backends: Vec<ConsensusBackend> = match backend_filter() {
+        Some(b) => vec![b],
+        None => ConsensusBackend::ALL.to_vec(),
+    };
+    let nodes: &[usize] = if quick { &[5] } else { &[4, 6] };
+    let ops: u64 = if quick { 12_000 } else { 40_000 };
+
+    let mut t = Table::new(
+        "Chaos — fault schedules × backend (Account, 25% updates)",
+        &[
+            "schedule",
+            "backend",
+            "nodes",
+            "incident",
+            "action",
+            "injected_us",
+            "detect_us",
+            "unavail_us",
+            "elections",
+            "rt_us",
+            "tput_ops_us",
+        ],
+    );
+    let mut jobs = Vec::new();
+    for (si, &(name, sched)) in schedules(quick).iter().enumerate() {
+        for (bi, &backend) in backends.iter().enumerate() {
+            for &n in nodes {
+                let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                cfg.backend = backend;
+                cfg.n_replicas = n;
+                cfg.update_pct = 25;
+                cfg.fault = FaultSchedule::parse(sched).expect("named schedule parses");
+                cfg.seed = 0xC4A0_5000 + (si as u64) * 0x101 + (bi as u64) * 0x11 + n as u64;
+                jobs.push(((name, backend, n), (cfg, ops)));
+            }
+        }
+    }
+    for ((name, backend, n), cell, rep) in run_cells_tagged(jobs) {
+        for (i, inc) in rep.fault_timeline.iter().enumerate() {
+            t.row(vec![
+                name.to_string(),
+                backend.name().into(),
+                n.to_string(),
+                i.to_string(),
+                inc.label.clone(),
+                f3(inc.injected_ns as f64 / 1_000.0),
+                inc.detect_ns
+                    .map(|d| f3((d - inc.injected_ns) as f64 / 1_000.0))
+                    .unwrap_or_else(|| "-".into()),
+                f3(inc.unavailable_ns as f64 / 1_000.0),
+                inc.elections.to_string(),
+                f3(cell.rt_us),
+                f3(cell.tput),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_reports_per_incident_telemetry() {
+        crate::expt::common::set_threads(2);
+        let t = &run(true)[0];
+        // One schedule (3 incidents) per backend — unless a backend filter
+        // narrowed the matrix.
+        let backends = match backend_filter() {
+            Some(_) => 1,
+            None => ConsensusBackend::ALL.len(),
+        };
+        assert_eq!(t.rows().len(), 3 * backends, "3 incidents per cell");
+        for row in t.rows() {
+            assert!(
+                ["partition:1-2", "heal"].contains(&row[4].as_str())
+                    || row[4].starts_with("crash:"),
+                "unexpected incident label {}",
+                row[4]
+            );
+        }
+        // The leader crash must have been detected and cost a bounded
+        // unavailability window, with at least one re-election.
+        let crash_rows: Vec<_> =
+            t.rows().iter().filter(|r| r[4].starts_with("crash:")).collect();
+        assert_eq!(crash_rows.len(), backends);
+        for r in crash_rows {
+            assert_ne!(r[6], "-", "leader crash must be detected");
+            assert!(r[8].parse::<u64>().unwrap() >= 1, "re-election after leader crash");
+            assert!(r[7].parse::<f64>().unwrap() > 0.0, "unavailability window recorded");
+        }
+    }
+}

@@ -9,7 +9,7 @@
 //! maintenance); leader crash costs SafarDB ~25 % RT / ~15 % tput vs
 //! Hamband ~40 %/40 % (permission-switch gap, Fig 13).
 
-use crate::config::{FaultSpec, SimConfig, WorkloadKind};
+use crate::config::{FaultSchedule, SimConfig, WorkloadKind};
 use crate::expt::common::{cell_ops, f3, run_cells_tagged, UPDATE_SWEEP};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
@@ -24,12 +24,12 @@ fn base(system: &str, rdt: RdtKind) -> SimConfig {
 }
 
 pub fn run(quick: bool) -> Vec<Table> {
-    let scenarios: &[(&str, RdtKind, Option<FaultSpec>)] = &[
-        ("2P-Set/none", RdtKind::TwoPSet, None),
-        ("2P-Set/replica-crash", RdtKind::TwoPSet, Some(FaultSpec::CrashAtFraction { node: 2, fraction_pct: 50 })),
-        ("Account/none", RdtKind::Account, None),
-        ("Account/follower-crash", RdtKind::Account, Some(FaultSpec::CrashAtFraction { node: 3, fraction_pct: 50 })),
-        ("Account/leader-crash", RdtKind::Account, Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 50 })),
+    let scenarios: &[(&str, RdtKind, FaultSchedule)] = &[
+        ("2P-Set/none", RdtKind::TwoPSet, FaultSchedule::none()),
+        ("2P-Set/replica-crash", RdtKind::TwoPSet, FaultSchedule::crash_at(2, 50)),
+        ("Account/none", RdtKind::Account, FaultSchedule::none()),
+        ("Account/follower-crash", RdtKind::Account, FaultSchedule::crash_at(3, 50)),
+        ("Account/leader-crash", RdtKind::Account, FaultSchedule::crash_leader_at(50)),
     ];
     let mut t = Table::new(
         "Fig 14 — crash faults (4 nodes)",
@@ -44,7 +44,7 @@ pub fn run(quick: bool) -> Vec<Table> {
                 }
                 let mut cfg = base(system, *rdt);
                 cfg.update_pct = u;
-                cfg.fault = *fault;
+                cfg.fault = fault.clone();
                 jobs.push(((*name, system, u), (cfg, cell_ops(quick))));
             }
         }

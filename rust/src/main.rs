@@ -109,16 +109,19 @@ fn cmd_expt(args: &[String]) -> i32 {
         expt::common::set_threads(n);
     }
     if let Some(b) = backend {
-        // Only the `backends` sweep consults the filter; accepting it
-        // elsewhere would silently emit unfiltered (default-backend) CSVs
-        // under a backend-filtered invocation.
+        // Only the backend-aware sweeps (`backends`, `chaos`) consult the
+        // filter; accepting it elsewhere would silently emit unfiltered
+        // (default-backend) CSVs under a backend-filtered invocation.
         let ids_for_check: Vec<&str> = if ids.is_empty() || ids == ["all"] {
             expt::ALL.to_vec()
         } else {
             ids.clone()
         };
-        if ids_for_check.iter().any(|id| expt::canonical(id) != Some("backends")) {
-            eprintln!("--backend only applies to `expt backends`");
+        if ids_for_check
+            .iter()
+            .any(|id| !matches!(expt::canonical(id), Some("backends") | Some("chaos")))
+        {
+            eprintln!("--backend only applies to `expt backends` and `expt chaos`");
             return 2;
         }
         expt::common::set_backend_filter(b);

@@ -35,6 +35,14 @@ pub struct RunMetrics {
     pub staleness: Summary,
     /// Leader elections completed.
     pub elections: u64,
+    /// Fault-timeline telemetry: when each election completed (virtual ns).
+    pub election_times: Vec<u64>,
+    /// Fault-timeline telemetry: `(t, subject, observer)` — observer's
+    /// heartbeat tracker declared subject FAILED at t.
+    pub detections: Vec<(u64, usize, usize)>,
+    /// Fault-timeline telemetry: `(t, subject, observer)` — observer saw
+    /// subject's heartbeat resume at t.
+    pub recoveries: Vec<(u64, usize, usize)>,
     /// Virtual makespan of the run (ns): last client completion.
     pub makespan_ns: u64,
     /// Last client-op completion time (feeds makespan).
@@ -58,6 +66,9 @@ impl RunMetrics {
             perm_switch: Histogram::new(),
             staleness: Summary::new(),
             elections: 0,
+            election_times: Vec::new(),
+            detections: Vec::new(),
+            recoveries: Vec::new(),
             makespan_ns: 0,
             last_completion_ns: 0,
             events: 0,

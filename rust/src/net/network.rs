@@ -27,8 +27,19 @@ pub struct Network {
     hb_clear_at: Vec<Vec<Time>>,
     /// Crash state mirror (verbs to a crashed node vanish; no ACK).
     crashed: Vec<bool>,
+    /// Partition state per directed link: verbs NACK after the
+    /// retransmission timeout, like a crashed destination — but the sender
+    /// still pays channel occupancy (no free lane on a cut link).
+    partitioned: Vec<Vec<bool>>,
+    /// Fault injection: remaining silent drops per directed link.
+    drop_next: Vec<Vec<u32>>,
+    /// Fault injection: one-way latency scale per directed link (percent;
+    /// 100 = nominal — the empty-schedule fast path never multiplies).
+    delay_pct: Vec<Vec<u32>>,
     pub verbs_issued: u64,
     pub verbs_nacked: u64,
+    /// Verbs silently lost by `DropNext` injection.
+    pub verbs_dropped: u64,
 }
 
 impl Network {
@@ -38,8 +49,12 @@ impl Network {
             channel_clear_at: vec![vec![0; n]; n],
             hb_clear_at: vec![vec![0; n]; n],
             crashed: vec![false; n],
+            partitioned: vec![vec![false; n]; n],
+            drop_next: vec![vec![0; n]; n],
+            delay_pct: vec![vec![100; n]; n],
             verbs_issued: 0,
             verbs_nacked: 0,
+            verbs_dropped: 0,
         }
     }
 
@@ -49,6 +64,33 @@ impl Network {
 
     pub fn is_crashed(&self, node: NodeId) -> bool {
         self.crashed[node]
+    }
+
+    /// Cut (or repair) the `a <-> b` link in both directions.
+    pub fn set_partitioned(&mut self, a: NodeId, b: NodeId, cut: bool) {
+        self.partitioned[a][b] = cut;
+        self.partitioned[b][a] = cut;
+    }
+
+    pub fn is_partitioned(&self, src: NodeId, dst: NodeId) -> bool {
+        self.partitioned[src][dst]
+    }
+
+    /// Repair every cut link.
+    pub fn heal_all(&mut self) {
+        for row in &mut self.partitioned {
+            row.fill(false);
+        }
+    }
+
+    /// Arm `count` silent drops on the directed src -> dst link.
+    pub fn arm_drop(&mut self, src: NodeId, dst: NodeId, count: u32) {
+        self.drop_next[src][dst] += count;
+    }
+
+    /// Scale the directed src -> dst one-way latency (100 = nominal).
+    pub fn set_delay_pct(&mut self, src: NodeId, dst: NodeId, pct: u32) {
+        self.delay_pct[src][dst] = pct.max(1);
     }
 
     pub fn mem(&self) -> &MemParams {
@@ -81,16 +123,31 @@ impl Network {
         // relaxed-path traffic rides per-peer QPs that stay open, and
         // one-sided reads are answered from memory regardless.
         let fenced = verb.leader_qp && !qps.is_open(src, dst);
+        let partitioned = self.partitioned[src][dst];
 
-        if fenced || self.crashed[dst] {
+        if fenced || self.crashed[dst] || partitioned {
             self.verbs_nacked += 1;
-            // Fenced QPs NACK after a round trip; a crashed destination
-            // stalls the verb until the retransmission timeout expires.
-            let nack_at = if self.crashed[dst] {
+            // Fenced QPs NACK after a round trip; a crashed destination or
+            // a cut link stalls the verb until the retransmission timeout
+            // expires — the sender observes a partition exactly like a
+            // crash (§3 fault model, NACK-on-partition).
+            let nack_at = if self.crashed[dst] || partitioned {
                 now + fabric.crash_timeout_ns
             } else {
                 now + fabric.ack_at_ns(bytes, verb.dst_mem, &self.mem)
             };
+            if partitioned && !self.crashed[dst] {
+                // A cut link is not a free lane: the NIC keeps the in-order
+                // channel busy with retransmission attempts, so verbs
+                // issued behind the loss still queue behind it.
+                let one_way = fabric.one_way_ns(bytes, verb.dst_mem, &self.mem);
+                let clear = if verb.payload.is_heartbeat() {
+                    &mut self.hb_clear_at[src][dst]
+                } else {
+                    &mut self.channel_clear_at[src][dst]
+                };
+                *clear = (now + one_way).max(*clear + 1);
+            }
             if want_completion {
                 q.push(nack_at, src, EventKind::NackDeliver { token });
             }
@@ -98,7 +155,11 @@ impl Network {
             return IssueOutcome { initiator_free_at: free_at, delivered_at: None };
         }
 
-        let one_way = fabric.one_way_ns(bytes, verb.dst_mem, &self.mem);
+        let mut one_way = fabric.one_way_ns(bytes, verb.dst_mem, &self.mem);
+        let scale = self.delay_pct[src][dst];
+        if scale != 100 {
+            one_way = (one_way.saturating_mul(scale as u64) / 100).max(1);
+        }
         // Reliable in-order per channel: delivery can't overtake the
         // previous verb on the same (src, dst) pair. Heartbeat-plane verbs
         // ride their own lane.
@@ -109,6 +170,25 @@ impl Network {
         };
         let deliver_at = (now + one_way).max(*clear + 1);
         *clear = deliver_at;
+
+        if self.drop_next[src][dst] > 0 {
+            // The verb went on the wire (its channel slot is consumed) but
+            // the payload is lost. Completion-carrying verbs surface as a
+            // NACK at the retransmission timeout; fire-and-forget verbs
+            // vanish — which is why the chaos-mode relaxed path tracks
+            // completions and retries.
+            self.drop_next[src][dst] -= 1;
+            self.verbs_dropped += 1;
+            if want_completion {
+                q.push(now + fabric.crash_timeout_ns, src, EventKind::NackDeliver { token });
+            }
+            let free_at = if fabric.wait_ack {
+                now + fabric.crash_timeout_ns
+            } else {
+                now + fabric.verb_issue_ns
+            };
+            return IssueOutcome { initiator_free_at: free_at, delivered_at: None };
+        }
 
         let is_read = verb.kind == VerbKind::Read;
         q.push(deliver_at, dst, EventKind::VerbDeliver { src, verb });
@@ -205,6 +285,77 @@ mod tests {
         let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(4), true);
         assert!(out.delivered_at.is_none());
         assert!(matches!(q.pop().unwrap().kind, EventKind::NackDeliver { token: 4 }));
+    }
+
+    #[test]
+    fn partitioned_destination_nacks_like_a_crash() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        net.set_partitioned(0, 1, true);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(4), true);
+        assert!(out.delivered_at.is_none());
+        let ev = q.pop().unwrap();
+        assert!(matches!(ev.kind, EventKind::NackDeliver { token: 4 }));
+        assert_eq!(ev.time, fab.crash_timeout_ns, "partition NACKs at the retransmit timeout");
+        assert_eq!(net.verbs_nacked, 1);
+        // Symmetric cut; heal_all repairs both directions.
+        assert!(net.is_partitioned(1, 0));
+        net.heal_all();
+        let out2 = net.issue(&mut q, &qps, &fab, 10_000, 0, 1, raw_write(5), false);
+        assert!(out2.delivered_at.is_some(), "healed link delivers again");
+    }
+
+    #[test]
+    fn partitioned_link_still_consumes_channel_occupancy() {
+        // A sender must not get a free lane because the link is down: the
+        // NACKed verb's retransmission attempts occupy the in-order channel,
+        // so the next verb after a heal queues behind it.
+        let (mut q, mut net, qps, fab) = setup(2);
+        let big = Verb::write(MemKind::Hbm, Payload::Raw { bytes: 8192 }, 1);
+        let big_one_way = fab.one_way_ns(big.wire_bytes(), MemKind::Hbm, net.mem());
+        net.set_partitioned(0, 1, true);
+        let out = net.issue(&mut q, &qps, &fab, 0, 0, 1, big, true);
+        assert!(out.delivered_at.is_none());
+        net.heal_all();
+        let tiny = Verb::write(MemKind::Reg, Payload::Raw { bytes: 1 }, 2);
+        let d = net.issue(&mut q, &qps, &fab, 5, 0, 1, tiny, false).delivered_at.unwrap();
+        assert!(
+            d > big_one_way,
+            "tiny verb must queue behind the lost big verb's channel slot: {d} <= {big_one_way}"
+        );
+    }
+
+    #[test]
+    fn drop_next_loses_verbs_and_nacks_completions() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        net.arm_drop(0, 1, 2);
+        // Fire-and-forget drop: silent loss, channel slot still consumed.
+        let out1 = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(1), false);
+        assert!(out1.delivered_at.is_none());
+        assert!(q.is_empty(), "no delivery, no completion");
+        // Completion-carrying drop: NACK at the retransmit timeout.
+        let out2 = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(2), true);
+        assert!(out2.delivered_at.is_none());
+        assert!(matches!(q.pop().unwrap().kind, EventKind::NackDeliver { token: 2 }));
+        assert_eq!(net.verbs_dropped, 2);
+        // Budget exhausted: traffic flows again, in order behind the drops.
+        let out3 = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(3), false);
+        assert!(out3.delivered_at.is_some());
+    }
+
+    #[test]
+    fn delay_spike_scales_one_way_latency() {
+        let (mut q, mut net, qps, fab) = setup(2);
+        let base = net.issue(&mut q, &qps, &fab, 0, 0, 1, raw_write(1), false).delivered_at.unwrap();
+        net.set_delay_pct(0, 1, 300);
+        let slow =
+            net.issue(&mut q, &qps, &fab, base + 1, 0, 1, raw_write(2), false).delivered_at.unwrap()
+                - (base + 1);
+        assert_eq!(slow, base * 3, "3x spike triples the one-way latency");
+        net.set_delay_pct(0, 1, 100);
+        let t0 = base * 10;
+        let nominal =
+            net.issue(&mut q, &qps, &fab, t0, 0, 1, raw_write(3), false).delivered_at.unwrap() - t0;
+        assert_eq!(nominal, base, "restore returns to the calibrated latency");
     }
 
     #[test]

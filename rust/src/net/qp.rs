@@ -22,6 +22,21 @@ impl QpTable {
         QpTable { n, open: vec![vec![true; n]; n] }
     }
 
+    /// Paper-faithful boot state (§4.4): each replica grants leader-write
+    /// permission to exactly one peer — the current leader. A node that
+    /// wrongly elects itself (e.g. inside a partition minority) is fenced
+    /// at every correct replica, which is what makes split-brain writes
+    /// impossible; the table checks only `leader_qp` verbs, so relaxed
+    /// traffic is unaffected.
+    pub fn leader_fenced(n: usize, leader: NodeId) -> Self {
+        let mut t = QpTable { n, open: vec![vec![false; n]; n] };
+        for dst in 0..n {
+            t.open(dst, leader);
+            t.open(dst, dst); // self-writes are local, never fenced
+        }
+        t
+    }
+
     pub fn is_open(&self, src: NodeId, dst: NodeId) -> bool {
         self.open[dst][src]
     }
@@ -76,5 +91,16 @@ mod tests {
         t.switch_leader(2, 0, 1);
         assert!(!t.is_open(0, 2), "old leader fenced");
         assert!(t.is_open(1, 2), "new leader granted");
+    }
+
+    #[test]
+    fn leader_fenced_boot_grants_only_the_leader() {
+        let t = QpTable::leader_fenced(4, 0);
+        for dst in 0..4 {
+            assert!(t.is_open(0, dst), "leader may write everywhere");
+            for src in 1..4 {
+                assert_eq!(t.is_open(src, dst), src == dst, "non-leaders fenced: {src}->{dst}");
+            }
+        }
     }
 }

@@ -81,6 +81,10 @@ pub enum Payload {
     RaftAppendBatch { term: u64, start_index: u64, ops: Vec<OpCall> },
     /// Raft follower ack.
     RaftAck { term: u64, index: u64, from: NodeId },
+    /// Raft follower gap report (classic nextIndex back-up, one step):
+    /// fault injection ate an append, so the follower names its log end
+    /// and the leader backfills from there. Never sent on a clean fabric.
+    RaftRejected { term: u64, from: NodeId, log_len: u64 },
     /// APUS-style Paxos: leader's one-sided write of a contiguous batch of
     /// log entries into a follower's landing region. The ACK is the write
     /// completion itself (doorbell) — no logical ack verb exists.
@@ -91,6 +95,11 @@ pub enum Payload {
     PaxosReplay { ballot: u64, ops: Vec<OpCall> },
     /// Client redirect (Waverunner: follower rejects, client re-sends).
     ClientRedirect { request_id: u64 },
+    /// Follower -> new leader, sent right after the follower's permission
+    /// switch: "replay your committed log to me". Covers the window where
+    /// the leader's own takeover broadcast was fenced because this
+    /// follower had not opened the new leader's QP yet.
+    SyncRequest { from: NodeId },
 }
 
 /// Which engine plane consumes a payload on arrival — the replica
@@ -125,8 +134,10 @@ impl Payload {
             | Payload::RaftAppend { .. }
             | Payload::RaftAppendBatch { .. }
             | Payload::RaftAck { .. }
+            | Payload::RaftRejected { .. }
             | Payload::PaxosAppend { .. }
-            | Payload::PaxosReplay { .. } => PayloadPlane::Strong,
+            | Payload::PaxosReplay { .. }
+            | Payload::SyncRequest { .. } => PayloadPlane::Strong,
             Payload::ReadReq { .. } => PayloadPlane::OneSidedRead,
             Payload::ReadResp { .. } => PayloadPlane::Completion,
             Payload::Raw { .. } | Payload::ClientRedirect { .. } => PayloadPlane::None,
@@ -165,6 +176,7 @@ impl Payload {
                 ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 24
             }
             Payload::RaftAck { .. } => 24,
+            Payload::RaftRejected { .. } => 24,
             Payload::PaxosAppend { ops, .. } => {
                 ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 24
             }
@@ -172,6 +184,7 @@ impl Payload {
                 ops.iter().map(|o| o.wire_bytes()).sum::<u64>() + 16
             }
             Payload::ClientRedirect { .. } => 16,
+            Payload::SyncRequest { .. } => 16,
         }
     }
 }
@@ -291,6 +304,7 @@ mod tests {
                 PayloadPlane::Strong,
             ),
             (Payload::RaftAck { term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
+            (Payload::RaftRejected { term: 1, from: 2, log_len: 3 }, PayloadPlane::Strong),
             (
                 Payload::PaxosAppend { ballot: 1, start_slot: 0, ops: vec![op] },
                 PayloadPlane::Strong,
@@ -303,6 +317,7 @@ mod tests {
             ),
             (Payload::Raw { bytes: 8 }, PayloadPlane::None),
             (Payload::ClientRedirect { request_id: 3 }, PayloadPlane::None),
+            (Payload::SyncRequest { from: 2 }, PayloadPlane::Strong),
         ];
         for (p, want) in cases {
             assert_eq!(p.plane(), want, "{p:?}");

@@ -38,9 +38,30 @@ pub enum TimerKind {
     HeartbeatScan,
     /// Retry driving the SMR pipeline (leader waiting for quorum timeout).
     SmrTick(u8),
+    /// Chaos-mode watchdog on a forwarded conflicting op: if the leader's
+    /// reply was lost on a faulty link, re-forward (at-least-once).
+    ForwardCheck { request_id: u64 },
     /// Generic continuation: replica finished a locally-serialized work
     /// item and should pick up the next queued one.
     WorkDone,
+}
+
+/// Fabric-level fault actions (chaos schedules). These ride the event
+/// queue like everything else — so multi-fault scenarios replay
+/// deterministically from the config seed — but are consumed by the
+/// *cluster's* network actor when popped; the event's `dest` is unused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetFault {
+    /// Cut the a <-> b link in both directions (NACK-on-partition).
+    Partition { a: NodeId, b: NodeId },
+    /// Repair every cut link (triggers leader anti-entropy replay).
+    Heal,
+    /// Silently lose the next `count` verbs on the directed src -> dst link.
+    DropNext { src: NodeId, dst: NodeId, count: u32 },
+    /// Scale the directed src -> dst one-way latency by `factor_pct`/100.
+    DelaySpike { src: NodeId, dst: NodeId, factor_pct: u32 },
+    /// End of a delay spike window (armed by the spike's `until_pct`).
+    DelayRestore { src: NodeId, dst: NodeId },
 }
 
 /// Event payloads.
@@ -52,13 +73,16 @@ pub enum EventKind {
     VerbDeliver { src: NodeId, verb: Verb },
     /// Completion (CQE/ACK) for a verb this node issued earlier.
     AckDeliver { token: u64 },
-    /// Negative completion: QP closed at target or target crashed.
+    /// Negative completion: QP closed at target, target crashed, link
+    /// partitioned, or the verb was dropped by fault injection.
     NackDeliver { token: u64 },
     /// A background timer fired.
     Timer(TimerKind),
-    /// Fault injection.
+    /// Fault injection: node crash / recovery (delivered to the node).
     Crash,
     Recover,
+    /// Fault injection: link-level action (handled by the cluster).
+    Fault(NetFault),
 }
 
 #[derive(Clone, Debug)]

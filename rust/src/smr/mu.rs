@@ -275,6 +275,13 @@ impl MuInstance {
         }
         self.phase = Phase::Idle;
     }
+
+    /// Abdication: hand every queued op back to the engine (which re-routes
+    /// them through the forward path to the rightful leader). Call
+    /// [`Self::reset_in_flight`] first so the in-flight op is included.
+    pub fn take_queue(&mut self) -> Vec<OpCall> {
+        self.queue.drain(..).collect()
+    }
 }
 
 #[cfg(test)]

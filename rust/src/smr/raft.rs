@@ -30,7 +30,10 @@ pub struct RaftLeader {
     n: usize,
     batch: usize,
     next_index: u64,
-    in_flight: Option<(u64, Vec<OpCall>, u32)>, // (start_index, ops, acks)
+    /// (start_index, ops, distinct ack sources). Voters are tracked by id:
+    /// the chaos re-pump re-ships an in-flight batch and followers re-ack,
+    /// so a bare counter would let one reachable follower fake a majority.
+    in_flight: Option<(u64, Vec<OpCall>, Vec<NodeId>)>,
     queue: VecDeque<(u64, OpCall)>,
     pub committed: u64,
 }
@@ -83,16 +86,19 @@ impl RaftLeader {
     }
 
     /// Follower ack for the *last* index of the in-flight batch (followers
-    /// ack a batch once, after appending all of it).
-    pub fn on_ack(&mut self, term: u64, index: u64) -> RaftStep {
+    /// ack a batch once, after appending all of it — possibly again for a
+    /// chaos-mode re-ship; duplicates from the same follower count once).
+    pub fn on_ack(&mut self, term: u64, index: u64, from: NodeId) -> RaftStep {
         if term != self.term {
             return RaftStep::Wait;
         }
         let majority = self.majority_acks();
         match &mut self.in_flight {
-            Some((start, ops, acks)) if *start + ops.len() as u64 - 1 == index => {
-                *acks += 1;
-                if *acks >= majority {
+            Some((start, ops, voters)) if *start + ops.len() as u64 - 1 == index => {
+                if !voters.contains(&from) {
+                    voters.push(from);
+                }
+                if voters.len() as u32 >= majority {
                     let start = *start;
                     let ops = std::mem::take(ops);
                     self.in_flight = None;
@@ -106,6 +112,14 @@ impl RaftLeader {
         }
     }
 
+    /// Chaos-mode nudge: re-ship the in-flight batch. A lost AppendEntries
+    /// or an eaten logical ack would otherwise wedge the one-in-flight
+    /// pipeline forever; followers overwrite-accept the duplicates and
+    /// re-ack, so the re-send is idempotent.
+    pub fn refanout(&self) -> Option<(u64, u64, Vec<OpCall>)> {
+        self.in_flight.as_ref().map(|(start, ops, _)| (self.term, *start, ops.clone()))
+    }
+
     /// After a commit, start the next queued batch (up to `batch` entries)
     /// if any.
     pub fn pump(&mut self) -> Option<(u64, u64, Vec<OpCall>)> {
@@ -115,7 +129,7 @@ impl RaftLeader {
         let (start, _) = *self.queue.front()?;
         let take = self.queue.len().min(self.batch);
         let ops: Vec<OpCall> = self.queue.drain(..take).map(|(_, op)| op).collect();
-        self.in_flight = Some((start, ops.clone(), 0));
+        self.in_flight = Some((start, ops.clone(), Vec::new()));
         Some((self.term, start, ops))
     }
 
@@ -135,6 +149,13 @@ pub struct RaftFollower {
 impl RaftFollower {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rebuild from a recovery snapshot: `entries` is the donor's
+    /// committed log, whose effects the installed state plane already
+    /// contains — so the restored log starts fully applied.
+    pub fn restore(term: u64, entries: Vec<OpCall>) -> Self {
+        RaftFollower { term, applied: entries.len() as u64, entries }
     }
 
     /// AppendEntries from the leader; returns whether to ack.
@@ -216,7 +237,7 @@ mod tests {
         let (term, fidx, ops) = fanout.unwrap();
         assert_eq!((term, fidx, idx), (1, 0, 0));
         assert_eq!(ops, vec![op(1)]);
-        let s = l.on_ack(1, 0);
+        let s = l.on_ack(1, 0, 1);
         assert_eq!(s, RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
     }
 
@@ -227,7 +248,7 @@ mod tests {
         let (idx2, fanout2) = l.submit(op(2));
         assert_eq!(idx2, 1, "index assigned immediately");
         assert!(fanout2.is_none(), "queued behind in-flight");
-        l.on_ack(1, 0);
+        l.on_ack(1, 0, 1);
         let (_, idx, ops) = l.pump().unwrap();
         assert_eq!(idx, 1);
         assert_eq!(ops[0].a, 2);
@@ -242,13 +263,27 @@ mod tests {
         l.submit(op(2));
         l.submit(op(3));
         // Batch acked on its last index only.
-        assert_eq!(l.on_ack(1, 0), RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
+        assert_eq!(l.on_ack(1, 0, 1), RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
         let (_, start, ops) = l.pump().unwrap();
         assert_eq!((start, ops.len()), (1, 2), "two queued entries coalesce");
-        assert_eq!(l.on_ack(1, 1), RaftStep::Wait, "mid-batch index ignored");
-        let s = l.on_ack(1, 2);
+        assert_eq!(l.on_ack(1, 1, 1), RaftStep::Wait, "mid-batch index ignored");
+        let s = l.on_ack(1, 2, 1);
         assert_eq!(s, RaftStep::Commit { start_index: 1, ops: vec![op(2), op(3)] });
         assert_eq!(l.committed, 3);
+    }
+
+    #[test]
+    fn duplicate_acks_from_one_follower_count_once() {
+        // n=5: majority needs 2 distinct follower acks. The chaos re-pump
+        // re-ships in-flight batches and followers re-ack, so a repeat vote
+        // from the same node must not fake a quorum.
+        let mut l = RaftLeader::new(5);
+        l.submit(op(1)).1.unwrap();
+        assert_eq!(l.on_ack(1, 0, 3), RaftStep::Wait);
+        assert_eq!(l.on_ack(1, 0, 3), RaftStep::Wait, "duplicate voter ignored");
+        assert_eq!(l.on_ack(1, 0, 3), RaftStep::Wait, "still one distinct voter");
+        let s = l.on_ack(1, 0, 4);
+        assert_eq!(s, RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
     }
 
     #[test]
@@ -265,8 +300,8 @@ mod tests {
     fn stale_term_acks_ignored() {
         let mut l = RaftLeader::new(3);
         l.submit(op(1)).1.unwrap();
-        assert_eq!(l.on_ack(0, 0), RaftStep::Wait);
-        assert_eq!(l.on_ack(1, 5), RaftStep::Wait, "wrong index");
+        assert_eq!(l.on_ack(0, 0, 1), RaftStep::Wait);
+        assert_eq!(l.on_ack(1, 5, 1), RaftStep::Wait, "wrong index");
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Chaos integration (§3 fault model, generalized): randomized multi-fault
+//! `FaultSchedule`s — crashes, recoveries, link partitions, packet loss,
+//! delay spikes — across every consensus backend and both RDT classes,
+//! with three oracles:
+//!
+//! * convergence — live replicas end bit-identical after quiescence;
+//! * integrity  — `invariants_ok` (no overdraft etc.) despite duplicates
+//!   from at-least-once retry paths (the leader re-checks permissibility
+//!   in total-order position);
+//! * detection  — every detected incident's heartbeat detection latency is
+//!   bounded by the scan interval × miss threshold (plus one period of
+//!   phase slack and the read round trip).
+
+use safardb::config::{ConsensusBackend, FaultAction, FaultSchedule, SimConfig, WorkloadKind};
+use safardb::engine::cluster;
+use safardb::prop_assert;
+use safardb::rdt::RdtKind;
+use safardb::util::prop;
+
+fn chaos_cfg(backend: ConsensusBackend, rdt: RdtKind, n: usize) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+    cfg.backend = backend;
+    cfg.n_replicas = n;
+    cfg.update_pct = 25;
+    cfg.total_ops = 6_000;
+    cfg
+}
+
+/// Detection-latency bound: `threshold` consecutive missed scans, plus one
+/// scan period of phase offset, plus slack for the read round trip /
+/// retransmission timeout (≪ one period).
+fn detection_bound(cfg: &SimConfig) -> u64 {
+    cfg.heartbeat_period_ns * (cfg.hb_fail_threshold as u64 + 3)
+}
+
+#[test]
+fn prop_randomized_multi_fault_schedules_converge() {
+    prop::check("chaos-schedules", 0xC4A05, 10, |rng| {
+        let backend = *rng.choose(&ConsensusBackend::ALL);
+        let kinds = [RdtKind::PnCounter, RdtKind::GSet, RdtKind::Account, RdtKind::Auction];
+        let rdt = *rng.choose(&kinds);
+        let n = 4 + rng.gen_range(3) as usize; // 4..=6
+        // Three ascending watermarks with comfortable spacing.
+        let p1 = 20 + rng.gen_range(20) as u8;
+        let p2 = p1 + 15 + rng.gen_range(15) as u8;
+        let p3 = p2 + 10 + rng.gen_range(10) as u8;
+        let follower = 1 + rng.gen_range(n as u64 - 1) as usize;
+        let mut sched = FaultSchedule::none();
+        match rng.gen_range(5) {
+            0 => {
+                sched.push(p1, FaultAction::Crash { node: Some(follower) });
+            }
+            1 => {
+                sched.push(p1, FaultAction::Crash { node: Some(follower) });
+                sched.push(p2, FaultAction::Recover { node: follower });
+            }
+            2 => {
+                // Single-link partition between two followers, healed.
+                let a = 1 + rng.gen_range(n as u64 - 1) as usize;
+                let b = if follower == a { 1 + (a % (n - 1)) } else { follower };
+                sched.push(p1, FaultAction::PartitionLinks { a, b });
+                sched.push(p2, FaultAction::HealLinks);
+            }
+            3 => {
+                // The acceptance shape: a leader crash *during* a partition
+                // (endpoints chosen so the successor keeps a majority).
+                let a = 2 + rng.gen_range(n as u64 - 2) as usize;
+                let b = if a == n - 1 { 2 } else { a + 1 };
+                sched.push(p1, FaultAction::PartitionLinks { a, b });
+                sched.push(p2, FaultAction::Crash { node: None });
+                sched.push(p3, FaultAction::HealLinks);
+            }
+            _ => {
+                let count = 1 + rng.gen_range(4) as u32;
+                let factor = 150 + rng.gen_range(250) as u32;
+                sched.push(p1, FaultAction::DropNext { src: 0, dst: follower, count });
+                sched.push(p2, FaultAction::DelaySpike {
+                    src: follower,
+                    dst: 0,
+                    factor_pct: factor,
+                    until_pct: p3,
+                });
+            }
+        }
+        let label = format!("{} {} n={n} [{}]", backend.name(), rdt.name(), sched.label());
+        let mut cfg = chaos_cfg(backend, rdt, n);
+        cfg.fault = sched;
+        cfg.seed = rng.next_u64();
+        let bound = detection_bound(&cfg);
+        let rep = cluster::run(cfg);
+        prop_assert!(rep.converged(), "{label}: diverged: {:?}", rep.digests);
+        prop_assert!(rep.invariants_ok, "{label}: integrity broke");
+        for inc in &rep.fault_timeline {
+            if let Some(d) = inc.detect_ns {
+                let lat = d - inc.injected_ns;
+                prop_assert!(
+                    lat <= bound,
+                    "{label}: {} detection latency {lat}ns exceeds bound {bound}ns",
+                    inc.label
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn leader_crash_during_partition_converges_on_all_backends() {
+    // The acceptance scenario, pinned: the leader crashes while a link
+    // between its eventual successor and another follower is down; the
+    // cluster re-elects, commits around the cut, and reconciles at heal.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::Account, 5);
+        cfg.total_ops = 10_000;
+        cfg.seed = 0x5AFA_C4A0;
+        cfg.fault = FaultSchedule::parse("partition@40:1-2,crash@50:leader,heal@70").unwrap();
+        let bound = detection_bound(&cfg);
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed[0], "{b}: initial leader stays down");
+        assert_ne!(rep.leader, 0, "{b}: a successor leads");
+        assert!(rep.metrics.elections >= 1, "{b}: re-election happened");
+        assert!(
+            rep.converged(),
+            "{b}: diverged: {:?}\n{}",
+            rep.digests,
+            rep.dumps.join("\n---\n")
+        );
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+        assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+
+        // Per-incident timeline: partition, crash (resolved to node 0),
+        // heal — with the crash detected inside the heartbeat bound and a
+        // non-zero unavailability window ending at the election.
+        assert_eq!(rep.fault_timeline.len(), 3, "{b}: all incidents fired");
+        assert_eq!(rep.fault_timeline[0].label, "partition:1-2");
+        assert_eq!(rep.fault_timeline[1].label, "crash:0");
+        assert_eq!(rep.fault_timeline[2].label, "heal");
+        let crash = &rep.fault_timeline[1];
+        let d = crash.detect_ns.expect("leader crash must be detected");
+        assert!(d - crash.injected_ns <= bound, "{b}: detection within heartbeat bound");
+        assert!(crash.unavailable_ns > 0, "{b}: unavailability window recorded");
+        assert!(crash.elections >= 1, "{b}: election attributed to the crash incident");
+    }
+}
+
+#[test]
+fn lossy_and_slow_links_converge_on_all_backends() {
+    // Packet loss on the leader's outbound link plus a delay spike on the
+    // return path: retries (relaxed), NACK-driven stalls (Mu/Paxos), and
+    // the gap-backfill protocol (Raft) must all absorb it.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::Account, 4);
+        cfg.total_ops = 8_000;
+        cfg.seed = 0x5AFA_D407;
+        cfg.fault = FaultSchedule::parse("drop@25:0-1x3,delay@35:2-0x300u65").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.converged(), "{b}: diverged: {:?}", rep.digests);
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+        assert!(rep.crashed.iter().all(|&c| !c), "{b}: nobody crashed");
+        assert!(rep.metrics.verbs > 0, "{b}: traffic flowed");
+    }
+}
+
+#[test]
+fn kv_workload_survives_partition_with_flaky_links() {
+    // YCSB (LWW keyspace) under a healed partition + drops: exercises the
+    // summarized relaxed path's retry/dedup machinery end to end.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Ycsb);
+    cfg.n_replicas = 4;
+    cfg.update_pct = 25;
+    cfg.total_ops = 8_000;
+    cfg.seed = 0x5AFA_9C5B;
+    cfg.fault = FaultSchedule::parse("partition@30:1-3,drop@40:0-2x2,heal@60").unwrap();
+    let rep = cluster::run(cfg);
+    assert!(rep.converged(), "diverged: {:?}", rep.digests);
+    assert!(rep.invariants_ok);
+    assert_eq!(rep.fault_timeline.len(), 3);
+}
+
+#[test]
+fn empty_schedule_reports_empty_timeline() {
+    let cfg = chaos_cfg(ConsensusBackend::Mu, RdtKind::PnCounter, 4);
+    let rep = cluster::run(cfg);
+    assert!(rep.fault_timeline.is_empty());
+    assert!(rep.converged() && rep.invariants_ok);
+    assert_eq!(rep.metrics.detections.len(), 0, "no failure declared on a clean run");
+}

@@ -7,7 +7,7 @@
 
 use std::fmt::Write as _;
 
-use safardb::config::{ConsensusBackend, FaultSpec, SimConfig, SystemKind, WorkloadKind};
+use safardb::config::{ConsensusBackend, FaultSchedule, SimConfig, SystemKind, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::prop_assert;
 use safardb::rdt::RdtKind;
@@ -36,7 +36,7 @@ fn prop_crash_then_recover_converges_across_rdt_classes() {
         cfg.n_replicas = n;
         cfg.update_pct = 25;
         cfg.total_ops = 8_000;
-        cfg.fault = Some(FaultSpec::CrashThenRecover { node, crash_pct, recover_pct });
+        cfg.fault = FaultSchedule::crash_then_recover(node, crash_pct, recover_pct);
         cfg.seed = rng.next_u64();
         let label = format!("{} n={n} node={node} {crash_pct}->{recover_pct}%", rdt.name());
         let rep = cluster::run(cfg);
@@ -54,7 +54,7 @@ fn kv_workloads_survive_crash_then_recover() {
         cfg.n_replicas = 4;
         cfg.update_pct = 25;
         cfg.total_ops = 10_000;
-        cfg.fault = Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 });
+        cfg.fault = FaultSchedule::crash_then_recover(2, 30, 60);
         let rep = cluster::run(cfg);
         assert!(!rep.crashed[2], "{workload:?}: node 2 recovered");
         assert!(rep.converged(), "{workload:?}: diverged: {:?}", rep.digests);
@@ -100,14 +100,21 @@ fn pin_cells() -> Vec<(&'static str, SimConfig)> {
 
     let mut leader_crash = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
     leader_crash.n_replicas = 5;
-    leader_crash.fault = Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 });
+    leader_crash.fault = FaultSchedule::crash_leader_at(40);
     push(&mut cells, "safardb/account/leader-crash", leader_crash, 0x5AFA_000B);
 
     let mut recover = SimConfig::safardb(WorkloadKind::Micro(RdtKind::TwoPSet));
-    recover.fault = Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 });
+    recover.fault = FaultSchedule::crash_then_recover(2, 30, 60);
     push(&mut cells, "safardb/2p-set/crash-recover", recover, 0x5AFA_000C);
 
-    assert!(cells.iter().all(|(_, c)| c.system != SystemKind::Hamband || c.fault.is_none()));
+    // Generic-Raft crash recovery is at Mu/Paxos parity now: pin one
+    // fixed-seed raft crash-then-recover run too.
+    let mut raft_recover = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    raft_recover.backend = ConsensusBackend::Raft;
+    raft_recover.fault = FaultSchedule::crash_then_recover(2, 30, 60);
+    push(&mut cells, "safardb/account/raft-crash-recover", raft_recover, 0x5AFA_000D);
+
+    assert!(cells.iter().all(|(_, c)| c.system != SystemKind::Hamband || c.fault.is_empty()));
     cells
 }
 
@@ -145,14 +152,26 @@ fn digest_pins_are_stable() {
              regenerate it, and commit the new file."
         ),
         Err(_) => {
-            // CI must never silently re-baseline: a missing pin file there
-            // means the committed guard was deleted (or never landed), and
-            // auto-writing would accept whatever the current build produces.
-            if std::env::var("CI").map(|v| v == "true" || v == "1").unwrap_or(false) {
+            // Any automated environment must never silently re-baseline: a
+            // missing pin file there means the committed guard was deleted
+            // (or never landed), and auto-writing would accept whatever the
+            // current build produces. SAFARDB_REQUIRE_PINS=1 opts a local
+            // run into the same strictness. Outside those, the bootstrap
+            // write below exists only because the pin table has not been
+            // committed yet (ROADMAP open item: generate once, commit, and
+            // this branch becomes dead code).
+            let bless =
+                std::env::var("SAFARDB_BLESS_PINS").map(|v| v == "1").unwrap_or(false);
+            let automated = ["CI", "GITHUB_ACTIONS"]
+                .iter()
+                .any(|k| std::env::var(k).map(|v| !v.is_empty() && v != "false").unwrap_or(false))
+                || std::env::var("SAFARDB_REQUIRE_PINS").map(|v| v == "1").unwrap_or(false);
+            if automated && !bless {
                 panic!(
-                    "tests/data/digest_pins.txt is missing and CI=true. CI never \
-                     re-baselines digest pins; run this test locally once to \
-                     generate the file and commit it. Current table:\n{table}"
+                    "tests/data/digest_pins.txt is missing. The committed pin table is \
+                     the refactor guard and is never regenerated here; download the \
+                     `digest-pins` CI artifact (or run this test once on a dev \
+                     machine) and commit the file. Current table:\n{table}"
                 );
             }
             if let Some(parent) = pin_path.parent() {
@@ -160,8 +179,9 @@ fn digest_pins_are_stable() {
             }
             std::fs::write(&pin_path, &table).expect("write digest pin file");
             eprintln!(
-                "digest_pins: wrote fresh pin table to {} — commit it so future \
-                 engine refactors are guarded against digest drift",
+                "digest_pins: ERROR-grade warning: no committed pin table found; wrote \
+                 a fresh one to {} — commit it, since an uncommitted table guards \
+                 nothing and CI hard-fails without it",
                 pin_path.display()
             );
         }
@@ -182,6 +202,12 @@ fn paxos_cfg(rdt: safardb::rdt::RdtKind) -> SimConfig {
     cfg
 }
 
+fn raft_cfg(rdt: safardb::rdt::RdtKind) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(rdt));
+    cfg.backend = ConsensusBackend::Raft;
+    cfg
+}
+
 #[test]
 fn paxos_follower_crash_then_recover_converges() {
     for rdt in [RdtKind::Account, RdtKind::Auction] {
@@ -189,7 +215,7 @@ fn paxos_follower_crash_then_recover_converges() {
         cfg.n_replicas = 4;
         cfg.update_pct = 25;
         cfg.total_ops = 8_000;
-        cfg.fault = Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 });
+        cfg.fault = FaultSchedule::crash_then_recover(2, 30, 60);
         let rep = cluster::run(cfg);
         assert!(!rep.crashed[2], "{}: node 2 must be back", rdt.name());
         assert!(rep.converged(), "{}: diverged: {:?}", rdt.name(), rep.digests);
@@ -204,7 +230,7 @@ fn paxos_leader_crash_mid_quorum_re_elects() {
     cfg.n_replicas = 5;
     cfg.update_pct = 40;
     cfg.total_ops = 12_000;
-    cfg.fault = Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 });
+    cfg.fault = FaultSchedule::crash_leader_at(40);
     let rep = cluster::run(cfg);
     assert!(rep.crashed[0], "initial leader stays down");
     assert_ne!(rep.leader, 0, "a successor leads");
@@ -220,7 +246,62 @@ fn paxos_leader_crash_then_recover_rejoins_as_follower() {
     cfg.n_replicas = 4;
     cfg.update_pct = 30;
     cfg.total_ops = 10_000;
-    cfg.fault = Some(FaultSpec::CrashThenRecover { node: 0, crash_pct: 30, recover_pct: 60 });
+    cfg.fault = FaultSchedule::crash_then_recover(0, 30, 60);
+    let rep = cluster::run(cfg);
+    assert!(!rep.crashed[0], "ex-leader recovered");
+    assert_eq!(rep.leader, 1, "leadership stays with the elected successor");
+    assert!(rep.metrics.elections >= 1);
+    assert!(rep.converged(), "diverged: {:?}\n{}", rep.digests, rep.dumps.join("\n---\n"));
+    assert!(rep.invariants_ok, "integrity broke across recovery");
+}
+
+// ----- generic-Raft backend failure coverage ---------------------------
+//
+// The stand-alone Raft backend (`backend = raft` outside Waverunner) is at
+// Mu/Paxos parity now: snapshot install rebuilds the follower automaton
+// from the mirrored log, recovery replay is term-bumped AppendEntries, and
+// `validate()` no longer rejects crash runs. These legs mirror the Paxos
+// legs above.
+
+#[test]
+fn raft_follower_crash_then_recover_converges() {
+    for rdt in [RdtKind::Account, RdtKind::Auction] {
+        let mut cfg = raft_cfg(rdt);
+        cfg.n_replicas = 4;
+        cfg.update_pct = 25;
+        cfg.total_ops = 8_000;
+        cfg.fault = FaultSchedule::crash_then_recover(2, 30, 60);
+        let rep = cluster::run(cfg);
+        assert!(!rep.crashed[2], "{}: node 2 must be back", rdt.name());
+        assert!(rep.converged(), "{}: diverged: {:?}", rdt.name(), rep.digests);
+        assert!(rep.invariants_ok, "{}: integrity broke", rdt.name());
+        assert!(rep.metrics.smr_commits > 0, "{}: raft path unexercised", rdt.name());
+    }
+}
+
+#[test]
+fn raft_leader_crash_re_elects_with_term_bumped_replay() {
+    let mut cfg = raft_cfg(RdtKind::Account);
+    cfg.n_replicas = 5;
+    cfg.update_pct = 40;
+    cfg.total_ops = 12_000;
+    cfg.fault = FaultSchedule::crash_leader_at(40);
+    let rep = cluster::run(cfg);
+    assert!(rep.crashed[0], "initial leader stays down");
+    assert_ne!(rep.leader, 0, "a successor leads");
+    assert!(rep.metrics.elections >= 1, "re-election happened");
+    assert!(rep.converged(), "diverged: {:?}\n{}", rep.digests, rep.dumps.join("\n---\n"));
+    assert!(rep.invariants_ok, "integrity broke after leader crash");
+    assert!(rep.metrics.smr_commits > 0);
+}
+
+#[test]
+fn raft_leader_crash_then_recover_rejoins_as_follower() {
+    let mut cfg = raft_cfg(RdtKind::Account);
+    cfg.n_replicas = 4;
+    cfg.update_pct = 30;
+    cfg.total_ops = 10_000;
+    cfg.fault = FaultSchedule::crash_then_recover(0, 30, 60);
     let rep = cluster::run(cfg);
     assert!(!rep.crashed[0], "ex-leader recovered");
     assert_eq!(rep.leader, 1, "leadership stays with the elected successor");

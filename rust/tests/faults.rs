@@ -1,13 +1,13 @@
 //! Integration: crash faults, leader election, permission switch, and
 //! recovery with log replay (§3 fault model, §4.4 leader switch plane).
 
-use safardb::config::{FaultSpec, SimConfig, SystemKind, WorkloadKind};
+use safardb::config::{FaultSchedule, SimConfig, SystemKind, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::prop_assert;
 use safardb::rdt::RdtKind;
 use safardb::util::prop;
 
-fn account(system: SystemKind, n: usize, fault: Option<FaultSpec>) -> SimConfig {
+fn account(system: SystemKind, n: usize, fault: FaultSchedule) -> SimConfig {
     let mut cfg = match system {
         SystemKind::SafarDb => SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account)),
         _ => SimConfig::hamband(WorkloadKind::Micro(RdtKind::Account)),
@@ -24,7 +24,7 @@ fn leader_crash_elects_smallest_live_id() {
     let rep = cluster::run(account(
         SystemKind::SafarDb,
         5,
-        Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 }),
+        FaultSchedule::crash_leader_at(40),
     ));
     assert!(rep.crashed[0], "initial leader 0 crashed");
     assert_eq!(rep.leader, 1, "smallest live ID becomes leader");
@@ -40,7 +40,7 @@ fn hamband_leader_crash_pays_rnic_switch_cost() {
     let rep = cluster::run(account(
         SystemKind::Hamband,
         4,
-        Some(FaultSpec::CrashLeaderAtFraction { fraction_pct: 40 }),
+        FaultSchedule::crash_leader_at(40),
     ));
     assert!(rep.converged() && rep.invariants_ok);
     assert!(
@@ -52,11 +52,7 @@ fn hamband_leader_crash_pays_rnic_switch_cost() {
 
 #[test]
 fn follower_crash_keeps_serving() {
-    let rep = cluster::run(account(
-        SystemKind::SafarDb,
-        4,
-        Some(FaultSpec::CrashAtFraction { node: 3, fraction_pct: 30 }),
-    ));
+    let rep = cluster::run(account(SystemKind::SafarDb, 4, FaultSchedule::crash_at(3, 30)));
     assert!(rep.crashed[3]);
     assert_eq!(rep.leader, 0, "leader unchanged");
     assert!(rep.metrics.elections == 0);
@@ -70,7 +66,7 @@ fn crashed_follower_recovers_and_catches_up_via_log_replay() {
     let rep = cluster::run(account(
         SystemKind::SafarDb,
         4,
-        Some(FaultSpec::CrashThenRecover { node: 2, crash_pct: 30, recover_pct: 60 }),
+        FaultSchedule::crash_then_recover(2, 30, 60),
     ));
     assert!(!rep.crashed[2], "node 2 is back");
     // The recovered node must converge with everyone else: the leader
@@ -85,7 +81,7 @@ fn crdt_replica_crash_no_election_needed() {
     cfg.n_replicas = 4;
     cfg.update_pct = 25;
     cfg.total_ops = 12_000;
-    cfg.fault = Some(FaultSpec::CrashAtFraction { node: 1, fraction_pct: 50 });
+    cfg.fault = FaultSchedule::crash_at(1, 50);
     let rep = cluster::run(cfg);
     assert!(rep.converged() && rep.invariants_ok);
     assert_eq!(rep.metrics.elections, 0, "CRDTs have no leader to lose");
@@ -99,16 +95,17 @@ fn prop_random_crash_points_never_break_safety() {
         let pct = 10 + rng.gen_range(80) as u8;
         let leader_crash = rng.gen_bool(0.4);
         let fault = if leader_crash {
-            FaultSpec::CrashLeaderAtFraction { fraction_pct: pct }
+            FaultSchedule::crash_leader_at(pct)
         } else {
-            FaultSpec::CrashAtFraction { node, fraction_pct: pct }
+            FaultSchedule::crash_at(node, pct)
         };
-        let mut cfg = account(SystemKind::SafarDb, n, Some(fault));
+        let label = fault.label();
+        let mut cfg = account(SystemKind::SafarDb, n, fault);
         cfg.total_ops = 8_000;
         cfg.seed = rng.next_u64();
         let rep = cluster::run(cfg);
-        prop_assert!(rep.converged(), "diverged under {fault:?}: {:?}", rep.digests);
-        prop_assert!(rep.invariants_ok, "integrity broke under {fault:?}");
+        prop_assert!(rep.converged(), "diverged under {label}: {:?}", rep.digests);
+        prop_assert!(rep.invariants_ok, "integrity broke under {label}");
         Ok(())
     });
 }
