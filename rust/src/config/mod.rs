@@ -340,6 +340,197 @@ impl FaultSchedule {
     }
 }
 
+/// One object class in a [`CatalogSpec`]: a micro-benchmark RDT or a keyed
+/// KV tenant (YCSB registers / SmallBank accounts). The engine's catalog
+/// instantiates `count` independent instances per entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectKind {
+    Rdt(RdtKind),
+    Ycsb,
+    SmallBank,
+}
+
+impl ObjectKind {
+    /// Spec-grammar name (round-trips through [`CatalogSpec::parse`]).
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            ObjectKind::Rdt(RdtKind::GCounter) => "gcounter",
+            ObjectKind::Rdt(RdtKind::PnCounter) => "counter",
+            ObjectKind::Rdt(RdtKind::LwwRegister) => "lww",
+            ObjectKind::Rdt(RdtKind::GSet) => "gset",
+            ObjectKind::Rdt(RdtKind::PnSet) => "pnset",
+            ObjectKind::Rdt(RdtKind::TwoPSet) => "2pset",
+            ObjectKind::Rdt(RdtKind::Account) => "account",
+            ObjectKind::Rdt(RdtKind::Courseware) => "courseware",
+            ObjectKind::Rdt(RdtKind::Project) => "project",
+            ObjectKind::Rdt(RdtKind::Movie) => "movie",
+            ObjectKind::Rdt(RdtKind::Auction) => "auction",
+            ObjectKind::Ycsb => "ycsb",
+            ObjectKind::SmallBank => "smallbank",
+        }
+    }
+
+    fn parse_name(name: &str) -> Option<ObjectKind> {
+        Some(match name {
+            "counter" | "pn-counter" | "pncounter" => ObjectKind::Rdt(RdtKind::PnCounter),
+            "gcounter" | "g-counter" => ObjectKind::Rdt(RdtKind::GCounter),
+            "lww" | "lww-register" => ObjectKind::Rdt(RdtKind::LwwRegister),
+            "gset" | "g-set" => ObjectKind::Rdt(RdtKind::GSet),
+            "pnset" | "pn-set" => ObjectKind::Rdt(RdtKind::PnSet),
+            "2pset" | "2p-set" | "twopset" => ObjectKind::Rdt(RdtKind::TwoPSet),
+            "account" => ObjectKind::Rdt(RdtKind::Account),
+            "courseware" => ObjectKind::Rdt(RdtKind::Courseware),
+            "project" => ObjectKind::Rdt(RdtKind::Project),
+            "movie" => ObjectKind::Rdt(RdtKind::Movie),
+            "auction" => ObjectKind::Rdt(RdtKind::Auction),
+            "ycsb" => ObjectKind::Ycsb,
+            "smallbank" => ObjectKind::SmallBank,
+            _ => return None,
+        })
+    }
+
+    /// Synchronization groups one instance of this kind needs (Table B.1;
+    /// KV: SmallBank debits need one SMR instance, YCSB none).
+    pub fn sync_groups(&self) -> u32 {
+        match self {
+            ObjectKind::Rdt(k) => k.instantiate().sync_groups() as u32,
+            ObjectKind::Ycsb => 0,
+            ObjectKind::SmallBank => 1,
+        }
+    }
+}
+
+/// Multi-object catalog specification: which RDT instances the data plane
+/// hosts (`objects = counter:8,account:4,movie:2` in kv/CLI form) and how
+/// skewed the workload's object selection is. The empty spec is the
+/// default and means "one object, derived from `workload`" — bit-identical
+/// to the pre-catalog engine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CatalogSpec {
+    /// Ordered (kind, instance count) entries; object ids are assigned
+    /// densely in entry order.
+    pub entries: Vec<(ObjectKind, u32)>,
+    /// Zipfian skew of object selection (0 = uniform).
+    pub zipf_theta: f64,
+}
+
+impl CatalogSpec {
+    /// The default catalog-of-one derived from `SimConfig::workload`.
+    pub fn single() -> Self {
+        CatalogSpec::default()
+    }
+
+    /// True when the catalog is the implicit single object.
+    pub fn is_default(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total object count (1 for the default spec).
+    pub fn n_objects(&self) -> usize {
+        if self.entries.is_empty() {
+            1
+        } else {
+            self.entries.iter().map(|&(_, c)| c as usize).sum()
+        }
+    }
+
+    /// The standard mixed multi-tenant scenario (`objects = mixed`):
+    /// commutative counters/registers/sets next to invariant-carrying
+    /// WRDTs — 9 objects, 7 global sync groups.
+    pub fn mixed() -> Self {
+        CatalogSpec {
+            entries: vec![
+                (ObjectKind::Rdt(RdtKind::PnCounter), 2),
+                (ObjectKind::Rdt(RdtKind::LwwRegister), 2),
+                (ObjectKind::Rdt(RdtKind::GSet), 1),
+                (ObjectKind::Rdt(RdtKind::Account), 2),
+                (ObjectKind::Rdt(RdtKind::Movie), 1),
+                (ObjectKind::Rdt(RdtKind::Auction), 1),
+            ],
+            zipf_theta: 0.0,
+        }
+    }
+
+    /// Round-trip form (`counter:8,account:4`; `none` for the default).
+    pub fn label(&self) -> String {
+        if self.entries.is_empty() {
+            return "none".into();
+        }
+        self.entries
+            .iter()
+            .map(|(k, c)| format!("{}:{c}", k.spec_name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Parse the `objects =` grammar: comma-separated `name[:count]` items
+    /// (`count` defaults to 1), plus the aliases `none`/`` (default spec)
+    /// and `mixed` (the standard multi-tenant scenario).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(CatalogSpec::default());
+        }
+        if s == "mixed" {
+            return Ok(CatalogSpec::mixed());
+        }
+        let mut entries = Vec::new();
+        for item in s.split(',') {
+            let item = item.trim();
+            let bad = |why: &str| format!("catalog entry '{item}': {why}");
+            let (name, count) = match item.split_once(':') {
+                Some((n, c)) => {
+                    let count: u32 =
+                        c.parse().map_err(|_| bad("bad instance count"))?;
+                    (n, count)
+                }
+                None => (item, 1),
+            };
+            let kind = ObjectKind::parse_name(name)
+                .ok_or_else(|| bad("unknown object kind"))?;
+            if count == 0 {
+                return Err(bad("instance count must be >= 1"));
+            }
+            entries.push((kind, count));
+        }
+        Ok(CatalogSpec { entries, zipf_theta: 0.0 })
+    }
+
+    /// Dense object-id -> kind expansion (entry order, `count` instances
+    /// each). The single source of truth for object-id assignment: the
+    /// engine's catalog and the workload generator both derive from this,
+    /// so they can never disagree on which object an id names. Empty for
+    /// the default spec.
+    pub fn expanded_kinds(&self) -> Vec<ObjectKind> {
+        self.entries
+            .iter()
+            .flat_map(|&(kind, count)| (0..count).map(move |_| kind))
+            .collect()
+    }
+
+    /// Total synchronization groups across the catalog: the strong planes
+    /// flatten `(object, local group)` into this global index space.
+    pub fn total_groups(&self) -> u32 {
+        self.entries.iter().map(|&(k, c)| k.sync_groups() * c).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_objects() > 4096 {
+            return Err(format!("catalog: {} objects exceeds the 4096 cap", self.n_objects()));
+        }
+        if !self.entries.is_empty() && self.total_groups() > u8::MAX as u32 {
+            return Err(format!(
+                "catalog: {} global sync groups exceeds the 255 wire-format cap",
+                self.total_groups()
+            ));
+        }
+        if !(0.0..2.0).contains(&self.zipf_theta) {
+            return Err(format!("catalog: obj_theta {} out of range [0, 2)", self.zipf_theta));
+        }
+        Ok(())
+    }
+}
+
 /// Hybrid-mode layout (Figs 15–17): part of the keyspace FPGA-resident,
 /// the rest in host memory behind the CPU cache.
 #[derive(Clone, Copy, Debug)]
@@ -408,6 +599,11 @@ pub struct SimConfig {
     pub system: SystemKind,
     pub n_replicas: usize,
     pub workload: WorkloadKind,
+    /// Multi-object catalog layout. The default (empty) spec hosts one
+    /// object derived from `workload`, bit-identical to the pre-catalog
+    /// engine; non-empty specs make the data plane an ObjectId-addressed
+    /// table of heterogeneous RDT instances.
+    pub objects: CatalogSpec,
     /// Total operations across the cluster (paper: 4M; sweeps scale down).
     pub total_ops: u64,
     /// Percent of ops that are updates (the rest are query()).
@@ -454,6 +650,7 @@ impl SimConfig {
             system,
             n_replicas: 4,
             workload,
+            objects: CatalogSpec::default(),
             total_ops: 100_000,
             update_pct: 15,
             clients_per_replica: 4,
@@ -508,6 +705,11 @@ impl SimConfig {
         c
     }
 
+    /// Catalog object count (1 for the default single-object spec).
+    pub fn n_objects(&self) -> usize {
+        self.objects.n_objects()
+    }
+
     /// Category → replication-path routing. Waverunner replicates every
     /// update through Raft — no hybrid consistency, which is the point of
     /// the Fig 12 comparison (§5.2). Summarization (§5.4) diverts
@@ -557,6 +759,12 @@ impl SimConfig {
             ));
         }
         self.fault.validate(self.n_replicas)?;
+        self.objects.validate()?;
+        if !self.objects.is_default() && self.hybrid.is_some() {
+            return Err("hybrid mode addresses a single keyed store; it cannot \
+                 combine with a multi-object catalog"
+                .into());
+        }
         if self.system != SystemKind::SafarDb {
             let rpc = [self.prop_reducible, self.prop_irreducible]
                 .iter()
@@ -610,6 +818,15 @@ impl SimConfig {
                 "fault" => {
                     self.fault = FaultSchedule::parse(v)
                         .map_err(|e| format!("line {}: {e}", lineno + 1))?
+                }
+                "objects" => {
+                    let theta = self.objects.zipf_theta;
+                    self.objects = CatalogSpec::parse(v)
+                        .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                    self.objects.zipf_theta = theta;
+                }
+                "obj_theta" => {
+                    self.objects.zipf_theta = v.parse().map_err(|_| bad("obj_theta"))?
                 }
                 "batch" | "batch_size" => {
                     self.batch_size = v.parse().map_err(|_| bad("batch_size"))?
@@ -812,6 +1029,69 @@ mod tests {
         assert!(k.apply_kv("fault = crash@40").is_err());
         k.apply_kv("fault = none").unwrap();
         assert!(k.fault.is_empty());
+    }
+
+    #[test]
+    fn catalog_spec_parses_and_round_trips() {
+        let s = CatalogSpec::parse("counter:8,account:4,movie:2").unwrap();
+        assert_eq!(s.n_objects(), 14);
+        assert_eq!(s.entries[0], (ObjectKind::Rdt(RdtKind::PnCounter), 8));
+        assert_eq!(s.entries[2], (ObjectKind::Rdt(RdtKind::Movie), 2));
+        // account: 4 groups, movie: 2×2 groups; counters contribute none.
+        assert_eq!(s.total_groups(), 8);
+        assert_eq!(CatalogSpec::parse(&s.label()).unwrap(), s);
+
+        // Bare names default to one instance; kv tenants are objects too.
+        let kv = CatalogSpec::parse("ycsb:2,smallbank,lww").unwrap();
+        assert_eq!(kv.n_objects(), 4);
+        assert_eq!(kv.total_groups(), 1, "one SmallBank tenant, one group");
+
+        assert_eq!(CatalogSpec::parse("none").unwrap(), CatalogSpec::default());
+        assert!(CatalogSpec::parse("").unwrap().is_default());
+        assert_eq!(CatalogSpec::default().n_objects(), 1);
+        assert_eq!(CatalogSpec::default().label(), "none");
+
+        let mixed = CatalogSpec::parse("mixed").unwrap();
+        assert_eq!(mixed, CatalogSpec::mixed());
+        assert_eq!(mixed.n_objects(), 9);
+        assert_eq!(mixed.total_groups(), 7);
+        mixed.validate().expect("mixed spec validates");
+
+        for bad in ["zork:2", "counter:0", "counter:x", "counter:"] {
+            assert!(CatalogSpec::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn catalog_kv_and_validation() {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        assert!(c.objects.is_default(), "default is catalog-of-one");
+        assert_eq!(c.n_objects(), 1);
+        c.apply_kv("objects = counter:4,account:2\nobj_theta = 0.9").unwrap();
+        assert_eq!(c.n_objects(), 6);
+        assert!((c.objects.zipf_theta - 0.9).abs() < 1e-12);
+        c.validate().expect("catalog config validates");
+
+        // obj_theta survives a later objects= line and vice versa.
+        let mut c2 = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        c2.apply_kv("obj_theta = 0.5").unwrap();
+        c2.apply_kv("objects = counter:2").unwrap();
+        assert!((c2.objects.zipf_theta - 0.5).abs() < 1e-12);
+
+        // Group cap: auction has 3 groups; 86 instances exceed 255.
+        let mut big = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        big.objects = CatalogSpec::parse("auction:86").unwrap();
+        assert!(big.validate().is_err(), "group cap enforced");
+
+        // Hybrid mode is single-store-specific.
+        let mut h = SimConfig::safardb(WorkloadKind::Ycsb);
+        h.hybrid = Some(HybridConfig::ycsb_default());
+        h.objects = CatalogSpec::parse("counter:2").unwrap();
+        assert!(h.validate().is_err(), "hybrid + catalog rejected");
+
+        let mut t = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        t.objects.zipf_theta = 2.5;
+        assert!(t.validate().is_err(), "theta bound enforced");
     }
 
     #[test]

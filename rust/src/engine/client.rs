@@ -39,7 +39,9 @@ impl ClientPlane {
     }
 
     /// Consume one quota slot and draw the next request, or `None` when the
-    /// quota is spent (the slot retires).
+    /// quota is spent (the slot retires). In catalog mode the generator
+    /// selects the target object first (Zipfian over `objects =`), then a
+    /// type-appropriate op; the returned op carries its `ObjectId`.
     pub fn next_op(&mut self, core: &mut ReplicaCore, now: Time) -> Option<WorkItem> {
         if self.quota == 0 {
             return None;

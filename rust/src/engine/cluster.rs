@@ -41,6 +41,9 @@ pub struct RunReport {
     pub power: PowerReport,
     /// Post-quiescence state digests (crashed replicas excluded).
     pub digests: Vec<u64>,
+    /// Per-replica, per-object state digests — multi-object convergence
+    /// holds object by object (`object_digests[replica][object]`).
+    pub object_digests: Vec<Vec<u64>>,
     pub crashed: Vec<bool>,
     pub invariants_ok: bool,
     pub leader: NodeId,
@@ -60,6 +63,22 @@ impl RunReport {
             .zip(&self.crashed)
             .filter(|&(_, &c)| !c)
             .map(|(&d, _)| d);
+        match live.next() {
+            None => true,
+            Some(first) => live.all(|d| d == first),
+        }
+    }
+
+    /// Per-object convergence: every live replica byte-equal on every
+    /// catalog object (strictly stronger than the combined-digest check
+    /// when the catalog has more than one object).
+    pub fn converged_per_object(&self) -> bool {
+        let mut live = self
+            .object_digests
+            .iter()
+            .zip(&self.crashed)
+            .filter(|&(_, &c)| !c)
+            .map(|(d, _)| d);
         match live.next() {
             None => true,
             Some(first) => live.all(|d| d == first),
@@ -105,11 +124,14 @@ impl Cluster {
         let replicas: Vec<Replica> =
             (0..cfg.n_replicas).map(|id| Replica::new(id, &cfg, &mut root)).collect();
         let mem = cfg.system.params_for(&cfg).mem;
+        let mut metrics = RunMetrics::new(cfg.n_replicas);
+        metrics.obj_applied = vec![0; cfg.n_objects()];
+        metrics.obj_rejected = vec![0; cfg.n_objects()];
         Cluster {
             net: Network::new(cfg.n_replicas, mem),
             qps: QpTable::leader_fenced(cfg.n_replicas, crate::smr::raft::initial_leader()),
             q: EventQueue::new(),
-            metrics: RunMetrics::new(cfg.n_replicas),
+            metrics,
             replicas,
             cfg,
         }
@@ -191,6 +213,21 @@ impl Cluster {
                     if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed()) {
                         let (plane, logs, leader, seen) = self.replicas[donor].snapshot_state();
                         self.replicas[node].install_snapshot(plane, logs, leader, seen, &mut self.qps, t);
+                        // Second-order anti-entropy (chaos mode): one donor's
+                        // snapshot may itself be missing an update whose
+                        // origin-retry was outstanding against every donor,
+                        // so the *union* of live peers re-ships anything
+                        // they gave up sending to the returned node. The
+                        // installed dedup ledger makes duplicates safe.
+                        if self.cfg.fault.has_link_faults() {
+                            for p in 0..n {
+                                if p == node || self.replicas[p].crashed() {
+                                    continue;
+                                }
+                                let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, p, draining);
+                                replica.reconcile_relaxed_to(&mut ctx, node, true);
+                            }
+                        }
                     }
                 }
             }
@@ -251,12 +288,20 @@ impl Cluster {
             self.metrics.busy_ns[i] = r.busy_total();
             self.metrics.executions += r.executions();
             self.metrics.rejected += r.rejected();
+            for (o, &a) in r.object_applied().iter().enumerate() {
+                self.metrics.obj_applied[o] += a;
+            }
+            for (o, &x) in r.object_rejected().iter().enumerate() {
+                self.metrics.obj_rejected[o] += x;
+            }
         }
 
         self.metrics.events = events;
         let fault_timeline = self.assemble_timeline(&timeline);
         let power = power::estimate(&self.cfg.system.params_for(&self.cfg).power, &self.metrics);
         let digests: Vec<u64> = self.replicas.iter().map(|r| r.digest()).collect();
+        let object_digests: Vec<Vec<u64>> =
+            self.replicas.iter().map(|r| r.object_digests()).collect();
         let dumps: Vec<String> = self.replicas.iter().map(|r| r.plane_dump()).collect();
         let crashed: Vec<bool> = self.replicas.iter().map(|r| r.crashed()).collect();
         let invariants_ok = self
@@ -270,6 +315,7 @@ impl Cluster {
             metrics: self.metrics,
             power,
             digests,
+            object_digests,
             dumps,
             crashed,
             invariants_ok,
@@ -396,6 +442,12 @@ impl Cluster {
             NetFault::Heal => {
                 self.net.heal_all();
                 let pairs = std::mem::take(cut_links);
+                // Long partitions (and drop bursts — heal_all repairs every
+                // link, not just recorded cuts) can exhaust the relaxed
+                // path's per-entry retry budget; re-arm every parked
+                // propagation between live replicas now that the fabric is
+                // whole (the relaxed-plane half of heal-time anti-entropy).
+                self.reconcile_all_parked(draining);
                 let leader = self.current_leader();
                 if self.replicas[leader].crashed() {
                     return;
@@ -490,11 +542,31 @@ impl Cluster {
             .collect()
     }
 
+    /// Re-arm every parked relaxed-path propagation between live replicas
+    /// (second-order anti-entropy). Cheap when nothing is parked.
+    fn reconcile_all_parked(&mut self, draining: bool) {
+        let n = self.cfg.n_replicas;
+        for from in 0..n {
+            if self.replicas[from].crashed() {
+                continue;
+            }
+            for to in 0..n {
+                if to == from || self.replicas[to].crashed() {
+                    continue;
+                }
+                let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, from, draining);
+                replica.reconcile_relaxed_to(&mut ctx, to, false);
+            }
+        }
+    }
+
     /// Flip the drain flag once all client work is accounted for. In chaos
     /// mode (link faults in the schedule) the flip also triggers one final
-    /// leader anti-entropy replay to every live peer: a drop or partition
-    /// may have eaten the *last* strong append to some follower, and with
-    /// no further traffic nothing else would repair it before the
+    /// leader anti-entropy replay to every live peer — a drop or partition
+    /// may have eaten the *last* strong append to some follower — and one
+    /// relaxed-plane reconcile of parked propagations (a drop burst with no
+    /// later heal can exhaust a retry budget that nothing else re-arms);
+    /// with no further traffic nothing else would repair either before the
     /// convergence check.
     fn maybe_begin_drain(&mut self, draining: &mut bool) {
         if *draining || !(self.all_quota_spent() && self.no_pending_clients()) {
@@ -504,6 +576,7 @@ impl Cluster {
         if !self.cfg.fault.has_link_faults() {
             return;
         }
+        self.reconcile_all_parked(true);
         let leader = self.current_leader();
         if self.replicas[leader].crashed() {
             return;

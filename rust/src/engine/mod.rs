@@ -11,7 +11,8 @@
 //!   one-sided log writes, doorbell-completion quorums;
 //! * `failure`  — heartbeat tracker, election, crash/recover/snapshot (§3);
 //! * `path`     — the [`ReplicationPath`] trait + shared `ReplicaCore`;
-//! * `cluster`  — builder/run loop; `store` — the unified data plane.
+//! * `cluster`  — builder/run loop; `store` — the ObjectId-addressed
+//!   catalog data plane (heterogeneous RDT instances + KV tenants).
 
 pub mod client;
 pub mod cluster;

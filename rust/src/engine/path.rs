@@ -12,11 +12,11 @@
 //! backend means implementing this trait, not editing a god-struct.
 
 use crate::config::{ExecParams, SimConfig, SystemKind, SystemParams};
-use crate::engine::store::DataPlane;
+use crate::engine::store::Catalog;
 use crate::engine::Ctx;
 use crate::mem::MemKind;
 use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
-use crate::rdt::{Category, OpCall};
+use crate::rdt::{Category, ObjectId, OpCall};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::smr::log::ReplicationLog;
 use crate::util::hasher::FastMap;
@@ -177,7 +177,7 @@ pub trait ReplicationPath: Send {
 
     /// Zero-cost apply of landed-but-unapplied state at quiescence, so
     /// convergence checks see fully-propagated replicas.
-    fn flush_pending(&mut self, plane: &mut DataPlane);
+    fn flush_pending(&mut self, plane: &mut Catalog);
 
     /// Drop landed-but-unapplied buffers (snapshot install replaces state).
     fn clear_landed(&mut self) {}
@@ -191,14 +191,25 @@ pub trait ReplicationPath: Send {
     fn install_logs(&mut self, _logs: Vec<ReplicationLog>) {}
 
     /// At-most-once dedup ledger for the chaos-mode relaxed path: which
-    /// `(origin, seq)` ops the donor's snapshot already folded in. Empty
-    /// outside link-fault runs.
-    fn snapshot_relaxed_seen(&self) -> Vec<(usize, u64)> {
+    /// `(object, origin, seq)` ops the donor's snapshot already folded in.
+    /// Empty outside link-fault runs.
+    fn snapshot_relaxed_seen(&self) -> Vec<(ObjectId, usize, u64)> {
         Vec::new()
     }
 
     /// Install the donor's dedup ledger alongside its state snapshot.
-    fn install_relaxed_seen(&mut self, _seen: Vec<(usize, u64)>) {}
+    fn install_relaxed_seen(&mut self, _seen: Vec<(ObjectId, usize, u64)>) {}
+
+    /// Second-order anti-entropy (chaos harness): re-arm any relaxed-path
+    /// propagations to `peer` that exhausted their retry budget while the
+    /// peer was unreachable. Called on every live replica when `peer`
+    /// installs a recovery snapshot (with `full = true`: the peer's state
+    /// is one donor's, so every propagation still outstanding against
+    /// *any* replica may be missing there and is re-shipped as a copy —
+    /// the donor-set union) and across healed links (`full = false`: the
+    /// peer kept its state; only entries parked for it matter). Default
+    /// no-op for paths without tracked fan-out.
+    fn reconcile_to(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _peer: NodeId, _full: bool) {}
 
     /// Anti-entropy: replay this path's committed log to one peer (leader
     /// side, after a heal or recovery re-included the peer). Default no-op
@@ -249,7 +260,7 @@ pub struct ReplicaCore {
     pub poll_interval_ns: u64,
     pub heartbeat_period_ns: u64,
 
-    pub plane: DataPlane,
+    pub plane: Catalog,
     pub crashed: bool,
     pub busy_until: Time,
     pub busy_total: u64,
@@ -272,7 +283,7 @@ pub struct ReplicaCore {
 }
 
 impl ReplicaCore {
-    pub fn new(id: NodeId, cfg: &SimConfig, plane: DataPlane, rng: Rng) -> Self {
+    pub fn new(id: NodeId, cfg: &SimConfig, plane: Catalog, rng: Rng) -> Self {
         ReplicaCore {
             id,
             n: cfg.n_replicas,
@@ -358,6 +369,13 @@ impl ReplicaCore {
     pub fn apply_remote(&mut self, op: &OpCall) {
         self.executions += 1;
         self.plane.apply(op);
+    }
+
+    /// Record a permissibility rejection: the run-level counter plus the
+    /// op's per-object telemetry.
+    pub fn note_rejected(&mut self, op: &OpCall) {
+        self.rejected += 1;
+        self.plane.note_rejected(op);
     }
 
     /// Allocate a completion token. `Ignore` tokens still consume a number

@@ -27,7 +27,7 @@ use crate::engine::path::{
     Membership, MembershipEvent, PendingClient, ReplicaCore, ReplicationPath, Requester,
     Submission, TokenCtx,
 };
-use crate::engine::store::DataPlane;
+use crate::engine::store::Catalog;
 use crate::engine::Ctx;
 use crate::net::verbs::{Payload, Verb};
 use crate::rdt::OpCall;
@@ -53,8 +53,10 @@ pub enum PaxosToken {
 }
 
 pub struct PaxosPath {
-    /// One total replication log (one consensus instance; sync groups
-    /// share the order — strictly stronger than Mu's per-group orders).
+    /// One total replication log (one consensus instance; all catalog
+    /// objects and sync groups share the order — strictly stronger than
+    /// Mu's per-group orders). Entries carry their `ObjectId` inside the
+    /// `OpCall`, so apply routes each to its catalog object.
     log: ReplicationLog,
     leader_sm: PaxosLeader,
     acceptor: PaxosAcceptor,
@@ -189,7 +191,7 @@ impl PaxosPath {
             return;
         }
         if !core.plane.permissible(&op) {
-            core.rejected += 1;
+            core.note_rejected(&op);
             if self.chaos {
                 self.done_fwd.insert((op.origin, op.seq), false);
             }
@@ -321,7 +323,7 @@ impl PaxosPath {
     fn retry_forward(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, mut p: PendingClient) {
         p.retries += 1;
         if p.retries > 8 {
-            core.rejected += 1;
+            core.note_rejected(&p.op);
             let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
             core.complete_client(ctx, p.client, p.arrival, done);
             return;
@@ -471,7 +473,7 @@ impl ReplicationPath for PaxosPath {
                 if let Some(p) = self.pending_fwd.remove(&request_id) {
                     if handled {
                         if !committed {
-                            core.rejected += 1;
+                            core.note_rejected(&p.op);
                         }
                         let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
                         core.complete_client(ctx, p.client, p.arrival, done);
@@ -622,7 +624,7 @@ impl ReplicationPath for PaxosPath {
         }
     }
 
-    fn flush_pending(&mut self, plane: &mut DataPlane) {
+    fn flush_pending(&mut self, plane: &mut Catalog) {
         for e in self.log.drain_unapplied() {
             plane.apply_forced(&e.op);
         }

@@ -10,18 +10,19 @@
 
 use crate::config::{PropagationMode, SimConfig};
 use crate::engine::path::{Membership, ReplicaCore, ReplicationPath, Submission, TokenCtx};
-use crate::engine::store::DataPlane;
+use crate::engine::store::{Catalog, ObjectPlane};
 use crate::engine::Ctx;
 use crate::mem::MemKind;
 use crate::net::verbs::{Payload, Verb, VerbKind};
-use crate::rdt::{Category, OpCall};
+use crate::rdt::{Category, ObjectId, OpCall};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::util::hasher::FastMap;
 
 /// Chaos-mode retransmit budget per tracked propagation verb. A peer that
-/// NACKs this many paced retries is treated as gone for good — crashed
-/// peers are excluded from convergence (or resynced by snapshot install),
-/// so dropping the entry is safe and bounds the event stream.
+/// NACKs this many paced retries is treated as unreachable for now; the
+/// entry parks (see `given_up`) and is re-armed by the second-order
+/// anti-entropy pass when the peer resurfaces (snapshot install / heal),
+/// so bounding the retry chain never loses the update.
 const RETRY_CAP: u32 = 64;
 
 /// One tracked propagation awaiting its ACK (chaos mode only).
@@ -39,15 +40,23 @@ pub struct RelaxedPath {
     batch: usize,
     /// Chaos mode: the schedule contains link faults (partition / drop /
     /// delay), so propagation verbs track completions and retry on NACK
-    /// until acknowledged, and applies dedup on `(origin, seq)`. Off for
-    /// empty and crash-only schedules — the classic fire-and-forget path,
-    /// bit-identical to the pre-chaos engine.
+    /// until acknowledged, and applies dedup on `(object, origin, seq)`.
+    /// Off for empty and crash-only schedules — the classic fire-and-forget
+    /// path, bit-identical to the pre-chaos engine.
     reliable: bool,
-    /// Landing zones (HBM): written by remote one-sided verbs, drained by
-    /// pollers or on access.
-    pending_reducible: Vec<OpCall>,
-    pending_irreducible: Vec<OpCall>,
-    /// Locally applied ops awaiting one aggregated propagation (§5.4).
+    /// Per-object landing zones (HBM): written by remote one-sided verbs,
+    /// drained by pollers or on access. Each object's summaries land in its
+    /// own contribution slots; each object keeps its own per-origin FIFO
+    /// queues (§4.1–§4.2, generalized to the catalog).
+    pending_reducible: Vec<Vec<OpCall>>,
+    pending_irreducible: Vec<Vec<OpCall>>,
+    /// Total landed-but-unapplied ops across all objects — the drains'
+    /// early-exit so a poll tick over a large, all-empty catalog stays
+    /// O(1) instead of scanning every object's zone.
+    landed_red: usize,
+    landed_irr: usize,
+    /// Locally applied ops awaiting one aggregated propagation (§5.4);
+    /// flushes aggregate per (object, opcode, key).
     sum_buffer: Vec<(OpCall, Time)>,
     /// Coalescer outboxes (batch > 1): summaries / queue appends waiting to
     /// share a verb. Flushed when a full batch accumulates and by the
@@ -56,27 +65,38 @@ pub struct RelaxedPath {
     out_irr: Vec<OpCall>,
     /// Chaos mode: in-flight tracked propagations, keyed by retry id.
     retry: FastMap<u64, RetryEntry>,
+    /// Chaos mode: tracked propagations that exhausted their retry budget
+    /// against an unreachable peer. Parked, not dropped — `reconcile_to`
+    /// re-arms them when the peer resurfaces (the ROADMAP's "second-order
+    /// anti-entropy": a recover incident combined with link faults must not
+    /// lose an update whose origin-retry was outstanding at every donor).
+    given_up: Vec<RetryEntry>,
     next_retry_id: u64,
-    /// Chaos mode: at-most-once ledger of `(origin, seq)` ops this replica
-    /// already folded in — retried deliveries and post-snapshot stragglers
-    /// must not double-apply. Transferred from the donor on snapshot
-    /// install (the donor knows exactly which ops its state contains).
-    seen: FastMap<(usize, u64), ()>,
+    /// Chaos mode: at-most-once ledger of `(object, origin, seq)` ops this
+    /// replica already folded in — retried deliveries and post-snapshot
+    /// stragglers must not double-apply. Transferred from the donor on
+    /// snapshot install (the donor knows exactly which ops its state
+    /// contains).
+    seen: FastMap<(ObjectId, usize, u64), ()>,
 }
 
 impl RelaxedPath {
     pub fn new(cfg: &SimConfig) -> Self {
+        let n_objects = cfg.n_objects();
         RelaxedPath {
             prop_red: cfg.prop_reducible,
             prop_irr: cfg.prop_irreducible,
             batch: cfg.batch_size as usize,
             reliable: cfg.fault.has_link_faults(),
-            pending_reducible: Vec::new(),
-            pending_irreducible: Vec::new(),
+            pending_reducible: (0..n_objects).map(|_| Vec::new()).collect(),
+            pending_irreducible: (0..n_objects).map(|_| Vec::new()).collect(),
+            landed_red: 0,
+            landed_irr: 0,
             sum_buffer: Vec::new(),
             out_sum: Vec::new(),
             out_irr: Vec::new(),
             retry: FastMap::default(),
+            given_up: Vec::new(),
             next_retry_id: 1,
             seen: FastMap::default(),
         }
@@ -89,7 +109,7 @@ impl RelaxedPath {
         if !self.reliable {
             return true;
         }
-        let key = (op.origin, op.seq);
+        let key = (op.obj, op.origin, op.seq);
         if self.seen.contains_key(&key) {
             return false;
         }
@@ -132,34 +152,54 @@ impl RelaxedPath {
     }
 
     fn drain_reducible_cost(&mut self, core: &mut ReplicaCore) -> u64 {
-        let items: Vec<OpCall> = self.pending_reducible.drain(..).collect();
-        if items.is_empty() {
+        if self.landed_red == 0 {
             return 0;
         }
-        // Landed summaries are contiguous slots: one burst read + execute.
-        let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
-        for op in items {
-            if self.mark_fresh(&op) {
-                cost += core.exec().op_exec_ns;
-                core.apply_remote(&op);
+        self.landed_red = 0;
+        // Each object's landed summaries are contiguous slots in its own
+        // landing zone: one burst read per non-empty object + execute.
+        let mut zones = std::mem::take(&mut self.pending_reducible);
+        let mut cost = 0;
+        for zone in &mut zones {
+            if zone.is_empty() {
+                continue;
+            }
+            let items: Vec<OpCall> = zone.drain(..).collect();
+            cost += core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
+            for op in items {
+                if self.mark_fresh(&op) {
+                    cost += core.exec().op_exec_ns;
+                    core.apply_remote(&op);
+                }
             }
         }
+        self.pending_reducible = zones;
         cost
     }
 
     fn drain_irreducible_cost(&mut self, core: &mut ReplicaCore) -> u64 {
-        let items: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
-        if items.is_empty() {
+        if self.landed_irr == 0 {
             return 0;
         }
-        // Per-origin FIFO queues: burst-read each queue head run.
-        let mut cost = core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
-        for op in items {
-            if self.mark_fresh(&op) {
-                cost += core.exec().op_exec_ns;
-                core.apply_remote(&op);
+        self.landed_irr = 0;
+        // Per-(object, origin) FIFO queues: burst-read each object's queue
+        // head run.
+        let mut queues = std::mem::take(&mut self.pending_irreducible);
+        let mut cost = 0;
+        for queue in &mut queues {
+            if queue.is_empty() {
+                continue;
+            }
+            let items: Vec<OpCall> = queue.drain(..).collect();
+            cost += core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
+            for op in items {
+                if self.mark_fresh(&op) {
+                    cost += core.exec().op_exec_ns;
+                    core.apply_remote(&op);
+                }
             }
         }
+        self.pending_irreducible = queues;
         cost
     }
 
@@ -172,9 +212,17 @@ impl RelaxedPath {
         for (_, applied_at) in &items {
             ctx.metrics.staleness.add((now.saturating_sub(*applied_at)) as f64);
         }
-        // Summarize under the data plane's type-correct rule.
+        // Summarize per object under each object's type-correct rule
+        // (ascending object id; buffer order preserved within an object).
         let ops: Vec<OpCall> = items.iter().map(|(o, _)| *o).collect();
-        let agg = summarize(core.plane.summarize_rule(), &ops);
+        let mut objs: Vec<ObjectId> = ops.iter().map(|o| o.obj).collect();
+        objs.sort_unstable();
+        objs.dedup();
+        let mut agg: Vec<OpCall> = Vec::with_capacity(ops.len());
+        for obj in objs {
+            let ops_o: Vec<OpCall> = ops.iter().copied().filter(|o| o.obj == obj).collect();
+            agg.extend(summarize(core.plane.summarize_rule(obj), &ops_o));
+        }
         if host_side {
             core.charge_pcie_hop(now);
         }
@@ -329,7 +377,7 @@ impl ReplicationPath for RelaxedPath {
             // state" — batching trades integrity staleness for performance.
             // The op was locally permissible; it applies locally and ships
             // as a normalized delta in the next summary flush.
-            op = normalize_for_summary(&core.plane, op);
+            op = normalize_for_summary(core.plane.object(op.obj), op);
         }
         cost += core.exec().op_exec_ns + core.write_state_cost(host_side);
         core.executions += 1;
@@ -369,7 +417,8 @@ impl ReplicationPath for RelaxedPath {
                         core.apply_remote(&value);
                     }
                 } else {
-                    self.pending_reducible.push(value);
+                    self.pending_reducible[value.obj as usize].push(value);
+                    self.landed_red += 1;
                 }
             }
             Payload::QueueAppend { op } => {
@@ -380,7 +429,8 @@ impl ReplicationPath for RelaxedPath {
                         core.apply_remote(&op);
                     }
                 } else {
-                    self.pending_irreducible.push(op);
+                    self.pending_irreducible[op.obj as usize].push(op);
+                    self.landed_irr += 1;
                 }
             }
             Payload::SummaryBatch { values, .. } => {
@@ -393,7 +443,10 @@ impl ReplicationPath for RelaxedPath {
                         }
                     }
                 } else {
-                    self.pending_reducible.extend(values);
+                    self.landed_red += values.len();
+                    for v in values {
+                        self.pending_reducible[v.obj as usize].push(v);
+                    }
                 }
             }
             Payload::QueueBatch { ops } => {
@@ -406,7 +459,10 @@ impl ReplicationPath for RelaxedPath {
                         }
                     }
                 } else {
-                    self.pending_irreducible.extend(ops);
+                    self.landed_irr += ops.len();
+                    for op in ops {
+                        self.pending_irreducible[op.obj as usize].push(op);
+                    }
                 }
             }
             _ => {}
@@ -468,7 +524,9 @@ impl ReplicationPath for RelaxedPath {
         // NACK (partition / drop / crash) re-ships the same payload after a
         // heartbeat beat, off the busy clock — the soft RNIC retransmits in
         // fabric logic. The budget bounds retries to peers that are really
-        // gone; their state resyncs via snapshot install instead.
+        // gone; the entry then parks for the second-order anti-entropy
+        // pass (`reconcile_to`) instead of being dropped, so a peer that
+        // resurfaces after a long outage still receives the update.
         let TokenCtx::Relaxed { id } = token else { return };
         let Some(mut entry) = self.retry.remove(&id) else { return };
         if ok {
@@ -476,6 +534,7 @@ impl ReplicationPath for RelaxedPath {
         }
         entry.attempts += 1;
         if entry.attempts > RETRY_CAP {
+            self.given_up.push(entry);
             return;
         }
         let next_id = self.next_retry_id;
@@ -490,28 +549,38 @@ impl ReplicationPath for RelaxedPath {
         ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, dst, verb, true);
     }
 
-    fn flush_pending(&mut self, plane: &mut DataPlane) {
-        let red: Vec<OpCall> = self.pending_reducible.drain(..).collect();
-        for op in red {
-            if self.mark_fresh(&op) {
-                plane.apply(&op);
+    fn flush_pending(&mut self, plane: &mut Catalog) {
+        self.landed_red = 0;
+        self.landed_irr = 0;
+        let mut zones = std::mem::take(&mut self.pending_reducible);
+        for zone in &mut zones {
+            for op in zone.drain(..) {
+                if self.mark_fresh(&op) {
+                    plane.apply(&op);
+                }
             }
         }
-        let irr: Vec<OpCall> = self.pending_irreducible.drain(..).collect();
-        for op in irr {
-            if self.mark_fresh(&op) {
-                plane.apply(&op);
+        self.pending_reducible = zones;
+        let mut queues = std::mem::take(&mut self.pending_irreducible);
+        for queue in &mut queues {
+            for op in queue.drain(..) {
+                if self.mark_fresh(&op) {
+                    plane.apply(&op);
+                }
             }
         }
+        self.pending_irreducible = queues;
     }
 
     fn clear_landed(&mut self) {
         // Pre-crash local residue (unsent summaries, coalescer outboxes)
-        // and in-flight retries die with the snapshot install in any mode.
+        // and in-flight/parked retries die with the snapshot install in
+        // any mode.
         self.sum_buffer.clear();
         self.out_sum.clear();
         self.out_irr.clear();
         self.retry = FastMap::default();
+        self.given_up.clear();
         if self.reliable {
             // Chaos mode keeps the landed-but-unapplied buffers: retried
             // deliveries may have landed just before the install, and the
@@ -519,29 +588,75 @@ impl ReplicationPath for RelaxedPath {
             // filters exactly the ones its snapshot already contains.
             return;
         }
-        self.pending_reducible.clear();
-        self.pending_irreducible.clear();
+        for v in &mut self.pending_reducible {
+            v.clear();
+        }
+        for v in &mut self.pending_irreducible {
+            v.clear();
+        }
+        self.landed_red = 0;
+        self.landed_irr = 0;
     }
 
-    fn snapshot_relaxed_seen(&self) -> Vec<(usize, u64)> {
-        let mut v: Vec<(usize, u64)> = self.seen.keys().copied().collect();
+    fn snapshot_relaxed_seen(&self) -> Vec<(ObjectId, usize, u64)> {
+        let mut v: Vec<(ObjectId, usize, u64)> = self.seen.keys().copied().collect();
         v.sort_unstable();
         v
     }
 
-    fn install_relaxed_seen(&mut self, seen: Vec<(usize, u64)>) {
+    fn install_relaxed_seen(&mut self, seen: Vec<(ObjectId, usize, u64)>) {
         self.seen = seen.into_iter().map(|k| (k, ())).collect();
+    }
+
+    fn reconcile_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId, full: bool) {
+        // Second-order anti-entropy: re-arm every parked propagation whose
+        // destination is the resurfaced peer. The peer's dedup ledger (its
+        // own, or the donor's it just installed) makes duplicates safe.
+        if !self.reliable {
+            return;
+        }
+        let (ship, keep): (Vec<RetryEntry>, Vec<RetryEntry>) =
+            self.given_up.drain(..).partition(|e| e.dst == peer);
+        self.given_up = keep;
+        let mut verbs: Vec<Verb> = ship.into_iter().map(|e| e.verb).collect();
+        if full {
+            // Snapshot install: the peer's state is one donor's copy, and
+            // any propagation still outstanding against *some* replica may
+            // be missing from that donor — including ops the peer itself
+            // ACKed before it crashed. Re-ship a copy of every outstanding
+            // entry (parked or in-flight) to the peer; its installed dedup
+            // ledger drops exactly the ones the donor had folded in.
+            verbs.extend(self.given_up.iter().map(|e| e.verb.clone()));
+            let mut ids: Vec<u64> = self.retry.keys().copied().collect();
+            ids.sort_unstable(); // canonical re-ship order
+            for id in ids {
+                let e = &self.retry[&id];
+                if e.dst != peer {
+                    verbs.push(e.verb.clone());
+                }
+            }
+        }
+        for mut verb in verbs {
+            let id = self.next_retry_id;
+            self.next_retry_id += 1;
+            let tok = core.token(TokenCtx::Relaxed { id });
+            verb.token = tok;
+            self.retry.insert(id, RetryEntry { dst: peer, verb: verb.clone(), attempts: 0 });
+            ctx.metrics.verbs += 1;
+            ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, true);
+        }
     }
 
     fn debug_status(&self) -> String {
         format!(
-            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={} retry={}",
-            self.pending_reducible.len(),
-            self.pending_irreducible.len(),
+            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={} retry={} parked={}",
+            self.pending_reducible.iter().map(Vec::len).sum::<usize>(),
+            self.pending_irreducible.iter().map(Vec::len).sum::<usize>(),
             self.sum_buffer.len(),
             self.out_sum.len(),
             self.out_irr.len(),
-            self.retry.len()
+            self.retry.len(),
+            self.given_up.len()
         )
     }
 }
@@ -549,16 +664,17 @@ impl ReplicationPath for RelaxedPath {
 /// Rewrite a locally-validated conflicting op into its commutative delta
 /// form for summarized propagation (§5.4): debits become negative
 /// deposits. Only meaningful for scalar-balance types; other conflicting
-/// ops pass through unchanged (their apply is set-idempotent).
-pub fn normalize_for_summary(plane: &DataPlane, mut op: OpCall) -> OpCall {
+/// ops pass through unchanged (their apply is set-idempotent). `plane` is
+/// the catalog object the op addresses.
+pub fn normalize_for_summary(plane: &ObjectPlane, mut op: OpCall) -> OpCall {
     use crate::engine::store::{KvKind, KV_WITHDRAW, KV_WRITE};
     match plane {
-        DataPlane::Kv(kv) if kv.kind == KvKind::SmallBank && op.opcode == KV_WITHDRAW => {
+        ObjectPlane::Kv(kv) if kv.kind == KvKind::SmallBank && op.opcode == KV_WITHDRAW => {
             op.opcode = KV_WRITE;
             op.x = -op.x;
             op
         }
-        DataPlane::Micro(r) if r.kind() == crate::rdt::RdtKind::Account => {
+        ObjectPlane::Micro(r) if r.kind() == crate::rdt::RdtKind::Account => {
             use crate::rdt::wrdt::account::{OP_DEPOSIT, OP_WITHDRAW};
             if op.opcode == OP_WITHDRAW {
                 op.opcode = OP_DEPOSIT;
@@ -582,15 +698,18 @@ pub enum SummarizeRule {
     ShipAll,
 }
 
-/// Aggregate a run of reducible ops under a type-correct rule.
+/// Aggregate a run of reducible ops under a type-correct rule. Keys
+/// include the catalog object id, so a multi-object buffer can never fold
+/// two objects' deltas together (callers group per object anyway; the key
+/// keeps the invariant local).
 pub fn summarize(rule: SummarizeRule, ops: &[OpCall]) -> Vec<OpCall> {
     use std::collections::BTreeMap;
     match rule {
         SummarizeRule::ShipAll => ops.to_vec(),
         SummarizeRule::SumDelta => {
-            let mut agg: BTreeMap<(u8, u64), OpCall> = BTreeMap::new();
+            let mut agg: BTreeMap<(ObjectId, u8, u64), OpCall> = BTreeMap::new();
             for op in ops {
-                let e = agg.entry((op.opcode, op.b)).or_insert_with(|| {
+                let e = agg.entry((op.obj, op.opcode, op.b)).or_insert_with(|| {
                     let mut z = *op;
                     z.a = 0;
                     z.x = 0.0;
@@ -603,9 +722,9 @@ pub fn summarize(rule: SummarizeRule, ops: &[OpCall]) -> Vec<OpCall> {
             agg.into_values().collect()
         }
         SummarizeRule::LastWrite => {
-            let mut best: BTreeMap<u64, OpCall> = BTreeMap::new();
+            let mut best: BTreeMap<(ObjectId, u64), OpCall> = BTreeMap::new();
             for op in ops {
-                let e = best.entry(op.b).or_insert(*op);
+                let e = best.entry((op.obj, op.b)).or_insert(*op);
                 // op.a is the LWW timestamp for both the micro register and
                 // the YCSB KV path.
                 if op.a > e.a {

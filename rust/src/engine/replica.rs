@@ -20,11 +20,11 @@ use crate::config::{ReplicationPathKind, SimConfig};
 use crate::engine::client::ClientPlane;
 use crate::engine::failure::FailurePlane;
 use crate::engine::path::{self, ReplicaCore, ReplicationPath, Submission, TokenCtx};
-use crate::engine::store::{DataPlane, KV_READ};
+use crate::engine::store::{Catalog, KV_READ};
 use crate::engine::Ctx;
 use crate::mem::MemKind;
 use crate::net::verbs::{Payload, PayloadPlane, ReadData, ReadTarget, Verb, VerbKind};
-use crate::rdt::Category;
+use crate::rdt::{Category, ObjectId};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::smr::log::ReplicationLog;
 use crate::util::rng::Rng;
@@ -69,8 +69,8 @@ pub struct Replica {
 impl Replica {
     pub fn new(id: NodeId, cfg: &SimConfig, root_rng: &mut Rng) -> Self {
         let client = ClientPlane::new(cfg);
-        let plane = DataPlane::for_workload(cfg.workload, client.keyspace());
-        let groups = plane.sync_groups() as usize;
+        let plane = Catalog::for_config(cfg, client.keyspace());
+        let groups = plane.total_groups() as usize;
         let rng = root_rng.fork(id as u64 + 1);
         let core = ReplicaCore::new(id, cfg, plane, rng);
         let (relaxed, strong) = path::build_paths(cfg, id, groups);
@@ -154,7 +154,7 @@ impl Replica {
 
         let op = item.op;
         if op.is_query() || op.opcode == KV_READ {
-            if op.is_query() && !core.plane.has_query() {
+            if op.is_query() && !core.plane.has_query(op.obj) {
                 // Movie has no query() (§5.2): the slot is a pure local
                 // no-op that never touches replicated state.
                 let done = core.occupy(arrival, cost + core.exec().client_overhead_ns / 2);
@@ -172,13 +172,13 @@ impl Replica {
         cost += relaxed.refresh_cost(core) + strong.refresh_cost(core);
         cost += cl.check_read_cost(core, &op, host_side);
         if !core.plane.permissible(&op) {
-            core.rejected += 1;
+            core.note_rejected(&op);
             let done = core.occupy(arrival, cost + core.exec().client_overhead_ns / 2);
             core.complete_client(ctx, client, arrival, done);
             return;
         }
 
-        let category = core.plane.category(op.opcode);
+        let category = core.plane.category(op.obj, op.opcode);
         let path: &mut dyn ReplicationPath = match routes.for_category(category) {
             ReplicationPathKind::Relaxed => &mut **relaxed,
             ReplicationPathKind::Strong => &mut **strong,
@@ -320,6 +320,21 @@ impl Replica {
         self.core.plane.state_digest()
     }
 
+    /// Per-object state digests (convergence holds object by object).
+    pub fn object_digests(&self) -> Vec<u64> {
+        self.core.plane.object_digests()
+    }
+
+    /// Per-object applied-op counters (scale-out telemetry).
+    pub fn object_applied(&self) -> &[u64] {
+        self.core.plane.applied_counts()
+    }
+
+    /// Per-object permissibility-rejection counters.
+    pub fn object_rejected(&self) -> &[u64] {
+        self.core.plane.rejected_counts()
+    }
+
     pub fn invariant_ok(&self) -> bool {
         self.core.plane.invariant_ok()
     }
@@ -345,14 +360,18 @@ impl Replica {
     /// (a no-op when the views already agree, e.g. follower recovery).
     pub fn install_snapshot(
         &mut self,
-        plane: DataPlane,
+        plane: Catalog,
         logs: Vec<ReplicationLog>,
         leader: NodeId,
-        relaxed_seen: Vec<(usize, u64)>,
+        relaxed_seen: Vec<(ObjectId, usize, u64)>,
         qps: &mut crate::net::QpTable,
         now: Time,
     ) {
+        // The donor's *state* installs; per-object op counters stay this
+        // replica's own (they are run telemetry, not replicated state).
+        let counts = self.core.plane.op_counts();
         self.core.plane = plane;
+        self.core.plane.set_op_counts(counts);
         self.strong.install_logs(logs);
         self.relaxed.clear_landed();
         // Chaos mode: the donor's at-most-once ledger says exactly which
@@ -369,13 +388,27 @@ impl Replica {
 
     /// Donor side of the snapshot (state, strong logs, leader view, dedup
     /// ledger).
-    pub fn snapshot_state(&self) -> (DataPlane, Vec<ReplicationLog>, NodeId, Vec<(usize, u64)>) {
+    pub fn snapshot_state(
+        &self,
+    ) -> (Catalog, Vec<ReplicationLog>, NodeId, Vec<(ObjectId, usize, u64)>) {
         (
             self.core.plane.snapshot(),
             self.strong.snapshot_logs(),
             self.core.leader,
             self.relaxed.snapshot_relaxed_seen(),
         )
+    }
+
+    /// Second-order anti-entropy (chaos harness): re-ship relaxed-path
+    /// propagations to `peer`. The cluster calls this on every live
+    /// replica when `peer` installs a recovery snapshot (`full = true`:
+    /// donor-set union — the donor itself may have missed an update that
+    /// is still outstanding somewhere, including ops the peer ACKed before
+    /// crashing) and across healed links (`full = false`: only entries
+    /// that exhausted their retry budget against the peer).
+    pub fn reconcile_relaxed_to(&mut self, ctx: &mut Ctx, peer: NodeId, full: bool) {
+        let Replica { core, relaxed, .. } = self;
+        relaxed.reconcile_to(core, ctx, peer, full);
     }
 
     /// Heal-time anti-entropy (chaos harness): replay this replica's

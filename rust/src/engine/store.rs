@@ -1,10 +1,25 @@
-//! The replica's data plane: either one micro-benchmark RDT object or a
-//! keyed store (YCSB registers / SmallBank accounts), behind a single
-//! category-routing interface — the paper's "single replication/consistency
-//! interface across FPGA- and host-resident data" (§1, contribution 3).
+//! The replica's data plane: an ObjectId-addressed **catalog** of
+//! heterogeneous RDT instances — micro-benchmark CRDTs/WRDTs and keyed KV
+//! tenants (YCSB registers / SmallBank accounts) side by side — behind a
+//! single category-routing interface: the paper's "single
+//! replication/consistency interface across FPGA- and host-resident data"
+//! (§1, contribution 3) hosting a catalog of data types with "direct
+//! invocation of FPGA-resident operators".
+//!
+//! [`ObjectPlane`] is one catalog entry (the pre-catalog `DataPlane`);
+//! [`Catalog`] is the dense `ObjectId -> ObjectPlane` table every replica
+//! owns, which also flattens each object's local synchronization groups
+//! into the cluster-global group index space the strong planes key their
+//! round pipelines and replication logs by. A default configuration builds
+//! a catalog of one and is bit-identical to the pre-catalog engine.
 
-use crate::config::WorkloadKind;
-use crate::rdt::{mix64, mix_f64, Category, OpCall, QueryValue, Rdt, RdtKind};
+use crate::config::{ObjectKind, SimConfig, WorkloadKind};
+use crate::rdt::{mix64, mix_f64, Category, ObjectId, OpCall, QueryValue, Rdt, RdtKind};
+
+/// Keyspace of a KV tenant inside a multi-object catalog (the single-store
+/// YCSB/SmallBank configurations keep their paper-scaled keyspaces; catalog
+/// tenants are deliberately small so 64-tenant sweeps stay cheap).
+pub const TENANT_KEYS: u64 = 4096;
 
 /// KV opcodes (OpCall.b carries the key).
 pub const KV_READ: u8 = 0xFE; // like query() but keyed
@@ -119,25 +134,35 @@ impl KvState {
     }
 }
 
-/// The unified data plane.
-pub enum DataPlane {
+/// One catalog object: a micro-benchmark RDT instance or a keyed KV tenant.
+pub enum ObjectPlane {
     Micro(Box<dyn Rdt>),
     Kv(KvState),
 }
 
-impl DataPlane {
+impl ObjectPlane {
     pub fn for_workload(workload: WorkloadKind, keys: u64) -> Self {
         match workload {
-            WorkloadKind::Micro(kind) => DataPlane::Micro(kind.instantiate()),
-            WorkloadKind::Ycsb => DataPlane::Kv(KvState::new(KvKind::Ycsb, keys)),
-            WorkloadKind::SmallBank => DataPlane::Kv(KvState::new(KvKind::SmallBank, keys)),
+            WorkloadKind::Micro(kind) => ObjectPlane::Micro(kind.instantiate()),
+            WorkloadKind::Ycsb => ObjectPlane::Kv(KvState::new(KvKind::Ycsb, keys)),
+            WorkloadKind::SmallBank => ObjectPlane::Kv(KvState::new(KvKind::SmallBank, keys)),
+        }
+    }
+
+    pub fn for_kind(kind: ObjectKind) -> Self {
+        match kind {
+            ObjectKind::Rdt(k) => ObjectPlane::Micro(k.instantiate()),
+            ObjectKind::Ycsb => ObjectPlane::Kv(KvState::new(KvKind::Ycsb, TENANT_KEYS)),
+            ObjectKind::SmallBank => {
+                ObjectPlane::Kv(KvState::new(KvKind::SmallBank, TENANT_KEYS))
+            }
         }
     }
 
     pub fn category(&self, opcode: u8) -> Category {
         match self {
-            DataPlane::Micro(r) => r.category(opcode),
-            DataPlane::Kv(kv) => match (kv.kind, opcode) {
+            ObjectPlane::Micro(r) => r.category(opcode),
+            ObjectPlane::Kv(kv) => match (kv.kind, opcode) {
                 (KvKind::SmallBank, KV_WITHDRAW) => Category::Conflicting,
                 _ => Category::Reducible,
             },
@@ -146,15 +171,15 @@ impl DataPlane {
 
     pub fn sync_group(&self, opcode: u8) -> u8 {
         match self {
-            DataPlane::Micro(r) => r.sync_group(opcode),
-            DataPlane::Kv(_) => 0,
+            ObjectPlane::Micro(r) => r.sync_group(opcode),
+            ObjectPlane::Kv(_) => 0,
         }
     }
 
     pub fn sync_groups(&self) -> u8 {
         match self {
-            DataPlane::Micro(r) => r.sync_groups(),
-            DataPlane::Kv(kv) => match kv.kind {
+            ObjectPlane::Micro(r) => r.sync_groups(),
+            ObjectPlane::Kv(kv) => match kv.kind {
                 KvKind::Ycsb => 0,
                 KvKind::SmallBank => 1,
             },
@@ -163,15 +188,15 @@ impl DataPlane {
 
     pub fn permissible(&self, op: &OpCall) -> bool {
         match self {
-            DataPlane::Micro(r) => r.permissible(op),
-            DataPlane::Kv(kv) => kv.permissible(op),
+            ObjectPlane::Micro(r) => r.permissible(op),
+            ObjectPlane::Kv(kv) => kv.permissible(op),
         }
     }
 
     pub fn apply(&mut self, op: &OpCall) -> bool {
         match self {
-            DataPlane::Micro(r) => r.apply(op),
-            DataPlane::Kv(kv) => kv.apply(op),
+            ObjectPlane::Micro(r) => r.apply(op),
+            ObjectPlane::Kv(kv) => kv.apply(op),
         }
     }
 
@@ -179,50 +204,50 @@ impl DataPlane {
     /// (see `Rdt::apply_forced`).
     pub fn apply_forced(&mut self, op: &OpCall) -> bool {
         match self {
-            DataPlane::Micro(r) => r.apply_forced(op),
-            DataPlane::Kv(kv) => kv.apply_forced(op),
+            ObjectPlane::Micro(r) => r.apply_forced(op),
+            ObjectPlane::Kv(kv) => kv.apply_forced(op),
         }
     }
 
     pub fn query(&self, key: u64) -> QueryValue {
         match self {
-            DataPlane::Micro(r) => r.query(),
-            DataPlane::Kv(kv) => QueryValue::Float(kv.value(key)),
+            ObjectPlane::Micro(r) => r.query(),
+            ObjectPlane::Kv(kv) => QueryValue::Float(kv.value(key)),
         }
     }
 
     pub fn has_query(&self) -> bool {
         match self {
-            DataPlane::Micro(r) => r.has_query(),
-            DataPlane::Kv(_) => true,
+            ObjectPlane::Micro(r) => r.has_query(),
+            ObjectPlane::Kv(_) => true,
         }
     }
 
     pub fn state_digest(&self) -> u64 {
         match self {
-            DataPlane::Micro(r) => r.state_digest(),
-            DataPlane::Kv(kv) => kv.digest(),
+            ObjectPlane::Micro(r) => r.state_digest(),
+            ObjectPlane::Kv(kv) => kv.digest(),
         }
     }
 
     pub fn invariant_ok(&self) -> bool {
         match self {
-            DataPlane::Micro(r) => r.invariant_ok(),
-            DataPlane::Kv(kv) => kv.invariant_ok(),
+            ObjectPlane::Micro(r) => r.invariant_ok(),
+            ObjectPlane::Kv(kv) => kv.invariant_ok(),
         }
     }
 
-    /// Type-correct summarization rule for this plane's reducible ops
+    /// Type-correct summarization rule for this object's reducible ops
     /// (see `engine::relaxed::summarize`).
     pub fn summarize_rule(&self) -> crate::engine::relaxed::SummarizeRule {
         use crate::engine::relaxed::SummarizeRule as R;
         match self {
-            DataPlane::Micro(r) => match r.kind() {
+            ObjectPlane::Micro(r) => match r.kind() {
                 RdtKind::GCounter | RdtKind::PnCounter | RdtKind::Account => R::SumDelta,
                 RdtKind::LwwRegister => R::LastWrite,
                 _ => R::ShipAll,
             },
-            DataPlane::Kv(kv) => match kv.kind {
+            ObjectPlane::Kv(kv) => match kv.kind {
                 KvKind::Ycsb => R::LastWrite,
                 KvKind::SmallBank => R::SumDelta,
             },
@@ -230,25 +255,204 @@ impl DataPlane {
     }
 
     /// Deep-copy for recovery snapshot transfer.
-    pub fn snapshot(&self) -> DataPlane {
+    pub fn snapshot(&self) -> ObjectPlane {
         match self {
-            DataPlane::Micro(r) => DataPlane::Micro(r.clone_box()),
-            DataPlane::Kv(kv) => DataPlane::Kv(kv.clone()),
+            ObjectPlane::Micro(r) => ObjectPlane::Micro(r.clone_box()),
+            ObjectPlane::Kv(kv) => ObjectPlane::Kv(kv.clone()),
         }
     }
 
     pub fn debug_dump(&self) -> String {
         match self {
-            DataPlane::Micro(r) => r.debug_dump(),
-            DataPlane::Kv(_) => String::new(),
+            ObjectPlane::Micro(r) => r.debug_dump(),
+            ObjectPlane::Kv(_) => String::new(),
         }
     }
 
     pub fn micro_kind(&self) -> Option<RdtKind> {
         match self {
-            DataPlane::Micro(r) => Some(r.kind()),
-            DataPlane::Kv(_) => None,
+            ObjectPlane::Micro(r) => Some(r.kind()),
+            ObjectPlane::Kv(_) => None,
         }
+    }
+}
+
+/// The replica's data plane: a dense `ObjectId -> ObjectPlane` table plus
+/// the `(object, local sync group) -> global group` flattening the strong
+/// planes key their pipelines by, and per-object applied/rejected op
+/// counters for the scale-out telemetry.
+pub struct Catalog {
+    objects: Vec<ObjectPlane>,
+    /// Global group index of each object's local group 0 (cumulative sum
+    /// of preceding objects' group counts).
+    group_base: Vec<u8>,
+    total_groups: u8,
+    applied: Vec<u64>,
+    rejected: Vec<u64>,
+}
+
+impl Catalog {
+    /// Build the catalog a configuration describes: the explicit
+    /// `objects =` spec, or the implicit catalog-of-one derived from
+    /// `workload` (with `keyspace` sizing a single keyed store).
+    pub fn for_config(cfg: &SimConfig, keyspace: u64) -> Self {
+        let objects: Vec<ObjectPlane> = if cfg.objects.is_default() {
+            vec![ObjectPlane::for_workload(cfg.workload, keyspace)]
+        } else {
+            cfg.objects
+                .expanded_kinds()
+                .into_iter()
+                .map(ObjectPlane::for_kind)
+                .collect()
+        };
+        Self::from_objects(objects)
+    }
+
+    fn from_objects(objects: Vec<ObjectPlane>) -> Self {
+        let mut group_base = Vec::with_capacity(objects.len());
+        let mut next = 0u32;
+        for o in &objects {
+            group_base.push(next as u8);
+            next += o.sync_groups() as u32;
+        }
+        assert!(next <= u8::MAX as u32, "global sync groups exceed the wire format");
+        let n = objects.len();
+        Catalog {
+            objects,
+            group_base,
+            total_groups: next as u8,
+            applied: vec![0; n],
+            rejected: vec![0; n],
+        }
+    }
+
+    pub fn n_objects(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn object(&self, obj: ObjectId) -> &ObjectPlane {
+        &self.objects[obj as usize]
+    }
+
+    /// Global synchronization-group count — the strong planes size their
+    /// round pipelines and replication logs by this.
+    pub fn total_groups(&self) -> u8 {
+        self.total_groups
+    }
+
+    pub fn category(&self, obj: ObjectId, opcode: u8) -> Category {
+        self.objects[obj as usize].category(opcode)
+    }
+
+    /// Flatten an op's `(object, local sync group)` into the global group
+    /// index (Mu keeps one round pipeline + replication log per *global*
+    /// group).
+    pub fn global_group(&self, op: &OpCall) -> u8 {
+        let o = op.obj as usize;
+        self.group_base[o] + self.objects[o].sync_group(op.opcode)
+    }
+
+    pub fn permissible(&self, op: &OpCall) -> bool {
+        self.objects[op.obj as usize].permissible(op)
+    }
+
+    pub fn apply(&mut self, op: &OpCall) -> bool {
+        self.applied[op.obj as usize] += 1;
+        self.objects[op.obj as usize].apply(op)
+    }
+
+    /// Unconditional apply of a leader-committed conflicting op.
+    pub fn apply_forced(&mut self, op: &OpCall) -> bool {
+        self.applied[op.obj as usize] += 1;
+        self.objects[op.obj as usize].apply_forced(op)
+    }
+
+    pub fn query(&self, obj: ObjectId, key: u64) -> QueryValue {
+        self.objects[obj as usize].query(key)
+    }
+
+    pub fn has_query(&self, obj: ObjectId) -> bool {
+        self.objects[obj as usize].has_query()
+    }
+
+    /// Type-correct summarization rule for one object's reducible ops.
+    pub fn summarize_rule(&self, obj: ObjectId) -> crate::engine::relaxed::SummarizeRule {
+        self.objects[obj as usize].summarize_rule()
+    }
+
+    /// Whole-catalog digest. A catalog of one reports its object's digest
+    /// unchanged (the pre-catalog value); larger catalogs combine
+    /// per-object digests order-insensitively across objects.
+    pub fn state_digest(&self) -> u64 {
+        if self.objects.len() == 1 {
+            return self.objects[0].state_digest();
+        }
+        self.objects
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, o)| {
+                acc ^ mix64(i as u64).wrapping_mul(o.state_digest() | 1)
+            })
+    }
+
+    /// Per-object digests (convergence must hold object by object).
+    pub fn object_digests(&self) -> Vec<u64> {
+        self.objects.iter().map(|o| o.state_digest()).collect()
+    }
+
+    pub fn invariant_ok(&self) -> bool {
+        self.objects.iter().all(|o| o.invariant_ok())
+    }
+
+    /// Per-object applied-op counters (local + remote + forced applies).
+    pub fn applied_counts(&self) -> &[u64] {
+        &self.applied
+    }
+
+    /// Per-object permissibility-rejection counters.
+    pub fn rejected_counts(&self) -> &[u64] {
+        &self.rejected
+    }
+
+    /// Record a permissibility rejection against the op's object.
+    pub fn note_rejected(&mut self, op: &OpCall) {
+        self.rejected[op.obj as usize] += 1;
+    }
+
+    /// Transplant op counters across a snapshot install: the recovering
+    /// node keeps *its own* telemetry, not the donor's.
+    pub fn op_counts(&self) -> (Vec<u64>, Vec<u64>) {
+        (self.applied.clone(), self.rejected.clone())
+    }
+
+    pub fn set_op_counts(&mut self, (applied, rejected): (Vec<u64>, Vec<u64>)) {
+        debug_assert_eq!(applied.len(), self.objects.len());
+        self.applied = applied;
+        self.rejected = rejected;
+    }
+
+    /// Deep-copy for recovery snapshot transfer (op counters ride along but
+    /// are replaced by the installer's own — see `Replica::install_snapshot`).
+    pub fn snapshot(&self) -> Catalog {
+        Catalog {
+            objects: self.objects.iter().map(|o| o.snapshot()).collect(),
+            group_base: self.group_base.clone(),
+            total_groups: self.total_groups,
+            applied: self.applied.clone(),
+            rejected: self.rejected.clone(),
+        }
+    }
+
+    pub fn debug_dump(&self) -> String {
+        if self.objects.len() == 1 {
+            return self.objects[0].debug_dump();
+        }
+        self.objects
+            .iter()
+            .enumerate()
+            .map(|(i, o)| format!("[obj {i}] {}", o.debug_dump()))
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 }
 
@@ -286,23 +490,63 @@ mod tests {
     }
 
     #[test]
-    fn dataplane_category_routing() {
-        let sb = DataPlane::for_workload(WorkloadKind::SmallBank, 16);
+    fn objectplane_category_routing() {
+        let sb = ObjectPlane::for_workload(WorkloadKind::SmallBank, 16);
         assert_eq!(sb.category(KV_WITHDRAW), Category::Conflicting);
         assert_eq!(sb.category(KV_WRITE), Category::Reducible);
         assert_eq!(sb.sync_groups(), 1);
-        let y = DataPlane::for_workload(WorkloadKind::Ycsb, 16);
+        let y = ObjectPlane::for_workload(WorkloadKind::Ycsb, 16);
         assert_eq!(y.category(KV_WRITE), Category::Reducible);
         assert_eq!(y.sync_groups(), 0);
     }
 
     #[test]
     fn micro_plane_delegates() {
-        let mut p = DataPlane::for_workload(WorkloadKind::Micro(RdtKind::PnCounter), 0);
+        let mut p = ObjectPlane::for_workload(WorkloadKind::Micro(RdtKind::PnCounter), 0);
         let op = OpCall::new(0, 5, 0, 0.0);
         assert!(p.permissible(&op));
         p.apply(&op);
         assert_eq!(p.query(0), QueryValue::Int(5));
         assert!(p.invariant_ok());
+    }
+
+    #[test]
+    fn catalog_flattens_groups_and_routes_by_object() {
+        use crate::config::CatalogSpec;
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        cfg.objects = CatalogSpec::parse("counter:2,account:2,auction:1").unwrap();
+        let mut cat = Catalog::for_config(&cfg, 0);
+        assert_eq!(cat.n_objects(), 5);
+        // counters: no groups; accounts at global groups 0 and 1; the
+        // auction's three local groups flatten to 2..=4.
+        assert_eq!(cat.total_groups(), 5);
+        use crate::rdt::wrdt::account::OP_WITHDRAW;
+        let mut w = OpCall::new(OP_WITHDRAW, 0, 0, 10.0);
+        w.obj = 2;
+        assert_eq!(cat.category(w.obj, w.opcode), Category::Conflicting);
+        assert_eq!(cat.global_group(&w), 0);
+        w.obj = 3;
+        assert_eq!(cat.global_group(&w), 1);
+
+        // Applies land on the addressed object only, and are counted.
+        let mut inc = OpCall::new(0, 7, 0, 0.0);
+        inc.obj = 1;
+        assert!(cat.apply(&inc));
+        assert_eq!(cat.query(1, 0), QueryValue::Int(7));
+        assert_eq!(cat.query(0, 0), QueryValue::Int(0));
+        assert_eq!(cat.applied_counts(), &[0u64, 1, 0, 0, 0][..]);
+        let digests = cat.object_digests();
+        assert_ne!(digests[0], digests[1], "per-object digests distinguish state");
+        assert!(cat.invariant_ok());
+    }
+
+    #[test]
+    fn catalog_of_one_digest_matches_object_digest() {
+        let cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        let mut cat = Catalog::for_config(&cfg, 0);
+        let op = OpCall::new(0, 3, 0, 0.0);
+        cat.apply(&op);
+        assert_eq!(cat.state_digest(), cat.object(0).state_digest());
+        assert_eq!(cat.object_digests().len(), 1);
     }
 }

@@ -1,6 +1,11 @@
 //! Strongly-ordered replication path (§4.3–§4.4): Mu SMR instances per
-//! synchronization group, the replication logs, leader-forwarding and
-//! requester bookkeeping — plus the Raft pipeline, serving both the
+//! *catalog-global* synchronization group — the data plane flattens each
+//! object's local groups into one global index space (`Catalog::
+//! global_group`), so a multi-object catalog gets one round pipeline and
+//! one replication log per (object, group) pair — the replication logs,
+//! leader-forwarding and requester bookkeeping, plus the Raft pipeline
+//! (whose single total log tags entries with their `ObjectId` for
+//! per-object apply), serving both the
 //! Waverunner baseline (§5.2, which replicates *every* update through this
 //! path with leader-only clients) and the stand-alone `backend = raft`
 //! configuration (category-routed like Mu, leader-authoritative
@@ -19,7 +24,7 @@ use crate::engine::path::{
     Membership, MembershipEvent, PendingClient, ReplicaCore, ReplicationPath, Requester,
     Submission, TokenCtx,
 };
-use crate::engine::store::{DataPlane, KV_READ};
+use crate::engine::store::{Catalog, KV_READ};
 use crate::engine::Ctx;
 use crate::mem::MemKind;
 use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
@@ -159,7 +164,10 @@ impl StrongPath {
         }
         self.requesters.insert((op.origin, op.seq), req);
         if core.is_leader() {
-            let g = core.plane.sync_group(op.opcode) as usize;
+            // Catalog flattening: (object, local sync group) -> global
+            // group, one Mu round pipeline + replication log per global
+            // group.
+            let g = core.plane.global_group(&op) as usize;
             let slot = self.logs[g].next_free_slot();
             if let Some(round) = self.mu[g].submit(op, slot) {
                 self.fan_out_round(core, ctx, mb, g, round);
@@ -313,7 +321,7 @@ impl StrongPath {
             return;
         }
         if !core.plane.permissible(&op) {
-            core.rejected += 1;
+            core.note_rejected(&op);
             if self.chaos {
                 self.done_fwd.insert((op.origin, op.seq), false);
             }
@@ -395,7 +403,7 @@ impl StrongPath {
                     // Its permissibility check here is authoritative — the
                     // op sits at a fixed position in the total order.
                     if !adopted && !core.plane.permissible(&op) {
-                        core.rejected += 1;
+                        core.note_rejected(&op);
                         self.mu[g].abort_current();
                         if self.chaos {
                             self.done_fwd.insert((op.origin, op.seq), false);
@@ -525,7 +533,7 @@ impl StrongPath {
         p.retries += 1;
         if p.retries > 8 {
             // Give up: count as rejected so the run terminates.
-            core.rejected += 1;
+            core.note_rejected(&p.op);
             let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
             core.complete_client(ctx, p.client, p.arrival, done);
             return;
@@ -696,7 +704,7 @@ impl StrongPath {
                     self.reply_remote(core, ctx, reply_to, request_id, false, false);
                 }
                 Requester::Local { client, arrival } => {
-                    core.rejected += 1;
+                    core.note_rejected(&op);
                     let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
                     core.complete_client(ctx, client, arrival, done);
                 }
@@ -918,7 +926,7 @@ impl ReplicationPath for StrongPath {
                 if let Some(p) = self.pending_fwd.remove(&request_id) {
                     if handled {
                         if !committed {
-                            core.rejected += 1;
+                            core.note_rejected(&p.op);
                         }
                         let done = core.occupy(ctx.q.now(), core.exec().client_overhead_ns / 2);
                         core.complete_client(ctx, p.client, p.arrival, done);
@@ -1200,7 +1208,7 @@ impl ReplicationPath for StrongPath {
         }
     }
 
-    fn flush_pending(&mut self, plane: &mut DataPlane) {
+    fn flush_pending(&mut self, plane: &mut Catalog) {
         for g in 0..self.logs.len() {
             for e in self.logs[g].drain_unapplied() {
                 plane.apply_forced(&e.op);

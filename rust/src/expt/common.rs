@@ -55,15 +55,14 @@ pub type CellJob = (SimConfig, u64);
 /// hard requirements of every experiment, not just the tests).
 pub fn run_cell(mut cfg: SimConfig, ops: u64) -> (Cell, RunReport) {
     cfg.total_ops = ops;
-    let label = format!(
-        "{}/{} n={} upd={}%",
-        cfg.system.name(),
-        cfg.workload.name(),
-        cfg.n_replicas,
-        cfg.update_pct
-    );
+    let label = cell_label(&cfg);
     let rep = cluster::run(cfg);
     assert!(rep.converged(), "experiment cell diverged: {label} digests={:?}", rep.digests);
+    assert!(
+        rep.converged_per_object(),
+        "experiment cell diverged per-object: {label} object_digests={:?}",
+        rep.object_digests
+    );
     assert!(rep.invariants_ok, "experiment cell violated integrity: {label}");
     (Cell { rt_us: rep.response_us(), tput: rep.throughput() }, rep)
 }
@@ -150,11 +149,12 @@ pub fn run_cells(jobs: Vec<CellJob>, threads: usize) -> Vec<(Cell, RunReport)> {
 
 fn cell_label(cfg: &SimConfig) -> String {
     format!(
-        "{}/{} n={} upd={}%",
+        "{}/{} n={} upd={}% objs={}",
         cfg.system.name(),
         cfg.workload.name(),
         cfg.n_replicas,
-        cfg.update_pct
+        cfg.update_pct,
+        cfg.n_objects()
     )
 }
 

@@ -1,0 +1,127 @@
+//! Scale-out — the multi-object catalog sweep: object count × consensus
+//! backend × cluster size, the ROADMAP's sharding step ("millions of
+//! users" = many objects, not one hot counter). Homogeneous Account
+//! catalogs (`account:N`, one sync group per object, so Mu runs N round
+//! pipelines while Raft/Paxos tag one total log) scale N ∈ {1, 4, 16, 64};
+//! a `mixed` multi-tenant cell per backend exercises heterogeneous
+//! routing. Zipfian object selection (θ = 0.6) keeps some objects hotter
+//! than others, like real tenants.
+//!
+//! Per-object telemetry rides along: applied-op min/max/total across
+//! objects shows the skew, rejected totals show invariant pressure. The
+//! CI smoke leg (`expt scaleout --quick --threads 2 --backend ...`) runs
+//! one backend per matrix job.
+
+use crate::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
+use crate::expt::common::{backend_filter, f3, run_cells_tagged};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+/// Object-count axis (the acceptance sweep).
+pub const OBJECT_SWEEP: &[u32] = &[1, 4, 16, 64];
+pub const OBJECT_SWEEP_QUICK: &[u32] = &[1, 16];
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let backends: Vec<ConsensusBackend> = match backend_filter() {
+        Some(b) => vec![b],
+        None => ConsensusBackend::ALL.to_vec(),
+    };
+    let objects: &[u32] = if quick { OBJECT_SWEEP_QUICK } else { OBJECT_SWEEP };
+    let nodes: &[usize] = if quick { &[3] } else { &[3, 5] };
+    let ops: u64 = if quick { 8_000 } else { 24_000 };
+
+    let mut t = Table::new(
+        "Scale-out — objects × backend × nodes (Account catalog + mixed, 25% updates)",
+        &[
+            "catalog",
+            "objects",
+            "backend",
+            "nodes",
+            "rt_us",
+            "tput_ops_us",
+            "smr_commits",
+            "obj_applied_min",
+            "obj_applied_max",
+            "obj_applied_total",
+            "obj_rejected_total",
+        ],
+    );
+    let mut jobs = Vec::new();
+    for (bi, &backend) in backends.iter().enumerate() {
+        for (oi, &n_obj) in objects.iter().enumerate() {
+            for &n in nodes {
+                let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                cfg.objects = CatalogSpec::parse(&format!("account:{n_obj}"))
+                    .expect("homogeneous spec parses");
+                cfg.objects.zipf_theta = 0.6;
+                cfg.backend = backend;
+                cfg.n_replicas = n;
+                cfg.update_pct = 25;
+                cfg.seed = 0x5CA1_E000 + (bi as u64) * 0x1000 + (oi as u64) * 0x10 + n as u64;
+                jobs.push(((format!("account:{n_obj}"), backend, n), (cfg, ops)));
+            }
+        }
+        // One heterogeneous multi-tenant cell per backend.
+        for &n in nodes {
+            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+            cfg.objects = CatalogSpec::mixed();
+            cfg.objects.zipf_theta = 0.6;
+            cfg.backend = backend;
+            cfg.n_replicas = n;
+            cfg.update_pct = 25;
+            cfg.seed = 0x5CA1_F000 + (bi as u64) * 0x1000 + n as u64;
+            jobs.push((("mixed".to_string(), backend, n), (cfg, ops)));
+        }
+    }
+    for ((catalog, backend, n), cell, rep) in run_cells_tagged(jobs) {
+        let applied = &rep.metrics.obj_applied;
+        let rejected = &rep.metrics.obj_rejected;
+        t.row(vec![
+            catalog,
+            applied.len().to_string(),
+            backend.name().into(),
+            n.to_string(),
+            f3(cell.rt_us),
+            f3(cell.tput),
+            rep.metrics.smr_commits.to_string(),
+            applied.iter().min().copied().unwrap_or(0).to_string(),
+            applied.iter().max().copied().unwrap_or(0).to_string(),
+            applied.iter().sum::<u64>().to_string(),
+            rejected.iter().sum::<u64>().to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_scales_objects_with_telemetry() {
+        crate::expt::common::set_threads(2);
+        let t = &run(true)[0];
+        let backends = match backend_filter() {
+            Some(_) => 1,
+            None => ConsensusBackend::ALL.len(),
+        };
+        // (|OBJECT_SWEEP_QUICK| homogeneous + 1 mixed) × 1 node count.
+        assert_eq!(t.rows().len(), backends * (OBJECT_SWEEP_QUICK.len() + 1));
+        for row in t.rows() {
+            let objects: usize = row[1].parse().unwrap();
+            let applied_total: u64 = row[9].parse().unwrap();
+            assert!(objects >= 1);
+            assert!(applied_total > 0, "catalog saw traffic: {row:?}");
+            if row[0] == "mixed" {
+                assert_eq!(objects, CatalogSpec::mixed().n_objects());
+            }
+            let min: u64 = row[7].parse().unwrap();
+            let max: u64 = row[8].parse().unwrap();
+            assert!(min <= max);
+            if objects > 1 {
+                // Zipf-skewed selection: the hottest object leads.
+                assert!(max > min, "skewed traffic across objects: {row:?}");
+            }
+        }
+    }
+}

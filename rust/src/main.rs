@@ -117,11 +117,10 @@ fn cmd_expt(args: &[String]) -> i32 {
         } else {
             ids.clone()
         };
-        if ids_for_check
-            .iter()
-            .any(|id| !matches!(expt::canonical(id), Some("backends") | Some("chaos")))
-        {
-            eprintln!("--backend only applies to `expt backends` and `expt chaos`");
+        if ids_for_check.iter().any(|id| {
+            !matches!(expt::canonical(id), Some("backends") | Some("chaos") | Some("scaleout"))
+        }) {
+            eprintln!("--backend only applies to `expt backends`, `expt chaos`, and `expt scaleout`");
             return 2;
         }
         expt::common::set_backend_filter(b);
@@ -175,6 +174,10 @@ fn cmd_run(args: &[String]) -> i32 {
                 eprintln!("{e}");
                 return 2;
             }
+        } else if a.to_lowercase() == "mixed" {
+            // Multi-tenant catalog scenario: heterogeneous objects behind
+            // one data plane (equivalent to `objects=mixed`).
+            cfg.objects = safardb::config::CatalogSpec::mixed();
         } else {
             // workload selector: rdt name / ycsb / smallbank
             cfg.workload = match a.to_lowercase().as_str() {
@@ -204,7 +207,11 @@ fn cmd_run(args: &[String]) -> i32 {
     let sys = cfg.system;
     let backend = cfg.backend;
     let batch = cfg.batch_size;
-    let name = cfg.workload.name();
+    let name = if cfg.objects.is_default() {
+        cfg.workload.name()
+    } else {
+        format!("catalog[{}] ({} objects)", cfg.objects.label(), cfg.n_objects())
+    };
     let rep = cluster::run(cfg);
     println!("system      : {}", sys.name());
     println!("backend     : {} (batch {})", backend.name(), batch);

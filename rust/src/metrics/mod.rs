@@ -29,6 +29,12 @@ pub struct RunMetrics {
     pub coalesced: u64,
     /// Transactions executed (local + remote applies) for power accounting.
     pub executions: u64,
+    /// Per-catalog-object applied-op counts, summed across replicas
+    /// (multi-object telemetry; one entry for catalog-of-one runs).
+    pub obj_applied: Vec<u64>,
+    /// Per-catalog-object permissibility rejections, summed across
+    /// replicas.
+    pub obj_rejected: Vec<u64>,
     /// Permission-switch latencies sampled during leader changes (Fig 13).
     pub perm_switch: Histogram,
     /// Staleness: local-apply -> propagation-issue delay for summarized ops.
@@ -63,6 +69,8 @@ impl RunMetrics {
             verbs: 0,
             coalesced: 0,
             executions: 0,
+            obj_applied: Vec::new(),
+            obj_rejected: Vec::new(),
             perm_switch: Histogram::new(),
             staleness: Summary::new(),
             elections: 0,

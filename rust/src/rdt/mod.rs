@@ -17,7 +17,7 @@ pub mod crdt;
 pub mod op;
 pub mod wrdt;
 
-pub use op::{Category, OpCall, QueryValue};
+pub use op::{Category, ObjectId, OpCall, QueryValue};
 
 use crate::util::rng::Rng;
 

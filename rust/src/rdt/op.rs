@@ -21,9 +21,16 @@ pub enum Category {
 /// Reserved opcode for the read-only query() transaction (never replicated).
 pub const QUERY_OP: u8 = 0xFF;
 
+/// Catalog object address: every transaction names the RDT instance it
+/// targets (the paper's "direct invocation of FPGA-resident operators" —
+/// the Dispatcher routes on the object id in the verb header). Single-object
+/// configurations pin it to 0 everywhere.
+pub type ObjectId = u32;
+
 /// A single-statement transaction: opcode + up to two integer args and one
-/// float arg, tagged with its origin replica and per-origin sequence number
-/// (used for FIFO/dependence ordering and at-most-once application).
+/// float arg, tagged with the catalog object it targets, its origin replica
+/// and per-origin sequence number (used for FIFO/dependence ordering and
+/// at-most-once application).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OpCall {
     pub opcode: u8,
@@ -32,11 +39,13 @@ pub struct OpCall {
     pub x: f64,
     pub origin: usize,
     pub seq: u64,
+    /// Catalog object this transaction addresses (0 in catalog-of-one).
+    pub obj: ObjectId,
 }
 
 impl OpCall {
     pub fn new(opcode: u8, a: u64, b: u64, x: f64) -> Self {
-        OpCall { opcode, a, b, x, origin: 0, seq: 0 }
+        OpCall { opcode, a, b, x, origin: 0, seq: 0, obj: 0 }
     }
 
     pub fn query() -> Self {
@@ -48,9 +57,11 @@ impl OpCall {
     }
 
     /// Wire size in bytes (opcode + tag + args), used for serialization
-    /// delay on the simulated link.
+    /// delay on the simulated link. The 8-byte tag word packs origin,
+    /// object id, and per-origin sequence number, so addressing a catalog
+    /// object costs no extra wire bytes.
     pub fn wire_bytes(&self) -> u64 {
-        1 + 8 + 8 + 8 + 8 // opcode, origin/seq tag, a, b, x
+        1 + 8 + 8 + 8 + 8 // opcode, origin/obj/seq tag, a, b, x
     }
 }
 

@@ -21,7 +21,7 @@
 //!   `prop_summarization_preserves_state` carves out Account), and each
 //!   backend schedules time differently.
 
-use safardb::config::{ConsensusBackend, SimConfig, WorkloadKind};
+use safardb::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
 use safardb::engine::cluster::{self, RunReport};
 use safardb::rdt::RdtKind;
 
@@ -116,6 +116,65 @@ fn batched_runs_reproduce_unbatched_digests_on_conflicting_path() {
                 base.digests[0],
                 rep.digests[0],
                 "{} batch={batch}: batching changed outcomes",
+                backend.name()
+            );
+            assert_eq!(base.metrics.rejected, rep.metrics.rejected);
+        }
+    }
+}
+
+/// Mixed catalog that cannot reject in *any* interleaving: the counter and
+/// set objects are commutative and rejection-free, and each Account object
+/// seeds a 1000 balance while the whole run issues only 12 updates of at
+/// most 80 withdrawal units — so even if every op lands on one account, no
+/// ordering can reject. Rejected-set pinned empty, the converged state is
+/// the order-free fold of the issued ops: byte-comparable across backends
+/// and batch sizes, object by object.
+fn rejection_proof_mixed_catalog(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.objects = CatalogSpec::parse("counter:2,gset:1,account:2").unwrap();
+    cfg.n_replicas = 4;
+    cfg.update_pct = 100;
+    cfg.total_ops = 12;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn mixed_catalog_digests_identical_across_backends() {
+    for seed in [0x0CA7_0001u64, 0x0CA7_0002] {
+        let cfg = rejection_proof_mixed_catalog(seed);
+        let reps: Vec<RunReport> =
+            ConsensusBackend::ALL.iter().map(|&b| run_backend(cfg.clone(), b)).collect();
+        for (i, rep) in reps.iter().enumerate() {
+            assert!(rep.converged_per_object(), "per-object convergence");
+            assert_eq!(rep.metrics.rejected, 0, "workload is rejection-proof by construction");
+            assert_eq!(
+                reps[0].object_digests[0], rep.object_digests[0],
+                "{}: mixed-catalog state diverged from mu (seed {seed:#x})",
+                ConsensusBackend::ALL[i].name()
+            );
+            assert_eq!(
+                reps[0].metrics.smr_commits, rep.metrics.smr_commits,
+                "{}: commit count diverged (seed {seed:#x})",
+                ConsensusBackend::ALL[i].name()
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_catalog_batched_matches_unbatched_across_backends() {
+    for backend in ConsensusBackend::ALL {
+        let base = run_backend(rejection_proof_mixed_catalog(0x0CA7_BA7C), backend);
+        for batch in [4u32, 16] {
+            let mut cfg = rejection_proof_mixed_catalog(0x0CA7_BA7C);
+            cfg.batch_size = batch;
+            let rep = run_backend(cfg, backend);
+            assert_eq!(
+                base.object_digests[0],
+                rep.object_digests[0],
+                "{} batch={batch}: batching changed mixed-catalog outcomes",
                 backend.name()
             );
             assert_eq!(base.metrics.rejected, rep.metrics.rejected);

@@ -180,6 +180,65 @@ fn kv_workload_survives_partition_with_flaky_links() {
 }
 
 #[test]
+fn recovering_node_reconciles_updates_outstanding_at_every_donor() {
+    // Pinned regression for the ROADMAP "chaos second-order anti-entropy"
+    // item: node 3 crashes while node 1 is partitioned from nodes 0 and 2.
+    // Node 1's relaxed propagations to node 3 exhaust their retry budget
+    // during the long crash window (the short heartbeat period makes the
+    // 64-retry cap burn in ~320 µs of virtual time), and no snapshot donor
+    // has node 1's updates either (its retries to them are NACKing on the
+    // cut links). Pre-fix, node 3 recovered from a donor that never saw
+    // those updates and nothing ever re-shipped them — a silent loss. The
+    // post-install reconciliation pull across *all* live peers (donor-set
+    // union) plus the heal-time re-arm must now converge every backend.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::PnCounter, 4);
+        cfg.total_ops = 8_000;
+        cfg.heartbeat_period_ns = 5_000;
+        cfg.seed = 0x5AFA_2A17;
+        cfg.fault = FaultSchedule::parse(
+            "partition@15:0-1,partition@15:1-2,crash@20:3,recover@60:3,heal@80",
+        )
+        .unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(!rep.crashed[3], "{b}: node 3 must be back");
+        assert!(
+            rep.converged(),
+            "{b}: recovered node lost an update outstanding at every donor: {:?}",
+            rep.digests
+        );
+        assert!(rep.converged_per_object(), "{b}: per-object divergence");
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+    }
+}
+
+#[test]
+fn mixed_catalog_converges_under_chaos_schedule() {
+    // Acceptance: the mixed-catalog convergence property holds under a
+    // chaos schedule — partition + leader crash + heal over a
+    // heterogeneous object catalog, on every backend.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::Account, 5);
+        cfg.objects = safardb::config::CatalogSpec::mixed();
+        cfg.objects.zipf_theta = 0.6;
+        cfg.total_ops = 8_000;
+        cfg.seed = 0x5AFA_CA7A;
+        cfg.fault = FaultSchedule::parse("partition@40:1-2,crash@50:leader,heal@70").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.metrics.elections >= 1, "{b}: re-election happened");
+        assert!(
+            rep.converged() && rep.converged_per_object(),
+            "{b}: mixed catalog diverged under chaos: {:?}",
+            rep.object_digests
+        );
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+        assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+    }
+}
+
+#[test]
 fn empty_schedule_reports_empty_timeline() {
     let cfg = chaos_cfg(ConsensusBackend::Mu, RdtKind::PnCounter, 4);
     let rep = cluster::run(cfg);

@@ -6,7 +6,7 @@
 //! claims; every experiment asserts them too, but these tests sweep the
 //! configuration space much wider.
 
-use safardb::config::{PropagationMode, SimConfig, SystemKind, WorkloadKind};
+use safardb::config::{CatalogSpec, PropagationMode, SimConfig, SystemKind, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::prop_assert;
 use safardb::rdt::RdtKind;
@@ -157,6 +157,71 @@ fn waverunner_converges_and_only_leader_commits() {
     let rep = cluster::run(cfg);
     assert!(rep.converged());
     assert!(rep.metrics.smr_commits > 0, "PUTs go through Raft");
+}
+
+#[test]
+fn prop_mixed_catalog_converges_per_object() {
+    // Multi-object catalogs: random mixes of CRDTs, WRDTs, and KV tenants
+    // under random skew — every live replica must end byte-equal on every
+    // object, not just on the combined digest.
+    prop::check("catalog-convergence", 0x0B1EC7, 10, |rng| {
+        let pool = [
+            "counter", "lww", "gset", "2pset", "account", "courseware", "movie", "auction",
+            "ycsb", "smallbank",
+        ];
+        let picks = 2 + rng.gen_range(3) as usize; // 2..=4 entry kinds
+        let mut entries = Vec::new();
+        for _ in 0..picks {
+            let kind = *rng.choose(&pool);
+            let count = 1 + rng.gen_range(3);
+            entries.push(format!("{kind}:{count}"));
+        }
+        let spec = entries.join(",");
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+        cfg.objects = CatalogSpec::parse(&spec).expect("generated spec parses");
+        cfg.objects.zipf_theta = if rng.gen_bool(0.5) { 0.0 } else { 0.8 };
+        cfg.n_replicas = 3 + rng.gen_range(4) as usize;
+        cfg.update_pct = 30;
+        cfg.total_ops = 6_000;
+        cfg.seed = rng.next_u64();
+        let n_objects = cfg.n_objects();
+        let label = format!("catalog[{spec}] n={} theta={}", cfg.n_replicas, cfg.objects.zipf_theta);
+        let rep = cluster::run(cfg);
+        prop_assert!(rep.converged(), "{label}: combined digest diverged: {:?}", rep.digests);
+        prop_assert!(
+            rep.converged_per_object(),
+            "{label}: per-object divergence: {:?}",
+            rep.object_digests
+        );
+        prop_assert!(rep.invariants_ok, "{label}: integrity violated");
+        prop_assert!(
+            rep.object_digests.iter().all(|d| d.len() == n_objects),
+            "{label}: object digest arity"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn explicit_catalog_of_one_matches_default_config() {
+    // Acceptance: a catalog-of-one must be bit-identical to the same
+    // workload expressed the pre-catalog way — same digests, same event
+    // stream (the generator takes the same draws, the engine the same
+    // paths).
+    for (spec, rdt) in [("account:1", RdtKind::Account), ("counter:1", RdtKind::PnCounter)] {
+        let mut base = SimConfig::safardb(WorkloadKind::Micro(rdt));
+        base.total_ops = 6_000;
+        base.update_pct = 25;
+        base.seed = 0xCA7A_0106;
+        let mut cat = base.clone();
+        cat.objects = CatalogSpec::parse(spec).unwrap();
+        let a = cluster::run(base);
+        let b = cluster::run(cat);
+        assert_eq!(a.digests, b.digests, "{spec}: digests differ from default config");
+        assert_eq!(a.metrics.events, b.metrics.events, "{spec}: event stream perturbed");
+        assert_eq!(a.metrics.total_completed(), b.metrics.total_completed());
+        assert_eq!(b.object_digests[0], vec![a.digests[0]], "{spec}: per-object digest");
+    }
 }
 
 #[test]

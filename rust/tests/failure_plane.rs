@@ -114,6 +114,15 @@ fn pin_cells() -> Vec<(&'static str, SimConfig)> {
     raft_recover.fault = FaultSchedule::crash_then_recover(2, 30, 60);
     push(&mut cells, "safardb/account/raft-crash-recover", raft_recover, 0x5AFA_000D);
 
+    // Multi-object catalog: a mixed five-object cell (counters, a register,
+    // accounts) with skewed object selection — pins the catalog data
+    // plane's routing, group flattening, and per-object digesting.
+    let mut catalog = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+    catalog.objects =
+        safardb::config::CatalogSpec::parse("counter:2,lww:1,account:2").unwrap();
+    catalog.objects.zipf_theta = 0.6;
+    push(&mut cells, "safardb/catalog/mixed-5", catalog, 0x5AFA_000E);
+
     assert!(cells.iter().all(|(_, c)| c.system != SystemKind::Hamband || c.fault.is_empty()));
     cells
 }
