@@ -902,6 +902,65 @@ mod tests {
     }
 
     #[test]
+    fn config_doc_covers_every_field() {
+        const DOC: &str = include_str!("../../../docs/CONFIG.md");
+        // Exhaustive destructure: adding a SimConfig field breaks this
+        // pattern at compile time, forcing the field list below — and
+        // therefore docs/CONFIG.md — to be updated in the same change.
+        let SimConfig {
+            system: _,
+            n_replicas: _,
+            workload: _,
+            objects: _,
+            total_ops: _,
+            update_pct: _,
+            clients_per_replica: _,
+            prop_reducible: _,
+            prop_irreducible: _,
+            prop_conflicting: _,
+            backend: _,
+            backend_explicit: _,
+            batch_size: _,
+            summarize_threshold: _,
+            seed: _,
+            fault: _,
+            hybrid: _,
+            poll_interval_ns: _,
+            heartbeat_period_ns: _,
+            hb_fail_threshold: _,
+            params_override: _,
+        } = SimConfig::safardb(WorkloadKind::Ycsb);
+        for field in [
+            "system",
+            "n_replicas",
+            "workload",
+            "objects",
+            "total_ops",
+            "update_pct",
+            "clients_per_replica",
+            "prop_reducible",
+            "prop_irreducible",
+            "prop_conflicting",
+            "backend",
+            "backend_explicit",
+            "batch_size",
+            "summarize_threshold",
+            "seed",
+            "fault",
+            "hybrid",
+            "poll_interval_ns",
+            "heartbeat_period_ns",
+            "hb_fail_threshold",
+            "params_override",
+        ] {
+            assert!(
+                DOC.contains(field),
+                "docs/CONFIG.md does not mention SimConfig field '{field}'"
+            );
+        }
+    }
+
+    #[test]
     fn path_routing_matches_planes() {
         let c = SimConfig::safardb(WorkloadKind::SmallBank);
         assert_eq!(c.path_for(Category::Reducible), ReplicationPathKind::Relaxed);

@@ -55,8 +55,8 @@ impl FailurePlane {
         if core.system == SystemKind::Hamband {
             core.occupy(ctx.q.now(), core.exec().software_overhead_ns);
         }
-        let peers = core.peers();
-        for peer in peers {
+        for i in 0..core.peers.len() {
+            let peer = core.peers[i];
             let tok = core.token(TokenCtx::Heartbeat { peer });
             let verb = Verb::read(ReadTarget::Heartbeat, tok);
             ctx.metrics.verbs += 1;

@@ -265,6 +265,12 @@ pub struct ReplicaCore {
     pub busy_until: Time,
     pub busy_total: u64,
 
+    /// Every other replica, live or not (heartbeat scan targets).
+    /// Precomputed once — the heartbeat scanner and the chaos-mode fan-out
+    /// walk this every tick, and membership (`n`) never changes mid-run
+    /// (§Perf: was a fresh `Vec` per call on the hot path).
+    pub peers: Vec<NodeId>,
+
     /// Shared deterministic stream (workload generation + latency samples).
     pub rng: Rng,
 
@@ -296,6 +302,7 @@ impl ReplicaCore {
             crashed: false,
             busy_until: 0,
             busy_total: 0,
+            peers: (0..cfg.n_replicas).filter(|&i| i != id).collect(),
             rng,
             leader: 0,
             clients_in_flight: 0,
@@ -312,11 +319,6 @@ impl ReplicaCore {
 
     pub fn is_leader(&self) -> bool {
         self.id == self.leader
-    }
-
-    /// Every other replica, live or not (heartbeat scan targets).
-    pub fn peers(&self) -> Vec<NodeId> {
-        (0..self.n).filter(|&i| i != self.id).collect()
     }
 
     /// Advance the local busy clock by `cost` starting no earlier than `at`.
@@ -369,6 +371,14 @@ impl ReplicaCore {
     pub fn apply_remote(&mut self, op: &OpCall) {
         self.executions += 1;
         self.plane.apply(op);
+    }
+
+    /// Batched remote apply (§Perf): fold a whole op run through the
+    /// columnar [`Catalog::apply_batch`] kernel. Counters advance exactly
+    /// as `ops.len()` calls to [`ReplicaCore::apply_remote`] would.
+    pub fn apply_remote_batch(&mut self, ops: &[OpCall]) {
+        self.executions += ops.len() as u64;
+        self.plane.apply_batch(ops);
     }
 
     /// Record a permissibility rejection: the run-level counter plus the

@@ -121,17 +121,19 @@ impl PaxosPath {
         }
         let wave = self.lease_wave;
         let ballot = self.leader_sm.ballot;
-        let ops: Vec<OpCall> = if first {
-            self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect()
+        // One shared batch for the whole campaign fan-out: each per-peer
+        // clone is a refcount bump (§Perf).
+        let ops: crate::net::verbs::OpBatch = if first {
+            self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect::<Vec<_>>().into()
         } else {
-            Vec::new()
+            Vec::new().into()
         };
         for peer in mb.live_peers(core.id) {
             let tok = core.token(TokenCtx::Paxos(PaxosToken::Lease { wave }));
             let payload = if first {
                 Payload::PaxosReplay { ballot, ops: ops.clone() }
             } else {
-                Payload::PaxosAppend { ballot, start_slot: 0, ops: Vec::new() }
+                Payload::PaxosAppend { ballot, start_slot: 0, ops: ops.clone() }
             };
             let verb = Verb::write(core.landing_mem_for_peer(), payload, tok).on_leader_qp();
             ctx.metrics.verbs += 1;
@@ -230,6 +232,8 @@ impl PaxosPath {
         let peers = mb.live_peers(core.id);
         self.leader_sm.round_started(peers.len() as u32);
         let mem = core.landing_mem_for_peer();
+        // Shared batch: the per-peer clone below is a refcount bump (§Perf).
+        let ops: crate::net::verbs::OpBatch = ops.into();
         core.fan_out(
             ctx,
             &peers,
@@ -360,7 +364,7 @@ impl PaxosPath {
         let tok = core.token(TokenCtx::Ignore);
         let verb = Verb::write(
             core.landing_mem_for_peer(),
-            Payload::PaxosReplay { ballot, ops },
+            Payload::PaxosReplay { ballot, ops: ops.into() },
             tok,
         )
         .on_leader_qp();
@@ -433,7 +437,7 @@ impl ReplicationPath for PaxosPath {
                 if start_slot > self.log.next_free_slot() {
                     core.request_sync(ctx, src);
                 }
-                for (i, op) in ops.into_iter().enumerate() {
+                for (i, &op) in ops.iter().enumerate() {
                     self.log.write_slot(start_slot + i as u64, ballot, op);
                 }
             }
@@ -446,7 +450,7 @@ impl ReplicationPath for PaxosPath {
                 // `applied_upto` survives within the mirrored length.
                 let keep_applied = self.log.applied_upto.min(ops.len() as u64);
                 let mut log = ReplicationLog::new();
-                for (slot, op) in ops.into_iter().enumerate() {
+                for (slot, &op) in ops.iter().enumerate() {
                     log.write_slot(slot as u64, ballot, op);
                 }
                 log.applied_upto = keep_applied;

@@ -13,7 +13,7 @@ use crate::engine::path::{Membership, ReplicaCore, ReplicationPath, Submission, 
 use crate::engine::store::{Catalog, ObjectPlane};
 use crate::engine::Ctx;
 use crate::mem::MemKind;
-use crate::net::verbs::{Payload, Verb, VerbKind};
+use crate::net::verbs::{OpBatch, Payload, Verb, VerbKind};
 use crate::rdt::{Category, ObjectId, OpCall};
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::util::hasher::FastMap;
@@ -63,6 +63,12 @@ pub struct RelaxedPath {
     /// `BatchFlush` timer, so a partial batch never stalls propagation.
     out_sum: Vec<OpCall>,
     out_irr: Vec<OpCall>,
+    /// Reusable scratch pools (§Perf): the summarizer's flattened-op
+    /// buffer and the drains' fresh-op staging vector. Capacity persists
+    /// across flushes/polls, so the steady-state hot path allocates
+    /// nothing per flush.
+    flat_scratch: Vec<OpCall>,
+    apply_scratch: Vec<OpCall>,
     /// Chaos mode: in-flight tracked propagations, keyed by retry id.
     retry: FastMap<u64, RetryEntry>,
     /// Chaos mode: tracked propagations that exhausted their retry budget
@@ -95,6 +101,8 @@ impl RelaxedPath {
             sum_buffer: Vec::new(),
             out_sum: Vec::new(),
             out_irr: Vec::new(),
+            flat_scratch: Vec::new(),
+            apply_scratch: Vec::new(),
             retry: FastMap::default(),
             given_up: Vec::new(),
             next_retry_id: 1,
@@ -134,10 +142,10 @@ impl RelaxedPath {
             core.fan_out(ctx, &peers, make, false, || TokenCtx::Ignore);
             return;
         }
-        let peers = core.peers();
         let start = ctx.q.now().max(core.busy_until);
         let mut cursor = start;
-        for dst in peers {
+        for i in 0..core.peers.len() {
+            let dst = core.peers[i];
             let id = self.next_retry_id;
             self.next_retry_id += 1;
             let tok = core.token(TokenCtx::Relaxed { id });
@@ -157,22 +165,29 @@ impl RelaxedPath {
         }
         self.landed_red = 0;
         // Each object's landed summaries are contiguous slots in its own
-        // landing zone: one burst read per non-empty object + execute.
+        // landing zone: one burst read per non-empty object, then the whole
+        // run folds through the columnar batch-apply kernel (§Perf — same
+        // fold order as op-at-a-time, dispatch hoisted per run). The
+        // staging vector is a reusable pool; steady state allocates
+        // nothing.
         let mut zones = std::mem::take(&mut self.pending_reducible);
+        let mut fresh = std::mem::take(&mut self.apply_scratch);
         let mut cost = 0;
         for zone in &mut zones {
             if zone.is_empty() {
                 continue;
             }
-            let items: Vec<OpCall> = zone.drain(..).collect();
-            cost += core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
-            for op in items {
+            cost += core.sys.mem.fold_read_ns(core.landing_mem(), zone.len());
+            fresh.clear();
+            for op in zone.drain(..) {
                 if self.mark_fresh(&op) {
-                    cost += core.exec().op_exec_ns;
-                    core.apply_remote(&op);
+                    fresh.push(op);
                 }
             }
+            cost += core.exec().op_exec_ns * fresh.len() as u64;
+            core.apply_remote_batch(&fresh);
         }
+        self.apply_scratch = fresh;
         self.pending_reducible = zones;
         cost
     }
@@ -183,22 +198,26 @@ impl RelaxedPath {
         }
         self.landed_irr = 0;
         // Per-(object, origin) FIFO queues: burst-read each object's queue
-        // head run.
+        // head run, then batch-apply the fresh run (FIFO order preserved —
+        // the kernel never reorders).
         let mut queues = std::mem::take(&mut self.pending_irreducible);
+        let mut fresh = std::mem::take(&mut self.apply_scratch);
         let mut cost = 0;
         for queue in &mut queues {
             if queue.is_empty() {
                 continue;
             }
-            let items: Vec<OpCall> = queue.drain(..).collect();
-            cost += core.sys.mem.fold_read_ns(core.landing_mem(), items.len());
-            for op in items {
+            cost += core.sys.mem.fold_read_ns(core.landing_mem(), queue.len());
+            fresh.clear();
+            for op in queue.drain(..) {
                 if self.mark_fresh(&op) {
-                    cost += core.exec().op_exec_ns;
-                    core.apply_remote(&op);
+                    fresh.push(op);
                 }
             }
+            cost += core.exec().op_exec_ns * fresh.len() as u64;
+            core.apply_remote_batch(&fresh);
         }
+        self.apply_scratch = fresh;
         self.pending_irreducible = queues;
         cost
     }
@@ -208,21 +227,36 @@ impl RelaxedPath {
             return;
         }
         let now = ctx.q.now();
-        let items: Vec<(OpCall, Time)> = self.sum_buffer.drain(..).collect();
+        // The summary buffer and the flattened-op scratch are reusable
+        // pools (§Perf): taken, drained, and handed back with their
+        // capacity intact, so a steady-state flush allocates only the
+        // aggregate vector it ships.
+        let mut items = std::mem::take(&mut self.sum_buffer);
         for (_, applied_at) in &items {
             ctx.metrics.staleness.add((now.saturating_sub(*applied_at)) as f64);
         }
-        // Summarize per object under each object's type-correct rule
-        // (ascending object id; buffer order preserved within an object).
-        let ops: Vec<OpCall> = items.iter().map(|(o, _)| *o).collect();
-        let mut objs: Vec<ObjectId> = ops.iter().map(|o| o.obj).collect();
-        objs.sort_unstable();
-        objs.dedup();
+        let mut ops = std::mem::take(&mut self.flat_scratch);
+        ops.clear();
+        ops.extend(items.iter().map(|(o, _)| *o));
+        items.clear();
+        self.sum_buffer = items;
+        // Summarize per object under each object's type-correct rule. A
+        // stable sort groups by ascending object id while preserving
+        // buffer order within an object — the identical grouping the old
+        // per-object filter pass produced, in one pass over the buffer.
+        ops.sort_by_key(|o| o.obj);
         let mut agg: Vec<OpCall> = Vec::with_capacity(ops.len());
-        for obj in objs {
-            let ops_o: Vec<OpCall> = ops.iter().copied().filter(|o| o.obj == obj).collect();
-            agg.extend(summarize(core.plane.summarize_rule(obj), &ops_o));
+        let mut i = 0;
+        while i < ops.len() {
+            let obj = ops[i].obj;
+            let mut j = i + 1;
+            while j < ops.len() && ops[j].obj == obj {
+                j += 1;
+            }
+            agg.extend(summarize(core.plane.summarize_rule(obj), &ops[i..j]));
+            i = j;
         }
+        self.flat_scratch = ops;
         if host_side {
             core.charge_pcie_hop(now);
         }
@@ -271,6 +305,8 @@ impl RelaxedPath {
         ctx.metrics.coalesced += chunk.len() as u64 - 1;
         let mem = core.landing_mem_for_peer();
         let mode = self.prop_red;
+        // One shared batch; each per-peer clone is a refcount bump (§Perf).
+        let chunk: OpBatch = chunk.into();
         self.fan_out_relaxed(core, ctx, mb, |t| {
             let payload = Payload::SummaryBatch { origin, values: chunk.clone() };
             match mode {
@@ -291,6 +327,7 @@ impl RelaxedPath {
         ctx.metrics.coalesced += chunk.len() as u64 - 1;
         let mem = core.landing_mem_for_peer();
         let mode = self.prop_irr;
+        let chunk: OpBatch = chunk.into();
         self.fan_out_relaxed(core, ctx, mb, |t| {
             let payload = Payload::QueueBatch { ops: chunk.clone() };
             match mode {
@@ -437,14 +474,14 @@ impl ReplicationPath for RelaxedPath {
                 if is_rpc {
                     let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy_batch(ctx.q.now(), per, values.len());
-                    for v in values {
+                    for &v in values.iter() {
                         if self.mark_fresh(&v) {
                             core.apply_remote(&v);
                         }
                     }
                 } else {
                     self.landed_red += values.len();
-                    for v in values {
+                    for &v in values.iter() {
                         self.pending_reducible[v.obj as usize].push(v);
                     }
                 }
@@ -453,14 +490,14 @@ impl ReplicationPath for RelaxedPath {
                 if is_rpc {
                     let per = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy_batch(ctx.q.now(), per, ops.len());
-                    for op in ops {
+                    for &op in ops.iter() {
                         if self.mark_fresh(&op) {
                             core.apply_remote(&op);
                         }
                     }
                 } else {
                     self.landed_irr += ops.len();
-                    for op in ops {
+                    for &op in ops.iter() {
                         self.pending_irreducible[op.obj as usize].push(op);
                     }
                 }

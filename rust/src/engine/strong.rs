@@ -604,7 +604,7 @@ impl StrongPath {
         let payload = if ops.len() == 1 {
             Payload::RaftAppend { term, index: start, op: ops[0] }
         } else {
-            Payload::RaftAppendBatch { term, start_index: start, ops }
+            Payload::RaftAppendBatch { term, start_index: start, ops: ops.into() }
         };
         ctx.metrics.verbs += 1;
         let verb = Verb::write(mem, payload, tok).on_leader_qp();
@@ -774,8 +774,10 @@ impl StrongPath {
             );
         } else {
             // Leader-side log-entry batching: one AppendEntries wire verb
-            // carries the whole contiguous run.
+            // carries the whole contiguous run; the shared `Arc` batch
+            // makes each per-peer clone a refcount bump (§Perf).
             ctx.metrics.coalesced += ops.len() as u64 - 1;
+            let ops: crate::net::verbs::OpBatch = ops.into();
             core.fan_out(
                 ctx,
                 &peers,

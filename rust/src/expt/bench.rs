@@ -1,0 +1,245 @@
+//! Engine hot-path benchmark (`expt bench`) — the §Perf ratchet grid.
+//!
+//! Runs a pinned canonical cell grid (consensus backend × batch size ×
+//! catalog shape) and reports, per cell, the event-loop rate
+//! (events/sec), simulation wall time, and peak RSS — the three numbers
+//! the CI perf-ratchet job compares against the committed
+//! `BENCH_engine.json` baseline (`safardb bench-compare`). Event counts
+//! and state digests are part of the output on purpose: they are
+//! bit-reproducible for a fixed seed, so the bench doubles as a
+//! determinism probe (the `bench` integration test asserts them equal
+//! across runs and thread counts), and any optimization that changes
+//! them is a correctness bug, not a speedup.
+//!
+//! Cells deliberately engage every plane: the Account WRDT (conflicting
+//! withdraws → strong path) and the `mixed` 9-object catalog, each under
+//! batching off (1) and on (8), per backend — 12 cells total.
+
+use crate::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
+use crate::expt::common::{self, CellJob};
+use crate::rdt::RdtKind;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Schema tag stamped into `BENCH_engine.json`; bump on layout changes so
+/// the ratchet comparison never diffs across incompatible formats.
+pub const SCHEMA: &str = "safardb-bench-v1";
+
+/// Batch axis of the grid (off / on).
+pub const BATCHES: &[u32] = &[1, 8];
+
+/// One measured bench cell (the unit the ratchet compares).
+#[derive(Clone, Debug)]
+pub struct BenchCell {
+    /// Stable cell id (`<backend>_b<batch>_<objects>`) — the join key for
+    /// baseline comparison.
+    pub id: String,
+    pub backend: &'static str,
+    pub batch: u32,
+    pub objects: &'static str,
+    pub ops: u64,
+    /// Simulator events processed — deterministic for a fixed seed.
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// Process peak RSS in kB after this cell (Linux `VmHWM`; 0 elsewhere).
+    /// Monotone across cells — a memory ceiling, not a per-cell delta.
+    pub peak_rss_kb: u64,
+    /// Replica 0's converged state digest — deterministic for a fixed seed.
+    pub digest: u64,
+}
+
+/// Ops per bench cell. Smaller than the figure sweeps: the grid exists to
+/// time the event loop, and 12 cells must fit a CI leg.
+pub fn bench_ops(quick: bool) -> u64 {
+    if quick {
+        8_000
+    } else {
+        48_000
+    }
+}
+
+/// (cell id, backend name, batch, catalog label) — a cell's identity.
+type BenchMeta = (String, &'static str, u32, &'static str);
+
+fn grid(quick: bool) -> Vec<(BenchMeta, CellJob)> {
+    let mut jobs = Vec::new();
+    for backend in ConsensusBackend::ALL {
+        for &batch in BATCHES {
+            for objects in ["account", "mixed"] {
+                let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                if objects == "mixed" {
+                    cfg.objects = CatalogSpec::mixed();
+                }
+                cfg.backend = backend;
+                cfg.batch_size = batch;
+                cfg.update_pct = 25;
+                cfg.seed = 0x5AFA_BE7C;
+                let id = format!("{}_b{batch}_{objects}", backend.name());
+                jobs.push(((id, backend.name(), batch, objects), (cfg, bench_ops(quick))));
+            }
+        }
+    }
+    jobs
+}
+
+/// Cell ids of the canonical grid, in grid order — the join keys a
+/// committed baseline must cover. Cheap (no simulation).
+pub fn grid_ids() -> Vec<String> {
+    grid(true).into_iter().map(|((id, ..), _)| id).collect()
+}
+
+/// Run the canonical grid on `threads` workers. Taking the thread count
+/// explicitly (instead of the global `--threads` knob) lets the
+/// determinism test drive the same grid at 1 and 2 workers.
+pub fn bench_cells(quick: bool, threads: usize) -> Vec<BenchCell> {
+    let (metas, cells): (Vec<BenchMeta>, Vec<CellJob>) = grid(quick).into_iter().unzip();
+    let results = common::run_cells(cells, threads);
+    metas
+        .into_iter()
+        .zip(results)
+        .map(|((id, backend, batch, objects), (_, rep))| {
+            let events = rep.metrics.events;
+            let wall_s = rep.wall_s;
+            BenchCell {
+                id,
+                backend,
+                batch,
+                objects,
+                ops: bench_ops(quick),
+                events,
+                wall_s,
+                events_per_sec: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
+                peak_rss_kb: peak_rss_kb(),
+                digest: rep.digests[0],
+            }
+        })
+        .collect()
+}
+
+/// Process peak resident set in kB (`VmHWM` from `/proc/self/status`).
+/// Returns 0 where procfs is unavailable — the ratchet only compares
+/// events/sec, so RSS is telemetry, not a gate.
+pub fn peak_rss_kb() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                return rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+/// Serialize cells to the `BENCH_engine.json` document. `provisional`
+/// marks a baseline measured on a different machine than the comparison
+/// will run on (e.g. the committed first baseline) — `bench-compare`
+/// warns instead of failing against a provisional baseline.
+pub fn to_json(cells: &[BenchCell], quick: bool, provisional: bool) -> Json {
+    let mut doc = Json::obj();
+    doc.set("schema", SCHEMA.into());
+    doc.set("quick", Json::Bool(quick));
+    doc.set("provisional", Json::Bool(provisional));
+    let arr = cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("id", c.id.as_str().into());
+            o.set("backend", c.backend.into());
+            o.set("batch", Json::Num(c.batch as f64));
+            o.set("objects", c.objects.into());
+            o.set("ops", c.ops.into());
+            o.set("events", c.events.into());
+            o.set("wall_s", c.wall_s.into());
+            o.set("events_per_sec", c.events_per_sec.into());
+            o.set("peak_rss_kb", c.peak_rss_kb.into());
+            // Hex string: a u64 digest does not fit f64 exactly.
+            o.set("digest", format!("{:016x}", c.digest).as_str().into());
+            o
+        })
+        .collect();
+    doc.set("cells", Json::Arr(arr));
+    doc
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let cells = bench_cells(quick, common::configured_threads());
+    let doc = to_json(&cells, quick, false);
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join("BENCH_engine.json"), doc.render() + "\n");
+    eprintln!("[bench] wrote results/BENCH_engine.json ({} cells)", cells.len());
+
+    let mut t = Table::new(
+        "Bench — engine event-loop rate per canonical cell",
+        &[
+            "cell",
+            "backend",
+            "batch",
+            "objects",
+            "events",
+            "wall_s",
+            "events_per_sec",
+            "peak_rss_kb",
+        ],
+    );
+    for c in &cells {
+        t.row(vec![
+            c.id.clone(),
+            c.backend.into(),
+            c.batch.to_string(),
+            c.objects.into(),
+            c.events.to_string(),
+            format!("{:.3}", c.wall_s),
+            format!("{:.0}", c.events_per_sec),
+            c.peak_rss_kb.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_ids_are_unique_and_stable() {
+        let g = grid(true);
+        assert_eq!(g.len(), 12, "3 backends x 2 batches x 2 catalogs");
+        let mut ids: Vec<&str> = g.iter().map(|((id, ..), _)| id.as_str()).collect();
+        assert!(ids.contains(&"mu_b1_account"));
+        assert!(ids.contains(&"paxos_b8_mixed"));
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 12, "cell ids must be unique join keys");
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let cells = vec![BenchCell {
+            id: "mu_b1_account".into(),
+            backend: "mu",
+            batch: 1,
+            objects: "account",
+            ops: 8000,
+            events: 123456,
+            wall_s: 0.25,
+            events_per_sec: 493824.0,
+            peak_rss_kb: 4096,
+            digest: 0xDEAD_BEEF,
+        }];
+        let s = to_json(&cells, true, true).render();
+        assert!(s.contains(r#""schema":"safardb-bench-v1""#));
+        assert!(s.contains(r#""provisional":true"#));
+        assert!(s.contains(r#""id":"mu_b1_account""#));
+        assert!(s.contains(r#""digest":"00000000deadbeef""#));
+    }
+
+    #[test]
+    fn peak_rss_is_sane_on_linux() {
+        let kb = peak_rss_kb();
+        if cfg!(target_os = "linux") {
+            assert!(kb > 0, "VmHWM should parse on Linux");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod ablation;
 pub mod backends;
+pub mod bench;
 pub mod chaos;
 pub mod common;
 pub mod fig06;
@@ -35,7 +36,7 @@ use crate::util::table::Table;
 pub const ALL: &[&str] = &[
     "table2_1", "tableC_1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation", "backends",
-    "chaos", "scaleout",
+    "bench", "chaos", "scaleout",
 ];
 
 /// Canonical experiment id for `id`, accepting zero-padded aliases
@@ -78,6 +79,7 @@ pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
         "fig27" => fig27::run(quick),
         "ablation" => ablation::run(quick),
         "backends" => backends::run(quick),
+        "bench" => bench::run(quick),
         "chaos" => chaos::run(quick),
         "scaleout" => scaleout::run(quick),
         _ => return None,

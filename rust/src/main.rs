@@ -5,6 +5,8 @@
 //!                                                 reproduce a paper table/figure
 //! safardb list                                    list experiment ids
 //! safardb run [config.kv] [k=v ...]               run one cluster config, print report
+//! safardb bench-compare <baseline.json> <current.json>
+//!                                                 perf ratchet: fail on events/sec regression
 //! safardb runtime-check [dir]                     load + execute the kernel runtime
 //! ```
 //! (hand-rolled arg parsing: the offline crate set has no clap.)
@@ -29,12 +31,15 @@ fn main() {
             0
         }
         Some("run") => cmd_run(&args[1..]),
+        Some("bench-compare") => cmd_bench_compare(&args[1..]),
         Some("runtime-check") => cmd_runtime_check(&args[1..]),
         _ => {
-            eprintln!("usage: safardb <expt|list|run|runtime-check> [...]");
+            eprintln!("usage: safardb <expt|list|run|bench-compare|runtime-check> [...]");
             eprintln!("  expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]");
             eprintln!("                           reproduce a paper table/figure (see `safardb list`)");
             eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
+            eprintln!("  bench-compare <baseline.json> <current.json>");
+            eprintln!("                           fail if any bench cell regressed >10% events/sec");
             eprintln!("  runtime-check [dir]      verify the kernel runtime loads and executes");
             2
         }
@@ -237,6 +242,95 @@ fn cmd_run(args: &[String]) -> i32 {
     if rep.converged() && rep.invariants_ok {
         0
     } else {
+        1
+    }
+}
+
+/// Perf ratchet: compare a current `BENCH_engine.json` against a baseline,
+/// cell by cell on the stable cell id. A cell that dropped below 90% of
+/// its baseline events/sec fails the run. A baseline marked
+/// `"provisional": true` (numbers measured on a different machine, e.g.
+/// the committed first baseline) reports the same table but never fails —
+/// the ratchet becomes blocking once a CI-measured baseline is blessed.
+fn cmd_bench_compare(args: &[String]) -> i32 {
+    const MAX_REGRESSION: f64 = 0.9;
+    let (Some(base_path), Some(cur_path)) = (args.first(), args.get(1)) else {
+        eprintln!("usage: safardb bench-compare <baseline.json> <current.json>");
+        return 2;
+    };
+    let load = |path: &str| -> Result<safardb::util::json::Json, String> {
+        let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = safardb::util::json::Json::parse(&body).map_err(|e| format!("{path}: {e}"))?;
+        match doc.get("schema").and_then(|s| s.as_str()) {
+            Some(safardb::expt::bench::SCHEMA) => Ok(doc),
+            other => {
+                Err(format!("{path}: schema {other:?}, want {:?}", safardb::expt::bench::SCHEMA))
+            }
+        }
+    };
+    let (base, cur) = match (load(base_path), load(cur_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (b, c) => {
+            for e in [b.err(), c.err()].into_iter().flatten() {
+                eprintln!("bench-compare: {e}");
+            }
+            return 2;
+        }
+    };
+    let provisional = base.get("provisional").and_then(|p| p.as_bool()).unwrap_or(false);
+    let cells = |doc: &safardb::util::json::Json| -> Vec<(String, f64)> {
+        doc.get("cells")
+            .and_then(|c| c.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|c| {
+                let id = c.get("id")?.as_str()?.to_string();
+                let eps = c.get("events_per_sec")?.as_f64()?;
+                Some((id, eps))
+            })
+            .collect()
+    };
+    let base_cells = cells(&base);
+    let cur_cells = cells(&cur);
+    if cur_cells.is_empty() {
+        eprintln!("bench-compare: {cur_path} has no cells");
+        return 2;
+    }
+
+    let mut regressed = 0u32;
+    println!("{:<18} {:>14} {:>14} {:>7}", "cell", "baseline", "current", "ratio");
+    for (id, cur_eps) in &cur_cells {
+        match base_cells.iter().find(|(bid, _)| bid == id) {
+            Some((_, base_eps)) if *base_eps > 0.0 => {
+                let ratio = cur_eps / base_eps;
+                let flag = if ratio < MAX_REGRESSION { " REGRESSED" } else { "" };
+                if ratio < MAX_REGRESSION {
+                    regressed += 1;
+                }
+                println!("{id:<18} {base_eps:>14.0} {cur_eps:>14.0} {ratio:>7.3}{flag}");
+            }
+            _ => println!("{id:<18} {:>14} {cur_eps:>14.0}   (new)", "-"),
+        }
+    }
+    for (id, _) in &base_cells {
+        if !cur_cells.iter().any(|(cid, _)| cid == id) {
+            eprintln!("bench-compare: baseline cell '{id}' missing from current run");
+            regressed += 1;
+        }
+    }
+
+    if regressed == 0 {
+        println!(
+            "bench-compare: OK ({} cells within {:.0}% of baseline)",
+            cur_cells.len(),
+            (1.0 - MAX_REGRESSION) * 100.0
+        );
+        0
+    } else if provisional {
+        println!("bench-compare: {regressed} cell(s) below baseline, but baseline is provisional — warn only");
+        0
+    } else {
+        eprintln!("bench-compare: FAIL — {regressed} cell(s) regressed >10% events/sec");
         1
     }
 }

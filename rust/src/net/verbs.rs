@@ -9,9 +9,19 @@
 //! * `RpcWriteThrough` — §4.3's verb: invokes the accelerator *and*
 //!                     concurrently appends the replication log in HBM.
 
+use std::sync::Arc;
+
 use crate::mem::MemKind;
 use crate::rdt::OpCall;
 use crate::sim::NodeId;
+
+/// Shared op-vector for batch payloads. Fan-out clones the same batch once
+/// per peer; `Arc<[OpCall]>` makes each of those clones a refcount bump
+/// instead of a heap copy of the whole vector (§Perf: per-message
+/// bookkeeping dominates replication cost). `Arc` (not `Rc`) because
+/// [`crate::engine::path::ReplicationPath`] is `Send` — cells run on sweep
+/// worker threads.
+pub type OpBatch = Arc<[OpCall]>;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum VerbKind {
@@ -50,16 +60,16 @@ pub enum Payload {
     /// Raw bytes (micro-benchmarks / Table 2.1 traffic).
     Raw { bytes: u64 },
     /// Reducible summary: replica `origin`'s aggregated contribution
-    /// written into slot A[origin] (§4.1). `ops` carries the summarized
+    /// written into slot `A[origin]` (§4.1). `ops` carries the summarized
     /// count for metrics; `value` rows carry the actual contribution.
     Summary { origin: NodeId, ops: u32, value: OpCall },
     /// Irreducible op appended to the per-origin FIFO queue (§4.2).
     QueueAppend { op: OpCall },
     /// Batched reducible summaries: up to `batch_size` coalesced
     /// contributions ride one wire verb (per-path batching).
-    SummaryBatch { origin: NodeId, values: Vec<OpCall> },
+    SummaryBatch { origin: NodeId, values: OpBatch },
     /// Batched irreducible queue append: one verb, FIFO order preserved.
-    QueueBatch { ops: Vec<OpCall> },
+    QueueBatch { ops: OpBatch },
     /// Mu: write the next proposal number at a follower (Prepare).
     Propose { group: u8, proposal: u64 },
     /// Mu: append a committed entry to the replication log (Accept).
@@ -78,7 +88,7 @@ pub enum Payload {
     RaftAppend { term: u64, index: u64, op: OpCall },
     /// Raft leader-side log-entry batching: one AppendEntries carrying a
     /// contiguous run of entries starting at `start_index`.
-    RaftAppendBatch { term: u64, start_index: u64, ops: Vec<OpCall> },
+    RaftAppendBatch { term: u64, start_index: u64, ops: OpBatch },
     /// Raft follower ack.
     RaftAck { term: u64, index: u64, from: NodeId },
     /// Raft follower gap report (classic nextIndex back-up, one step):
@@ -88,11 +98,11 @@ pub enum Payload {
     /// APUS-style Paxos: leader's one-sided write of a contiguous batch of
     /// log entries into a follower's landing region. The ACK is the write
     /// completion itself (doorbell) — no logical ack verb exists.
-    PaxosAppend { ballot: u64, start_slot: u64, ops: Vec<OpCall> },
+    PaxosAppend { ballot: u64, start_slot: u64, ops: OpBatch },
     /// Paxos leadership replay: the new leader rewrites its entire log
     /// (possibly empty) at `ballot`; the follower's landing region becomes
     /// an exact mirror (entries beyond the replayed length truncate).
-    PaxosReplay { ballot: u64, ops: Vec<OpCall> },
+    PaxosReplay { ballot: u64, ops: OpBatch },
     /// Client redirect (Waverunner: follower rejects, client re-sends).
     ClientRedirect { request_id: u64 },
     /// Follower -> new leader, sent right after the follower's permission
@@ -277,12 +287,12 @@ mod tests {
     #[test]
     fn batched_payloads_save_headers_on_the_wire() {
         let op = OpCall::new(0, 1, 2, 0.5);
-        let one = Payload::SummaryBatch { origin: 0, values: vec![op] }.wire_bytes();
-        let four = Payload::SummaryBatch { origin: 0, values: vec![op; 4] }.wire_bytes();
+        let one = Payload::SummaryBatch { origin: 0, values: vec![op].into() }.wire_bytes();
+        let four = Payload::SummaryBatch { origin: 0, values: vec![op; 4].into() }.wire_bytes();
         assert_eq!(four - one, 3 * op.wire_bytes(), "payload grows per entry");
         let k_verbs = 4 * Verb::write(MemKind::Hbm, Payload::QueueAppend { op }, 0).wire_bytes();
-        let batch =
-            Verb::write(MemKind::Hbm, Payload::QueueBatch { ops: vec![op; 4] }, 0).wire_bytes();
+        let batch = Verb::write(MemKind::Hbm, Payload::QueueBatch { ops: vec![op; 4].into() }, 0)
+            .wire_bytes();
         assert!(batch < k_verbs, "one batched verb beats 4 singles: {batch} vs {k_verbs}");
     }
 
@@ -292,24 +302,27 @@ mod tests {
         let cases: Vec<(Payload, PayloadPlane)> = vec![
             (Payload::Summary { origin: 0, ops: 1, value: op }, PayloadPlane::Relaxed),
             (Payload::QueueAppend { op }, PayloadPlane::Relaxed),
-            (Payload::SummaryBatch { origin: 0, values: vec![op, op] }, PayloadPlane::Relaxed),
-            (Payload::QueueBatch { ops: vec![op] }, PayloadPlane::Relaxed),
+            (
+                Payload::SummaryBatch { origin: 0, values: vec![op, op].into() },
+                PayloadPlane::Relaxed,
+            ),
+            (Payload::QueueBatch { ops: vec![op].into() }, PayloadPlane::Relaxed),
             (Payload::Propose { group: 0, proposal: 1 }, PayloadPlane::Strong),
             (Payload::LogAppend { group: 0, slot: 0, proposal: 1, op }, PayloadPlane::Strong),
             (Payload::LeaderForward { op, reply_to: 1, request_id: 2 }, PayloadPlane::Strong),
             (Payload::LeaderReply { request_id: 2, handled: true, committed: true }, PayloadPlane::Strong),
             (Payload::RaftAppend { term: 1, index: 0, op }, PayloadPlane::Strong),
             (
-                Payload::RaftAppendBatch { term: 1, start_index: 0, ops: vec![op, op] },
+                Payload::RaftAppendBatch { term: 1, start_index: 0, ops: vec![op, op].into() },
                 PayloadPlane::Strong,
             ),
             (Payload::RaftAck { term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
             (Payload::RaftRejected { term: 1, from: 2, log_len: 3 }, PayloadPlane::Strong),
             (
-                Payload::PaxosAppend { ballot: 1, start_slot: 0, ops: vec![op] },
+                Payload::PaxosAppend { ballot: 1, start_slot: 0, ops: vec![op].into() },
                 PayloadPlane::Strong,
             ),
-            (Payload::PaxosReplay { ballot: 2, ops: vec![] }, PayloadPlane::Strong),
+            (Payload::PaxosReplay { ballot: 2, ops: vec![].into() }, PayloadPlane::Strong),
             (Payload::ReadReq { target: ReadTarget::Heartbeat }, PayloadPlane::OneSidedRead),
             (
                 Payload::ReadResp { target: ReadTarget::Heartbeat, data: ReadData::Heartbeat(1) },

@@ -4,7 +4,7 @@
 //! * sellItem(i, u)   — reducible (lists item, bumps stock; summable).
 //! * openAuction(a)   — irreducible, a ∉ A.
 //! * registerUser(u)  — conflicting (group 0), u ∉ U.
-//! * buyItem(i, u)    — conflicting (group 1), i ∈ I ∧ S[i] ≥ 1 ∧ u ∈ U.
+//! * buyItem(i, u)    — conflicting (group 1), i ∈ I ∧ `S[i]` ≥ 1 ∧ u ∈ U.
 //! * placeBid(a,b,u)  — conflicting (group 2), a ∈ A ∧ u ∈ U.
 //! * closeAuction(a)  — conflicting (group 2), a ∈ A.
 //!

@@ -7,9 +7,13 @@
 //! totally ordered by `(time, seq)` where `seq` is the global push order,
 //! so equal-time events fire in FIFO order and runs are bit-reproducible
 //! from the config seed.
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//!
+//! The queue is a calendar queue (Brown 1988): a ring of time-bucketed
+//! lanes whose width adapts to the event population, giving O(1) expected
+//! push/pop against the binary heap's O(log n) — the event loop is the
+//! whole engine, so this is the §Perf hot path. Any correct min-queue pops
+//! the *same* sequence because `(time, seq)` is a total order; the
+//! `matches_reference_heap` test holds the calendar to that contract.
 
 use crate::net::verbs::Verb;
 
@@ -113,23 +117,80 @@ impl Ord for Event {
     }
 }
 
-/// Deterministic min-queue of events.
-#[derive(Debug, Default)]
+/// Deterministic min-queue of events: a calendar queue.
+///
+/// Buckets form a ring over virtual time — bucket `i` of a "year" covers
+/// `[i·width, (i+1)·width)` modulo the year length `nbuckets·width`. Each
+/// bucket keeps its events sorted descending by `(time, seq)` so the
+/// minimum is a `Vec::pop` off the tail; `pop` walks the ring from the
+/// cursor, taking any event that falls inside the cursor bucket's current
+/// year window, and falls back to a direct min-scan after one fruitless
+/// lap (the population is sparse relative to the year). The ring doubles /
+/// halves and re-derives its width from the live event span whenever the
+/// population outgrows or abandons it, keeping expected bucket occupancy
+/// O(1).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
+    /// Ring of lanes, each sorted descending by `(time, seq)` (min at the
+    /// tail).
+    buckets: Vec<Vec<Event>>,
+    /// Ring size; always a power of two so the index mask is a single AND.
+    nbuckets: u64,
+    /// Nanoseconds of virtual time each bucket covers.
+    width: u64,
+    /// Ring cursor: the bucket the pop scan resumes from.
+    cursor: u64,
+    /// Exclusive upper time bound of the cursor bucket's current window.
+    bucket_top: u64,
+    count: usize,
     seq: u64,
     now: Time,
     pushed: u64,
     popped: u64,
 }
 
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+const MIN_BUCKETS: u64 = 8;
+const INITIAL_WIDTH: u64 = 1_024;
+
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        EventQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            nbuckets: MIN_BUCKETS,
+            width: INITIAL_WIDTH,
+            cursor: 0,
+            bucket_top: INITIAL_WIDTH,
+            count: 0,
+            seq: 0,
+            now: 0,
+            pushed: 0,
+            popped: 0,
+        }
     }
 
     pub fn now(&self) -> Time {
         self.now
+    }
+
+    #[inline]
+    fn bucket_of(&self, time: Time) -> usize {
+        ((time / self.width) & (self.nbuckets - 1)) as usize
+    }
+
+    /// Insert keeping the lane sorted descending by `(time, seq)` — the
+    /// lane minimum stays at the tail. Keys are unique (`seq` is global),
+    /// so the partition point is unambiguous.
+    #[inline]
+    fn insert_sorted(bucket: &mut Vec<Event>, ev: Event) {
+        let key = (ev.time, ev.seq);
+        let pos = bucket.partition_point(|e| (e.time, e.seq) > key);
+        bucket.insert(pos, ev);
     }
 
     pub fn push(&mut self, time: Time, dest: NodeId, kind: EventKind) {
@@ -137,23 +198,93 @@ impl EventQueue {
         let seq = self.seq;
         self.seq += 1;
         self.pushed += 1;
-        self.heap.push(Reverse(Event { time, seq, dest, kind }));
+        let b = self.bucket_of(time);
+        Self::insert_sorted(&mut self.buckets[b], Event { time, seq, dest, kind });
+        self.count += 1;
+        if self.count as u64 > self.nbuckets * 2 {
+            self.resize(self.nbuckets * 2);
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        let ev = self.heap.pop().map(|Reverse(e)| e)?;
+        if self.count == 0 {
+            return None;
+        }
+        // Ring scan from the cursor: one lap covers one calendar year.
+        for _ in 0..self.nbuckets {
+            let c = self.cursor as usize;
+            if let Some(tail) = self.buckets[c].last() {
+                if tail.time < self.bucket_top {
+                    let ev = self.buckets[c].pop().expect("tail just observed");
+                    return Some(self.take(ev));
+                }
+            }
+            self.cursor = (self.cursor + 1) & (self.nbuckets - 1);
+            self.bucket_top += self.width;
+        }
+        // Sparse population: nothing due this year. Jump the cursor
+        // straight to the globally minimal event's window and take it.
+        let (min_b, _) = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.last().map(|e| (i, (e.time, e.seq))))
+            .min_by_key(|&(_, key)| key)
+            .expect("count > 0");
+        let ev = self.buckets[min_b].pop().expect("minimum just observed");
+        self.cursor = min_b as u64;
+        self.bucket_top = (ev.time / self.width + 1) * self.width;
+        Some(self.take(ev))
+    }
+
+    #[inline]
+    fn take(&mut self, ev: Event) -> Event {
         debug_assert!(ev.time >= self.now);
         self.now = ev.time;
+        self.count -= 1;
         self.popped += 1;
-        Some(ev)
+        if self.nbuckets > MIN_BUCKETS && (self.count as u64) < self.nbuckets / 8 {
+            self.resize(self.nbuckets / 2);
+        }
+        ev
+    }
+
+    /// Rebuild the ring at `nbuckets` lanes, re-deriving the bucket width
+    /// from the live events' time span (target: ~one event per bucket, so
+    /// pop's in-window check almost always hits on the first lane). Purely
+    /// a function of queue contents — determinism is untouched because the
+    /// pop *order* never depends on the layout.
+    fn resize(&mut self, nbuckets: u64) {
+        let mut events: Vec<Event> = Vec::with_capacity(self.count);
+        for b in &mut self.buckets {
+            events.append(b);
+        }
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for e in &events {
+            lo = lo.min(e.time);
+            hi = hi.max(e.time);
+        }
+        if events.len() > 1 {
+            self.width = ((hi - lo) / events.len() as u64).max(1);
+        }
+        self.nbuckets = nbuckets.max(MIN_BUCKETS);
+        self.buckets = (0..self.nbuckets).map(|_| Vec::new()).collect();
+        for ev in events {
+            let b = self.bucket_of(ev.time);
+            Self::insert_sorted(&mut self.buckets[b], ev);
+        }
+        // Re-anchor the cursor at the clock: the next due event is at or
+        // after `now`, so scanning forward from now's window finds it.
+        self.cursor = (self.now / self.width) & (self.nbuckets - 1);
+        self.bucket_top = (self.now / self.width + 1) * self.width;
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.count == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.count
     }
 
     /// (pushed, popped) — engine throughput accounting for §Perf.
@@ -212,5 +343,64 @@ mod tests {
         ev(&mut q, 10);
         q.pop();
         ev(&mut q, 5);
+    }
+
+    /// The calendar queue must pop the exact `(time, seq)` sequence a
+    /// plain binary heap would — interleaved pushes and pops, clustered
+    /// and sparse times, enough volume to cross several grow/shrink
+    /// resizes. Deterministic LCG, no wall-clock anywhere.
+    #[test]
+    fn matches_reference_heap() {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let mut q = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<(Time, u64)>> = BinaryHeap::new();
+        let mut rng: u64 = 0x5AFA_2DB0_0BAD_F00D;
+        let mut step = move || {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            rng >> 33
+        };
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        for round in 0..2_000u64 {
+            // Push a burst: mostly near-future, sometimes equal-time
+            // clusters, occasionally a far-future spike (forces the
+            // fruitless-lap fallback and wide resize widths).
+            let burst = 1 + step() % 8;
+            for _ in 0..burst {
+                let t = match step() % 10 {
+                    0..=5 => now + step() % 4_000,
+                    6..=7 => now, // equal-time FIFO cluster
+                    8 => now + step() % 50,
+                    _ => now + 1_000_000 + step() % 10_000_000,
+                };
+                q.push(t, (round % 4) as NodeId, EventKind::Timer(TimerKind::WorkDone));
+                reference.push(Reverse((t, seq)));
+                seq += 1;
+            }
+            // Pop a few; both queues must agree exactly.
+            for _ in 0..(step() % 10) {
+                match (q.pop(), reference.pop()) {
+                    (Some(got), Some(Reverse((t, s)))) => {
+                        assert_eq!((got.time, got.seq), (t, s), "diverged at round {round}");
+                        now = t;
+                    }
+                    (None, None) => break,
+                    (got, want) => panic!("length diverged: {got:?} vs {want:?}"),
+                }
+            }
+            assert_eq!(q.len(), reference.len());
+        }
+        // Drain both to empty.
+        while let Some(Reverse((t, s))) = reference.pop() {
+            let got = q.pop().expect("calendar drained early");
+            assert_eq!((got.time, got.seq), (t, s));
+        }
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        let (pushed, popped) = q.counters();
+        assert_eq!(pushed, popped);
+        assert_eq!(pushed, seq);
     }
 }

@@ -1,0 +1,78 @@
+//! Integration: the `expt bench` perf-ratchet harness must emit a
+//! well-formed `BENCH_engine.json` and be deterministic — event counts
+//! and state digests bit-identical across repeated runs and across
+//! worker-thread counts. A speedup that changes either is a correctness
+//! bug, not a speedup (ISSUE: bench harness smoke test).
+
+use safardb::expt::bench::{bench_cells, grid_ids, to_json, SCHEMA};
+use safardb::util::json::Json;
+
+#[test]
+fn bench_json_document_is_well_formed() {
+    let cells = bench_cells(true, 2);
+    assert_eq!(cells.len(), 12, "3 backends x 2 batches x 2 catalogs");
+    let doc = to_json(&cells, true, false);
+    let parsed = Json::parse(&doc.render()).expect("writer output must parse");
+    assert_eq!(parsed.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+    assert_eq!(parsed.get("provisional").and_then(|p| p.as_bool()), Some(false));
+    let arr = parsed.get("cells").and_then(|c| c.as_arr()).expect("cells array");
+    assert_eq!(arr.len(), 12);
+    for c in arr {
+        for key in [
+            "id",
+            "backend",
+            "batch",
+            "objects",
+            "ops",
+            "events",
+            "wall_s",
+            "events_per_sec",
+            "peak_rss_kb",
+            "digest",
+        ] {
+            assert!(c.get(key).is_some(), "cell missing field '{key}'");
+        }
+        // Digests are 16-hex-digit strings (u64 doesn't fit f64).
+        let d = c.get("digest").unwrap().as_str().expect("digest is a string");
+        assert_eq!(d.len(), 16);
+        assert!(d.chars().all(|ch| ch.is_ascii_hexdigit()));
+        assert!(c.get("events").unwrap().as_f64().unwrap() > 0.0, "cells simulate real work");
+    }
+}
+
+#[test]
+fn bench_cells_deterministic_across_runs_and_threads() {
+    let a = bench_cells(true, 1);
+    let b = bench_cells(true, 1);
+    let c = bench_cells(true, 2);
+    for (x, y) in a.iter().zip(&b).chain(a.iter().zip(&c)) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.events, y.events, "{}: event count must be seed-deterministic", x.id);
+        assert_eq!(x.digest, y.digest, "{}: state digest must be seed-deterministic", x.id);
+        assert_eq!(x.ops, y.ops);
+    }
+}
+
+#[test]
+fn committed_baseline_parses_and_matches_grid() {
+    let body = include_str!("data/BENCH_engine.json");
+    let doc = Json::parse(body).expect("committed baseline must be valid JSON");
+    assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+    let baseline_ids: Vec<&str> = doc
+        .get("cells")
+        .and_then(|c| c.as_arr())
+        .expect("cells array")
+        .iter()
+        .map(|c| c.get("id").unwrap().as_str().unwrap())
+        .collect();
+    // The committed ratchet baseline must cover exactly the canonical grid;
+    // a grid change requires re-blessing the baseline in the same PR.
+    let grid = grid_ids();
+    assert_eq!(baseline_ids.len(), grid.len());
+    for id in &grid {
+        assert!(
+            baseline_ids.contains(&id.as_str()),
+            "baseline missing grid cell '{id}' — re-bless rust/tests/data/BENCH_engine.json"
+        );
+    }
+}
