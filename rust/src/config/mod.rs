@@ -77,6 +77,70 @@ pub enum PropagationMode {
     WriteThrough,
 }
 
+/// Strong-plane leadership placement: how the `Catalog::total_groups()`
+/// global sync groups are assigned leaders across the cluster.
+///
+/// `Single` (default) keeps today's behavior — one node leads every group
+/// — and is bit-identical to the pre-sharding engine on fixed seeds. The
+/// other policies shard leadership so N nodes each lead ~1/N of the
+/// groups (the production multi-Raft pattern), which is what lets
+/// strong-path throughput scale with nodes instead of saturating one
+/// leader. All policies are deterministic functions of the group index,
+/// the cluster size, and the observed crash sequence, so every replica
+/// evolves the same placement table without coordination.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LeaderPlacement {
+    /// One cluster-wide leader for every group (the classic layout).
+    #[default]
+    Single,
+    /// Rendezvous (highest-random-weight) hash of (group, node): stable
+    /// under membership change — a crash only moves the dead node's
+    /// groups.
+    Hash,
+    /// `group % n`: perfectly even, but a membership change re-ranks the
+    /// live set.
+    RoundRobin,
+    /// Greedy least-loaded assignment (ties to the smallest node id);
+    /// crash-time reassignment picks the currently least-loaded live
+    /// node per orphaned group. Sticky: a recovering ex-leader rejoins
+    /// as a follower of its former groups until a later reassignment
+    /// places load on it again.
+    LoadAware,
+}
+
+impl LeaderPlacement {
+    pub const ALL: [LeaderPlacement; 4] = [
+        LeaderPlacement::Single,
+        LeaderPlacement::Hash,
+        LeaderPlacement::RoundRobin,
+        LeaderPlacement::LoadAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeaderPlacement::Single => "single",
+            LeaderPlacement::Hash => "hash",
+            LeaderPlacement::RoundRobin => "round_robin",
+            LeaderPlacement::LoadAware => "load_aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" => Some(LeaderPlacement::Single),
+            "hash" => Some(LeaderPlacement::Hash),
+            "round_robin" | "round-robin" | "rr" => Some(LeaderPlacement::RoundRobin),
+            "load_aware" | "load-aware" => Some(LeaderPlacement::LoadAware),
+            _ => None,
+        }
+    }
+
+    /// True for every policy that shards leadership across nodes.
+    pub fn is_sharded(&self) -> bool {
+        *self != LeaderPlacement::Single
+    }
+}
+
 /// One fault action in a [`FaultSchedule`] (§3 fault model, generalized:
 /// crash-stop, crash-recover, link partitions, packet loss, delay spikes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -623,6 +687,12 @@ pub struct SimConfig {
     /// (the CLI applies one per argument) — so an explicit-but-incompatible
     /// pick surfaces through `validate()` instead of being overridden.
     pub backend_explicit: bool,
+    /// Strong-plane leadership placement: `Single` (default, one node
+    /// leads every global sync group — bit-identical to the pre-sharding
+    /// engine) or a sharded policy (`Hash` / `RoundRobin` / `LoadAware`)
+    /// that places each group's leader independently so strong-path
+    /// throughput scales with nodes.
+    pub placement: LeaderPlacement,
     /// Per-path batching: up to this many queued submissions coalesce into
     /// one wire verb (relaxed fan-out and leader-side log appends). 1 =
     /// batching off, bit-identical to the pre-batching engine.
@@ -659,6 +729,7 @@ impl SimConfig {
             prop_conflicting: PropagationMode::WriteThrough,
             backend: ConsensusBackend::Mu,
             backend_explicit: false,
+            placement: LeaderPlacement::Single,
             batch_size: 1,
             summarize_threshold: 1,
             seed: 0xC0FFEE,
@@ -758,6 +829,26 @@ impl SimConfig {
                 self.backend.name()
             ));
         }
+        if self.system == SystemKind::Waverunner && self.placement.is_sharded() {
+            return Err(
+                "Waverunner handles clients at its single Raft leader; sharded \
+                 leadership placement is not selectable for it"
+                    .into(),
+            );
+        }
+        if self.placement.is_sharded()
+            && self
+                .fault
+                .incidents
+                .iter()
+                .any(|i| matches!(i.action, FaultAction::PartitionLinks { .. }))
+        {
+            return Err(
+                "sharded leadership placement has no per-group minority-imposter \
+                 resolution yet; partition faults require placement=single"
+                    .into(),
+            );
+        }
         self.fault.validate(self.n_replicas)?;
         self.objects.validate()?;
         if !self.objects.is_default() && self.hybrid.is_some() {
@@ -814,6 +905,9 @@ impl SimConfig {
                 "backend" => {
                     self.backend = ConsensusBackend::parse(v).ok_or_else(|| bad("backend"))?;
                     self.backend_explicit = true;
+                }
+                "placement" => {
+                    self.placement = LeaderPlacement::parse(v).ok_or_else(|| bad("placement"))?
                 }
                 "fault" => {
                     self.fault = FaultSchedule::parse(v)
@@ -920,6 +1014,7 @@ mod tests {
             prop_conflicting: _,
             backend: _,
             backend_explicit: _,
+            placement: _,
             batch_size: _,
             summarize_threshold: _,
             seed: _,
@@ -943,6 +1038,7 @@ mod tests {
             "prop_conflicting",
             "backend",
             "backend_explicit",
+            "placement",
             "batch_size",
             "summarize_threshold",
             "seed",
@@ -1026,6 +1122,40 @@ mod tests {
         k3.apply_kv("system = waverunner").unwrap();
         assert_eq!(k3.backend, ConsensusBackend::Mu, "explicitness survives across calls");
         assert!(k3.validate().is_err());
+    }
+
+    #[test]
+    fn placement_knob_parses_and_validates() {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        assert_eq!(c.placement, LeaderPlacement::Single, "default is the classic layout");
+        assert!(!c.placement.is_sharded());
+        c.apply_kv("placement = hash").unwrap();
+        assert_eq!(c.placement, LeaderPlacement::Hash);
+        assert!(c.placement.is_sharded());
+        c.validate().expect("sharded placement validates on SafarDB");
+        c.apply_kv("placement = round-robin").unwrap();
+        assert_eq!(c.placement, LeaderPlacement::RoundRobin);
+        c.apply_kv("placement = load_aware").unwrap();
+        assert_eq!(c.placement, LeaderPlacement::LoadAware);
+        assert!(c.apply_kv("placement = sticky").is_err());
+
+        // Every policy name round-trips through parse().
+        for p in LeaderPlacement::ALL {
+            assert_eq!(LeaderPlacement::parse(p.name()), Some(p));
+        }
+
+        // Waverunner's leader-only client handling pins the classic layout.
+        let mut w = SimConfig::waverunner(WorkloadKind::Ycsb);
+        w.placement = LeaderPlacement::Hash;
+        assert!(w.validate().is_err(), "waverunner pins placement=single");
+
+        // Partition faults have no per-group imposter resolution yet.
+        let mut p = SimConfig::safardb(WorkloadKind::Ycsb);
+        p.placement = LeaderPlacement::Hash;
+        p.fault = FaultSchedule::parse("partition@40:0-2,heal@60").unwrap();
+        assert!(p.validate().is_err(), "sharded + partitions rejected");
+        p.fault = FaultSchedule::parse("crash@40:1,recover@70:1").unwrap();
+        p.validate().expect("sharded + crash/recover is supported");
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct RunReport {
     pub crashed: Vec<bool>,
     pub invariants_ok: bool,
     pub leader: NodeId,
+    /// Per-group leader view at quiescence (first live replica's; all
+    /// equal to `leader` under `placement=single`).
+    pub group_leaders: Vec<NodeId>,
+    /// Groups led per node at quiescence (`groups_led[node]`; scale-out
+    /// telemetry for placement policies).
+    pub groups_led: Vec<u64>,
     /// Per-incident fault timeline (empty for fault-free runs).
     pub fault_timeline: Vec<FaultIncidentReport>,
     /// Per-replica human-readable state dumps (divergence diagnosis).
@@ -127,9 +133,22 @@ impl Cluster {
         let mut metrics = RunMetrics::new(cfg.n_replicas);
         metrics.obj_applied = vec![0; cfg.n_objects()];
         metrics.obj_rejected = vec![0; cfg.n_objects()];
+        // Boot QP fences: single placement grants the classic initial
+        // leader; sharded placements grant every per-group leader (the same
+        // deterministic table every replica computes from the config).
+        let qps = if cfg.placement.is_sharded() {
+            let keyspace = crate::engine::client::ClientPlane::new(&cfg).keyspace();
+            let groups =
+                crate::engine::store::Catalog::for_config(&cfg, keyspace).total_groups() as usize;
+            let table =
+                crate::smr::election::PlacementTable::new(cfg.placement, groups, cfg.n_replicas);
+            QpTable::leaders_fenced(cfg.n_replicas, table.leaders())
+        } else {
+            QpTable::leader_fenced(cfg.n_replicas, crate::smr::raft::initial_leader())
+        };
         Cluster {
             net: Network::new(cfg.n_replicas, mem),
-            qps: QpTable::leader_fenced(cfg.n_replicas, crate::smr::raft::initial_leader()),
+            qps,
             q: EventQueue::new(),
             metrics,
             replicas,
@@ -211,8 +230,9 @@ impl Cluster {
                 for node in due {
                     let t = self.q.now();
                     if let Some(donor) = (0..n).find(|&i| i != node && !self.replicas[i].crashed()) {
-                        let (plane, logs, leader, seen) = self.replicas[donor].snapshot_state();
-                        self.replicas[node].install_snapshot(plane, logs, leader, seen, &mut self.qps, t);
+                        let (plane, logs, leader, group_leaders, seen) =
+                            self.replicas[donor].snapshot_state();
+                        self.replicas[node].install_snapshot(plane, logs, leader, group_leaders, seen, &mut self.qps, t);
                         // Second-order anti-entropy (chaos mode): one donor's
                         // snapshot may itself be missing an update whose
                         // origin-retry was outstanding against every donor,
@@ -310,6 +330,16 @@ impl Cluster {
             .filter(|r| !r.crashed())
             .all(|r| r.invariant_ok());
         let leader = self.current_leader();
+        let group_leaders = self
+            .replicas
+            .iter()
+            .find(|r| !r.crashed())
+            .map(|r| r.group_leaders())
+            .unwrap_or_default();
+        let mut groups_led = vec![0u64; self.cfg.n_replicas];
+        for &l in &group_leaders {
+            groups_led[l] += 1;
+        }
 
         RunReport {
             metrics: self.metrics,
@@ -320,6 +350,8 @@ impl Cluster {
             crashed,
             invariants_ok,
             leader,
+            group_leaders,
+            groups_led,
             fault_timeline,
             wall_s: wall_start.elapsed().as_secs_f64(),
         }
@@ -448,6 +480,23 @@ impl Cluster {
                 // propagation between live replicas now that the fabric is
                 // whole (the relaxed-plane half of heal-time anti-entropy).
                 self.reconcile_all_parked(draining);
+                if self.cfg.placement.is_sharded() {
+                    // Sharded placements have no single log owner: both
+                    // live endpoints of each cut pair replay the shards
+                    // they lead to each other. (Partition faults are
+                    // rejected at validation for sharded placements; this
+                    // covers heal actions in drop-only schedules.)
+                    for (a, b) in pairs {
+                        for (from, to) in [(a, b), (b, a)] {
+                            if self.replicas[from].crashed() || self.replicas[to].crashed() {
+                                continue;
+                            }
+                            let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, from, draining);
+                            replica.replay_strong_to(&mut ctx, to);
+                        }
+                    }
+                    return;
+                }
                 let leader = self.current_leader();
                 if self.replicas[leader].crashed() {
                     return;
@@ -577,6 +626,24 @@ impl Cluster {
             return;
         }
         self.reconcile_all_parked(true);
+        if self.cfg.placement.is_sharded() {
+            // Every live replica replays the shards it leads to every live
+            // peer (replay gates per-shard on leadership internally), so
+            // each group's final appends reach every follower.
+            for from in 0..self.cfg.n_replicas {
+                if self.replicas[from].crashed() {
+                    continue;
+                }
+                for peer in 0..self.cfg.n_replicas {
+                    if peer == from || self.replicas[peer].crashed() {
+                        continue;
+                    }
+                    let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, from, true);
+                    replica.replay_strong_to(&mut ctx, peer);
+                }
+            }
+            return;
+        }
         let leader = self.current_leader();
         if self.replicas[leader].crashed() {
             return;

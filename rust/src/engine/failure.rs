@@ -5,22 +5,37 @@
 //! recoveries, and leadership changes into the paths as
 //! [`MembershipEvent`]s.
 
-use crate::config::SystemKind;
+use crate::config::{SimConfig, SystemKind};
 use crate::engine::path::{Membership, MembershipEvent, ReplicaCore, ReplicationPath, TokenCtx};
 use crate::engine::Ctx;
 use crate::net::verbs::{ReadTarget, Verb};
 use crate::sim::{EventKind, NodeId, TimerKind};
-use crate::smr::election::{HbVerdict, HeartbeatTracker};
+use crate::smr::election::{HbVerdict, HeartbeatTracker, PlacementTable};
 
 pub struct FailurePlane {
     tracker: HeartbeatTracker,
+    /// Per-group leadership view (sharded strong plane). Under
+    /// `placement=single` every group maps to the classic leader and the
+    /// table is never consulted on the crash path.
+    table: PlacementTable,
     /// RDMA-exposed heartbeat counter peers read one-sidedly.
     pub hb_counter: u64,
 }
 
 impl FailurePlane {
-    pub fn new(id: NodeId, n: usize, hb_fail_threshold: u32) -> Self {
-        FailurePlane { tracker: HeartbeatTracker::new(id, n, hb_fail_threshold), hb_counter: 0 }
+    pub fn new(cfg: &SimConfig, id: NodeId, groups: usize) -> Self {
+        FailurePlane {
+            tracker: HeartbeatTracker::new(id, cfg.n_replicas, cfg.hb_fail_threshold),
+            table: PlacementTable::new(cfg.placement, groups, cfg.n_replicas),
+            hb_counter: 0,
+        }
+    }
+
+    /// Adopt a placement snapshot (state-transfer install on a recovering
+    /// replica): the rebalanced view must survive the snapshot, otherwise
+    /// the ex-leader would resurrect its pre-crash placement.
+    pub fn install_placement(&mut self, leaders: &[NodeId]) {
+        self.table.install(leaders);
     }
 
     pub fn boot(&mut self, core: &ReplicaCore, ctx: &mut Ctx, base: u64) {
@@ -88,7 +103,9 @@ impl FailurePlane {
                 // Fault-timeline telemetry: the chaos harness derives each
                 // incident's detection latency from these observations.
                 ctx.metrics.detections.push((ctx.q.now(), peer, core.id));
-                if peer == core.leader {
+                if core.placement.is_sharded() {
+                    self.sharded_crash(core, strong, ctx, peer);
+                } else if peer == core.leader {
                     self.leader_switch(core, strong, ctx);
                 } else if core.is_leader() {
                     strong.on_membership(core, ctx, &*self, MembershipEvent::PeerFailed { peer });
@@ -96,7 +113,10 @@ impl FailurePlane {
             }
             HbVerdict::Recovered => {
                 ctx.metrics.recoveries.push((ctx.q.now(), peer, core.id));
-                if core.is_leader() {
+                // `leads_any()` collapses to `is_leader()` under
+                // placement=single; under sharding every group leader must
+                // learn the peer is back (anti-entropy replay, fan-out set).
+                if core.leads_any() {
                     strong.on_membership(core, ctx, &*self, MembershipEvent::PeerRecovered { peer });
                 }
             }
@@ -138,6 +158,58 @@ impl FailurePlane {
         }
     }
 
+    /// Sharded-placement crash handling: reassign only the groups the dead
+    /// node led, refence QPs against the full per-group leader set, and
+    /// hand the paths the new placement in one event. Groups led by live
+    /// nodes are untouched (sticky rebalance).
+    fn sharded_crash(&mut self, core: &mut ReplicaCore, strong: &mut dyn ReplicationPath, ctx: &mut Ctx, dead: NodeId) {
+        let live = self.tracker.live_set();
+        let changed = self.table.on_crash(dead, &live);
+        if dead == core.leader {
+            // Keep the anchor leader view (boot fan-out, debug) pointing at
+            // a live node; per-group routing never reads it when sharded.
+            core.leader = self.tracker.elect_leader();
+        }
+        if changed.is_empty() {
+            // Dead node led nothing: surviving leaders still shrink their
+            // commit quorums, same as the single-leader PeerFailed path.
+            if core.leads_any() {
+                strong.on_membership(core, ctx, &*self, MembershipEvent::PeerFailed { peer: dead });
+            }
+            return;
+        }
+        if std::env::var_os("SAFARDB_DEBUG").is_some() {
+            eprintln!(
+                "[{}ns] r{}: rebalanced {} group(s) off dead r{}: {:?} (live {:?})",
+                ctx.q.now(),
+                core.id,
+                changed.len(),
+                dead,
+                changed,
+                live
+            );
+        }
+        // One permission switch covers the whole refence: the QP table row
+        // is rebuilt in a single pass however many groups moved (FPGA:
+        // batched QP-register pokes).
+        let lat = core.sys.fabric.perm_switch.sample(&mut core.rng);
+        ctx.metrics.perm_switch.record(lat);
+        core.occupy(ctx.q.now(), lat);
+        core.group_leaders.clear();
+        core.group_leaders.extend_from_slice(self.table.leaders());
+        ctx.qps.refence(core.id, self.table.leaders());
+        strong.on_membership(core, ctx, &*self, MembershipEvent::GroupLeadersChanged);
+        // Ask each distinct new leader (other than us) for a log replay of
+        // the groups it inherited — its takeover broadcast may have been
+        // fenced here if our permission switch ran after it.
+        let mut asked: Vec<NodeId> = Vec::new();
+        for &(_, new) in &changed {
+            if new != core.id && !asked.contains(&new) {
+                asked.push(new);
+                core.request_sync(ctx, new);
+            }
+        }
+    }
 }
 
 impl Membership for FailurePlane {

@@ -11,7 +11,7 @@
 //! two trait objects the replica coordinator owns — adding a new consensus
 //! backend means implementing this trait, not editing a god-struct.
 
-use crate::config::{ExecParams, SimConfig, SystemKind, SystemParams};
+use crate::config::{ExecParams, LeaderPlacement, SimConfig, SystemKind, SystemParams};
 use crate::engine::store::Catalog;
 use crate::engine::Ctx;
 use crate::mem::MemKind;
@@ -90,6 +90,11 @@ pub enum MembershipEvent {
     PeerRecovered { peer: NodeId },
     /// The permission switch completed; `core.leader` holds the new view.
     LeaderSwitched,
+    /// Sharded placement only: the per-group leader table changed
+    /// (`core.group_leaders` holds the new view). Paths diff the view
+    /// against their own tracked assignment to find groups they gained or
+    /// lost — the event carries no group list so it stays `Copy`.
+    GroupLeadersChanged,
 }
 
 /// Read-only membership view the failure plane exposes to the paths.
@@ -240,7 +245,7 @@ pub fn build_paths(
     groups: usize,
 ) -> (Box<dyn ReplicationPath>, Box<dyn ReplicationPath>) {
     let strong: Box<dyn ReplicationPath> = match cfg.backend {
-        ConsensusBackend::Paxos => Box::new(crate::engine::paxos::PaxosPath::new(cfg, id)),
+        ConsensusBackend::Paxos => Box::new(crate::engine::paxos::PaxosPath::new(cfg, id, groups)),
         ConsensusBackend::Mu | ConsensusBackend::Raft => {
             Box::new(crate::engine::strong::StrongPath::new(cfg, id, groups))
         }
@@ -275,7 +280,19 @@ pub struct ReplicaCore {
     pub rng: Rng,
 
     /// This replica's view of who leads (maintained by the failure plane).
+    /// Under sharded placement this is the classic *anchor* view (the
+    /// smallest-live-ID rule, kept for reporting and the heal machinery);
+    /// per-group authority lives in `group_leaders`.
     pub leader: NodeId,
+
+    /// Strong-plane leadership placement policy (`single` = classic
+    /// one-leader mode, bit-identical to the pre-sharding engine).
+    pub placement: LeaderPlacement,
+
+    /// Per-global-sync-group leader view (len = `Catalog::total_groups()`),
+    /// maintained by the failure plane's placement table. Never consulted
+    /// under `placement = single` — `leader_of` returns `leader` there.
+    pub group_leaders: Vec<NodeId>,
 
     /// Client slots that consumed quota but have not been responded to yet
     /// (drives the cluster's drain-flag flip).
@@ -290,6 +307,17 @@ pub struct ReplicaCore {
 
 impl ReplicaCore {
     pub fn new(id: NodeId, cfg: &SimConfig, plane: Catalog, rng: Rng) -> Self {
+        // Boot-time per-group leader view (deterministic, RNG-free: the
+        // placement table must never consume a draw from the shared
+        // stream, or `placement = single` would stop being bit-identical).
+        let groups = plane.total_groups() as usize;
+        let group_leaders = crate::smr::election::PlacementTable::new(
+            cfg.placement,
+            groups,
+            cfg.n_replicas,
+        )
+        .leaders()
+        .to_vec();
         ReplicaCore {
             id,
             n: cfg.n_replicas,
@@ -305,6 +333,8 @@ impl ReplicaCore {
             peers: (0..cfg.n_replicas).filter(|&i| i != id).collect(),
             rng,
             leader: 0,
+            placement: cfg.placement,
+            group_leaders,
             clients_in_flight: 0,
             next_token: (id as u64) << 48,
             tokens: FastMap::default(),
@@ -319,6 +349,45 @@ impl ReplicaCore {
 
     pub fn is_leader(&self) -> bool {
         self.id == self.leader
+    }
+
+    /// Leader of global sync group `g`. Under `placement = single` every
+    /// group resolves to the classic single leader view, so callers can
+    /// use this unconditionally without changing unsharded behavior.
+    pub fn leader_of(&self, g: usize) -> NodeId {
+        if self.placement.is_sharded() {
+            self.group_leaders[g]
+        } else {
+            self.leader
+        }
+    }
+
+    pub fn is_leader_of(&self, g: usize) -> bool {
+        self.id == self.leader_of(g)
+    }
+
+    /// Leader responsible for `op` (its object's global sync group).
+    pub fn leader_for_op(&self, op: &OpCall) -> NodeId {
+        if self.placement.is_sharded() {
+            self.group_leaders[self.plane.global_group(op) as usize]
+        } else {
+            self.leader
+        }
+    }
+
+    pub fn leads_op(&self, op: &OpCall) -> bool {
+        self.id == self.leader_for_op(op)
+    }
+
+    /// Does this replica lead anything — the cluster (single) or at least
+    /// one group (sharded)? Gates leader-only bookkeeping like membership
+    /// trimming and recovery replay.
+    pub fn leads_any(&self) -> bool {
+        if self.placement.is_sharded() {
+            self.group_leaders.contains(&self.id)
+        } else {
+            self.is_leader()
+        }
     }
 
     /// Advance the local busy clock by `cost` starting no earlier than `at`.

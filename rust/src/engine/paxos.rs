@@ -40,31 +40,30 @@ use crate::workload::WorkItem;
 /// Completion tokens owned by the Paxos path.
 #[derive(Clone, Copy, Debug)]
 pub enum PaxosToken {
-    /// Doorbell for one follower's landing-region write: ballot + round
-    /// nonce at issue time (the nonce rejects doorbells from stalled,
-    /// re-pumped rounds that repeat ballot and slots) + the batch's first
-    /// slot.
-    Append { ballot: u64, round: u64, start_slot: u64 },
+    /// Doorbell for one follower's landing-region write: the consensus
+    /// shard (global sync group; 0 under `placement = single`), ballot +
+    /// round nonce at issue time (the nonce rejects doorbells from
+    /// stalled, re-pumped rounds that repeat ballot and slots) + the
+    /// batch's first slot.
+    Append { group: u8, ballot: u64, round: u64, start_slot: u64 },
     /// Forwarded conflicting op awaiting a LeaderReply.
     Forward { request_id: u64 },
     /// Leadership-lease probe doorbell (a takeover replay write). The wave
     /// nonce discards votes from a superseded campaign.
-    Lease { wave: u64 },
+    Lease { group: u8, wave: u64 },
 }
 
-pub struct PaxosPath {
-    /// One total replication log (one consensus instance; all catalog
-    /// objects and sync groups share the order — strictly stronger than
-    /// Mu's per-group orders). Entries carry their `ObjectId` inside the
-    /// `OpCall`, so apply routes each to its catalog object.
+/// One Paxos consensus instance. Under `placement = single` there is one
+/// shard with one total log (all catalog objects and sync groups share the
+/// order — strictly stronger than Mu's per-group orders); sharded
+/// placements give every global sync group its own instance with its own
+/// ballot space, acceptor, lease, and landing-region pipeline.
+struct PaxosShard {
+    /// Entries carry their `ObjectId` inside the `OpCall`, so apply
+    /// routes each to its catalog object.
     log: ReplicationLog,
     leader_sm: PaxosLeader,
     acceptor: PaxosAcceptor,
-    batch: usize,
-    /// Chaos mode (link faults in the schedule): forwarded ops arm a
-    /// reply watchdog, since a LeaderReply lost on a faulty link would
-    /// otherwise strand its origin-side client slot forever.
-    chaos: bool,
     /// Leadership lease: a promoted leader's takeover replay writes double
     /// as lease probes — a majority of doorbells confirms the cluster's
     /// permission switches accepted this leadership. Until then
@@ -75,33 +74,64 @@ pub struct PaxosPath {
     lease_wave: u64,
     lease_votes: u32,
     parked: Vec<(OpCall, Requester)>,
+    /// Leader side: slot -> who to answer at commit.
+    requesters: FastMap<u64, Requester>,
+}
+
+pub struct PaxosPath {
+    shards: Vec<PaxosShard>,
+    batch: usize,
+    /// Chaos mode (link faults in the schedule): forwarded ops arm a
+    /// reply watchdog, since a LeaderReply lost on a faulty link would
+    /// otherwise strand its origin-side client slot forever.
+    chaos: bool,
     /// Chaos-mode exactly-once ledger for forwarded ops (see
     /// `engine::strong`): verdicts of already-ordered `(origin, seq)`
     /// pairs, so a re-forward after a lost reply does not execute twice.
     done_fwd: FastMap<(usize, u64), bool>,
-    /// Leader side: slot -> who to answer at commit.
-    requesters: FastMap<u64, Requester>,
     /// Origin side: forwarded ops awaiting replies.
     pending_fwd: FastMap<u64, PendingClient>,
     next_request_id: u64,
+    /// Per-group leadership view this path last acted on (diffed on
+    /// `GroupLeadersChanged`; unused under `placement = single`).
+    led: Vec<bool>,
 }
 
 impl PaxosPath {
-    pub fn new(cfg: &SimConfig, id: NodeId) -> Self {
+    pub fn new(cfg: &SimConfig, id: NodeId, groups: usize) -> Self {
+        let sharded = cfg.placement.is_sharded();
+        let table = crate::smr::election::PlacementTable::new(cfg.placement, groups, cfg.n_replicas);
+        let n_shards = if sharded { groups.max(1) } else { 1 };
+        let shards = (0..n_shards)
+            .map(|_| PaxosShard {
+                log: ReplicationLog::new(),
+                leader_sm: PaxosLeader::new(id, cfg.n_replicas, cfg.batch_size as usize),
+                acceptor: PaxosAcceptor::new(),
+                lease: true,
+                lease_wave: 0,
+                lease_votes: 0,
+                parked: Vec::new(),
+                requesters: FastMap::default(),
+            })
+            .collect();
         PaxosPath {
-            log: ReplicationLog::new(),
-            leader_sm: PaxosLeader::new(id, cfg.n_replicas, cfg.batch_size as usize),
-            acceptor: PaxosAcceptor::new(),
+            shards,
             batch: cfg.batch_size as usize,
             chaos: cfg.fault.has_link_faults(),
-            lease: true,
-            lease_wave: 0,
-            lease_votes: 0,
-            parked: Vec::new(),
             done_fwd: FastMap::default(),
-            requesters: FastMap::default(),
             pending_fwd: FastMap::default(),
             next_request_id: 1,
+            led: (0..groups).map(|g| table.leader_of(g) == id).collect(),
+        }
+    }
+
+    /// Shard index for global group `g`: identity under sharded
+    /// placements, the one shared shard otherwise.
+    fn sidx(&self, g: usize) -> usize {
+        if self.shards.len() > 1 {
+            g
+        } else {
+            0
         }
     }
 
@@ -112,28 +142,29 @@ impl PaxosPath {
     /// and an empty *replay* would truncate a voter's log. A follower
     /// whose permission switch elected us lets the write through; everyone
     /// else fences it. Solo leaders grant themselves the lease.
-    fn paxos_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, first: bool) {
-        self.lease_wave += 1;
-        self.lease_votes = 0;
+    fn paxos_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize, first: bool) {
+        self.shards[s].lease_wave += 1;
+        self.shards[s].lease_votes = 0;
         if mb.live_set().len() / 2 == 0 {
-            self.paxos_grant_lease(core, ctx, mb);
+            self.paxos_grant_lease(core, ctx, mb, s);
             return;
         }
-        let wave = self.lease_wave;
-        let ballot = self.leader_sm.ballot;
+        let group = s as u8;
+        let wave = self.shards[s].lease_wave;
+        let ballot = self.shards[s].leader_sm.ballot;
         // One shared batch for the whole campaign fan-out: each per-peer
         // clone is a refcount bump (§Perf).
         let ops: crate::net::verbs::OpBatch = if first {
-            self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect::<Vec<_>>().into()
+            self.shards[s].log.entries_from(0).into_iter().map(|(_, e)| e.op).collect::<Vec<_>>().into()
         } else {
             Vec::new().into()
         };
         for peer in mb.live_peers(core.id) {
-            let tok = core.token(TokenCtx::Paxos(PaxosToken::Lease { wave }));
+            let tok = core.token(TokenCtx::Paxos(PaxosToken::Lease { group, wave }));
             let payload = if first {
-                Payload::PaxosReplay { ballot, ops: ops.clone() }
+                Payload::PaxosReplay { group, ballot, ops: ops.clone() }
             } else {
-                Payload::PaxosAppend { ballot, start_slot: 0, ops: ops.clone() }
+                Payload::PaxosAppend { group, ballot, start_slot: 0, ops: ops.clone() }
             };
             let verb = Verb::write(core.landing_mem_for_peer(), payload, tok).on_leader_qp();
             ctx.metrics.verbs += 1;
@@ -144,23 +175,24 @@ impl PaxosPath {
         ctx.q.push(
             ctx.q.now() + core.heartbeat_period_ns,
             core.id,
-            EventKind::Timer(TimerKind::SmrTick(0)),
+            EventKind::Timer(TimerKind::SmrTick(s as u8)),
         );
     }
 
     /// Majority confirmed: adopt the ballot locally, execute our accepted
     /// tail, and serve — first the submissions that parked during the
     /// campaign, then normal traffic.
-    fn paxos_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
-        self.lease = true;
-        self.acceptor.accept(self.leader_sm.ballot);
-        self.drain_own_log(core, ctx);
-        self.leader_sm.set_cluster_size(mb.live_set().len());
-        let parked = std::mem::take(&mut self.parked);
+    fn paxos_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
+        self.shards[s].lease = true;
+        let ballot = self.shards[s].leader_sm.ballot;
+        self.shards[s].acceptor.accept(ballot);
+        self.drain_own_log(core, ctx, s);
+        self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
+        let parked = std::mem::take(&mut self.shards[s].parked);
         for (op, req) in parked {
             self.leader_submit(core, ctx, mb, op, req);
         }
-        self.try_fan_out(core, ctx, mb);
+        self.try_fan_out(core, ctx, mb, s);
     }
 
     /// A promoted-but-unleased "leader" learned a smaller live node exists
@@ -168,13 +200,13 @@ impl PaxosPath {
     /// applied or appended while parked — not even the acceptor promise
     /// moved, so the rightful leader's writes were never rejected here.
     /// Abdication is a pure re-route of the parked ops.
-    fn paxos_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
+    fn paxos_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, rightful: NodeId) {
         ctx.qps.switch_leader(core.id, core.leader, rightful);
         core.leader = rightful;
-        self.lease = true; // inert until the next promotion resets it
+        self.shards[s].lease = true; // inert until the next promotion resets it
         // Pull the committed log we may have missed while self-elected.
         core.request_sync(ctx, rightful);
-        let parked = std::mem::take(&mut self.parked);
+        let parked = std::mem::take(&mut self.shards[s].parked);
         for (op, req) in parked {
             match req {
                 Requester::Local { .. } => self.forward_to_leader(core, ctx, op, req),
@@ -185,11 +217,14 @@ impl PaxosPath {
         }
     }
 
-    /// Leader-side entry: execute in total order, append, replicate.
+    /// Leader-side entry: execute in total order, append, replicate —
+    /// within the op's consensus shard (always shard 0 under
+    /// `placement = single`).
     fn leader_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
-        if !self.lease {
+        let s = self.sidx(core.plane.global_group(&op) as usize);
+        if !self.shards[s].lease {
             // Leadership not confirmed by a doorbell majority yet: park.
-            self.parked.push((op, req));
+            self.shards[s].parked.push((op, req));
             return;
         }
         if !core.plane.permissible(&op) {
@@ -204,17 +239,18 @@ impl PaxosPath {
         core.occupy(ctx.q.now(), exec_cost);
         core.plane.apply(&op);
         core.executions += 1;
-        let slot = self.log.next_free_slot();
-        self.log.write_slot(slot, self.leader_sm.ballot, op);
-        self.log.applied_upto = self.log.applied_upto.max(slot + 1);
-        self.requesters.insert(slot, req);
-        self.leader_sm.submit(slot, op);
-        self.try_fan_out(core, ctx, mb);
+        let shard = &mut self.shards[s];
+        let slot = shard.log.next_free_slot();
+        shard.log.write_slot(slot, shard.leader_sm.ballot, op);
+        shard.log.applied_upto = shard.log.applied_upto.max(slot + 1);
+        shard.requesters.insert(slot, req);
+        shard.leader_sm.submit(slot, op);
+        self.try_fan_out(core, ctx, mb, s);
     }
 
     /// Start the next landing-region write batch if the pipeline is free.
-    fn try_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
-        let Some((ballot, round, start_slot, ops)) = self.leader_sm.pump() else { return };
+    fn try_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
+        let Some((ballot, round, start_slot, ops)) = self.shards[s].leader_sm.pump() else { return };
         // Sequential pipeline: the leader stays execution-busy through the
         // round, exactly like Mu (appendix D.1 — leader-bound throughput).
         let now = ctx.q.now();
@@ -230,8 +266,9 @@ impl PaxosPath {
             ctx.metrics.coalesced += ops.len() as u64 - 1;
         }
         let peers = mb.live_peers(core.id);
-        self.leader_sm.round_started(peers.len() as u32);
+        self.shards[s].leader_sm.round_started(peers.len() as u32);
         let mem = core.landing_mem_for_peer();
+        let group = s as u8;
         // Shared batch: the per-peer clone below is a refcount bump (§Perf).
         let ops: crate::net::verbs::OpBatch = ops.into();
         core.fan_out(
@@ -240,22 +277,22 @@ impl PaxosPath {
             |t| {
                 Verb::write(
                     mem,
-                    Payload::PaxosAppend { ballot, start_slot, ops: ops.clone() },
+                    Payload::PaxosAppend { group, ballot, start_slot, ops: ops.clone() },
                     t,
                 )
                 .on_leader_qp()
             },
             true,
-            || TokenCtx::Paxos(PaxosToken::Append { ballot, round, start_slot }),
+            || TokenCtx::Paxos(PaxosToken::Append { group, ballot, round, start_slot }),
         );
         // Sole survivor: no doorbells will ever arrive, and none are
         // needed — the leader's local append is the whole majority.
-        if let Some((start, ops)) = self.leader_sm.commit_if_solo() {
-            self.commit_batch(core, ctx, mb, start, ops);
+        if let Some((start, ops)) = self.shards[s].leader_sm.commit_if_solo() {
+            self.commit_batch(core, ctx, mb, s, start, ops);
         }
     }
 
-    fn commit_batch(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, start_slot: u64, ops: Vec<OpCall>) {
+    fn commit_batch(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize, start_slot: u64, ops: Vec<OpCall>) {
         let now = ctx.q.now();
         if now > core.busy_until {
             core.busy_total += now - core.busy_until;
@@ -268,11 +305,11 @@ impl PaxosPath {
             }
         }
         for i in 0..ops.len() as u64 {
-            if let Some(req) = self.requesters.remove(&(start_slot + i)) {
+            if let Some(req) = self.shards[s].requesters.remove(&(start_slot + i)) {
                 self.answer_requester(core, ctx, req, true);
             }
         }
-        self.try_fan_out(core, ctx, mb);
+        self.try_fan_out(core, ctx, mb, s);
     }
 
     fn answer_requester(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, req: Requester, committed: bool) {
@@ -310,7 +347,7 @@ impl PaxosPath {
                 core.arm_forward_watchdog(ctx, request_id);
             }
         }
-        let leader = core.leader;
+        let leader = core.leader_for_op(&op);
         let tok = core.token(TokenCtx::Paxos(PaxosToken::Forward { request_id }));
         let verb = Verb::write(
             core.landing_mem_for_peer(),
@@ -332,8 +369,16 @@ impl PaxosPath {
             core.complete_client(ctx, p.client, p.arrival, done);
             return;
         }
-        let leader = mb.elect_leader();
-        core.leader = leader;
+        // Sharded placements route the retry by the op's group (the
+        // failure plane keeps `group_leaders` current); single placement
+        // refreshes the smallest-live-ID view.
+        let leader = if core.placement.is_sharded() {
+            core.leader_for_op(&p.op)
+        } else {
+            let l = mb.elect_leader();
+            core.leader = l;
+            l
+        };
         let op = p.op;
         if leader == core.id {
             self.leader_submit(core, ctx, mb, op, Requester::Local { client: p.client, arrival: p.arrival });
@@ -356,15 +401,17 @@ impl PaxosPath {
         ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, at, core.id, leader, verb, true);
     }
 
-    /// Promoted or recovering peers get the leader's log as one exact
-    /// mirror write (empty log replays too — it truncates stale tails).
-    fn replay_log_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId) {
-        let ops: Vec<OpCall> = self.log.entries_from(0).into_iter().map(|(_, e)| e.op).collect();
-        let ballot = self.leader_sm.ballot;
+    /// Promoted or recovering peers get the leader's log for shard `s` as
+    /// one exact mirror write (empty log replays too — it truncates stale
+    /// tails).
+    fn replay_log_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, peer: NodeId) {
+        let ops: Vec<OpCall> =
+            self.shards[s].log.entries_from(0).into_iter().map(|(_, e)| e.op).collect();
+        let ballot = self.shards[s].leader_sm.ballot;
         let tok = core.token(TokenCtx::Ignore);
         let verb = Verb::write(
             core.landing_mem_for_peer(),
-            Payload::PaxosReplay { ballot, ops: ops.into() },
+            Payload::PaxosReplay { group: s as u8, ballot, ops: ops.into() },
             tok,
         )
         .on_leader_qp();
@@ -374,8 +421,8 @@ impl PaxosPath {
 
     /// Apply this replica's own log tail (a follower promoted to leader
     /// must execute everything it accepted before serving in total order).
-    fn drain_own_log(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx) {
-        let entries = self.log.drain_unapplied();
+    fn drain_own_log(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize) {
+        let entries = self.shards[s].log.drain_unapplied();
         if entries.is_empty() {
             return;
         }
@@ -417,7 +464,7 @@ impl ReplicationPath for PaxosPath {
     fn submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, sub: Submission) {
         core.occupy(sub.arrival, sub.cost);
         let req = Requester::Local { client: sub.client, arrival: sub.arrival };
-        if core.is_leader() {
+        if core.leads_op(&sub.op) {
             self.leader_submit(core, ctx, mb, sub.op, req);
         } else {
             self.forward_to_leader(core, ctx, sub.op, req);
@@ -426,38 +473,42 @@ impl ReplicationPath for PaxosPath {
 
     fn deliver(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, src: NodeId, verb: Verb) {
         match verb.payload {
-            Payload::PaxosAppend { ballot, start_slot, ops } => {
+            Payload::PaxosAppend { group, ballot, start_slot, ops } => {
                 // One-sided landing: no follower compute on the fast path.
-                if !self.acceptor.accept(ballot) {
+                let s = self.sidx(group as usize);
+                let shard = &mut self.shards[s];
+                if !shard.acceptor.accept(ballot) {
                     return; // stale-ballot leader (also fenced at the QP)
                 }
                 // A batch landing beyond our append point means an earlier
                 // landing-region write never arrived (fenced pre-switch or
                 // eaten by fault injection): pull a replay from the sender.
-                if start_slot > self.log.next_free_slot() {
+                if start_slot > shard.log.next_free_slot() {
                     core.request_sync(ctx, src);
                 }
                 for (i, &op) in ops.iter().enumerate() {
-                    self.log.write_slot(start_slot + i as u64, ballot, op);
+                    shard.log.write_slot(start_slot + i as u64, ballot, op);
                 }
             }
-            Payload::PaxosReplay { ballot, ops } => {
-                if !self.acceptor.accept(ballot) {
+            Payload::PaxosReplay { group, ballot, ops } => {
+                let s = self.sidx(group as usize);
+                let shard = &mut self.shards[s];
+                if !shard.acceptor.accept(ballot) {
                     return;
                 }
                 // Exact mirror of the (new) leader's log: stale tails
                 // truncate. Entries already applied locally stay applied —
                 // `applied_upto` survives within the mirrored length.
-                let keep_applied = self.log.applied_upto.min(ops.len() as u64);
+                let keep_applied = shard.log.applied_upto.min(ops.len() as u64);
                 let mut log = ReplicationLog::new();
                 for (slot, &op) in ops.iter().enumerate() {
                     log.write_slot(slot as u64, ballot, op);
                 }
                 log.applied_upto = keep_applied;
-                self.log = log;
+                shard.log = log;
             }
             Payload::LeaderForward { op, reply_to, request_id } => {
-                if core.is_leader() {
+                if core.leads_op(&op) {
                     let sw = core.exec().software_overhead_ns;
                     core.occupy(ctx.q.now(), sw);
                     // Chaos-mode exactly-once: a duplicate of an op we
@@ -489,9 +540,14 @@ impl ReplicationPath for PaxosPath {
             Payload::SyncRequest { from } => {
                 // A follower completed its permission switch toward us and
                 // wants the committed log (an exact ballot-gated mirror;
-                // idempotent when it is already current).
-                if core.is_leader() {
-                    self.replay_log_to(core, ctx, from);
+                // idempotent when it is already current). Sharded
+                // placements mirror only the shards this replica leads.
+                if core.leads_any() {
+                    for s in 0..self.shards.len() {
+                        if core.is_leader_of(s) {
+                            self.replay_log_to(core, ctx, s, from);
+                        }
+                    }
                 }
             }
             _ => {}
@@ -501,23 +557,24 @@ impl ReplicationPath for PaxosPath {
     fn on_completion(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, token: TokenCtx, ok: bool) {
         let TokenCtx::Paxos(token) = token else { return };
         match token {
-            PaxosToken::Append { ballot, round, start_slot } => {
-                if !core.is_leader() {
+            PaxosToken::Append { group, ballot, round, start_slot } => {
+                let s = self.sidx(group as usize);
+                if !core.is_leader_of(s) {
                     return; // deposed mid-round; takeover handles the rest
                 }
-                match self.leader_sm.on_completion(ballot, round, start_slot, ok) {
+                match self.shards[s].leader_sm.on_completion(ballot, round, start_slot, ok) {
                     PaxosStep::Wait => {}
                     PaxosStep::Commit { start_slot, ops } => {
-                        self.commit_batch(core, ctx, mb, start_slot, ops);
+                        self.commit_batch(core, ctx, mb, s, start_slot, ops);
                     }
                     PaxosStep::Stall => {
-                        self.leader_sm.reset_in_flight();
+                        self.shards[s].leader_sm.reset_in_flight();
                         // Retry once the heartbeat scanner refreshes the
                         // live set (same recovery cadence as Mu).
                         ctx.q.push(
                             ctx.q.now() + core.heartbeat_period_ns,
                             core.id,
-                            EventKind::Timer(TimerKind::SmrTick(0)),
+                            EventKind::Timer(TimerKind::SmrTick(s as u8)),
                         );
                     }
                 }
@@ -529,17 +586,21 @@ impl ReplicationPath for PaxosPath {
                     }
                 }
             }
-            PaxosToken::Lease { wave } => {
+            PaxosToken::Lease { group, wave } => {
                 // A doorbell on a lease probe is a vote: the follower's
                 // permission switch accepted this leadership. NACKs need no
                 // action — the campaign-retry chain re-probes.
-                if self.lease || wave != self.lease_wave || !core.is_leader() {
+                let s = self.sidx(group as usize);
+                if self.shards[s].lease
+                    || wave != self.shards[s].lease_wave
+                    || !core.is_leader_of(s)
+                {
                     return;
                 }
                 if ok {
-                    self.lease_votes += 1;
-                    if self.lease_votes as usize >= mb.live_set().len() / 2 {
-                        self.paxos_grant_lease(core, ctx, mb);
+                    self.shards[s].lease_votes += 1;
+                    if self.shards[s].lease_votes as usize >= mb.live_set().len() / 2 {
+                        self.paxos_grant_lease(core, ctx, mb, s);
                     }
                 }
             }
@@ -548,22 +609,29 @@ impl ReplicationPath for PaxosPath {
 
     fn on_timer(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, t: TimerKind) {
         match t {
-            TimerKind::SmrTick(_) => {
-                if core.is_leader() {
-                    if !self.lease {
+            TimerKind::SmrTick(g) => {
+                let s = self.sidx(g as usize);
+                if core.is_leader_of(s) {
+                    if !self.shards[s].lease {
                         // Still campaigning: abdicate if the heal brought a
                         // smaller live node back into view (we were a
                         // partition-minority imposter), else re-probe.
+                        // Sharded placements never abdicate here — the
+                        // smallest-live-ID view is not group-aware.
+                        if core.placement.is_sharded() {
+                            self.paxos_campaign(core, ctx, mb, s, false);
+                            return;
+                        }
                         let rightful = mb.elect_leader();
                         if rightful != core.id {
-                            self.paxos_abdicate(core, ctx, rightful);
+                            self.paxos_abdicate(core, ctx, s, rightful);
                         } else {
-                            self.paxos_campaign(core, ctx, mb, false);
+                            self.paxos_campaign(core, ctx, mb, s, false);
                         }
                         return;
                     }
-                    self.leader_sm.set_cluster_size(mb.live_set().len());
-                    self.try_fan_out(core, ctx, mb);
+                    self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
+                    self.try_fan_out(core, ctx, mb, s);
                 }
             }
             TimerKind::ForwardCheck { request_id } => {
@@ -581,14 +649,18 @@ impl ReplicationPath for PaxosPath {
     fn on_membership(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, ev: MembershipEvent) {
         match ev {
             MembershipEvent::PeerFailed { peer: _ } => {
-                if core.is_leader() {
-                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                for s in 0..self.shards.len() {
+                    if core.is_leader_of(s) {
+                        self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
+                    }
                 }
             }
             MembershipEvent::PeerRecovered { peer } => {
-                if core.is_leader() {
-                    self.replay_log_to(core, ctx, peer);
-                    self.leader_sm.set_cluster_size(mb.live_set().len());
+                for s in 0..self.shards.len() {
+                    if core.is_leader_of(s) {
+                        self.replay_log_to(core, ctx, s, peer);
+                        self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
+                    }
                 }
             }
             MembershipEvent::LeaderSwitched => {
@@ -598,15 +670,56 @@ impl ReplicationPath for PaxosPath {
                     // to every live peer (the one-sided analogue of Mu's
                     // Prepare, which also truncates minority-written
                     // uncommitted tails). Executing our accepted tail and
-                    // serving wait for the doorbell majority.
+                    // serving wait for the doorbell majority. This event
+                    // only fires under placement = single (shard 0 is the
+                    // whole pipeline).
                     ctx.metrics.elections += 1;
                     ctx.metrics.election_times.push(ctx.q.now());
-                    self.leader_sm.reset_in_flight();
-                    self.leader_sm.assume_leadership(core.id, self.acceptor.promised);
-                    self.lease = false;
-                    self.paxos_campaign(core, ctx, mb, true);
+                    let promised = self.shards[0].acceptor.promised;
+                    self.shards[0].leader_sm.reset_in_flight();
+                    self.shards[0].leader_sm.assume_leadership(core.id, promised);
+                    self.shards[0].lease = false;
+                    self.paxos_campaign(core, ctx, mb, 0, true);
                 }
                 // Any of our forwards pending at the dead leader: retry.
+                let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
+                for (_, p) in pending {
+                    self.retry_forward(core, ctx, mb, p);
+                }
+            }
+            MembershipEvent::GroupLeadersChanged => {
+                // Sharded placements only: the failure plane re-placed the
+                // dead node's groups. Each shard this replica just gained
+                // runs the same takeover a LeaderSwitched would — outbid,
+                // campaign, serve once the doorbell majority confirms.
+                let mut gained = false;
+                for g in 0..self.led.len() {
+                    let mine = core.is_leader_of(g);
+                    let was = self.led[g];
+                    self.led[g] = mine;
+                    let s = self.sidx(g);
+                    if mine {
+                        self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
+                    }
+                    if !mine || was {
+                        continue;
+                    }
+                    gained = true;
+                    let promised = self.shards[s].acceptor.promised;
+                    self.shards[s].leader_sm.reset_in_flight();
+                    self.shards[s].leader_sm.assume_leadership(core.id, promised);
+                    self.shards[s].lease = false;
+                    self.paxos_campaign(core, ctx, mb, s, true);
+                }
+                if gained {
+                    // One election per replica gaining ≥1 group — the
+                    // takeover campaigns run concurrently from the same
+                    // detection.
+                    ctx.metrics.elections += 1;
+                    ctx.metrics.election_times.push(ctx.q.now());
+                }
+                // Forwards pending at the dead (or re-placed) leader: the
+                // per-op group routing re-resolves against the new table.
                 let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
                 for (_, p) in pending {
                     self.retry_forward(core, ctx, mb, p);
@@ -618,50 +731,76 @@ impl ReplicationPath for PaxosPath {
     fn replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, peer: NodeId) {
         // Heal-time anti-entropy: mirror the committed log onto the peer a
         // partition may have starved (ballot-gated, exact overwrite —
-        // idempotent when the peer is already current).
-        self.replay_log_to(core, ctx, peer);
+        // idempotent when the peer is already current). Sharded placements
+        // mirror only the shards this replica leads.
+        let single = self.shards.len() == 1;
+        for s in 0..self.shards.len() {
+            if single || core.is_leader_of(s) {
+                self.replay_log_to(core, ctx, s, peer);
+            }
+        }
     }
 
     fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
-        if core.is_leader() && !self.lease {
-            self.paxos_abdicate(core, ctx, rightful);
+        // Single placement only (see engine::strong for the rationale).
+        if core.placement.is_sharded() {
+            return;
+        }
+        if core.is_leader() && !self.shards[0].lease {
+            self.paxos_abdicate(core, ctx, 0, rightful);
         }
     }
 
     fn flush_pending(&mut self, plane: &mut Catalog) {
-        for e in self.log.drain_unapplied() {
-            plane.apply_forced(&e.op);
+        for shard in &mut self.shards {
+            for e in shard.log.drain_unapplied() {
+                plane.apply_forced(&e.op);
+            }
         }
     }
 
     fn snapshot_logs(&self) -> Vec<ReplicationLog> {
-        vec![self.log.clone()]
+        self.shards.iter().map(|s| s.log.clone()).collect()
     }
 
     fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
-        self.log = logs.into_iter().next().unwrap_or_default();
-        // Pipeline state died with the crash; requesters' client slots were
-        // reset by the failure plane.
-        self.leader_sm.clear();
-        self.requesters = FastMap::default();
+        let mut logs = logs.into_iter();
+        for shard in &mut self.shards {
+            shard.log = logs.next().unwrap_or_default();
+            // Pipeline state died with the crash; requesters' client slots
+            // were reset by the failure plane.
+            shard.leader_sm.clear();
+            shard.requesters = FastMap::default();
+            shard.lease = true;
+            shard.parked.clear();
+        }
         self.pending_fwd = FastMap::default();
-        self.lease = true;
-        self.parked.clear();
+        // A freshly recovered replica leads nothing until the placement
+        // table reassigns groups to it (sticky rebalance).
+        self.led.iter_mut().for_each(|l| *l = false);
     }
 
     fn debug_status(&self) -> String {
+        let q: usize = self.shards.iter().map(|s| s.leader_sm.queue_len()).sum();
+        let in_flight: usize = self.shards.iter().filter(|s| s.leader_sm.in_flight()).count();
+        let requesters: usize = self.shards.iter().map(|s| s.requesters.len()).sum();
+        let parked: usize = self.shards.iter().map(|s| s.parked.len()).sum();
+        let unleased: usize = self.shards.iter().filter(|s| !s.lease).count();
+        let log_len: u64 = self.shards.iter().map(|s| s.log.len()).sum();
+        let applied: u64 = self.shards.iter().map(|s| s.log.applied_upto).sum();
         format!(
-            "paxos ballot={} q={} in_flight={} pending_fwd={} requesters={} log_len={} applied={} batch={} lease={} parked={}",
-            self.leader_sm.ballot,
-            self.leader_sm.queue_len(),
-            self.leader_sm.in_flight(),
+            "paxos shards={} ballot={} q={} in_flight={} pending_fwd={} requesters={} log_len={} applied={} batch={} unleased={} parked={}",
+            self.shards.len(),
+            self.shards[0].leader_sm.ballot,
+            q,
+            in_flight,
             self.pending_fwd.len(),
-            self.requesters.len(),
-            self.log.len(),
-            self.log.applied_upto,
+            requesters,
+            log_len,
+            applied,
             self.batch,
-            self.lease,
-            self.parked.len()
+            unleased,
+            parked
         )
     }
 }

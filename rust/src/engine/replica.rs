@@ -79,7 +79,7 @@ impl Replica {
             client,
             relaxed,
             strong,
-            failure: FailurePlane::new(id, cfg.n_replicas, cfg.hb_fail_threshold),
+            failure: FailurePlane::new(cfg, id, groups),
             routes: PathRoutes::resolve(cfg),
         }
     }
@@ -285,6 +285,12 @@ impl Replica {
         self.core.leader
     }
 
+    /// Per-group leader view (len = total sync groups; all equal to
+    /// `leader()` under `placement=single`).
+    pub fn group_leaders(&self) -> Vec<NodeId> {
+        (0..self.core.group_leaders.len()).map(|g| self.core.leader_of(g)).collect()
+    }
+
     pub fn busy_total(&self) -> u64 {
         self.core.busy_total
     }
@@ -363,6 +369,7 @@ impl Replica {
         plane: Catalog,
         logs: Vec<ReplicationLog>,
         leader: NodeId,
+        group_leaders: Vec<NodeId>,
         relaxed_seen: Vec<(ObjectId, usize, u64)>,
         qps: &mut crate::net::QpTable,
         now: Time,
@@ -378,7 +385,16 @@ impl Replica {
         // relaxed ops its snapshot contains, so retried deliveries landing
         // around the install neither double-apply nor get lost.
         self.relaxed.install_relaxed_seen(relaxed_seen);
-        if self.core.leader != leader {
+        if self.core.placement.is_sharded() {
+            // Sharded: adopt the donor's per-group placement wholesale — a
+            // recovered ex-leader rejoins as a follower of its former
+            // groups (sticky rebalance) — and refence against the full
+            // leader set in one pass.
+            self.failure.install_placement(&group_leaders);
+            self.core.group_leaders = group_leaders;
+            self.core.leader = leader;
+            qps.refence(self.core.id, &self.core.group_leaders);
+        } else if self.core.leader != leader {
             qps.switch_leader(self.core.id, self.core.leader, leader);
             self.core.leader = leader;
         }
@@ -386,15 +402,16 @@ impl Replica {
         self.core.busy_total += 50_000;
     }
 
-    /// Donor side of the snapshot (state, strong logs, leader view, dedup
+    /// Donor side of the snapshot (state, strong logs, leader views, dedup
     /// ledger).
     pub fn snapshot_state(
         &self,
-    ) -> (Catalog, Vec<ReplicationLog>, NodeId, Vec<(ObjectId, usize, u64)>) {
+    ) -> (Catalog, Vec<ReplicationLog>, NodeId, Vec<NodeId>, Vec<(ObjectId, usize, u64)>) {
         (
             self.core.plane.snapshot(),
             self.strong.snapshot_logs(),
             self.core.leader,
+            self.group_leaders(),
             self.relaxed.snapshot_relaxed_seen(),
         )
     }

@@ -31,6 +31,7 @@ use crate::net::verbs::{Payload, ReadData, ReadTarget, Verb};
 use crate::rdt::OpCall;
 use crate::sim::{EventKind, NodeId, Time, TimerKind};
 use crate::smr::log::ReplicationLog;
+use crate::smr::election::PlacementTable;
 use crate::smr::mu::{MuInstance, Resp, Round, Step};
 use crate::smr::raft::{RaftFollower, RaftLeader, RaftStep};
 use crate::util::hasher::FastMap;
@@ -70,39 +71,84 @@ pub struct StrongPath {
     /// WriteProposal round reaches quorum. A never-confirmed "leader" whose
     /// rounds stall while a smaller live node exists is a partition-side
     /// imposter and abdicates (it cannot have applied anything — Mu applies
-    /// only at the Accept phase, which confirmation precedes).
-    mu_confirmed: bool,
+    /// only at the Accept phase, which confirmation precedes). One shared
+    /// flag under `placement = single` (one leadership covers every
+    /// group), one per group under sharded placements — see `cidx`.
+    mu_confirmed: Vec<bool>,
     /// Chaos-mode exactly-once ledger for forwarded ops: verdicts of
     /// already-ordered `(origin, seq)` pairs. A lost LeaderReply makes the
     /// origin's watchdog re-forward; without this the duplicate would
     /// execute twice in total order (converged but double-debited).
     done_fwd: FastMap<(usize, u64), bool>,
-    // Raft fast path (Waverunner baseline + stand-alone backend).
-    raft_leader: Option<RaftLeader>,
-    raft_follower: RaftFollower,
-    raft_pending: FastMap<u64, Requester>, // index -> requester
+    /// Raft fast path (Waverunner baseline + stand-alone backend). Under
+    /// `placement = single` there is exactly one shard — today's single
+    /// total log. Sharded placements give every global sync group its own
+    /// shard (leader/follower automata, lease, parked queue); appends,
+    /// acks and replays carry the shard's group id so instances never
+    /// interfere, and shard `s` mirrors into `logs[s]`.
+    raft: Vec<RaftShard>,
+    /// Per-group leadership view this path last acted on, diffed against
+    /// `core.group_leaders` when a `GroupLeadersChanged` event arrives to
+    /// find the groups gained (takeover) or lost. Unused under
+    /// `placement = single` (the event never fires).
+    led: Vec<bool>,
+}
+
+/// One Raft consensus instance (see the `raft` field docs).
+struct RaftShard {
+    leader: Option<RaftLeader>,
+    follower: RaftFollower,
+    pending: FastMap<u64, Requester>, // index -> requester
     /// Raft leadership lease: a promoted leader must collect a majority of
     /// append acks (its takeover replay / an empty probe) before serving —
     /// submissions park below until then, so a fenced partition-side
     /// imposter never applies or replicates anything and can abdicate
     /// cleanly. The boot leader holds the lease by construction.
-    raft_lease: bool,
-    raft_votes: FastMap<usize, ()>,
-    raft_parked: Vec<(OpCall, Requester)>,
+    lease: bool,
+    votes: FastMap<usize, ()>,
+    parked: Vec<(OpCall, Requester)>,
+}
+
+impl RaftShard {
+    fn new(leader: Option<RaftLeader>) -> Self {
+        RaftShard {
+            leader,
+            follower: RaftFollower::new(),
+            pending: FastMap::default(),
+            lease: true,
+            votes: FastMap::default(),
+            parked: Vec::new(),
+        }
+    }
 }
 
 impl StrongPath {
     pub fn new(cfg: &SimConfig, id: NodeId, groups: usize) -> Self {
+        let sharded = cfg.placement.is_sharded();
+        let table = PlacementTable::new(cfg.placement, groups, cfg.n_replicas);
         // The Raft pipeline serves both Waverunner (whose preset pins
         // backend = Raft) and the stand-alone Raft backend; node 0 leads
-        // fault-free runs either way.
-        let raft_leader = if cfg.backend == ConsensusBackend::Raft
-            && id == crate::smr::raft::initial_leader()
-        {
-            Some(RaftLeader::with_batch(cfg.n_replicas, cfg.batch_size as usize))
+        // fault-free single-placement runs either way, while sharded
+        // placements boot one shard per global group with the placement
+        // table's leader holding that shard's lease by construction.
+        let raft_shards = if cfg.backend == ConsensusBackend::Raft && sharded {
+            groups.max(1)
         } else {
-            None
+            1
         };
+        let raft = (0..raft_shards)
+            .map(|s| {
+                let leads = cfg.backend == ConsensusBackend::Raft
+                    && if sharded {
+                        table.leader_of(s) == id
+                    } else {
+                        id == crate::smr::raft::initial_leader()
+                    };
+                RaftShard::new(leads.then(|| {
+                    RaftLeader::with_batch(cfg.n_replicas, cfg.batch_size as usize)
+                }))
+            })
+            .collect();
         StrongPath {
             prop_con: cfg.prop_conflicting,
             backend: cfg.backend,
@@ -115,26 +161,42 @@ impl StrongPath {
             requesters: FastMap::default(),
             pending_fwd: FastMap::default(),
             next_request_id: 1,
-            mu_confirmed: true,
+            mu_confirmed: vec![true; if sharded { groups.max(1) } else { 1 }],
             done_fwd: FastMap::default(),
-            raft_leader,
-            raft_follower: RaftFollower::new(),
-            raft_pending: FastMap::default(),
-            raft_lease: true,
-            raft_votes: FastMap::default(),
-            raft_parked: Vec::new(),
+            raft,
+            led: (0..groups).map(|g| table.leader_of(g) == id).collect(),
         }
     }
 
-    /// Mirror a run of Raft entries into the group-0 replication log so the
-    /// generic snapshot/replay machinery sees the Raft log. The mirror is
+    /// Raft shard index for global group `g`: identity under sharded
+    /// placements, the one shared shard otherwise.
+    fn sidx(&self, g: usize) -> usize {
+        if self.raft.len() > 1 {
+            g
+        } else {
+            0
+        }
+    }
+
+    /// Mu confirmation-flag index for global group `g` (same collapse).
+    fn cidx(&self, g: usize) -> usize {
+        if self.mu_confirmed.len() > 1 {
+            g
+        } else {
+            0
+        }
+    }
+
+    /// Mirror a run of Raft entries into shard `s`'s replication log (the
+    /// group-0 log under `placement = single`) so the generic
+    /// snapshot/replay machinery sees the Raft log. The mirror is
     /// kept fully applied — Raft applies through its own automaton — so the
     /// Mu-style quiescence drain never double-executes.
-    fn raft_mirror_append(&mut self, start: u64, term: u64, ops: &[OpCall]) {
-        if self.logs.is_empty() {
+    fn raft_mirror_append(&mut self, s: usize, start: u64, term: u64, ops: &[OpCall]) {
+        while self.logs.len() <= s {
             self.logs.push(ReplicationLog::new());
         }
-        let log = &mut self.logs[0];
+        let log = &mut self.logs[s];
         for (i, op) in ops.iter().enumerate() {
             log.write_slot(start + i as u64, term, *op);
         }
@@ -163,11 +225,11 @@ impl StrongPath {
             return;
         }
         self.requesters.insert((op.origin, op.seq), req);
-        if core.is_leader() {
-            // Catalog flattening: (object, local sync group) -> global
-            // group, one Mu round pipeline + replication log per global
-            // group.
-            let g = core.plane.global_group(&op) as usize;
+        // Catalog flattening: (object, local sync group) -> global
+        // group, one Mu round pipeline + replication log per global
+        // group. Sharded placements route leadership per group.
+        let g = core.plane.global_group(&op) as usize;
+        if core.is_leader_of(g) {
             let slot = self.logs[g].next_free_slot();
             if let Some(round) = self.mu[g].submit(op, slot) {
                 self.fan_out_round(core, ctx, mb, g, round);
@@ -187,7 +249,7 @@ impl StrongPath {
                 core.arm_forward_watchdog(ctx, request_id);
             }
         }
-        let leader = core.leader;
+        let leader = core.leader_for_op(&op);
         let tok = core.token(TokenCtx::Strong(StrongToken::Forward { request_id }));
         let verb = Verb::write(
             core.landing_mem_for_peer(),
@@ -203,28 +265,29 @@ impl StrongPath {
 
     // ----- stand-alone Raft backend (non-Waverunner) ---------------------
 
-    /// Promote this replica to Raft leader if it isn't one yet (election
-    /// takeover, or an origin-side retry that self-elected first). The
-    /// promotion opens a lease campaign: the adopted log is re-replicated
-    /// at the bumped term (an empty probe when there is nothing to
-    /// replay), and follower acks become the lease votes.
-    fn ensure_raft_leader(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
-        if self.raft_leader.is_some() {
+    /// Promote this replica to Raft leader of shard `s` if it isn't one
+    /// yet (election takeover, rebalance takeover, or an origin-side retry
+    /// that self-elected first). The promotion opens a lease campaign: the
+    /// adopted log is re-replicated at the bumped term (an empty probe
+    /// when there is nothing to replay), and follower acks become the
+    /// lease votes.
+    fn ensure_raft_leader(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
+        if self.raft[s].leader.is_some() {
             return;
         }
-        let term = self.raft_follower.term + 1;
-        let next = self.raft_follower.log_len();
-        self.raft_leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
-        self.raft_lease = false;
-        self.raft_votes = FastMap::default();
-        self.raft_campaign(core, ctx, mb);
-        if !self.raft_lease {
+        let term = self.raft[s].follower.term + 1;
+        let next = self.raft[s].follower.log_len();
+        self.raft[s].leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
+        self.raft[s].lease = false;
+        self.raft[s].votes = FastMap::default();
+        self.raft_campaign(core, ctx, mb, s);
+        if !self.raft[s].lease {
             // Campaign-retry chain: probes may be fenced at followers that
             // have not run their permission switch yet.
             ctx.q.push(
                 ctx.q.now() + core.heartbeat_period_ns,
                 core.id,
-                EventKind::Timer(TimerKind::SmrTick(0)),
+                EventKind::Timer(TimerKind::SmrTick(s as u8)),
             );
         }
     }
@@ -233,17 +296,17 @@ impl StrongPath {
     /// every live peer (followers overwrite-accept, which is idempotent),
     /// or an empty probe batch when the log is empty. Solo leaders grant
     /// themselves the lease — there is no one left to vote.
-    fn raft_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
+    fn raft_campaign(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
         if mb.live_set().len() / 2 == 0 {
-            self.raft_grant_lease(core, ctx, mb);
+            self.raft_grant_lease(core, ctx, mb, s);
             return;
         }
-        let entries: Vec<OpCall> = self.raft_follower.entries().to_vec();
-        let term = self.raft_leader.as_ref().expect("campaigning leader").term;
+        let entries: Vec<OpCall> = self.raft[s].follower.entries().to_vec();
+        let term = self.raft[s].leader.as_ref().expect("campaigning leader").term;
         let peers = mb.live_peers(core.id);
         if entries.is_empty() {
             for peer in peers {
-                self.raft_send_to(core, ctx, peer, term, 0, Vec::new());
+                self.raft_send_to(core, ctx, s, peer, term, 0, Vec::new());
             }
             return;
         }
@@ -251,7 +314,7 @@ impl StrongPath {
         let mut start = 0usize;
         while start < entries.len() {
             let end = (start + step).min(entries.len());
-            self.raft_fan_out(core, ctx, mb, term, start as u64, entries[start..end].to_vec());
+            self.raft_fan_out(core, ctx, mb, s, term, start as u64, entries[start..end].to_vec());
             start = end;
         }
     }
@@ -259,23 +322,23 @@ impl StrongPath {
     /// A follower acknowledged our current term: count it toward the
     /// lease. Majority (of the live view) grants it and drains the parked
     /// submissions through the normal leader entry.
-    fn raft_lease_vote(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, from: NodeId) {
-        if self.raft_lease {
+    fn raft_lease_vote(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize, term: u64, from: NodeId) {
+        if self.raft[s].lease {
             return;
         }
-        let Some(rl) = self.raft_leader.as_ref() else { return };
+        let Some(rl) = self.raft[s].leader.as_ref() else { return };
         if rl.term != term {
             return;
         }
-        self.raft_votes.insert(from, ());
-        if self.raft_votes.len() >= mb.live_set().len() / 2 {
-            self.raft_grant_lease(core, ctx, mb);
+        self.raft[s].votes.insert(from, ());
+        if self.raft[s].votes.len() >= mb.live_set().len() / 2 {
+            self.raft_grant_lease(core, ctx, mb, s);
         }
     }
 
-    fn raft_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership) {
-        self.raft_lease = true;
-        let parked = std::mem::take(&mut self.raft_parked);
+    fn raft_grant_lease(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
+        self.raft[s].lease = true;
+        let parked = std::mem::take(&mut self.raft[s].parked);
         for (op, req) in parked {
             self.raft_submit(core, ctx, mb, op, req);
         }
@@ -286,14 +349,14 @@ impl StrongPath {
     /// Nothing was applied or replicated while parked, so abdication is a
     /// pure re-route: adopt the rightful view, re-fence the QP row, and
     /// push the parked ops back through the forward path.
-    fn raft_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
+    fn raft_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, rightful: NodeId) {
         ctx.qps.switch_leader(core.id, core.leader, rightful);
         core.leader = rightful;
-        self.raft_leader = None;
-        self.raft_lease = true;
-        self.raft_votes = FastMap::default();
+        self.raft[s].leader = None;
+        self.raft[s].lease = true;
+        self.raft[s].votes = FastMap::default();
         core.request_sync(ctx, rightful);
-        let parked = std::mem::take(&mut self.raft_parked);
+        let parked = std::mem::take(&mut self.raft[s].parked);
         for (op, req) in parked {
             match req {
                 Requester::Local { .. } => self.forward_conflicting(core, ctx, op, req),
@@ -310,14 +373,16 @@ impl StrongPath {
     /// permissibility in total-order position is rejected, not replicated;
     /// followers then apply the log unconditionally (`apply_forced`).
     fn raft_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
-        if !core.is_leader() {
+        let g = core.plane.global_group(&op) as usize;
+        if !core.is_leader_of(g) {
             self.forward_conflicting(core, ctx, op, req);
             return;
         }
-        self.ensure_raft_leader(core, ctx, mb);
-        if !self.raft_lease {
+        let s = self.sidx(g);
+        self.ensure_raft_leader(core, ctx, mb, s);
+        if !self.raft[s].lease {
             // Leadership not confirmed by a follower majority yet: park.
-            self.raft_parked.push((op, req));
+            self.raft[s].parked.push((op, req));
             return;
         }
         if !core.plane.permissible(&op) {
@@ -332,13 +397,13 @@ impl StrongPath {
         core.occupy(ctx.q.now(), cost);
         core.executions += 1;
         core.plane.apply(&op);
-        let rl = self.raft_leader.as_mut().expect("just ensured");
+        let rl = self.raft[s].leader.as_mut().expect("just ensured");
         let term = rl.term;
         let (index, fanout) = rl.submit(op);
-        self.raft_mirror_append(index, term, &[op]);
-        self.raft_pending.insert(index, req);
+        self.raft_mirror_append(s, index, term, &[op]);
+        self.raft[s].pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
-            self.raft_fan_out(core, ctx, mb, term, start, ops);
+            self.raft_fan_out(core, ctx, mb, s, term, start, ops);
         }
     }
 
@@ -395,7 +460,8 @@ impl StrongPath {
                 // means a follower majority accepted this leadership —
                 // confirmation, in lease terms.
                 if matches!(round, Round::ReadSlots { .. }) {
-                    self.mu_confirmed = true;
+                    let c = self.cidx(g);
+                    self.mu_confirmed[c] = true;
                 }
                 if let Round::WriteLog { slot, proposal, op, adopted } = round {
                     // Accept phase entry: the leader *executes* the
@@ -465,7 +531,11 @@ impl StrongPath {
                 // fences its writes: abdicate. Nothing was applied (Mu
                 // executes only at Accept, past confirmation), so the
                 // queued ops simply re-route through the forward path.
-                if !self.mu_confirmed {
+                // Sharded placements never abdicate through this path —
+                // the smallest-live-ID view is not group-aware, so a
+                // stalled per-group leader just resets and retries (group
+                // reassignment is the failure plane's job).
+                if !self.mu_confirmed[self.cidx(g)] && !core.placement.is_sharded() {
                     let rightful = mb.elect_leader();
                     if rightful != core.id {
                         self.mu_abdicate(core, ctx, rightful);
@@ -489,7 +559,8 @@ impl StrongPath {
     fn mu_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, rightful: NodeId) {
         ctx.qps.switch_leader(core.id, core.leader, rightful);
         core.leader = rightful;
-        self.mu_confirmed = true; // provisional reign over; next promotion resets
+        // Provisional reign over; the next promotion resets.
+        self.mu_confirmed.iter_mut().for_each(|c| *c = true);
         core.request_sync(ctx, rightful);
         for g in 0..self.mu.len() {
             self.mu[g].reset_in_flight();
@@ -538,12 +609,20 @@ impl StrongPath {
             core.complete_client(ctx, p.client, p.arrival, done);
             return;
         }
-        // Re-forward to the current leader view after a beat.
+        // Re-forward to the current leader view after a beat. Sharded
+        // placements route by the op's group (the failure plane keeps
+        // `group_leaders` current); single placement refreshes the
+        // smallest-live-ID view.
         let request_id = self.next_request_id;
         self.next_request_id += 1;
         self.pending_fwd.insert(request_id, p);
-        let leader = mb.elect_leader();
-        core.leader = leader;
+        let leader = if core.placement.is_sharded() {
+            core.leader_for_op(&p.op)
+        } else {
+            let l = mb.elect_leader();
+            core.leader = l;
+            l
+        };
         let op = p.op;
         if leader == core.id {
             let pc = self.pending_fwd.remove(&request_id).unwrap();
@@ -566,20 +645,33 @@ impl StrongPath {
     }
 
     /// Recovery: re-issue committed entries to a returned follower (§3).
+    /// Under sharded placements a replica is only authoritative for the
+    /// groups it leads, so the replay is gated per group; single placement
+    /// replays everything (callers gate on leadership).
     fn replay_log_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId) {
+        let sharded = core.placement.is_sharded();
         for g in 0..self.logs.len() {
-            let entries = self.logs[g].entries_from(0);
-            for (slot, e) in entries {
-                let tok = core.token(TokenCtx::Ignore);
-                let payload = Payload::LogAppend { group: g as u8, slot, proposal: e.proposal, op: e.op };
-                let verb = if self.prop_con == PropagationMode::WriteThrough {
-                    Verb::rpc_write_through(payload, tok)
-                } else {
-                    Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
-                };
-                ctx.metrics.verbs += 1;
-                ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, false);
+            if sharded && !core.is_leader_of(g) {
+                continue;
             }
+            self.replay_group_to(core, ctx, g, peer);
+        }
+    }
+
+    /// Re-issue one group's committed entries to a peer (idempotent:
+    /// followers reject equal/lower proposals and skip applied slots).
+    fn replay_group_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, g: usize, peer: NodeId) {
+        let entries = self.logs[g].entries_from(0);
+        for (slot, e) in entries {
+            let tok = core.token(TokenCtx::Ignore);
+            let payload = Payload::LogAppend { group: g as u8, slot, proposal: e.proposal, op: e.op };
+            let verb = if self.prop_con == PropagationMode::WriteThrough {
+                Verb::rpc_write_through(payload, tok)
+            } else {
+                Verb::write(MemKind::Hbm, payload, tok).on_leader_qp()
+            };
+            ctx.metrics.verbs += 1;
+            ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, peer, verb, false);
         }
     }
 
@@ -590,6 +682,7 @@ impl StrongPath {
         &mut self,
         core: &mut ReplicaCore,
         ctx: &mut Ctx,
+        s: usize,
         peer: NodeId,
         term: u64,
         start: u64,
@@ -600,11 +693,12 @@ impl StrongPath {
         } else {
             core.landing_mem_for_peer()
         };
+        let group = s as u8;
         let tok = core.token(TokenCtx::Ignore);
         let payload = if ops.len() == 1 {
-            Payload::RaftAppend { term, index: start, op: ops[0] }
+            Payload::RaftAppend { group, term, index: start, op: ops[0] }
         } else {
-            Payload::RaftAppendBatch { term, start_index: start, ops: ops.into() }
+            Payload::RaftAppendBatch { group, term, start_index: start, ops: ops.into() }
         };
         ctx.metrics.verbs += 1;
         let verb = Verb::write(mem, payload, tok).on_leader_qp();
@@ -616,22 +710,26 @@ impl StrongPath {
     /// overwrite-accept (idempotent) and ack each chunk's last index, so a
     /// chunk that completes the in-flight batch still counts toward its
     /// quorum.
-    fn raft_replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, peer: NodeId, from_index: u64) {
-        let entries = match self.logs.first() {
+    fn raft_replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, peer: NodeId, from_index: u64) {
+        let entries = match self.logs.get(s) {
             Some(l) => l.entries_from(from_index),
             None => return,
         };
         if entries.is_empty() {
             return;
         }
-        let term = self.raft_leader.as_ref().map(|l| l.term).unwrap_or(self.raft_follower.term);
+        let term = self.raft[s]
+            .leader
+            .as_ref()
+            .map(|l| l.term)
+            .unwrap_or(self.raft[s].follower.term);
         let first = entries[0].0;
         let ops: Vec<OpCall> = entries.into_iter().map(|(_, e)| e.op).collect();
         let step = self.batch.max(1);
         let mut start = 0usize;
         while start < ops.len() {
             let end = (start + step).min(ops.len());
-            self.raft_send_to(core, ctx, peer, term, first + start as u64, ops[start..end].to_vec());
+            self.raft_send_to(core, ctx, s, peer, term, first + start as u64, ops[start..end].to_vec());
             start = end;
         }
     }
@@ -639,11 +737,16 @@ impl StrongPath {
     /// Follower side of a gap: tell the leader where our log ends so it
     /// backfills (classic Raft nextIndex back-up, collapsed to one step —
     /// gaps only open when fault injection eats an append).
-    fn raft_reject(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, leader: NodeId, term: u64) {
+    fn raft_reject(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, leader: NodeId, term: u64) {
         let tok = core.token(TokenCtx::Ignore);
         let verb = Verb::write(
             core.landing_mem_for_peer(),
-            Payload::RaftRejected { term, from: core.id, log_len: self.raft_follower.log_len() },
+            Payload::RaftRejected {
+                group: s as u8,
+                term,
+                from: core.id,
+                log_len: self.raft[s].follower.log_len(),
+            },
             tok,
         );
         ctx.metrics.verbs += 1;
@@ -691,7 +794,9 @@ impl StrongPath {
     }
 
     fn waverunner_submit(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, op: OpCall, req: Requester) {
-        if self.raft_leader.is_none() {
+        // Waverunner pins placement = single (validated), so shard 0 is
+        // the whole pipeline.
+        if self.raft[0].leader.is_none() {
             // Not the Raft leader, and Waverunner models no leader election
             // (§5.2 runs fault-free; smallest-live-ID is a documented
             // shortcut that never re-homes the RaftLeader). Every stranded
@@ -717,13 +822,13 @@ impl StrongPath {
         core.occupy(ctx.q.now(), cost);
         core.executions += 1;
         core.plane.apply(&op);
-        let rl = self.raft_leader.as_mut().unwrap();
+        let rl = self.raft[0].leader.as_mut().unwrap();
         let term = rl.term;
         let (index, fanout) = rl.submit(op);
-        self.raft_mirror_append(index, term, &[op]);
-        self.raft_pending.insert(index, req);
+        self.raft_mirror_append(0, index, term, &[op]);
+        self.raft[0].pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
-            self.raft_fan_out(core, ctx, mb, term, start, ops);
+            self.raft_fan_out(core, ctx, mb, 0, term, start, ops);
         }
     }
 
@@ -732,9 +837,9 @@ impl StrongPath {
     /// locally-rejected applies, so followers re-run the same `apply`
     /// decisions); the stand-alone backend ships only leader-accepted ops,
     /// which followers execute unconditionally like Mu's log drain.
-    fn raft_follower_apply(&mut self, core: &mut ReplicaCore) {
+    fn raft_follower_apply(&mut self, core: &mut ReplicaCore, s: usize) {
         let forced = core.system != SystemKind::Waverunner;
-        for o in self.raft_follower.drain_apply() {
+        for o in self.raft[s].follower.drain_apply() {
             if forced {
                 core.executions += 1;
                 core.plane.apply_forced(&o);
@@ -744,18 +849,18 @@ impl StrongPath {
         }
     }
 
-    fn raft_ack(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, src: NodeId, term: u64, index: u64) {
+    fn raft_ack(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, src: NodeId, term: u64, index: u64) {
         let tok = core.token(TokenCtx::Ignore);
         let ack = Verb::write(
             core.landing_mem_for_peer(),
-            Payload::RaftAck { term, index, from: core.id },
+            Payload::RaftAck { group: s as u8, term, index, from: core.id },
             tok,
         );
         ctx.metrics.verbs += 1;
         ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, ack, false);
     }
 
-    fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, term: u64, start: u64, ops: Vec<OpCall>) {
+    fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize, term: u64, start: u64, ops: Vec<OpCall>) {
         // The logical ack is the RaftAck verb, not a wire completion.
         let peers = mb.live_peers(core.id);
         let mem = if core.system == SystemKind::Waverunner {
@@ -763,12 +868,16 @@ impl StrongPath {
         } else {
             core.landing_mem_for_peer()
         };
+        let group = s as u8;
         if ops.len() == 1 {
             let op = ops[0];
             core.fan_out(
                 ctx,
                 &peers,
-                |t| Verb::write(mem, Payload::RaftAppend { term, index: start, op }, t).on_leader_qp(),
+                |t| {
+                    Verb::write(mem, Payload::RaftAppend { group, term, index: start, op }, t)
+                        .on_leader_qp()
+                },
                 false,
                 || TokenCtx::Ignore,
             );
@@ -784,7 +893,7 @@ impl StrongPath {
                 |t| {
                     Verb::write(
                         mem,
-                        Payload::RaftAppendBatch { term, start_index: start, ops: ops.clone() },
+                        Payload::RaftAppendBatch { group, term, start_index: start, ops: ops.clone() },
                         t,
                     )
                     .on_leader_qp()
@@ -814,13 +923,15 @@ impl ReplicationPath for StrongPath {
         }
         // Chaos mode: the Raft pipeline's logical acks can be eaten by
         // lossy links, so every replica arms the re-pump tick (it only
-        // acts while this replica leads).
+        // acts while this replica leads) — one per shard.
         if self.chaos && self.backend == ConsensusBackend::Raft {
-            ctx.q.push(
-                base + core.heartbeat_period_ns,
-                core.id,
-                EventKind::Timer(TimerKind::SmrTick(0)),
-            );
+            for s in 0..self.raft.len() {
+                ctx.q.push(
+                    base + core.heartbeat_period_ns + s as u64,
+                    core.id,
+                    EventKind::Timer(TimerKind::SmrTick(s as u8)),
+                );
+            }
         }
     }
 
@@ -852,7 +963,7 @@ impl ReplicationPath for StrongPath {
         if core.system != SystemKind::Waverunner {
             return false;
         }
-        if self.raft_leader.is_none() {
+        if self.raft[0].leader.is_none() {
             self.waverunner_redirect(core, ctx, client, item, arrival);
         } else {
             self.waverunner_serve(core, ctx, mb, client, item, arrival);
@@ -904,7 +1015,7 @@ impl ReplicationPath for StrongPath {
                     } else {
                         self.waverunner_submit(core, ctx, mb, op, Requester::Remote { reply_to, request_id });
                     }
-                } else if core.is_leader() {
+                } else if core.leads_op(&op) {
                     let sw = core.exec().software_overhead_ns;
                     core.occupy(ctx.q.now(), sw);
                     // Chaos-mode exactly-once: a duplicate of an op we
@@ -937,56 +1048,67 @@ impl ReplicationPath for StrongPath {
                     }
                 }
             }
-            Payload::RaftAppend { term, index, op } => {
-                if self.raft_follower.on_append(term, index, op) {
-                    self.raft_mirror_append(index, term, &[op]);
-                    self.raft_follower_apply(core);
-                    self.raft_ack(core, ctx, src, term, index);
-                } else if term >= self.raft_follower.term && index > self.raft_follower.log_len() {
-                    self.raft_reject(core, ctx, src, term);
+            Payload::RaftAppend { group, term, index, op } => {
+                let s = self.sidx(group as usize);
+                if self.raft[s].follower.on_append(term, index, op) {
+                    self.raft_mirror_append(s, index, term, &[op]);
+                    self.raft_follower_apply(core, s);
+                    self.raft_ack(core, ctx, s, src, term, index);
+                } else if term >= self.raft[s].follower.term
+                    && index > self.raft[s].follower.log_len()
+                {
+                    self.raft_reject(core, ctx, s, src, term);
                 }
             }
-            Payload::RaftAppendBatch { term, start_index, ops } => {
-                if self.raft_follower.on_append_batch(term, start_index, &ops) {
-                    self.raft_mirror_append(start_index, term, &ops);
-                    self.raft_follower_apply(core);
+            Payload::RaftAppendBatch { group, term, start_index, ops } => {
+                let s = self.sidx(group as usize);
+                if self.raft[s].follower.on_append_batch(term, start_index, &ops) {
+                    self.raft_mirror_append(s, start_index, term, &ops);
+                    self.raft_follower_apply(core, s);
                     // One ack for the whole batch, on its last index (an
                     // empty batch is a lease probe — ack its start).
                     let last = start_index + (ops.len() as u64).max(1) - 1;
-                    self.raft_ack(core, ctx, src, term, last);
-                } else if term >= self.raft_follower.term
-                    && start_index > self.raft_follower.log_len()
+                    self.raft_ack(core, ctx, s, src, term, last);
+                } else if term >= self.raft[s].follower.term
+                    && start_index > self.raft[s].follower.log_len()
                 {
-                    self.raft_reject(core, ctx, src, term);
+                    self.raft_reject(core, ctx, s, src, term);
                 }
             }
-            Payload::RaftRejected { term, from, log_len } => {
+            Payload::RaftRejected { group, term, from, log_len } => {
                 // A follower told us where its log ends (fault injection
                 // ate an append): backfill from the mirrored log. The gap
                 // report also proves it accepted our term — a lease vote.
-                self.raft_lease_vote(core, ctx, mb, term, from);
-                let current = self.raft_leader.as_ref().is_some_and(|rl| rl.term == term);
+                let s = self.sidx(group as usize);
+                self.raft_lease_vote(core, ctx, mb, s, term, from);
+                let current = self.raft[s].leader.as_ref().is_some_and(|rl| rl.term == term);
                 if current {
-                    self.raft_replay_to(core, ctx, from, log_len);
+                    self.raft_replay_to(core, ctx, s, from, log_len);
                 }
             }
             Payload::SyncRequest { from } => {
                 // A follower completed its permission switch toward us and
                 // wants the committed log (our takeover broadcast may have
-                // been fenced at it). Idempotent on both backends.
-                if core.is_leader() {
+                // been fenced at it). Idempotent on both backends; sharded
+                // placements replay only the groups this replica leads.
+                if core.leads_any() {
                     if self.backend == ConsensusBackend::Raft {
-                        self.raft_replay_to(core, ctx, from, 0);
+                        for s in 0..self.raft.len() {
+                            if core.is_leader_of(s) {
+                                self.raft_replay_to(core, ctx, s, from, 0);
+                            }
+                        }
                     } else {
                         self.replay_log_to(core, ctx, from);
                     }
                 }
             }
-            Payload::RaftAck { term, index, from } => {
+            Payload::RaftAck { group, term, index, from } => {
                 // A current-term ack is also a lease vote for a freshly
                 // promoted leader (the follower accepted our authority).
-                self.raft_lease_vote(core, ctx, mb, term, from);
-                if let Some(rl) = self.raft_leader.as_mut() {
+                let s = self.sidx(group as usize);
+                self.raft_lease_vote(core, ctx, mb, s, term, from);
+                if let Some(rl) = self.raft[s].leader.as_mut() {
                     if let RaftStep::Commit { start_index, ops } = rl.on_ack(term, index, from) {
                         // Leader state was updated at submit; commit point
                         // is the quorum ack.
@@ -998,7 +1120,7 @@ impl ReplicationPath for StrongPath {
                             }
                         }
                         for i in 0..ops.len() as u64 {
-                            if let Some(req) = self.raft_pending.remove(&(start_index + i)) {
+                            if let Some(req) = self.raft[s].pending.remove(&(start_index + i)) {
                                 match req {
                                     Requester::Local { client, arrival } => {
                                         let t = core.occupy(done, core.exec().client_overhead_ns / 2);
@@ -1010,8 +1132,8 @@ impl ReplicationPath for StrongPath {
                                 }
                             }
                         }
-                        if let Some((term, start, ops)) = self.raft_leader.as_mut().unwrap().pump() {
-                            self.raft_fan_out(core, ctx, mb, term, start, ops);
+                        if let Some((term, start, ops)) = self.raft[s].leader.as_mut().unwrap().pump() {
+                            self.raft_fan_out(core, ctx, mb, s, term, start, ops);
                         }
                     }
                 }
@@ -1075,25 +1197,33 @@ impl ReplicationPath for StrongPath {
                     // An unleased leader instead re-runs its campaign — or
                     // abdicates once a smaller live node is back in view
                     // (the partition healed and it was a minority imposter).
-                    if core.is_leader() {
-                        if !self.raft_lease && self.raft_leader.is_some() {
-                            let rightful = mb.elect_leader();
-                            if rightful != core.id {
-                                self.raft_abdicate(core, ctx, rightful);
+                    // Sharded placements skip the abdication arm: the
+                    // smallest-live-ID view is not group-aware, so the
+                    // campaign just retries until its followers switch.
+                    let s = self.sidx(g as usize);
+                    if core.is_leader_of(s) {
+                        if !self.raft[s].lease && self.raft[s].leader.is_some() {
+                            if core.placement.is_sharded() {
+                                self.raft_campaign(core, ctx, mb, s);
                             } else {
-                                self.raft_campaign(core, ctx, mb);
+                                let rightful = mb.elect_leader();
+                                if rightful != core.id {
+                                    self.raft_abdicate(core, ctx, s, rightful);
+                                } else {
+                                    self.raft_campaign(core, ctx, mb, s);
+                                }
                             }
-                        } else if let Some(rl) = self.raft_leader.as_mut() {
+                        } else if let Some(rl) = self.raft[s].leader.as_mut() {
                             rl.set_cluster_size(mb.live_set().len());
                             if let Some((term, start, ops)) = rl.refanout() {
-                                self.raft_fan_out(core, ctx, mb, term, start, ops);
+                                self.raft_fan_out(core, ctx, mb, s, term, start, ops);
                             }
                         }
                     }
                     // Re-arm: permanently in chaos mode, and as a one-shot
                     // chain while a lease campaign is still out (probes can
                     // be fenced at followers that have not switched yet).
-                    let campaigning = !self.raft_lease && self.raft_leader.is_some();
+                    let campaigning = !self.raft[s].lease && self.raft[s].leader.is_some();
                     if (self.chaos || campaigning) && !ctx.draining {
                         ctx.q.push(
                             ctx.q.now() + core.heartbeat_period_ns,
@@ -1104,7 +1234,7 @@ impl ReplicationPath for StrongPath {
                     return;
                 }
                 let g = g as usize;
-                if core.is_leader() {
+                if core.is_leader_of(g) {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                     let slot = self.logs[g].next_free_slot();
                     if let Some(round) = self.mu[g].pump(slot) {
@@ -1145,24 +1275,33 @@ impl ReplicationPath for StrongPath {
                 for g in 0..self.mu.len() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                 }
-                if let Some(rl) = self.raft_leader.as_mut() {
-                    rl.set_cluster_size(mb.live_set().len());
+                for s in 0..self.raft.len() {
+                    if let Some(rl) = self.raft[s].leader.as_mut() {
+                        rl.set_cluster_size(mb.live_set().len());
+                    }
                 }
             }
             MembershipEvent::PeerRecovered { peer } => {
                 if self.backend == ConsensusBackend::Raft {
                     // Term-bumped replay of the mirrored Raft log: the
                     // returned follower overwrite-accepts and applies the
-                    // tail its snapshot predates.
-                    self.raft_replay_to(core, ctx, peer, 0);
+                    // tail its snapshot predates. Sharded placements replay
+                    // only the shards this replica leads.
+                    for s in 0..self.raft.len() {
+                        if core.is_leader_of(s) {
+                            self.raft_replay_to(core, ctx, s, peer, 0);
+                        }
+                    }
                 } else {
                     self.replay_log_to(core, ctx, peer);
                 }
                 for g in 0..self.mu.len() {
                     self.mu[g].set_cluster_size(mb.live_set().len());
                 }
-                if let Some(rl) = self.raft_leader.as_mut() {
-                    rl.set_cluster_size(mb.live_set().len());
+                for s in 0..self.raft.len() {
+                    if let Some(rl) = self.raft[s].leader.as_mut() {
+                        rl.set_cluster_size(mb.live_set().len());
+                    }
                 }
             }
             MembershipEvent::LeaderSwitched => {
@@ -1173,9 +1312,11 @@ impl ReplicationPath for StrongPath {
                         // Stand-alone Raft takeover: adopt the accepted log
                         // at a higher term and re-replicate it as the lease
                         // campaign (followers overwrite-accept higher
-                        // terms; their acks double as lease votes).
-                        if core.system != SystemKind::Waverunner && self.raft_leader.is_none() {
-                            self.ensure_raft_leader(core, ctx, mb);
+                        // terms; their acks double as lease votes). This
+                        // event only fires under placement = single, where
+                        // shard 0 is the whole pipeline.
+                        if core.system != SystemKind::Waverunner && self.raft[0].leader.is_none() {
+                            self.ensure_raft_leader(core, ctx, mb, 0);
                         }
                     } else {
                         // Take over: re-replicate our log suffix first — the
@@ -1187,7 +1328,7 @@ impl ReplicationPath for StrongPath {
                         // Prepare phase is Mu's leadership confirmation:
                         // until a WriteProposal round reaches quorum this
                         // leadership is provisional (see mu_confirmed).
-                        self.mu_confirmed = false;
+                        self.mu_confirmed.iter_mut().for_each(|c| *c = false);
                         let peers = mb.live_peers(core.id);
                         for peer in peers {
                             self.replay_log_to(core, ctx, peer);
@@ -1202,6 +1343,63 @@ impl ReplicationPath for StrongPath {
                     }
                 }
                 // Any of our forwards pending at the dead leader: retry now.
+                let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
+                for (_, p) in pending {
+                    self.retry_forward(core, ctx, mb, p);
+                }
+            }
+            MembershipEvent::GroupLeadersChanged => {
+                // Sharded placements only: the failure plane re-placed the
+                // dead node's groups and updated `core.group_leaders`. Diff
+                // against our last-acted view to find the groups this
+                // replica just gained, and take each one over exactly like
+                // a LeaderSwitched would — Mu re-replicates the group's log
+                // suffix and pumps (confirmation pending), Raft promotes
+                // the shard and runs its lease campaign.
+                let live = mb.live_set().len();
+                for g in 0..self.mu.len() {
+                    self.mu[g].set_cluster_size(live);
+                }
+                for s in 0..self.raft.len() {
+                    if let Some(rl) = self.raft[s].leader.as_mut() {
+                        rl.set_cluster_size(live);
+                    }
+                }
+                let mut gained = false;
+                for g in 0..self.led.len() {
+                    let mine = core.is_leader_of(g);
+                    let was = self.led[g];
+                    self.led[g] = mine;
+                    if !mine || was {
+                        continue;
+                    }
+                    gained = true;
+                    if self.backend == ConsensusBackend::Raft {
+                        let s = self.sidx(g);
+                        if self.raft[s].leader.is_none() {
+                            self.ensure_raft_leader(core, ctx, mb, s);
+                        }
+                    } else {
+                        let c = self.cidx(g);
+                        self.mu_confirmed[c] = false;
+                        for peer in mb.live_peers(core.id) {
+                            self.replay_group_to(core, ctx, g, peer);
+                        }
+                        let slot = self.logs[g].next_free_slot();
+                        if let Some(round) = self.mu[g].pump(slot) {
+                            self.fan_out_round(core, ctx, mb, g, round);
+                        }
+                    }
+                }
+                if gained {
+                    // One election per replica gaining ≥1 group: the
+                    // takeover campaigns for all gained groups run
+                    // concurrently from the same detection.
+                    ctx.metrics.elections += 1;
+                    ctx.metrics.election_times.push(ctx.q.now());
+                }
+                // Forwards pending at the dead (or re-placed) leader: the
+                // per-op group routing re-resolves against the new table.
                 let pending: Vec<(u64, PendingClient)> = self.pending_fwd.drain().collect();
                 for (_, p) in pending {
                     self.retry_forward(core, ctx, mb, p);
@@ -1224,28 +1422,35 @@ impl ReplicationPath for StrongPath {
 
     fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
         self.logs = logs;
+        // A freshly recovered replica leads nothing until the placement
+        // table reassigns groups to it (sticky rebalance), so its
+        // last-acted leadership view resets — any group it later regains
+        // runs a full takeover.
+        self.led.iter_mut().for_each(|l| *l = false);
         if self.backend != ConsensusBackend::Raft {
             return;
         }
-        // Raft recovery parity with Mu/Paxos: rebuild the follower
-        // automaton from the donor's mirrored log. The installed plane
-        // already contains every mirrored entry's effect, so the rebuilt
-        // log starts fully applied; the leader's replay covers anything
-        // committed after the snapshot point.
-        let entries = self.logs.first().map(|l| l.entries_from(0)).unwrap_or_default();
-        let term = entries.iter().map(|(_, e)| e.proposal).max().unwrap_or(1);
-        let ops: Vec<OpCall> = entries.into_iter().map(|(_, e)| e.op).collect();
-        self.raft_follower = RaftFollower::restore(term, ops);
-        if self.system != SystemKind::Waverunner {
-            // A recovered ex-leader rejoins as a follower (the donor's
-            // leader view installs with the snapshot); stale pipeline
-            // state must not answer ghosts of pre-crash requests.
-            self.raft_leader = None;
+        // Raft recovery parity with Mu/Paxos: rebuild each shard's
+        // follower automaton from the donor's mirrored log. The installed
+        // plane already contains every mirrored entry's effect, so the
+        // rebuilt log starts fully applied; the leaders' replays cover
+        // anything committed after the snapshot point.
+        for s in 0..self.raft.len() {
+            let entries = self.logs.get(s).map(|l| l.entries_from(0)).unwrap_or_default();
+            let term = entries.iter().map(|(_, e)| e.proposal).max().unwrap_or(1);
+            let ops: Vec<OpCall> = entries.into_iter().map(|(_, e)| e.op).collect();
+            self.raft[s].follower = RaftFollower::restore(term, ops);
+            if self.system != SystemKind::Waverunner {
+                // A recovered ex-leader rejoins as a follower (the donor's
+                // leader view installs with the snapshot); stale pipeline
+                // state must not answer ghosts of pre-crash requests.
+                self.raft[s].leader = None;
+            }
+            self.raft[s].pending = FastMap::default();
+            self.raft[s].lease = true;
+            self.raft[s].votes = FastMap::default();
+            self.raft[s].parked.clear();
         }
-        self.raft_pending = FastMap::default();
-        self.raft_lease = true;
-        self.raft_votes = FastMap::default();
-        self.raft_parked.clear();
     }
 
     fn replay_to(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, peer: NodeId) {
@@ -1254,21 +1459,29 @@ impl ReplicationPath for StrongPath {
         // the leader re-ships its committed log. Idempotent on every
         // backend: proposal-guarded slots (Mu) / overwrite-accept (Raft).
         if self.backend == ConsensusBackend::Raft {
-            self.raft_replay_to(core, ctx, peer, 0);
+            let single = self.raft.len() == 1;
+            for s in 0..self.raft.len() {
+                if single || core.is_leader_of(s) {
+                    self.raft_replay_to(core, ctx, s, peer, 0);
+                }
+            }
         } else {
             self.replay_log_to(core, ctx, peer);
         }
     }
 
     fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
-        if !core.is_leader() {
+        // Single placement only: sharded leadership has no cluster-wide
+        // rightful leader to abdicate to (chaos schedules that mix
+        // partitions with sharded placements are rejected at validation).
+        if core.placement.is_sharded() || !core.is_leader() {
             return;
         }
         if self.backend == ConsensusBackend::Raft {
-            if !self.raft_lease && self.raft_leader.is_some() {
-                self.raft_abdicate(core, ctx, rightful);
+            if !self.raft[0].lease && self.raft[0].leader.is_some() {
+                self.raft_abdicate(core, ctx, 0, rightful);
             }
-        } else if !self.mu_confirmed {
+        } else if !self.mu_confirmed[0] {
             self.mu_abdicate(core, ctx, rightful);
         }
     }
@@ -1276,13 +1489,16 @@ impl ReplicationPath for StrongPath {
     fn debug_status(&self) -> String {
         let mu_q: usize = self.mu.iter().map(|m| m.queue_len()).sum();
         let mu_idle: Vec<bool> = self.mu.iter().map(|m| m.is_idle()).collect();
+        let raft_pending: usize = self.raft.iter().map(|s| s.pending.len()).sum();
+        let raft_parked: usize = self.raft.iter().map(|s| s.parked.len()).sum();
+        let raft_unleased: usize = self.raft.iter().filter(|s| !s.lease).count();
         format!(
-            "pending_fwd={} requesters={} raft_pending={} raft_lease={} raft_parked={} mu_q={} mu_idle={:?}",
+            "pending_fwd={} requesters={} raft_pending={} raft_unleased={} raft_parked={} mu_q={} mu_idle={:?}",
             self.pending_fwd.len(),
             self.requesters.len(),
-            self.raft_pending.len(),
-            self.raft_lease,
-            self.raft_parked.len(),
+            raft_pending,
+            raft_unleased,
+            raft_parked,
             mu_q,
             mu_idle
         )

@@ -37,6 +37,10 @@ pub struct BenchCell {
     pub backend: &'static str,
     pub batch: u32,
     pub objects: &'static str,
+    /// Leadership placement the cell ran under (the pinned grid is all
+    /// `single`; recorded so sharded cells can join the grid later without
+    /// a schema bump).
+    pub placement: &'static str,
     pub ops: u64,
     /// Simulator events processed — deterministic for a fixed seed.
     pub events: u64,
@@ -106,6 +110,7 @@ pub fn bench_cells(quick: bool, threads: usize) -> Vec<BenchCell> {
                 backend,
                 batch,
                 objects,
+                placement: "single",
                 ops: bench_ops(quick),
                 events,
                 wall_s,
@@ -148,6 +153,7 @@ pub fn to_json(cells: &[BenchCell], quick: bool, provisional: bool) -> Json {
             o.set("backend", c.backend.into());
             o.set("batch", Json::Num(c.batch as f64));
             o.set("objects", c.objects.into());
+            o.set("placement", c.placement.into());
             o.set("ops", c.ops.into());
             o.set("events", c.events.into());
             o.set("wall_s", c.wall_s.into());
@@ -221,6 +227,7 @@ mod tests {
             backend: "mu",
             batch: 1,
             objects: "account",
+            placement: "single",
             ops: 8000,
             events: 123456,
             wall_s: 0.25,
@@ -231,6 +238,7 @@ mod tests {
         let s = to_json(&cells, true, true).render();
         assert!(s.contains(r#""schema":"safardb-bench-v1""#));
         assert!(s.contains(r#""provisional":true"#));
+        assert!(s.contains(r#""placement":"single""#));
         assert!(s.contains(r#""id":"mu_b1_account""#));
         assert!(s.contains(r#""digest":"00000000deadbeef""#));
     }

@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::{ConsensusBackend, SimConfig};
+use crate::config::{ConsensusBackend, LeaderPlacement, SimConfig};
 use crate::engine::cluster::{self, RunReport};
 use crate::util::table::Table;
 
@@ -87,6 +87,26 @@ pub fn backend_filter() -> Option<ConsensusBackend> {
     match BACKEND.load(Ordering::SeqCst) {
         0 => None,
         i => Some(ConsensusBackend::ALL[i - 1]),
+    }
+}
+
+/// Leadership-placement restriction for placement-aware sweeps (the CLI's
+/// `--placement single|hash|round_robin|load_aware` knob; 0 = unset, the
+/// sweep's own default axis).
+static PLACEMENT: AtomicUsize = AtomicUsize::new(0);
+
+/// Restrict placement-aware sweeps (currently `expt scaleout`) to one
+/// leadership placement — the CI matrix runs sharded smoke legs this way.
+pub fn set_placement_filter(p: LeaderPlacement) {
+    let idx = LeaderPlacement::ALL.iter().position(|&x| x == p).expect("known placement");
+    PLACEMENT.store(idx + 1, Ordering::SeqCst);
+}
+
+/// The configured placement restriction, if any.
+pub fn placement_filter() -> Option<LeaderPlacement> {
+    match PLACEMENT.load(Ordering::SeqCst) {
+        0 => None,
+        i => Some(LeaderPlacement::ALL[i - 1]),
     }
 }
 

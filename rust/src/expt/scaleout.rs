@@ -1,19 +1,27 @@
 //! Scale-out — the multi-object catalog sweep: object count × consensus
-//! backend × cluster size, the ROADMAP's sharding step ("millions of
-//! users" = many objects, not one hot counter). Homogeneous Account
-//! catalogs (`account:N`, one sync group per object, so Mu runs N round
-//! pipelines while Raft/Paxos tag one total log) scale N ∈ {1, 4, 16, 64};
-//! a `mixed` multi-tenant cell per backend exercises heterogeneous
-//! routing. Zipfian object selection (θ = 0.6) keeps some objects hotter
-//! than others, like real tenants.
+//! backend × cluster size × leadership placement, the ROADMAP's sharding
+//! step ("millions of users" = many objects, not one hot counter).
+//! Homogeneous Account catalogs (`account:N`, one sync group per object,
+//! so Mu runs N round pipelines while Raft/Paxos tag one total log) scale
+//! N ∈ {1, 4, 16, 64}; a `mixed` multi-tenant cell per backend exercises
+//! heterogeneous routing. Zipfian object selection (θ = 0.6) keeps some
+//! objects hotter than others, like real tenants.
+//!
+//! The placement axis (`--placement`, default `single` + `hash` on full
+//! sweeps) is the multi-leader acceptance sweep: with `hash`, each sync
+//! group's leader is rendezvous-placed across the cluster, so strong-path
+//! throughput scales with nodes instead of serializing on one leader. The
+//! pinned acceptance cell is `account:16` at `nodes=5` (Raft and Paxos):
+//! `hash` ≥ 1.5× `single` throughput, recorded in the CSV artifact.
 //!
 //! Per-object telemetry rides along: applied-op min/max/total across
-//! objects shows the skew, rejected totals show invariant pressure. The
-//! CI smoke leg (`expt scaleout --quick --threads 2 --backend ...`) runs
-//! one backend per matrix job.
+//! objects shows the skew, rejected totals show invariant pressure, and
+//! `groups_led` ("a/b/c" per node) shows the placement spread. The CI
+//! smoke legs (`expt scaleout --quick --threads 2 --backend ...`, plus a
+//! `--placement hash` leg per backend) run one backend per matrix job.
 
-use crate::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
-use crate::expt::common::{backend_filter, f3, run_cells_tagged};
+use crate::config::{CatalogSpec, ConsensusBackend, LeaderPlacement, SimConfig, WorkloadKind};
+use crate::expt::common::{backend_filter, f3, placement_filter, run_cells_tagged};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -26,16 +34,24 @@ pub fn run(quick: bool) -> Vec<Table> {
         Some(b) => vec![b],
         None => ConsensusBackend::ALL.to_vec(),
     };
+    let placements: Vec<LeaderPlacement> = match placement_filter() {
+        Some(p) => vec![p],
+        // Quick sweeps stay single-placement (the CI hash legs opt in via
+        // --placement); full sweeps carry the acceptance comparison.
+        None if quick => vec![LeaderPlacement::Single],
+        None => vec![LeaderPlacement::Single, LeaderPlacement::Hash],
+    };
     let objects: &[u32] = if quick { OBJECT_SWEEP_QUICK } else { OBJECT_SWEEP };
     let nodes: &[usize] = if quick { &[3] } else { &[3, 5] };
     let ops: u64 = if quick { 8_000 } else { 24_000 };
 
     let mut t = Table::new(
-        "Scale-out — objects × backend × nodes (Account catalog + mixed, 25% updates)",
+        "Scale-out — objects × backend × nodes × placement (Account catalog + mixed, 25% updates)",
         &[
             "catalog",
             "objects",
             "backend",
+            "placement",
             "nodes",
             "rt_us",
             "tput_ops_us",
@@ -44,42 +60,51 @@ pub fn run(quick: bool) -> Vec<Table> {
             "obj_applied_max",
             "obj_applied_total",
             "obj_rejected_total",
+            "groups_led",
         ],
     );
     let mut jobs = Vec::new();
-    for (bi, &backend) in backends.iter().enumerate() {
-        for (oi, &n_obj) in objects.iter().enumerate() {
+    for &placement in &placements {
+        for (bi, &backend) in backends.iter().enumerate() {
+            for (oi, &n_obj) in objects.iter().enumerate() {
+                for &n in nodes {
+                    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                    cfg.objects = CatalogSpec::parse(&format!("account:{n_obj}"))
+                        .expect("homogeneous spec parses");
+                    cfg.objects.zipf_theta = 0.6;
+                    cfg.backend = backend;
+                    cfg.placement = placement;
+                    cfg.n_replicas = n;
+                    cfg.update_pct = 25;
+                    // Seed depends only on the workload axes, so the
+                    // single/hash pair of a cell runs the same op stream.
+                    cfg.seed = 0x5CA1_E000 + (bi as u64) * 0x1000 + (oi as u64) * 0x10 + n as u64;
+                    jobs.push(((format!("account:{n_obj}"), backend, placement, n), (cfg, ops)));
+                }
+            }
+            // One heterogeneous multi-tenant cell per backend.
             for &n in nodes {
                 let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
-                cfg.objects = CatalogSpec::parse(&format!("account:{n_obj}"))
-                    .expect("homogeneous spec parses");
+                cfg.objects = CatalogSpec::mixed();
                 cfg.objects.zipf_theta = 0.6;
                 cfg.backend = backend;
+                cfg.placement = placement;
                 cfg.n_replicas = n;
                 cfg.update_pct = 25;
-                cfg.seed = 0x5CA1_E000 + (bi as u64) * 0x1000 + (oi as u64) * 0x10 + n as u64;
-                jobs.push(((format!("account:{n_obj}"), backend, n), (cfg, ops)));
+                cfg.seed = 0x5CA1_F000 + (bi as u64) * 0x1000 + n as u64;
+                jobs.push((("mixed".to_string(), backend, placement, n), (cfg, ops)));
             }
         }
-        // One heterogeneous multi-tenant cell per backend.
-        for &n in nodes {
-            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
-            cfg.objects = CatalogSpec::mixed();
-            cfg.objects.zipf_theta = 0.6;
-            cfg.backend = backend;
-            cfg.n_replicas = n;
-            cfg.update_pct = 25;
-            cfg.seed = 0x5CA1_F000 + (bi as u64) * 0x1000 + n as u64;
-            jobs.push((("mixed".to_string(), backend, n), (cfg, ops)));
-        }
     }
-    for ((catalog, backend, n), cell, rep) in run_cells_tagged(jobs) {
+    for ((catalog, backend, placement, n), cell, rep) in run_cells_tagged(jobs) {
         let applied = &rep.metrics.obj_applied;
         let rejected = &rep.metrics.obj_rejected;
+        let groups_led: Vec<String> = rep.groups_led.iter().map(|g| g.to_string()).collect();
         t.row(vec![
             catalog,
             applied.len().to_string(),
             backend.name().into(),
+            placement.name().into(),
             n.to_string(),
             f3(cell.rt_us),
             f3(cell.tput),
@@ -88,6 +113,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             applied.iter().max().copied().unwrap_or(0).to_string(),
             applied.iter().sum::<u64>().to_string(),
             rejected.iter().sum::<u64>().to_string(),
+            groups_led.join("/"),
         ]);
     }
     vec![t]
@@ -96,6 +122,7 @@ pub fn run(quick: bool) -> Vec<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::expt::common::run_cell;
 
     #[test]
     fn quick_sweep_scales_objects_with_telemetry() {
@@ -105,23 +132,61 @@ mod tests {
             Some(_) => 1,
             None => ConsensusBackend::ALL.len(),
         };
+        let placements = match placement_filter() {
+            Some(_) => 1,
+            None => 1, // quick default: single only
+        };
         // (|OBJECT_SWEEP_QUICK| homogeneous + 1 mixed) × 1 node count.
-        assert_eq!(t.rows().len(), backends * (OBJECT_SWEEP_QUICK.len() + 1));
+        assert_eq!(t.rows().len(), backends * placements * (OBJECT_SWEEP_QUICK.len() + 1));
         for row in t.rows() {
             let objects: usize = row[1].parse().unwrap();
-            let applied_total: u64 = row[9].parse().unwrap();
+            let applied_total: u64 = row[10].parse().unwrap();
             assert!(objects >= 1);
             assert!(applied_total > 0, "catalog saw traffic: {row:?}");
             if row[0] == "mixed" {
                 assert_eq!(objects, CatalogSpec::mixed().n_objects());
             }
-            let min: u64 = row[7].parse().unwrap();
-            let max: u64 = row[8].parse().unwrap();
+            let min: u64 = row[8].parse().unwrap();
+            let max: u64 = row[9].parse().unwrap();
             assert!(min <= max);
             if objects > 1 {
                 // Zipf-skewed selection: the hottest object leads.
                 assert!(max > min, "skewed traffic across objects: {row:?}");
             }
+            // groups_led is one slash-joined count per node and sums to
+            // the catalog's group total under any placement.
+            let led: Vec<u64> = row[12].split('/').map(|s| s.parse().unwrap()).collect();
+            let nodes: usize = row[4].parse().unwrap();
+            assert_eq!(led.len(), nodes, "one groups_led entry per node: {row:?}");
+            assert!(led.iter().sum::<u64>() >= 1, "every group has a leader: {row:?}");
+        }
+    }
+
+    /// Soft perf guard for the acceptance cell (`account:16`, n=5): hash
+    /// placement must at least be in the same league as single. The
+    /// ≥ 1.5× acceptance figure is recorded by the full sweep's CSV
+    /// artifact, not asserted here (test-sized runs are noisier).
+    #[test]
+    fn hash_placement_holds_throughput_on_acceptance_cell() {
+        for backend in [ConsensusBackend::Raft, ConsensusBackend::Paxos] {
+            let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+            cfg.objects = CatalogSpec::parse("account:16").unwrap();
+            cfg.objects.zipf_theta = 0.6;
+            cfg.backend = backend;
+            cfg.n_replicas = 5;
+            cfg.update_pct = 25;
+            cfg.seed = 0x5CA1_ACCE;
+            let mut hash_cfg = cfg.clone();
+            hash_cfg.placement = LeaderPlacement::Hash;
+            let (single, _) = run_cell(cfg, 8_000);
+            let (hash, _) = run_cell(hash_cfg, 8_000);
+            assert!(
+                hash.tput >= 0.8 * single.tput,
+                "{}: hash placement lost throughput: hash={} single={}",
+                backend.name(),
+                hash.tput,
+                single.tput
+            );
         }
     }
 }

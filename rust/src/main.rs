@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! safardb expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]
+//!                       [--placement single|hash|round_robin|load_aware]
 //!                                                 reproduce a paper table/figure
 //! safardb list                                    list experiment ids
 //! safardb run [config.kv] [k=v ...]               run one cluster config, print report
@@ -15,7 +16,7 @@
 //! `SAFARDB_THREADS` environment variable, or all available cores, in that
 //! order); tables are bit-identical for any thread count.
 
-use safardb::config::{ConsensusBackend, SimConfig, WorkloadKind};
+use safardb::config::{ConsensusBackend, LeaderPlacement, SimConfig, WorkloadKind};
 use safardb::engine::cluster;
 use safardb::expt;
 use safardb::rdt::RdtKind;
@@ -36,6 +37,7 @@ fn main() {
         _ => {
             eprintln!("usage: safardb <expt|list|run|bench-compare|runtime-check> [...]");
             eprintln!("  expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]");
+            eprintln!("                [--placement single|hash|round_robin|load_aware]");
             eprintln!("                           reproduce a paper table/figure (see `safardb list`)");
             eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
             eprintln!("  bench-compare <baseline.json> <current.json>");
@@ -62,12 +64,30 @@ fn cmd_expt(args: &[String]) -> i32 {
     let mut quick = false;
     let mut threads: Option<usize> = None;
     let mut backend: Option<ConsensusBackend> = None;
+    let mut placement: Option<LeaderPlacement> = None;
     let mut ids: Vec<&str> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let a = args[i].as_str();
         if a == "--quick" {
             quick = true;
+        } else if a == "--placement" {
+            i += 1;
+            let Some(v) = args.get(i) else {
+                eprintln!("--placement requires a value (single|hash|round_robin|load_aware)");
+                return 2;
+            };
+            let Some(p) = LeaderPlacement::parse(v) else {
+                eprintln!("bad --placement value '{v}' (want single|hash|round_robin|load_aware)");
+                return 2;
+            };
+            placement = Some(p);
+        } else if let Some(v) = a.strip_prefix("--placement=") {
+            let Some(p) = LeaderPlacement::parse(v) else {
+                eprintln!("bad --placement value '{v}' (want single|hash|round_robin|load_aware)");
+                return 2;
+            };
+            placement = Some(p);
         } else if a == "--backend" {
             i += 1;
             let Some(v) = args.get(i) else {
@@ -131,6 +151,21 @@ fn cmd_expt(args: &[String]) -> i32 {
         expt::common::set_backend_filter(b);
         eprintln!("[backend filter: {}]", b.name());
     }
+    if let Some(p) = placement {
+        // Only the placement-aware sweep consults the filter; accepting it
+        // elsewhere would silently emit unfiltered CSVs.
+        let ids_for_check: Vec<&str> = if ids.is_empty() || ids == ["all"] {
+            expt::ALL.to_vec()
+        } else {
+            ids.clone()
+        };
+        if ids_for_check.iter().any(|id| !matches!(expt::canonical(id), Some("scaleout"))) {
+            eprintln!("--placement only applies to `expt scaleout`");
+            return 2;
+        }
+        expt::common::set_placement_filter(p);
+        eprintln!("[placement filter: {}]", p.name());
+    }
     eprintln!("[sweep executor: {} worker thread(s)]", expt::common::configured_threads());
     let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
         expt::ALL.to_vec()
@@ -152,8 +187,14 @@ fn cmd_expt(args: &[String]) -> i32 {
         for t in &tables {
             println!("{}", t.render());
         }
-        expt::common::save(&tables, canon);
-        println!("[saved results/{canon}*.csv]\n");
+        // A placement-filtered scaleout run saves under a suffixed id so
+        // the CI matrix's single and hash legs upload distinct CSVs.
+        let save_id = match expt::common::placement_filter() {
+            Some(p) if canon == "scaleout" => format!("{canon}_{}", p.name()),
+            _ => canon.to_string(),
+        };
+        expt::common::save(&tables, &save_id);
+        println!("[saved results/{save_id}*.csv]\n");
     }
     0
 }

@@ -57,6 +57,31 @@ impl QpTable {
         self.open(dst, new_leader);
     }
 
+    /// Sharded boot state: each replica grants leader-write permission to
+    /// every per-group leader (`leaders[g]` = leader of global sync group
+    /// `g`). Collapses to [`QpTable::leader_fenced`] when every group maps
+    /// to the same node.
+    pub fn leaders_fenced(n: usize, leaders: &[NodeId]) -> Self {
+        let mut t = QpTable { n, open: vec![vec![false; n]; n] };
+        for dst in 0..n {
+            for &l in leaders {
+                t.open(dst, l);
+            }
+            t.open(dst, dst); // self-writes are local, never fenced
+        }
+        t
+    }
+
+    /// Sharded permission switch at `dst`: rebuild `dst`'s grant row so
+    /// exactly the current per-group leaders (plus `dst` itself) may
+    /// leader-write. One table rebuild per placement change, however many
+    /// groups moved.
+    pub fn refence(&mut self, dst: NodeId, leaders: &[NodeId]) {
+        for src in 0..self.n {
+            self.open[dst][src] = src == dst || leaders.contains(&src);
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }
@@ -91,6 +116,43 @@ mod tests {
         t.switch_leader(2, 0, 1);
         assert!(!t.is_open(0, 2), "old leader fenced");
         assert!(t.is_open(1, 2), "new leader granted");
+    }
+
+    #[test]
+    fn leaders_fenced_grants_every_group_leader() {
+        // Groups 0..4 led by nodes 0, 2, 0, 2 — only 0 and 2 (and self) open.
+        let t = QpTable::leaders_fenced(4, &[0, 2, 0, 2]);
+        for dst in 0..4 {
+            assert!(t.is_open(0, dst));
+            assert!(t.is_open(2, dst));
+            assert_eq!(t.is_open(1, dst), dst == 1, "non-leader 1 fenced at {dst}");
+            assert_eq!(t.is_open(3, dst), dst == 3, "non-leader 3 fenced at {dst}");
+        }
+    }
+
+    #[test]
+    fn leaders_fenced_single_leader_matches_leader_fenced() {
+        let a = QpTable::leaders_fenced(4, &[1, 1, 1]);
+        let b = QpTable::leader_fenced(4, 1);
+        for src in 0..4 {
+            for dst in 0..4 {
+                assert_eq!(a.is_open(src, dst), b.is_open(src, dst), "{src}->{dst}");
+            }
+        }
+    }
+
+    #[test]
+    fn refence_rebuilds_one_row_only() {
+        let mut t = QpTable::leaders_fenced(4, &[0, 0]);
+        t.refence(2, &[0, 3]);
+        // Row 2 now admits 0, 3, and self.
+        assert!(t.is_open(0, 2));
+        assert!(t.is_open(3, 2));
+        assert!(t.is_open(2, 2));
+        assert!(!t.is_open(1, 2));
+        // Other rows untouched: 3 still fenced at dst 1.
+        assert!(!t.is_open(3, 1));
+        assert!(t.is_open(0, 1));
     }
 
     #[test]

@@ -84,25 +84,28 @@ pub enum Payload {
     ReadReq { target: ReadTarget },
     /// Read response delivered back to the initiator.
     ReadResp { target: ReadTarget, data: ReadData },
-    /// Raft (Waverunner baseline): AppendEntries carrying one op.
-    RaftAppend { term: u64, index: u64, op: OpCall },
+    /// Raft (Waverunner baseline): AppendEntries carrying one op. `group`
+    /// selects the per-group Raft instance under sharded placement (always
+    /// 0 in single-leader mode; rides the header padding, so it adds no
+    /// wire bytes — same for every group tag below).
+    RaftAppend { group: u8, term: u64, index: u64, op: OpCall },
     /// Raft leader-side log-entry batching: one AppendEntries carrying a
     /// contiguous run of entries starting at `start_index`.
-    RaftAppendBatch { term: u64, start_index: u64, ops: OpBatch },
+    RaftAppendBatch { group: u8, term: u64, start_index: u64, ops: OpBatch },
     /// Raft follower ack.
-    RaftAck { term: u64, index: u64, from: NodeId },
+    RaftAck { group: u8, term: u64, index: u64, from: NodeId },
     /// Raft follower gap report (classic nextIndex back-up, one step):
     /// fault injection ate an append, so the follower names its log end
     /// and the leader backfills from there. Never sent on a clean fabric.
-    RaftRejected { term: u64, from: NodeId, log_len: u64 },
+    RaftRejected { group: u8, term: u64, from: NodeId, log_len: u64 },
     /// APUS-style Paxos: leader's one-sided write of a contiguous batch of
     /// log entries into a follower's landing region. The ACK is the write
     /// completion itself (doorbell) — no logical ack verb exists.
-    PaxosAppend { ballot: u64, start_slot: u64, ops: OpBatch },
+    PaxosAppend { group: u8, ballot: u64, start_slot: u64, ops: OpBatch },
     /// Paxos leadership replay: the new leader rewrites its entire log
     /// (possibly empty) at `ballot`; the follower's landing region becomes
     /// an exact mirror (entries beyond the replayed length truncate).
-    PaxosReplay { ballot: u64, ops: OpBatch },
+    PaxosReplay { group: u8, ballot: u64, ops: OpBatch },
     /// Client redirect (Waverunner: follower rejects, client re-sends).
     ClientRedirect { request_id: u64 },
     /// Follower -> new leader, sent right after the follower's permission
@@ -297,6 +300,24 @@ mod tests {
     }
 
     #[test]
+    fn group_tags_ride_header_padding() {
+        // The sharded strong plane tags Raft/Paxos payloads with their
+        // global sync group; the tag fits the header padding, so wire
+        // sizes (and therefore all serialization delays) are unchanged
+        // from the single-leader protocol.
+        let op = OpCall::new(0, 1, 2, 0.5);
+        assert_eq!(Payload::RaftAck { group: 9, term: 1, index: 0, from: 1 }.wire_bytes(), 24);
+        assert_eq!(
+            Payload::RaftAppend { group: 3, term: 1, index: 0, op }.wire_bytes(),
+            op.wire_bytes() + 24
+        );
+        assert_eq!(
+            Payload::PaxosReplay { group: 5, ballot: 1, ops: vec![op].into() }.wire_bytes(),
+            op.wire_bytes() + 16
+        );
+    }
+
+    #[test]
     fn payload_plane_routing_is_total() {
         let op = OpCall::new(0, 1, 2, 0.5);
         let cases: Vec<(Payload, PayloadPlane)> = vec![
@@ -311,18 +332,26 @@ mod tests {
             (Payload::LogAppend { group: 0, slot: 0, proposal: 1, op }, PayloadPlane::Strong),
             (Payload::LeaderForward { op, reply_to: 1, request_id: 2 }, PayloadPlane::Strong),
             (Payload::LeaderReply { request_id: 2, handled: true, committed: true }, PayloadPlane::Strong),
-            (Payload::RaftAppend { term: 1, index: 0, op }, PayloadPlane::Strong),
+            (Payload::RaftAppend { group: 0, term: 1, index: 0, op }, PayloadPlane::Strong),
             (
-                Payload::RaftAppendBatch { term: 1, start_index: 0, ops: vec![op, op].into() },
+                Payload::RaftAppendBatch {
+                    group: 0,
+                    term: 1,
+                    start_index: 0,
+                    ops: vec![op, op].into(),
+                },
                 PayloadPlane::Strong,
             ),
-            (Payload::RaftAck { term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
-            (Payload::RaftRejected { term: 1, from: 2, log_len: 3 }, PayloadPlane::Strong),
+            (Payload::RaftAck { group: 0, term: 1, index: 0, from: 1 }, PayloadPlane::Strong),
             (
-                Payload::PaxosAppend { ballot: 1, start_slot: 0, ops: vec![op].into() },
+                Payload::RaftRejected { group: 0, term: 1, from: 2, log_len: 3 },
                 PayloadPlane::Strong,
             ),
-            (Payload::PaxosReplay { ballot: 2, ops: vec![].into() }, PayloadPlane::Strong),
+            (
+                Payload::PaxosAppend { group: 0, ballot: 1, start_slot: 0, ops: vec![op].into() },
+                PayloadPlane::Strong,
+            ),
+            (Payload::PaxosReplay { group: 0, ballot: 2, ops: vec![].into() }, PayloadPlane::Strong),
             (Payload::ReadReq { target: ReadTarget::Heartbeat }, PayloadPlane::OneSidedRead),
             (
                 Payload::ReadResp { target: ReadTarget::Heartbeat, data: ReadData::Heartbeat(1) },

@@ -1,5 +1,6 @@
 //! Leader Switch Plane (§4.4): heartbeat tracking, crash detection, and
-//! smallest-live-ID leader election.
+//! smallest-live-ID leader election — plus the sharded-placement table
+//! that generalizes "the leader" to one leader per global sync group.
 //!
 //! Each replica keeps an RDMA-exposed heartbeat counter it increments
 //! periodically; its Heartbeat Scanner RDMA-reads every other replica's
@@ -7,7 +8,14 @@
 //! replica failed; a counter that moves again marks it recovered. If the
 //! failed replica was the leader, the new leader is the smallest live ID
 //! and every live replica performs a Permission Switch (Fig 13).
+//!
+//! Under `placement != single`, [`PlacementTable`] replaces the single
+//! election rule: every replica evolves an identical per-group leader
+//! assignment from the initial deterministic placement plus the sequence
+//! of observed crashes (reassigning only the dead node's groups), so no
+//! coordination is needed to agree on who leads what.
 
+use crate::config::LeaderPlacement;
 use crate::sim::NodeId;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -96,6 +104,149 @@ impl HeartbeatTracker {
     }
 }
 
+/// Deterministic per-group leadership assignment for sharded placement
+/// policies.
+///
+/// The table is a pure function of `(policy, group count, n, observed
+/// crash sequence)`: it starts from the boot-time assignment over all `n`
+/// nodes and, on each observed crash, reassigns *only the groups the dead
+/// node led* among the live set. Recovery is sticky — a returning node
+/// rejoins as a follower of its former groups and regains load only
+/// through later crash-time reassignment (`load_aware`) — which is what
+/// prevents the rejoin-reclaims-leadership bug class: a recovered
+/// ex-leader must never believe it still leads.
+#[derive(Clone, Debug)]
+pub struct PlacementTable {
+    policy: LeaderPlacement,
+    n: usize,
+    leaders: Vec<NodeId>,
+}
+
+/// SplitMix64 finalizer — the rendezvous-hash weight for (group, node).
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl PlacementTable {
+    /// Boot-time assignment over the full (all-live) cluster. `Single`
+    /// pins every group to the classic initial leader so the table stays
+    /// consistent with the unsharded code path.
+    pub fn new(policy: LeaderPlacement, groups: usize, n: usize) -> Self {
+        let groups = groups.max(1);
+        let mut leaders = vec![crate::smr::raft::initial_leader(); groups];
+        match policy {
+            LeaderPlacement::Single => {}
+            LeaderPlacement::Hash => {
+                let all: Vec<NodeId> = (0..n).collect();
+                for (g, l) in leaders.iter_mut().enumerate() {
+                    *l = Self::rendezvous(g, &all);
+                }
+            }
+            LeaderPlacement::RoundRobin => {
+                for (g, l) in leaders.iter_mut().enumerate() {
+                    *l = g % n;
+                }
+            }
+            LeaderPlacement::LoadAware => {
+                // Greedy least-loaded with smallest-id ties: over an
+                // all-live boot set this fills nodes 0..n round-robin,
+                // but diverges from `RoundRobin` as soon as crashes skew
+                // the load.
+                let mut load = vec![0usize; n];
+                for l in leaders.iter_mut() {
+                    let pick = Self::least_loaded(&load, &(0..n).collect::<Vec<_>>());
+                    load[pick] += 1;
+                    *l = pick;
+                }
+            }
+        }
+        PlacementTable { policy, n, leaders }
+    }
+
+    /// Highest-random-weight choice of a live node for `group`.
+    fn rendezvous(group: usize, live: &[NodeId]) -> NodeId {
+        *live
+            .iter()
+            .max_by_key(|&&node| (mix64(((group as u64) << 32) ^ node as u64), usize::MAX - node))
+            .expect("live set is never empty")
+    }
+
+    /// Smallest-id node among `live` with minimal current load.
+    fn least_loaded(load: &[usize], live: &[NodeId]) -> NodeId {
+        *live.iter().min_by_key(|&&node| (load[node], node)).expect("live set is never empty")
+    }
+
+    pub fn policy(&self) -> LeaderPlacement {
+        self.policy
+    }
+
+    /// Current per-group leader view.
+    pub fn leaders(&self) -> &[NodeId] {
+        &self.leaders
+    }
+
+    pub fn leader_of(&self, group: usize) -> NodeId {
+        self.leaders[group]
+    }
+
+    /// Number of groups each node currently leads (len = cluster size).
+    pub fn groups_led(&self) -> Vec<u64> {
+        let mut led = vec![0u64; self.n];
+        for &l in &self.leaders {
+            led[l] += 1;
+        }
+        led
+    }
+
+    /// Install a donor's evolved view (snapshot install on recovery): the
+    /// recovering replica missed the crash observations that drove the
+    /// donor's reassignments.
+    pub fn install(&mut self, leaders: &[NodeId]) {
+        debug_assert_eq!(leaders.len(), self.leaders.len());
+        self.leaders.clear();
+        self.leaders.extend_from_slice(leaders);
+    }
+
+    /// Observed crash of `dead`: reassign only the groups it led, among
+    /// `live` (which must exclude `dead`). Returns the reassigned
+    /// `(group, new leader)` pairs, in group order. Recovery is sticky —
+    /// there is deliberately no inverse of this.
+    pub fn on_crash(&mut self, dead: NodeId, live: &[NodeId]) -> Vec<(usize, NodeId)> {
+        debug_assert!(!live.contains(&dead));
+        debug_assert!(!live.is_empty());
+        let mut changed = Vec::new();
+        // Current load over live nodes (for load_aware), before any moves.
+        let mut load = vec![0usize; self.n];
+        for &l in &self.leaders {
+            if l != dead {
+                load[l] += 1;
+            }
+        }
+        for g in 0..self.leaders.len() {
+            if self.leaders[g] != dead {
+                continue;
+            }
+            let new = match self.policy {
+                // Single keeps the classic rule: smallest live id.
+                LeaderPlacement::Single => *live.iter().min().expect("nonempty"),
+                LeaderPlacement::Hash => Self::rendezvous(g, live),
+                LeaderPlacement::RoundRobin => live[g % live.len()],
+                LeaderPlacement::LoadAware => {
+                    let pick = Self::least_loaded(&load, live);
+                    load[pick] += 1;
+                    pick
+                }
+            };
+            self.leaders[g] = new;
+            changed.push((g, new));
+        }
+        changed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +296,90 @@ mod tests {
         t.observe(0, 9);
         assert_eq!(t.observe_timeout(0), HbVerdict::Alive);
         assert_eq!(t.observe_timeout(0), HbVerdict::JustFailed);
+    }
+
+    #[test]
+    fn placement_single_pins_the_initial_leader() {
+        let t = PlacementTable::new(LeaderPlacement::Single, 7, 5);
+        assert!(t.leaders().iter().all(|&l| l == crate::smr::raft::initial_leader()));
+        assert_eq!(t.groups_led()[0], 7);
+    }
+
+    #[test]
+    fn sharded_policies_spread_groups_across_nodes() {
+        for policy in [LeaderPlacement::Hash, LeaderPlacement::RoundRobin, LeaderPlacement::LoadAware]
+        {
+            let t = PlacementTable::new(policy, 16, 5);
+            let led = t.groups_led();
+            assert_eq!(led.iter().sum::<u64>(), 16);
+            let leading = led.iter().filter(|&&c| c > 0).count();
+            assert!(
+                leading >= 4,
+                "{}: 16 groups over 5 nodes must engage most nodes: {led:?}",
+                policy.name()
+            );
+            if policy != LeaderPlacement::Hash {
+                // The deterministic spreaders are perfectly balanced.
+                assert!(led.iter().all(|&c| (3..=4).contains(&c)), "{}: {led:?}", policy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn crash_reassigns_only_the_dead_nodes_groups() {
+        for policy in [LeaderPlacement::Hash, LeaderPlacement::RoundRobin, LeaderPlacement::LoadAware]
+        {
+            let mut t = PlacementTable::new(policy, 16, 5);
+            let before = t.leaders().to_vec();
+            let dead = before[0];
+            let live: Vec<NodeId> = (0..5).filter(|&x| x != dead).collect();
+            let changed = t.on_crash(dead, &live);
+            assert!(!changed.is_empty(), "{}: dead node led groups", policy.name());
+            for (g, l) in &changed {
+                assert_eq!(before[*g], dead);
+                assert_ne!(*l, dead);
+            }
+            for (g, (&b, &a)) in before.iter().zip(t.leaders()).enumerate() {
+                if b != dead {
+                    assert_eq!(b, a, "{}: group {g} moved without cause", policy.name());
+                }
+            }
+            assert!(!t.leaders().contains(&dead), "{}: no orphaned groups", policy.name());
+        }
+    }
+
+    #[test]
+    fn load_aware_rebalances_to_least_loaded_and_stays_sticky() {
+        let mut t = PlacementTable::new(LeaderPlacement::LoadAware, 10, 5);
+        // Crash node 1: its groups land on the least-loaded survivors.
+        let live: Vec<NodeId> = vec![0, 2, 3, 4];
+        t.on_crash(1, &live);
+        let led = t.groups_led();
+        assert_eq!(led[1], 0);
+        assert_eq!(led.iter().sum::<u64>(), 10);
+        assert!(led.iter().enumerate().filter(|&(i, _)| i != 1).all(|(_, &c)| c >= 2), "{led:?}");
+        // Sticky recovery: the table has no recover hook, so node 1 leads
+        // nothing until a later crash reassignment picks it (it is now the
+        // least-loaded live node).
+        let view = t.leaders().to_vec();
+        assert!(!view.contains(&1));
+        let live2: Vec<NodeId> = vec![0, 1, 3, 4];
+        let changed = t.on_crash(2, &live2);
+        assert!(changed.iter().all(|&(_, l)| l == 1), "recovered node is least-loaded: {changed:?}");
+    }
+
+    #[test]
+    fn tables_evolve_identically_from_the_same_observations() {
+        // Replicas never exchange placement state: identical inputs must
+        // yield identical tables.
+        for policy in LeaderPlacement::ALL {
+            let mut a = PlacementTable::new(policy, 12, 6);
+            let mut b = PlacementTable::new(policy, 12, 6);
+            let live: Vec<NodeId> = (0..6).filter(|&x| x != 2).collect();
+            assert_eq!(a.on_crash(2, &live), b.on_crash(2, &live));
+            let live2: Vec<NodeId> = live.iter().copied().filter(|&x| x != 4).collect();
+            assert_eq!(a.on_crash(4, &live2), b.on_crash(4, &live2));
+            assert_eq!(a.leaders(), b.leaders());
+        }
     }
 }

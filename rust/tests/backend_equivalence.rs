@@ -21,7 +21,7 @@
 //!   `prop_summarization_preserves_state` carves out Account), and each
 //!   backend schedules time differently.
 
-use safardb::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
+use safardb::config::{CatalogSpec, ConsensusBackend, LeaderPlacement, SimConfig, WorkloadKind};
 use safardb::engine::cluster::{self, RunReport};
 use safardb::rdt::RdtKind;
 
@@ -179,6 +179,70 @@ fn mixed_catalog_batched_matches_unbatched_across_backends() {
             );
             assert_eq!(base.metrics.rejected, rep.metrics.rejected);
         }
+    }
+}
+
+#[test]
+fn sharded_placement_digests_match_single_on_rejection_proof_catalogs() {
+    // Sharding leadership re-times commits (per-group leaders run
+    // concurrently) but must never change them: with rejections pinned off,
+    // hash placement must land on exactly the single-leader digests and
+    // commit counts, per backend, on both a one-group and a five-group
+    // catalog.
+    for backend in ConsensusBackend::ALL {
+        for (label, mk) in [
+            ("account", rejection_proof_account as fn(u64) -> SimConfig),
+            ("mixed", rejection_proof_mixed_catalog as fn(u64) -> SimConfig),
+        ] {
+            for seed in [0x5AAD_0001u64, 0x5AAD_0002] {
+                let single = run_backend(mk(seed), backend);
+                let mut cfg = mk(seed);
+                cfg.placement = LeaderPlacement::Hash;
+                let sharded = run_backend(cfg, backend);
+                assert!(sharded.converged_per_object(), "per-object convergence");
+                assert_eq!(
+                    single.object_digests[0],
+                    sharded.object_digests[0],
+                    "{}/{label}: hash placement changed outcomes (seed {seed:#x})",
+                    backend.name()
+                );
+                assert_eq!(
+                    single.metrics.smr_commits,
+                    sharded.metrics.smr_commits,
+                    "{}/{label}: hash placement changed commit count (seed {seed:#x})",
+                    backend.name()
+                );
+                assert_eq!(sharded.metrics.rejected, 0, "workload is rejection-proof");
+                // Telemetry sanity: every group has exactly one leader.
+                assert_eq!(
+                    sharded.groups_led.iter().sum::<u64>() as usize,
+                    sharded.group_leaders.len(),
+                    "{}/{label}: groups_led must partition the groups",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_single_is_bit_identical_to_seed_behavior() {
+    // placement=single is the default and must not perturb anything —
+    // digests, event counts, completions all bit-equal to an explicit
+    // Single run (the config default) on a realistic WRDT mix.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 30;
+    cfg.total_ops = 6_000;
+    cfg.seed = 0x51_0617;
+    for backend in ConsensusBackend::ALL {
+        let a = run_backend(cfg.clone(), backend);
+        let mut explicit = cfg.clone();
+        explicit.placement = LeaderPlacement::Single;
+        let b = run_backend(explicit, backend);
+        assert_eq!(a.digests, b.digests, "{}", backend.name());
+        assert_eq!(a.metrics.events, b.metrics.events, "{}", backend.name());
+        assert_eq!(a.metrics.total_completed(), b.metrics.total_completed());
     }
 }
 

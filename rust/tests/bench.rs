@@ -23,6 +23,7 @@ fn bench_json_document_is_well_formed() {
             "backend",
             "batch",
             "objects",
+            "placement",
             "ops",
             "events",
             "wall_s",
@@ -58,6 +59,11 @@ fn committed_baseline_parses_and_matches_grid() {
     let body = include_str!("data/BENCH_engine.json");
     let doc = Json::parse(body).expect("committed baseline must be valid JSON");
     assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+    assert_eq!(
+        doc.get("provisional").and_then(|p| p.as_bool()),
+        Some(false),
+        "baseline is blessed; bench-compare gates hard"
+    );
     let baseline_ids: Vec<&str> = doc
         .get("cells")
         .and_then(|c| c.as_arr())

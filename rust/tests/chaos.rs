@@ -11,7 +11,10 @@
 //!   bounded by the scan interval × miss threshold (plus one period of
 //!   phase slack and the read round trip).
 
-use safardb::config::{ConsensusBackend, FaultAction, FaultSchedule, SimConfig, WorkloadKind};
+use safardb::config::{
+    CatalogSpec, ConsensusBackend, FaultAction, FaultSchedule, LeaderPlacement, SimConfig,
+    WorkloadKind,
+};
 use safardb::engine::cluster;
 use safardb::prop_assert;
 use safardb::rdt::RdtKind;
@@ -235,6 +238,90 @@ fn mixed_catalog_converges_under_chaos_schedule() {
         );
         assert!(rep.invariants_ok, "{b}: integrity broke");
         assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+    }
+}
+
+fn sharded_cfg(backend: ConsensusBackend, placement: LeaderPlacement) -> SimConfig {
+    let mut cfg = chaos_cfg(backend, RdtKind::Account, 5);
+    cfg.objects = CatalogSpec::parse("account:16").unwrap();
+    cfg.objects.zipf_theta = 0.6;
+    cfg.placement = placement;
+    cfg.total_ops = 8_000;
+    cfg
+}
+
+#[test]
+fn crashing_a_multi_group_leader_reelects_every_group() {
+    // Under hash placement at n=5 with 16 groups, node 0 leads several
+    // groups (rendezvous spread). Crashing it must rebalance *every* group
+    // it led onto survivors — no orphaned groups — with the crash detected
+    // inside the heartbeat bound, and the run still converging.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = sharded_cfg(backend, LeaderPlacement::Hash);
+        cfg.seed = 0x5AFA_541D;
+        cfg.fault = FaultSchedule::parse("crash@40:0").unwrap();
+        let bound = detection_bound(&cfg);
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed[0], "{b}: node 0 stays down");
+        assert_eq!(rep.group_leaders.len(), 16, "{b}: one leader slot per group");
+        assert!(
+            rep.group_leaders.iter().all(|&l| l != 0),
+            "{b}: orphaned groups still led by the dead node: {:?}",
+            rep.group_leaders
+        );
+        assert_eq!(rep.groups_led[0], 0, "{b}: dead node leads nothing");
+        assert_eq!(
+            rep.groups_led.iter().sum::<u64>(),
+            16,
+            "{b}: every group has exactly one leader: {:?}",
+            rep.groups_led
+        );
+        assert!(rep.metrics.elections >= 1, "{b}: takeover counted as an election");
+        let crash = &rep.fault_timeline[0];
+        let d = crash.detect_ns.expect("crash must be detected");
+        assert!(
+            d - crash.injected_ns <= bound,
+            "{b}: detection latency {}ns exceeds bound {bound}ns",
+            d - crash.injected_ns
+        );
+        assert!(rep.converged() && rep.converged_per_object(), "{b}: diverged: {:?}", rep.digests);
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+    }
+}
+
+#[test]
+fn recovered_leader_rejoins_as_follower_under_load_aware() {
+    // Regression guard for the rejoin-reclaims-leadership bug class: under
+    // placement=load_aware, a crashed multi-group leader that recovers
+    // installs the *rebalanced* placement from its snapshot donor and
+    // rejoins as a follower of its former groups — it must not resurrect
+    // its pre-crash leadership (which would split every group's log).
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = sharded_cfg(backend, LeaderPlacement::LoadAware);
+        cfg.seed = 0x5AFA_4E10;
+        cfg.fault = FaultSchedule::parse("crash@35:0,recover@65:0").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(!rep.crashed[0], "{b}: node 0 must be back");
+        assert_eq!(
+            rep.groups_led[0], 0,
+            "{b}: recovered ex-leader reclaimed leadership: {:?}",
+            rep.groups_led
+        );
+        assert_eq!(
+            rep.groups_led.iter().sum::<u64>(),
+            16,
+            "{b}: every group still has exactly one leader: {:?}",
+            rep.groups_led
+        );
+        assert!(
+            rep.converged() && rep.converged_per_object(),
+            "{b}: diverged after rejoin: {:?}\n{}",
+            rep.digests,
+            rep.dumps.join("\n---\n")
+        );
+        assert!(rep.invariants_ok, "{b}: integrity broke");
     }
 }
 
