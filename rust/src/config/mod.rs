@@ -836,19 +836,6 @@ impl SimConfig {
                     .into(),
             );
         }
-        if self.placement.is_sharded()
-            && self
-                .fault
-                .incidents
-                .iter()
-                .any(|i| matches!(i.action, FaultAction::PartitionLinks { .. }))
-        {
-            return Err(
-                "sharded leadership placement has no per-group minority-imposter \
-                 resolution yet; partition faults require placement=single"
-                    .into(),
-            );
-        }
         self.fault.validate(self.n_replicas)?;
         self.objects.validate()?;
         if !self.objects.is_default() && self.hybrid.is_some() {
@@ -1149,11 +1136,13 @@ mod tests {
         w.placement = LeaderPlacement::Hash;
         assert!(w.validate().is_err(), "waverunner pins placement=single");
 
-        // Partition faults have no per-group imposter resolution yet.
+        // Partition faults resolve per group under sharding (per-group
+        // minority-imposter abdication + heal-time realign): the full
+        // chaos vocabulary validates for every placement policy.
         let mut p = SimConfig::safardb(WorkloadKind::Ycsb);
         p.placement = LeaderPlacement::Hash;
         p.fault = FaultSchedule::parse("partition@40:0-2,heal@60").unwrap();
-        assert!(p.validate().is_err(), "sharded + partitions rejected");
+        p.validate().expect("sharded + partition/heal is supported");
         p.fault = FaultSchedule::parse("crash@40:1,recover@70:1").unwrap();
         p.validate().expect("sharded + crash/recover is supported");
     }

@@ -205,11 +205,28 @@ impl Cluster {
             if events > event_cap {
                 let status: Vec<String> =
                     self.replicas.iter().map(|r| r.debug_status()).collect();
+                let done = self.metrics.total_completed();
+                if !cut_links.is_empty() && done < target {
+                    // Not a runaway bug: the schedule cut links and never
+                    // healed them, so clients whose ops route to a leader
+                    // behind the cut retry forever. Name the livelock
+                    // instead of tripping the cap opaquely.
+                    let cuts: Vec<String> =
+                        cut_links.iter().map(|&(a, b)| format!("{a}-{b}")).collect();
+                    panic!(
+                        "no-progress livelock: {done}/{target} ops completed when the event cap tripped, \
+                         with unhealed partition(s) [{}] still cutting the fabric — a leader behind the \
+                         cut can never reach its quorum or its clients; the fault schedule needs a \
+                         `heal@` incident after its last `partition@`\n{}",
+                        cuts.join(", "),
+                        status.join("\n")
+                    );
+                }
                 panic!(
                     "event cap exceeded: {} events for {} ops (completed {})\n{}",
                     events,
                     target,
-                    self.metrics.total_completed(),
+                    done,
                     status.join("\n")
                 );
             }
@@ -246,6 +263,13 @@ impl Cluster {
                                 }
                                 let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, p, draining);
                                 replica.reconcile_relaxed_to(&mut ctx, node, true);
+                                // Receiver-side re-gossip: the node's own
+                                // retry ledger died with the install, so
+                                // an update it had only partially shipped
+                                // before crashing now exists solely at the
+                                // peers that accepted it — they re-ship it
+                                // everywhere (dedup absorbs duplicates).
+                                replica.regossip_from_origin(&mut ctx, node);
                             }
                         }
                     }
@@ -481,18 +505,62 @@ impl Cluster {
                 // whole (the relaxed-plane half of heal-time anti-entropy).
                 self.reconcile_all_parked(draining);
                 if self.cfg.placement.is_sharded() {
-                    // Sharded placements have no single log owner: both
-                    // live endpoints of each cut pair replay the shards
-                    // they lead to each other. (Partition faults are
-                    // rejected at validation for sharded placements; this
-                    // covers heal actions in drop-only schedules.)
-                    for (a, b) in pairs {
-                        for (from, to) in [(a, b), (b, a)] {
-                            if self.replicas[from].crashed() || self.replicas[to].crashed() {
+                    // Sharded placements: a partition leaves its endpoints
+                    // with divergent placement tables — each mis-declared
+                    // the other dead and re-placed the other's groups,
+                    // possibly onto itself (the minority imposter). The
+                    // rightful view is any live replica that was NOT a cut
+                    // endpoint: it saw both sides stay alive, so its table
+                    // is the one the majority's permission fences enforced
+                    // all along.
+                    let n = self.cfg.n_replicas;
+                    let is_endpoint =
+                        |r: NodeId| pairs.iter().any(|&(a, b)| a == r || b == r);
+                    let authority = (0..n)
+                        .find(|&r| !self.replicas[r].crashed() && !is_endpoint(r))
+                        .or_else(|| (0..n).find(|&r| !self.replicas[r].crashed()));
+                    let Some(auth) = authority else { return };
+                    let rightful = self.replicas[auth].group_leaders();
+                    let anchor = self.replicas[auth].leader();
+                    for r in 0..n {
+                        if r == auth || self.replicas[r].crashed() {
+                            continue;
+                        }
+                        if self.replicas[r].group_leaders() != rightful {
+                            self.replicas[r].realign_group_leaders(&rightful, &mut self.qps);
+                        }
+                    }
+                    // Minority imposters next: a campaign that never
+                    // confirmed (fenced at every correct follower) hands
+                    // its shard to the realigned table's rightful leader
+                    // and re-routes whatever it parked — a quiescent
+                    // imposter would otherwise never notice the heal.
+                    for r in 0..n {
+                        if self.replicas[r].crashed() {
+                            continue;
+                        }
+                        let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, r, draining);
+                        replica.abdicate_unconfirmed_leadership(&mut ctx, anchor);
+                    }
+                    // Per-inheriting-leader re-pull: every live replica
+                    // replays the shards it leads to each cut endpoint
+                    // (replay gates per-shard on leadership internally) —
+                    // a group led by a third node may have committed
+                    // rounds an endpoint never saw through the cut.
+                    let mut endpoints: Vec<NodeId> =
+                        pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
+                    endpoints.sort_unstable();
+                    endpoints.dedup();
+                    for &e in &endpoints {
+                        if self.replicas[e].crashed() {
+                            continue;
+                        }
+                        for from in 0..n {
+                            if from == e || self.replicas[from].crashed() {
                                 continue;
                             }
                             let (mut ctx, replica) = split(&mut self.q, &mut self.net, &mut self.qps, &mut self.metrics, &mut self.replicas, from, draining);
-                            replica.replay_strong_to(&mut ctx, to);
+                            replica.replay_strong_to(&mut ctx, e);
                         }
                     }
                     return;

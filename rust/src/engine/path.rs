@@ -216,6 +216,14 @@ pub trait ReplicationPath: Send {
     /// no-op for paths without tracked fan-out.
     fn reconcile_to(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _peer: NodeId, _full: bool) {}
 
+    /// Receiver-side re-gossip (chaos harness): re-ship every remote
+    /// relaxed op this replica accepted that originated at `origin` —
+    /// called when `origin` installs a recovery snapshot, because the
+    /// install wipes the origin's own retry/parked ledgers and a
+    /// partially-propagated update then survives only at its receivers.
+    /// Default no-op for paths without relaxed propagation.
+    fn regossip_origin(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _mb: &dyn Membership, _origin: NodeId) {}
+
     /// Anti-entropy: replay this path's committed log to one peer (leader
     /// side, after a heal or recovery re-included the peer). Default no-op
     /// for paths without a log.
@@ -225,7 +233,9 @@ pub trait ReplicationPath: Send {
     /// self-elected but never confirmed its leadership (no Prepare quorum /
     /// lease), hand leadership to `rightful` and re-route anything parked.
     /// Confirmed leaderships ignore the nudge — a majority already backs
-    /// them. Default no-op.
+    /// them. Sharded placements resolve per shard against the placement
+    /// table (`core.leader_of`, realigned by the cluster before the nudge)
+    /// and ignore `rightful`. Default no-op.
     fn abdicate_if_unconfirmed(&mut self, _core: &mut ReplicaCore, _ctx: &mut Ctx, _mb: &dyn Membership, _rightful: NodeId) {}
 
     /// One-line diagnostic fragment for runaway-loop debugging.

@@ -195,14 +195,25 @@ impl PaxosPath {
         self.try_fan_out(core, ctx, mb, s);
     }
 
-    /// A promoted-but-unleased "leader" learned a smaller live node exists
-    /// (the partition healed; we were the minority imposter). Nothing was
-    /// applied or appended while parked — not even the acceptor promise
-    /// moved, so the rightful leader's writes were never rejected here.
-    /// Abdication is a pure re-route of the parked ops.
+    /// A promoted-but-unleased "leader" learned the rightful leader is
+    /// someone else (the partition healed; we were the minority imposter).
+    /// Nothing was applied or appended while parked — not even the
+    /// acceptor promise moved, so the rightful leader's writes were never
+    /// rejected here. Abdication is a pure re-route of the parked ops.
+    /// Sharded placements hand over one shard (per-group refence keeps
+    /// grants for groups that never moved); single placement switches the
+    /// global leader QP.
     fn paxos_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, rightful: NodeId) {
-        ctx.qps.switch_leader(core.id, core.leader, rightful);
-        core.leader = rightful;
+        if core.placement.is_sharded() {
+            core.group_leaders[s] = rightful;
+            ctx.qps.refence(core.id, &core.group_leaders);
+            if let Some(l) = self.led.get_mut(s) {
+                *l = false;
+            }
+        } else {
+            ctx.qps.switch_leader(core.id, core.leader, rightful);
+            core.leader = rightful;
+        }
         self.shards[s].lease = true; // inert until the next promotion resets it
         // Pull the committed log we may have missed while self-elected.
         core.request_sync(ctx, rightful);
@@ -611,25 +622,25 @@ impl ReplicationPath for PaxosPath {
         match t {
             TimerKind::SmrTick(g) => {
                 let s = self.sidx(g as usize);
-                if core.is_leader_of(s) {
-                    if !self.shards[s].lease {
-                        // Still campaigning: abdicate if the heal brought a
-                        // smaller live node back into view (we were a
-                        // partition-minority imposter), else re-probe.
-                        // Sharded placements never abdicate here — the
-                        // smallest-live-ID view is not group-aware.
-                        if core.placement.is_sharded() {
-                            self.paxos_campaign(core, ctx, mb, s, false);
-                            return;
-                        }
-                        let rightful = mb.elect_leader();
-                        if rightful != core.id {
-                            self.paxos_abdicate(core, ctx, s, rightful);
-                        } else {
-                            self.paxos_campaign(core, ctx, mb, s, false);
-                        }
-                        return;
+                if !self.shards[s].lease {
+                    // Still campaigning: abdicate if the rightful leader is
+                    // someone else (we were a partition-minority imposter —
+                    // under sharding the placement table names the per-group
+                    // rightful leader; single placement uses the smallest
+                    // live ID), else re-probe. The check runs even when the
+                    // table no longer names us: a heal-time realign may
+                    // have re-pointed the group while our campaign was out.
+                    let rightful = if core.placement.is_sharded() {
+                        core.leader_of(s)
+                    } else {
+                        mb.elect_leader()
+                    };
+                    if rightful != core.id {
+                        self.paxos_abdicate(core, ctx, s, rightful);
+                    } else {
+                        self.paxos_campaign(core, ctx, mb, s, false);
                     }
+                } else if core.is_leader_of(s) {
                     self.shards[s].leader_sm.set_cluster_size(mb.live_set().len());
                     self.try_fan_out(core, ctx, mb, s);
                 }
@@ -742,8 +753,18 @@ impl ReplicationPath for PaxosPath {
     }
 
     fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
-        // Single placement only (see engine::strong for the rationale).
         if core.placement.is_sharded() {
+            // Per-shard: a campaign that never confirmed (lease still
+            // unearned) hands its group to the placement-table rightful
+            // leader — the realigned table was installed before this nudge.
+            for s in 0..self.shards.len() {
+                if !self.shards[s].lease {
+                    let r = core.leader_of(s);
+                    if r != core.id {
+                        self.paxos_abdicate(core, ctx, s, r);
+                    }
+                }
+            }
             return;
         }
         if core.is_leader() && !self.shards[0].lease {

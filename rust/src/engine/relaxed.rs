@@ -25,6 +25,16 @@ use crate::util::hasher::FastMap;
 /// so bounding the retry chain never loses the update.
 const RETRY_CAP: u32 = 64;
 
+/// Chaos-mode receiver-side re-gossip ledger bound, *per origin*: the
+/// newest remote relaxed ops this replica accepted from each origin, kept
+/// so a *surviving receiver* can re-ship a crashed origin's partially-
+/// propagated update — the origin's own retry/parked ledger dies with its
+/// snapshot install, so receivers are the only place the update still
+/// exists outside folded state. The bound is per origin because a crashed
+/// origin stops producing: its entries must not be aged out by the live
+/// peers' ongoing traffic before it recovers.
+const RESHIP_CAP: usize = 256;
+
 /// One tracked propagation awaiting its ACK (chaos mode only).
 struct RetryEntry {
     dst: NodeId,
@@ -84,6 +94,10 @@ pub struct RelaxedPath {
     /// snapshot install (the donor knows exactly which ops its state
     /// contains).
     seen: FastMap<(ObjectId, usize, u64), ()>,
+    /// Chaos mode: per-origin FIFO re-gossip ledgers of the last
+    /// [`RESHIP_CAP`] remote relaxed ops this replica accepted from each
+    /// origin (see `regossip_origin`).
+    reship: FastMap<usize, std::collections::VecDeque<OpCall>>,
 }
 
 impl RelaxedPath {
@@ -107,7 +121,25 @@ impl RelaxedPath {
             given_up: Vec::new(),
             next_retry_id: 1,
             seen: FastMap::default(),
+            reship: FastMap::default(),
         }
+    }
+
+    /// Chaos mode: remember an accepted *remote* op for receiver-side
+    /// re-gossip (every caller sits on a delivery/landing-zone drain path,
+    /// which only ever carries remote ops). Bounded FIFO per origin: old
+    /// entries age out — by then the origin's own tracked retries have
+    /// either landed them everywhere or parked them in a surviving
+    /// `given_up` ledger.
+    fn note_reship(&mut self, op: OpCall) {
+        if !self.reliable {
+            return;
+        }
+        let q = self.reship.entry(op.origin).or_default();
+        if q.len() >= RESHIP_CAP {
+            q.pop_front();
+        }
+        q.push_back(op);
     }
 
     /// Chaos-mode at-most-once gate: true when `op` has not been applied
@@ -181,6 +213,7 @@ impl RelaxedPath {
             fresh.clear();
             for op in zone.drain(..) {
                 if self.mark_fresh(&op) {
+                    self.note_reship(op);
                     fresh.push(op);
                 }
             }
@@ -211,6 +244,7 @@ impl RelaxedPath {
             fresh.clear();
             for op in queue.drain(..) {
                 if self.mark_fresh(&op) {
+                    self.note_reship(op);
                     fresh.push(op);
                 }
             }
@@ -451,6 +485,7 @@ impl ReplicationPath for RelaxedPath {
                     let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy(ctx.q.now(), cost);
                     if self.mark_fresh(&value) {
+                        self.note_reship(value);
                         core.apply_remote(&value);
                     }
                 } else {
@@ -463,6 +498,7 @@ impl ReplicationPath for RelaxedPath {
                     let cost = core.exec().op_exec_ns + core.sys.mem.local_write_ns(MemKind::Bram);
                     core.occupy(ctx.q.now(), cost);
                     if self.mark_fresh(&op) {
+                        self.note_reship(op);
                         core.apply_remote(&op);
                     }
                 } else {
@@ -476,6 +512,7 @@ impl ReplicationPath for RelaxedPath {
                     core.occupy_batch(ctx.q.now(), per, values.len());
                     for &v in values.iter() {
                         if self.mark_fresh(&v) {
+                            self.note_reship(v);
                             core.apply_remote(&v);
                         }
                     }
@@ -492,6 +529,7 @@ impl ReplicationPath for RelaxedPath {
                     core.occupy_batch(ctx.q.now(), per, ops.len());
                     for &op in ops.iter() {
                         if self.mark_fresh(&op) {
+                            self.note_reship(op);
                             core.apply_remote(&op);
                         }
                     }
@@ -612,12 +650,15 @@ impl ReplicationPath for RelaxedPath {
     fn clear_landed(&mut self) {
         // Pre-crash local residue (unsent summaries, coalescer outboxes)
         // and in-flight/parked retries die with the snapshot install in
-        // any mode.
+        // any mode. The re-gossip ledger dies too: the installed state is
+        // the donor's, and the survivors' ledgers cover the recovering
+        // node's own originations.
         self.sum_buffer.clear();
         self.out_sum.clear();
         self.out_irr.clear();
         self.retry = FastMap::default();
         self.given_up.clear();
+        self.reship = FastMap::default();
         if self.reliable {
             // Chaos mode keeps the landed-but-unapplied buffers: retried
             // deliveries may have landed just before the install, and the
@@ -684,16 +725,48 @@ impl ReplicationPath for RelaxedPath {
         }
     }
 
+    fn regossip_origin(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, origin: NodeId) {
+        // Receiver-side re-gossip: `origin` just installed a donor
+        // snapshot, which wiped its retry/parked ledgers — an update it
+        // had only partially propagated before crashing now exists solely
+        // at the receivers that accepted it (the donor may not be one of
+        // them). Re-ship every ledger entry that `origin` originated to
+        // *every* peer: the `(object, origin, seq)` dedup ledgers absorb
+        // the duplicates, and the tracked fan-out retries through any
+        // still-faulty links.
+        if !self.reliable {
+            return;
+        }
+        let ops: Vec<OpCall> = self
+            .reship
+            .get(&origin)
+            .map(|q| q.iter().copied().collect())
+            .unwrap_or_default();
+        let mem = core.landing_mem_for_peer();
+        for op in ops {
+            let irr = core.plane.category(op.obj, op.opcode) == Category::Irreducible;
+            self.fan_out_relaxed(core, ctx, mb, |t| {
+                let payload = if irr {
+                    Payload::QueueAppend { op }
+                } else {
+                    Payload::Summary { origin: op.origin, ops: 1, value: op }
+                };
+                Verb::write(mem, payload, t)
+            });
+        }
+    }
+
     fn debug_status(&self) -> String {
         format!(
-            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={} retry={} parked={}",
+            "pend_red={} pend_irr={} sum_buf={} out_sum={} out_irr={} retry={} parked={} reship={}",
             self.pending_reducible.iter().map(Vec::len).sum::<usize>(),
             self.pending_irreducible.iter().map(Vec::len).sum::<usize>(),
             self.sum_buffer.len(),
             self.out_sum.len(),
             self.out_irr.len(),
             self.retry.len(),
-            self.given_up.len()
+            self.given_up.len(),
+            self.reship.values().map(std::collections::VecDeque::len).sum::<usize>()
         )
     }
 }

@@ -428,6 +428,16 @@ impl Replica {
         relaxed.reconcile_to(core, ctx, peer, full);
     }
 
+    /// Receiver-side re-gossip (chaos harness): re-ship the remote relaxed
+    /// ops this replica accepted from `origin` to every peer — called when
+    /// `origin` installs a recovery snapshot, since the install wipes the
+    /// origin's own retry ledger and its partially-propagated updates then
+    /// survive only at their receivers.
+    pub fn regossip_from_origin(&mut self, ctx: &mut Ctx, origin: NodeId) {
+        let Replica { core, relaxed, failure, .. } = self;
+        relaxed.regossip_origin(core, ctx, &*failure, origin);
+    }
+
     /// Heal-time anti-entropy (chaos harness): replay this replica's
     /// strong-path log to a peer the healed partition may have starved.
     /// Called by the cluster on the current leader only.
@@ -439,10 +449,26 @@ impl Replica {
     /// Heal-time imposter nudge (chaos harness): if this replica
     /// self-elected inside a partition minority and never confirmed its
     /// leadership, hand it to `rightful` now (a quiescent imposter has no
-    /// stalled round to trigger abdication on its own).
+    /// stalled round to trigger abdication on its own). Sharded placements
+    /// resolve per group against the (realigned) placement table and
+    /// ignore `rightful`.
     pub fn abdicate_unconfirmed_leadership(&mut self, ctx: &mut Ctx, rightful: NodeId) {
         let Replica { core, strong, failure, .. } = self;
         strong.abdicate_if_unconfirmed(core, ctx, &*failure, rightful);
+    }
+
+    /// Heal-time placement realign (chaos harness, sharded placements): a
+    /// partition leaves its two endpoints with divergent placement tables —
+    /// each mis-declared the other dead and re-placed the other's groups,
+    /// possibly onto itself. The cluster installs the authority view (from
+    /// a replica that saw both sides stay alive, i.e. the view the
+    /// majority's permission fences enforced all along) so the per-group
+    /// abdication nudge below resolves every campaign against the same
+    /// rightful leaders. Refences this replica's own QP row in one pass.
+    pub fn realign_group_leaders(&mut self, leaders: &[NodeId], qps: &mut crate::net::QpTable) {
+        self.failure.install_placement(leaders);
+        self.core.group_leaders = leaders.to_vec();
+        qps.refence(self.core.id, leaders);
     }
 
     /// Diagnostic snapshot for runaway-loop debugging.

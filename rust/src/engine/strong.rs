@@ -344,14 +344,26 @@ impl StrongPath {
         }
     }
 
-    /// A promoted-but-unleased "leader" learned a smaller live node exists
-    /// (typically after a partition heals): it was a minority imposter.
-    /// Nothing was applied or replicated while parked, so abdication is a
-    /// pure re-route: adopt the rightful view, re-fence the QP row, and
-    /// push the parked ops back through the forward path.
+    /// A promoted-but-unleased "leader" learned the rightful leader is
+    /// someone else (typically after a partition heals): it was a
+    /// partition-side imposter. Nothing was applied or replicated while
+    /// parked, so abdication is a pure re-route: adopt the rightful view,
+    /// re-fence the QP row, and push the parked ops back through the
+    /// forward path. Under sharded placement the handover is per group —
+    /// shard `s`'s entry in `group_leaders` adopts `rightful` and the row
+    /// refences against the *full* per-group leader set (a plain
+    /// `switch_leader` would revoke grants for groups that never moved).
     fn raft_abdicate(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, s: usize, rightful: NodeId) {
-        ctx.qps.switch_leader(core.id, core.leader, rightful);
-        core.leader = rightful;
+        if core.placement.is_sharded() {
+            core.group_leaders[s] = rightful;
+            ctx.qps.refence(core.id, &core.group_leaders);
+            if let Some(l) = self.led.get_mut(s) {
+                *l = false;
+            }
+        } else {
+            ctx.qps.switch_leader(core.id, core.leader, rightful);
+            core.leader = rightful;
+        }
         self.raft[s].leader = None;
         self.raft[s].lease = true;
         self.raft[s].votes = FastMap::default();
@@ -525,21 +537,30 @@ impl StrongPath {
                 }
             }
             Step::Stall => {
-                // A stalled round on a never-confirmed leadership, while a
-                // smaller live node exists, means this replica self-elected
-                // inside a partition minority and every correct replica
-                // fences its writes: abdicate. Nothing was applied (Mu
-                // executes only at Accept, past confirmation), so the
+                // A stalled round on a never-confirmed leadership means
+                // this replica self-elected inside a partition minority and
+                // every correct replica fences its writes: abdicate once
+                // the rightful leader is back in view. Nothing was applied
+                // (Mu executes only at Accept, past confirmation), so the
                 // queued ops simply re-route through the forward path.
-                // Sharded placements never abdicate through this path —
-                // the smallest-live-ID view is not group-aware, so a
-                // stalled per-group leader just resets and retries (group
-                // reassignment is the failure plane's job).
-                if !self.mu_confirmed[self.cidx(g)] && !core.placement.is_sharded() {
-                    let rightful = mb.elect_leader();
-                    if rightful != core.id {
-                        self.mu_abdicate(core, ctx, rightful);
-                        return;
+                // Single placement asks the smallest-live-ID rule; sharded
+                // placements ask the per-group view (`core.group_leaders`,
+                // realigned by the cluster when the partition heals) — a
+                // stalled claim whose own table still names this replica
+                // just resets and retries against the fence.
+                if !self.mu_confirmed[self.cidx(g)] {
+                    if core.placement.is_sharded() {
+                        let rightful = core.leader_of(g);
+                        if rightful != core.id {
+                            self.mu_abdicate_group(core, ctx, g, rightful);
+                            return;
+                        }
+                    } else {
+                        let rightful = mb.elect_leader();
+                        if rightful != core.id {
+                            self.mu_abdicate(core, ctx, rightful);
+                            return;
+                        }
                     }
                 }
                 self.mu[g].reset_in_flight();
@@ -572,6 +593,32 @@ impl StrongPath {
                     }
                     None => {}
                 }
+            }
+        }
+    }
+
+    /// Per-group Mu abdication (sharded placements): hand exactly group
+    /// `g` to `rightful`, leaving every other group's leadership — ours
+    /// included — untouched. The QP row refences against the full
+    /// per-group set; queued ops for the group re-route through the
+    /// forward path like the whole-cluster variant.
+    fn mu_abdicate_group(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, g: usize, rightful: NodeId) {
+        core.group_leaders[g] = rightful;
+        ctx.qps.refence(core.id, &core.group_leaders);
+        let c = self.cidx(g);
+        self.mu_confirmed[c] = true; // provisional claim over; next promotion resets
+        if let Some(l) = self.led.get_mut(g) {
+            *l = false;
+        }
+        core.request_sync(ctx, rightful);
+        self.mu[g].reset_in_flight();
+        for op in self.mu[g].take_queue() {
+            match self.requesters.remove(&(op.origin, op.seq)) {
+                Some(req @ Requester::Local { .. }) => self.forward_conflicting(core, ctx, op, req),
+                Some(Requester::Remote { reply_to, request_id }) => {
+                    self.reply_remote(core, ctx, reply_to, request_id, false, false)
+                }
+                None => {}
             }
         }
     }
@@ -1195,25 +1242,26 @@ impl ReplicationPath for StrongPath {
                     // leader periodically re-ships the in-flight batch.
                     // Followers overwrite-accept duplicates and re-ack.
                     // An unleased leader instead re-runs its campaign — or
-                    // abdicates once a smaller live node is back in view
+                    // abdicates once the rightful leader is back in view
                     // (the partition healed and it was a minority imposter).
-                    // Sharded placements skip the abdication arm: the
-                    // smallest-live-ID view is not group-aware, so the
-                    // campaign just retries until its followers switch.
+                    // Single placement asks the smallest-live-ID rule;
+                    // sharded placements ask the per-group view, which the
+                    // cluster realigns at heal time — until then the
+                    // campaign retries against the per-group fence.
                     let s = self.sidx(g as usize);
-                    if core.is_leader_of(s) {
-                        if !self.raft[s].lease && self.raft[s].leader.is_some() {
-                            if core.placement.is_sharded() {
-                                self.raft_campaign(core, ctx, mb, s);
-                            } else {
-                                let rightful = mb.elect_leader();
-                                if rightful != core.id {
-                                    self.raft_abdicate(core, ctx, s, rightful);
-                                } else {
-                                    self.raft_campaign(core, ctx, mb, s);
-                                }
-                            }
-                        } else if let Some(rl) = self.raft[s].leader.as_mut() {
+                    if !self.raft[s].lease && self.raft[s].leader.is_some() {
+                        let rightful = if core.placement.is_sharded() {
+                            core.leader_of(s)
+                        } else {
+                            mb.elect_leader()
+                        };
+                        if rightful != core.id {
+                            self.raft_abdicate(core, ctx, s, rightful);
+                        } else {
+                            self.raft_campaign(core, ctx, mb, s);
+                        }
+                    } else if core.is_leader_of(s) {
+                        if let Some(rl) = self.raft[s].leader.as_mut() {
                             rl.set_cluster_size(mb.live_set().len());
                             if let Some((term, start, ops)) = rl.refanout() {
                                 self.raft_fan_out(core, ctx, mb, s, term, start, ops);
@@ -1471,10 +1519,35 @@ impl ReplicationPath for StrongPath {
     }
 
     fn abdicate_if_unconfirmed(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, _mb: &dyn Membership, rightful: NodeId) {
-        // Single placement only: sharded leadership has no cluster-wide
-        // rightful leader to abdicate to (chaos schedules that mix
-        // partitions with sharded placements are rejected at validation).
-        if core.placement.is_sharded() || !core.is_leader() {
+        if core.placement.is_sharded() {
+            // Per-group nudge: the cluster realigned `core.group_leaders`
+            // to the rightful placement-table view before calling us, so
+            // any never-confirmed claim on a group whose rightful leader is
+            // someone else is a partition-side imposter — hand each such
+            // group over (the `rightful` anchor argument is the
+            // single-placement shape; groups carry their own answer).
+            if self.backend == ConsensusBackend::Raft {
+                for s in 0..self.raft.len() {
+                    if !self.raft[s].lease && self.raft[s].leader.is_some() {
+                        let r = core.leader_of(s);
+                        if r != core.id {
+                            self.raft_abdicate(core, ctx, s, r);
+                        }
+                    }
+                }
+            } else {
+                for g in 0..self.mu.len() {
+                    if !self.mu_confirmed[self.cidx(g)] {
+                        let r = core.leader_of(g);
+                        if r != core.id {
+                            self.mu_abdicate_group(core, ctx, g, r);
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        if !core.is_leader() {
             return;
         }
         if self.backend == ConsensusBackend::Raft {

@@ -8,10 +8,17 @@
 //! otherwise), so this sweep doubles as the chaos acceptance gate: a
 //! leader crash *during* a partition, lossy links, and delay spikes all
 //! terminate in a consistent cluster on every backend. The CI smoke leg
-//! (`expt chaos --quick --threads 2`) runs one schedule per backend.
+//! (`expt chaos --quick --threads 2`) runs one schedule per backend, and a
+//! second leg adds `--placement hash` to run the same schedules over a
+//! 16-group sharded strong plane (partition minorities must abdicate per
+//! group, not per node).
+//!
+//! With `--placement` set the workload switches to a 16-instance Account
+//! catalog (zipf 0.6) so the placement table has real groups to spread;
+//! without it the single-object default exercises the single-leader path.
 
-use crate::config::{ConsensusBackend, FaultSchedule, SimConfig, WorkloadKind};
-use crate::expt::common::{backend_filter, f3, run_cells_tagged};
+use crate::config::{CatalogSpec, ConsensusBackend, FaultSchedule, SimConfig, WorkloadKind};
+use crate::expt::common::{backend_filter, f3, placement_filter, run_cells_tagged};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -65,6 +72,11 @@ pub fn run(quick: bool) -> Vec<Table> {
                 cfg.n_replicas = n;
                 cfg.update_pct = 25;
                 cfg.fault = FaultSchedule::parse(sched).expect("named schedule parses");
+                if let Some(p) = placement_filter() {
+                    cfg.placement = p;
+                    cfg.objects = CatalogSpec::parse("account:16").expect("catalog spec parses");
+                    cfg.objects.zipf_theta = 0.6;
+                }
                 cfg.seed = 0xC4A0_5000 + (si as u64) * 0x101 + (bi as u64) * 0x11 + n as u64;
                 jobs.push(((name, backend, n), (cfg, ops)));
             }

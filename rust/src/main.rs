@@ -159,8 +159,11 @@ fn cmd_expt(args: &[String]) -> i32 {
         } else {
             ids.clone()
         };
-        if ids_for_check.iter().any(|id| !matches!(expt::canonical(id), Some("scaleout"))) {
-            eprintln!("--placement only applies to `expt scaleout`");
+        if ids_for_check
+            .iter()
+            .any(|id| !matches!(expt::canonical(id), Some("scaleout") | Some("chaos")))
+        {
+            eprintln!("--placement only applies to `expt scaleout` and `expt chaos`");
             return 2;
         }
         expt::common::set_placement_filter(p);
@@ -187,10 +190,10 @@ fn cmd_expt(args: &[String]) -> i32 {
         for t in &tables {
             println!("{}", t.render());
         }
-        // A placement-filtered scaleout run saves under a suffixed id so
-        // the CI matrix's single and hash legs upload distinct CSVs.
+        // A placement-filtered scaleout or chaos run saves under a suffixed
+        // id so the CI matrix's single and hash legs upload distinct CSVs.
         let save_id = match expt::common::placement_filter() {
-            Some(p) if canon == "scaleout" => format!("{canon}_{}", p.name()),
+            Some(p) if matches!(canon, "scaleout" | "chaos") => format!("{canon}_{}", p.name()),
             _ => canon.to_string(),
         };
         expt::common::save(&tables, &save_id);

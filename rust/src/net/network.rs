@@ -121,8 +121,10 @@ impl Network {
         // Permission check at the destination QPC. Only the follower's
         // leader-write QP is fenced by the Permission Switch (§4.4);
         // relaxed-path traffic rides per-peer QPs that stay open, and
-        // one-sided reads are answered from memory regardless.
-        let fenced = verb.leader_qp && !qps.is_open(src, dst);
+        // one-sided reads are answered from memory regardless. Under
+        // sharded placement the fence is per group: a node leading group A
+        // is still NACKed when it leader-writes for group B.
+        let fenced = verb.leader_qp && !qps.is_open_for(src, dst, verb.payload.group());
         let partitioned = self.partitioned[src][dst];
 
         if fenced || self.crashed[dst] || partitioned {

@@ -13,13 +13,21 @@ pub struct QpTable {
     n: usize,
     /// `open[dst][src]` — may `src` write into `dst`'s memory?
     open: Vec<Vec<bool>>,
+    /// Sharded placement only: `group_rows[dst]` = the per-group leader
+    /// view `dst` last fenced against (`row[g]` = the one node whose
+    /// leader-writes for group `g` are admitted). `None` under the classic
+    /// single-leader table, where the boolean row is the whole story. With
+    /// rows present, a node leading *some* group is still fenced for
+    /// groups it does not lead — the property that makes partition-
+    /// minority imposters harmless under sharding.
+    group_rows: Vec<Option<Vec<NodeId>>>,
 }
 
 impl QpTable {
     /// All-open mesh (relaxed-path traffic is always permitted; only the
     /// leader-write QPs get fenced).
     pub fn full_mesh(n: usize) -> Self {
-        QpTable { n, open: vec![vec![true; n]; n] }
+        QpTable { n, open: vec![vec![true; n]; n], group_rows: vec![None; n] }
     }
 
     /// Paper-faithful boot state (§4.4): each replica grants leader-write
@@ -29,7 +37,7 @@ impl QpTable {
     /// impossible; the table checks only `leader_qp` verbs, so relaxed
     /// traffic is unaffected.
     pub fn leader_fenced(n: usize, leader: NodeId) -> Self {
-        let mut t = QpTable { n, open: vec![vec![false; n]; n] };
+        let mut t = QpTable { n, open: vec![vec![false; n]; n], group_rows: vec![None; n] };
         for dst in 0..n {
             t.open(dst, leader);
             t.open(dst, dst); // self-writes are local, never fenced
@@ -38,6 +46,19 @@ impl QpTable {
     }
 
     pub fn is_open(&self, src: NodeId, dst: NodeId) -> bool {
+        self.open[dst][src]
+    }
+
+    /// Group-aware permission check: under sharded placement a leader-QP
+    /// write is admitted only when `src` is the leader `dst` fenced for
+    /// that *specific* group (self-writes are local, never fenced). Falls
+    /// back to the boolean row when no per-group row exists (single
+    /// placement) or the payload carries no group tag (forwards, syncs —
+    /// those are not one-sided leader writes).
+    pub fn is_open_for(&self, src: NodeId, dst: NodeId, group: Option<u8>) -> bool {
+        if let (Some(row), Some(g)) = (&self.group_rows[dst], group) {
+            return src == dst || row.get(g as usize).is_some_and(|&l| l == src);
+        }
         self.open[dst][src]
     }
 
@@ -62,7 +83,11 @@ impl QpTable {
     /// `g`). Collapses to [`QpTable::leader_fenced`] when every group maps
     /// to the same node.
     pub fn leaders_fenced(n: usize, leaders: &[NodeId]) -> Self {
-        let mut t = QpTable { n, open: vec![vec![false; n]; n] };
+        let mut t = QpTable {
+            n,
+            open: vec![vec![false; n]; n],
+            group_rows: vec![Some(leaders.to_vec()); n],
+        };
         for dst in 0..n {
             for &l in leaders {
                 t.open(dst, l);
@@ -80,6 +105,7 @@ impl QpTable {
         for src in 0..self.n {
             self.open[dst][src] = src == dst || leaders.contains(&src);
         }
+        self.group_rows[dst] = Some(leaders.to_vec());
     }
 
     pub fn n(&self) -> usize {
@@ -153,6 +179,48 @@ mod tests {
         // Other rows untouched: 3 still fenced at dst 1.
         assert!(!t.is_open(3, 1));
         assert!(t.is_open(0, 1));
+    }
+
+    #[test]
+    fn group_fence_admits_only_that_groups_leader() {
+        // Groups 0..4 led by nodes 0, 2, 0, 2. Node 2 legitimately leads
+        // groups 1 and 3 — but its leader-writes tagged for group 0 must
+        // still bounce: per-group fencing distinguishes "a leader" from
+        // "the leader of this group".
+        let t = QpTable::leaders_fenced(4, &[0, 2, 0, 2]);
+        for dst in 0..4 {
+            assert!(t.is_open_for(2, dst, Some(1)), "rightful write at {dst}");
+            assert_eq!(t.is_open_for(2, dst, Some(0)), dst == 2, "imposter write at {dst}");
+            assert_eq!(t.is_open_for(1, dst, Some(2)), dst == 1, "non-leader fenced at {dst}");
+        }
+        // Untagged payloads (forwards, syncs) keep the boolean-row answer.
+        assert!(t.is_open_for(2, 0, None));
+        assert!(!t.is_open_for(1, 0, None));
+    }
+
+    #[test]
+    fn group_fence_absent_under_single_placement() {
+        // Single-leader tables carry no per-group rows: a group tag (Raft
+        // shard 0 traffic exists even unsharded) falls back to the boolean
+        // row, keeping the classic behavior bit-identical.
+        let mut t = QpTable::leader_fenced(4, 0);
+        assert!(t.is_open_for(0, 2, Some(0)));
+        assert!(!t.is_open_for(1, 2, Some(0)));
+        t.switch_leader(2, 0, 1);
+        assert!(t.is_open_for(1, 2, Some(0)), "switch_leader governs untagged rows");
+        assert!(!t.is_open_for(0, 2, Some(0)));
+    }
+
+    #[test]
+    fn refence_updates_the_group_row() {
+        let mut t = QpTable::leaders_fenced(4, &[0, 0]);
+        t.refence(2, &[0, 3]);
+        assert!(t.is_open_for(3, 2, Some(1)), "new group-1 leader admitted");
+        assert!(!t.is_open_for(3, 2, Some(0)), "but not for group 0");
+        assert!(!t.is_open_for(0, 2, Some(1)), "old leader out of group 1");
+        // Other rows keep their boot view.
+        assert!(!t.is_open_for(3, 1, Some(1)));
+        assert!(t.is_open_for(0, 1, Some(1)));
     }
 
     #[test]

@@ -168,6 +168,23 @@ impl Payload {
         )
     }
 
+    /// Global sync group carried by leader-QP replication payloads — the
+    /// per-group permission fence keys on it (§4.4 under sharded
+    /// placement: a node may legitimately lead group A while a partition
+    /// minority wrongly believes it leads group B; fencing must tell the
+    /// two apart). `None` for payloads outside the leader-write QPs.
+    pub fn group(&self) -> Option<u8> {
+        match self {
+            Payload::Propose { group, .. }
+            | Payload::LogAppend { group, .. }
+            | Payload::RaftAppend { group, .. }
+            | Payload::RaftAppendBatch { group, .. }
+            | Payload::PaxosAppend { group, .. }
+            | Payload::PaxosReplay { group, .. } => Some(*group),
+            _ => None,
+        }
+    }
+
     /// Wire size for serialization-delay modeling.
     pub fn wire_bytes(&self) -> u64 {
         match self {

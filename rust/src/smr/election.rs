@@ -369,6 +369,33 @@ mod tests {
     }
 
     #[test]
+    fn install_realigns_a_diverged_minority_view() {
+        // A partition makes its endpoints mis-declare each other dead:
+        // each reassigns the other's groups and the tables diverge — the
+        // endpoint may even assign groups to itself (the minority
+        // imposter). Heal-time realign installs the authority view (a
+        // non-endpoint replica whose table never moved, since it saw both
+        // sides stay alive) and the views agree again.
+        for policy in [LeaderPlacement::Hash, LeaderPlacement::RoundRobin, LeaderPlacement::LoadAware]
+        {
+            let authority = PlacementTable::new(policy, 16, 5);
+            let mut minority = PlacementTable::new(policy, 16, 5);
+            let live: Vec<NodeId> = vec![0, 1, 3, 4]; // endpoint 1's view: 2 "died"
+            let changed = minority.on_crash(2, &live);
+            if !changed.is_empty() {
+                assert_ne!(
+                    minority.leaders(),
+                    authority.leaders(),
+                    "{}: views diverged while the cut stood",
+                    policy.name()
+                );
+            }
+            minority.install(authority.leaders());
+            assert_eq!(minority.leaders(), authority.leaders(), "{}", policy.name());
+        }
+    }
+
+    #[test]
     fn tables_evolve_identically_from_the_same_observations() {
         // Replicas never exchange placement state: identical inputs must
         // yield identical tables.

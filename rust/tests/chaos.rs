@@ -326,6 +326,118 @@ fn recovered_leader_rejoins_as_follower_under_load_aware() {
 }
 
 #[test]
+fn partitioned_sharded_placements_converge_after_heal() {
+    // The PR-8 tentpole, pinned across the full matrix: a follower-pair
+    // partition under every sharded placement × every backend. Each cut
+    // endpoint mis-declares the other dead and re-places its groups —
+    // possibly onto itself, making it a per-group minority imposter. The
+    // per-group QP fence NACKs every leader-write the imposter issues for
+    // a group it does not rightfully lead, so its lease never confirms and
+    // it mutates nothing (structurally enforced; observable here as
+    // post-heal convergence + integrity). At heal, the cluster realigns
+    // the endpoints to the authority placement view, nudges unconfirmed
+    // campaigns into per-group abdication, and every inheriting leader
+    // re-pulls its shards to the starved endpoints.
+    for backend in ConsensusBackend::ALL {
+        for placement in
+            [LeaderPlacement::Hash, LeaderPlacement::RoundRobin, LeaderPlacement::LoadAware]
+        {
+            let mut cfg = sharded_cfg(backend, placement);
+            cfg.seed = 0x5AFA_8A1D;
+            cfg.fault = FaultSchedule::parse("partition@40:1-2,heal@70").unwrap();
+            let rep = cluster::run(cfg);
+            let lbl = format!("{}/{}", backend.name(), placement.name());
+            assert!(rep.crashed.iter().all(|&c| !c), "{lbl}: nobody crashed");
+            assert_eq!(rep.fault_timeline.len(), 2, "{lbl}: both incidents fired");
+            assert_eq!(rep.fault_timeline[0].label, "partition:1-2");
+            assert_eq!(rep.fault_timeline[1].label, "heal");
+            assert_eq!(
+                rep.groups_led.iter().sum::<u64>(),
+                16,
+                "{lbl}: every group has exactly one leader after the heal: {:?}",
+                rep.groups_led
+            );
+            assert!(
+                rep.converged() && rep.converged_per_object(),
+                "{lbl}: diverged after heal: {:?}\n{}",
+                rep.digests,
+                rep.dumps.join("\n---\n")
+            );
+            assert!(rep.invariants_ok, "{lbl}: integrity broke (imposter mutated state)");
+            assert!(rep.metrics.smr_commits > 0, "{lbl}: strong path unexercised");
+        }
+    }
+}
+
+#[test]
+fn leader_crash_during_partition_converges_under_sharded_placements() {
+    // The harder shape: the anchor leader crashes *while* a follower pair
+    // is partitioned, so group re-placement runs on divergent live views —
+    // the cut endpoints each compute a different placement than the
+    // majority. Heal-time realign must reconcile all of them before the
+    // convergence check.
+    for backend in ConsensusBackend::ALL {
+        for placement in
+            [LeaderPlacement::Hash, LeaderPlacement::RoundRobin, LeaderPlacement::LoadAware]
+        {
+            let mut cfg = sharded_cfg(backend, placement);
+            cfg.seed = 0x5AFA_8A2E;
+            cfg.fault = FaultSchedule::parse("partition@40:1-2,crash@50:leader,heal@70").unwrap();
+            let rep = cluster::run(cfg);
+            let lbl = format!("{}/{}", backend.name(), placement.name());
+            assert!(rep.crashed[0], "{lbl}: crashed anchor stays down");
+            assert_eq!(rep.groups_led[0], 0, "{lbl}: dead node leads nothing");
+            assert_eq!(
+                rep.groups_led.iter().sum::<u64>(),
+                16,
+                "{lbl}: every group has exactly one leader: {:?}",
+                rep.groups_led
+            );
+            assert!(rep.metrics.elections >= 1, "{lbl}: takeover counted as an election");
+            assert!(
+                rep.converged() && rep.converged_per_object(),
+                "{lbl}: diverged: {:?}\n{}",
+                rep.digests,
+                rep.dumps.join("\n---\n")
+            );
+            assert!(rep.invariants_ok, "{lbl}: integrity broke");
+        }
+    }
+}
+
+#[test]
+fn crashed_origins_partial_update_is_regossiped_by_receivers() {
+    // Pinned regression for the ROADMAP "crashed-origin relaxed durability
+    // gap": node 1 is cut from node 0 (partition@15), keeps originating
+    // relaxed updates that reach nodes 2 and 3 but NACK-park toward node
+    // 0, then crashes (crash@25). Its snapshot donor at recover@60 is node
+    // 0 — the one replica that never saw those updates — and the install
+    // wipes node 1's own retry/parked ledgers, so pre-fix nothing ever
+    // re-shipped them to node 0 (or back to node 1): a silent loss,
+    // diverging {0,1} from {2,3}. Post-fix, the surviving receivers'
+    // per-origin re-gossip ledgers re-ship node 1's accepted updates to
+    // every peer at install time; the dedup ledgers absorb duplicates.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::PnCounter, 4);
+        cfg.total_ops = 8_000;
+        cfg.heartbeat_period_ns = 5_000;
+        cfg.seed = 0x5AFA_0161;
+        cfg.fault =
+            FaultSchedule::parse("partition@15:0-1,crash@25:1,recover@60:1,heal@80").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(!rep.crashed[1], "{b}: the origin must be back");
+        assert!(
+            rep.converged(),
+            "{b}: crashed origin's partially-propagated update was lost: {:?}",
+            rep.digests
+        );
+        assert!(rep.converged_per_object(), "{b}: per-object divergence");
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+    }
+}
+
+#[test]
 fn empty_schedule_reports_empty_timeline() {
     let cfg = chaos_cfg(ConsensusBackend::Mu, RdtKind::PnCounter, 4);
     let rep = cluster::run(cfg);
