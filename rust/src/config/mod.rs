@@ -636,6 +636,117 @@ impl HybridConfig {
     }
 }
 
+/// Client-plane arrival process (`arrival = ...`).
+///
+/// `Closed` is the historical fixed-slot loop: `clients_per_replica`
+/// outstanding ops per node, each slot issuing its next op the moment the
+/// previous one completes — bit-identical to the pre-open-loop engine. The
+/// open-loop kinds instead model millions of logical clients as one
+/// aggregate seeded arrival stream per node: inter-arrival gaps are drawn
+/// from `core.rng`, arrivals queue behind a bounded admission buffer
+/// (`queue_cap`), and arrivals that find the buffer full are shed. Rates
+/// are offered load in ops per second of virtual time, per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ArrivalProcess {
+    /// Fixed-slot closed loop (default; bit-identical to prior releases).
+    #[default]
+    Closed,
+    /// Memoryless arrivals: exponential inter-arrival gaps with mean
+    /// `1e9 / rate` ns.
+    Poisson { rate: u64 },
+    /// Square-wave burst train with mean `rate`: the first half of every
+    /// `period_ns` window runs `amp` times hotter than the second half
+    /// (`amp = 1` degenerates to `Poisson`).
+    Bursty { rate: u64, period_ns: u64, amp: u32 },
+    /// Slow sinusoid-free daily cycle: a triangle wave swings the
+    /// instantaneous rate between 0.5x and 1.5x of `rate` over `period_ns`
+    /// (piecewise-linear so draws stay bit-stable across platforms).
+    Diurnal { rate: u64, period_ns: u64 },
+}
+
+impl ArrivalProcess {
+    /// Parse the `closed | poisson:RATE | bursty:RATE:PERIOD:AMP |
+    /// diurnal:RATE:PERIOD` grammar (RATE in ops/s per node, PERIOD in ns).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s == "closed" {
+            return Ok(ArrivalProcess::Closed);
+        }
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let mut num = |what: &str| -> Result<u64, String> {
+            parts
+                .next()
+                .ok_or_else(|| format!("arrival '{kind}' is missing its {what}"))?
+                .parse::<u64>()
+                .map_err(|_| format!("arrival '{kind}': bad {what} in '{s}'"))
+        };
+        let parsed = match kind {
+            "poisson" => ArrivalProcess::Poisson { rate: num("RATE")? },
+            "bursty" => ArrivalProcess::Bursty {
+                rate: num("RATE")?,
+                period_ns: num("PERIOD")?,
+                amp: num("AMP")? as u32,
+            },
+            "diurnal" => ArrivalProcess::Diurnal { rate: num("RATE")?, period_ns: num("PERIOD")? },
+            _ => {
+                return Err(format!(
+                    "unknown arrival process '{s}' (want closed | poisson:RATE | \
+                     bursty:RATE:PERIOD:AMP | diurnal:RATE:PERIOD)"
+                ))
+            }
+        };
+        if parts.next().is_some() {
+            return Err(format!("arrival '{s}': trailing fields"));
+        }
+        Ok(parsed)
+    }
+
+    /// Round-trips through `parse`.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Closed => "closed".to_string(),
+            ArrivalProcess::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalProcess::Bursty { rate, period_ns, amp } => {
+                format!("bursty:{rate}:{period_ns}:{amp}")
+            }
+            ArrivalProcess::Diurnal { rate, period_ns } => format!("diurnal:{rate}:{period_ns}"),
+        }
+    }
+
+    /// True for every kind except the closed loop.
+    pub fn is_open(&self) -> bool {
+        !matches!(self, ArrivalProcess::Closed)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let (rate, period) = match *self {
+            ArrivalProcess::Closed => return Ok(()),
+            ArrivalProcess::Poisson { rate } => (rate, 1),
+            ArrivalProcess::Bursty { rate, period_ns, amp } => {
+                if amp == 0 {
+                    return Err("arrival: bursty AMP must be >= 1".into());
+                }
+                if amp > 1_000 {
+                    return Err(format!("arrival: bursty AMP must be <= 1000, got {amp}"));
+                }
+                (rate, period_ns)
+            }
+            ArrivalProcess::Diurnal { rate, period_ns } => (rate, period_ns),
+        };
+        if rate == 0 {
+            return Err("arrival: RATE must be >= 1 op/s".into());
+        }
+        if rate > 1_000_000_000 {
+            return Err(format!("arrival: RATE must be <= 1e9 ops/s per node, got {rate}"));
+        }
+        if period == 0 {
+            return Err("arrival: PERIOD must be >= 1 ns".into());
+        }
+        Ok(())
+    }
+}
+
 /// Workload selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorkloadKind {
@@ -672,8 +783,19 @@ pub struct SimConfig {
     pub total_ops: u64,
     /// Percent of ops that are updates (the rest are query()).
     pub update_pct: u8,
-    /// Closed-loop client slots per replica.
+    /// Service parallelism per replica: in the closed loop these are the
+    /// fixed client slots (each re-issues on completion); in the open loop
+    /// they bound how many admitted ops a node processes concurrently,
+    /// with further arrivals waiting in the admission queue.
     pub clients_per_replica: usize,
+    /// Client-plane arrival process (`Closed` default = fixed-slot loop,
+    /// bit-identical to prior releases; the open-loop kinds drive seeded
+    /// per-node arrival streams through `EventKind::Arrival`).
+    pub arrival: ArrivalProcess,
+    /// Open-loop admission-queue bound per replica: arrivals beyond the
+    /// busy service slots wait here; arrivals that find it full are shed
+    /// (counted, never serviced). Ignored by the closed loop.
+    pub queue_cap: usize,
     pub prop_reducible: PropagationMode,
     pub prop_irreducible: PropagationMode,
     pub prop_conflicting: PropagationMode,
@@ -724,6 +846,8 @@ impl SimConfig {
             total_ops: 100_000,
             update_pct: 15,
             clients_per_replica: 4,
+            arrival: ArrivalProcess::Closed,
+            queue_cap: 256,
             prop_reducible: PropagationMode::Rpc,
             prop_irreducible: PropagationMode::Rpc,
             prop_conflicting: PropagationMode::WriteThrough,
@@ -813,6 +937,13 @@ impl SimConfig {
         if self.clients_per_replica == 0 {
             return Err("clients_per_replica must be positive".into());
         }
+        self.arrival.validate()?;
+        if self.arrival.is_open() && self.queue_cap == 0 {
+            return Err("queue_cap must be >= 1 under an open-loop arrival process".into());
+        }
+        if self.queue_cap > 1 << 20 {
+            return Err(format!("queue_cap must be <= 2^20, got {}", self.queue_cap));
+        }
         if self.summarize_threshold == 0 {
             return Err("summarize_threshold must be >= 1".into());
         }
@@ -883,6 +1014,11 @@ impl SimConfig {
                     self.clients_per_replica = v.parse().map_err(|_| bad("clients"))?
                 }
                 "seed" => self.seed = v.parse().map_err(|_| bad("seed"))?,
+                "arrival" => {
+                    self.arrival = ArrivalProcess::parse(v)
+                        .map_err(|e| format!("line {}: {e}", lineno + 1))?
+                }
+                "queue_cap" => self.queue_cap = v.parse().map_err(|_| bad("queue_cap"))?,
                 "summarize" => {
                     self.summarize_threshold = v.parse().map_err(|_| bad("summarize"))?
                 }
@@ -996,6 +1132,8 @@ mod tests {
             total_ops: _,
             update_pct: _,
             clients_per_replica: _,
+            arrival: _,
+            queue_cap: _,
             prop_reducible: _,
             prop_irreducible: _,
             prop_conflicting: _,
@@ -1020,6 +1158,8 @@ mod tests {
             "total_ops",
             "update_pct",
             "clients_per_replica",
+            "arrival",
+            "queue_cap",
             "prop_reducible",
             "prop_irreducible",
             "prop_conflicting",
@@ -1041,6 +1181,56 @@ mod tests {
                 "docs/CONFIG.md does not mention SimConfig field '{field}'"
             );
         }
+    }
+
+    #[test]
+    fn arrival_grammar_roundtrips_and_rejects() {
+        for s in ["closed", "poisson:800000", "bursty:400000:200000:4", "diurnal:250000:1000000"] {
+            let a = ArrivalProcess::parse(s).expect("grammar accepts");
+            assert_eq!(a.label(), s, "label round-trips");
+            a.validate().expect("parsed arrival validates");
+        }
+        assert_eq!(ArrivalProcess::parse("closed").unwrap(), ArrivalProcess::Closed);
+        assert!(!ArrivalProcess::Closed.is_open());
+        assert!(ArrivalProcess::Poisson { rate: 1 }.is_open());
+        for s in [
+            "poisson",              // missing RATE
+            "poisson:fast",         // non-numeric
+            "poisson:1000:7",       // trailing field
+            "bursty:1000:200",      // missing AMP
+            "diurnal:1000",         // missing PERIOD
+            "sawtooth:1000",        // unknown kind
+        ] {
+            assert!(ArrivalProcess::parse(s).is_err(), "'{s}' must be rejected");
+        }
+        for bad in [
+            ArrivalProcess::Poisson { rate: 0 },
+            ArrivalProcess::Poisson { rate: 2_000_000_000 },
+            ArrivalProcess::Bursty { rate: 1000, period_ns: 0, amp: 2 },
+            ArrivalProcess::Bursty { rate: 1000, period_ns: 100, amp: 0 },
+            ArrivalProcess::Diurnal { rate: 1000, period_ns: 0 },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn arrival_and_queue_cap_kv_knobs() {
+        let mut c = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        assert_eq!(c.arrival, ArrivalProcess::Closed, "closed loop is the default");
+        assert_eq!(c.queue_cap, 256);
+        c.apply_kv("arrival = poisson:800000\nqueue_cap = 64\n").unwrap();
+        assert_eq!(c.arrival, ArrivalProcess::Poisson { rate: 800_000 });
+        assert_eq!(c.queue_cap, 64);
+        c.validate().expect("open-loop config validates");
+        assert!(c.apply_kv("arrival = sawtooth:9").is_err());
+        assert!(c.apply_kv("queue_cap = lots").is_err());
+        c.queue_cap = 0;
+        assert!(c.validate().is_err(), "open loop needs a positive queue_cap");
+        c.arrival = ArrivalProcess::Closed;
+        c.validate().expect("closed loop ignores queue_cap");
+        c.queue_cap = (1 << 20) + 1;
+        assert!(c.validate().is_err(), "queue_cap cap enforced");
     }
 
     #[test]

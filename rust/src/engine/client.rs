@@ -1,24 +1,66 @@
-//! Client plane: closed-loop client slots — quota accounting, workload
-//! generation, per-origin sequence numbers, and the request-side read
-//! costs (including the hybrid host cache, Figs 15–17).
+//! Client plane: closed- and open-loop traffic generation — quota
+//! accounting, workload generation, per-origin sequence numbers, the
+//! open-loop admission queue, and the request-side read costs (including
+//! the hybrid host cache, Figs 15–17).
+//!
+//! Two traffic shapes share this plane:
+//!
+//! * **Closed loop** (`arrival = closed`, default): `clients_per_replica`
+//!   fixed slots, each issuing its next op the moment the previous one
+//!   completes. Bit-identical to the pre-open-loop engine.
+//! * **Open loop** (`poisson` / `bursty` / `diurnal`): one aggregate seeded
+//!   arrival stream per node models millions of logical clients.
+//!   `EventKind::Arrival` ticks consume quota as *offered* ops; an arrival
+//!   that finds a free service slot (the same `clients_per_replica` bound)
+//!   starts immediately, otherwise it waits in a bounded admission queue
+//!   (`queue_cap`) — and is shed, counted but never serviced, when the
+//!   queue is full. Client latency is measured from admission-queue entry,
+//!   so queueing delay shows up in the response histogram.
 //!
 //! The pending-request maps for *forwarded* ops live with the strong path
 //! (`engine::strong`), which owns their retry protocol; this plane only
 //! tracks how many slots are in flight via `ReplicaCore::clients_in_flight`.
 
-use crate::config::SimConfig;
+use std::collections::VecDeque;
+
+use crate::config::{ArrivalProcess, SimConfig};
 use crate::engine::path::ReplicaCore;
 use crate::mem::LruCache;
 use crate::rdt::OpCall;
 use crate::sim::Time;
+use crate::util::rng::Rng;
 use crate::workload::{Generator, WorkItem};
 
 pub struct ClientPlane {
     gen: Generator,
-    /// Remaining ops this replica's slots may issue (cluster-assigned;
-    /// redistributed away from crashed replicas).
+    /// Remaining ops this replica may offer (cluster-assigned;
+    /// redistributed away from crashed replicas). In the open loop this is
+    /// the un-offered remainder of the node's arrival stream.
     pub quota: u64,
     op_seq: u64,
+    /// Arrival process (closed loop or one of the open-loop kinds).
+    arrival: ArrivalProcess,
+    /// Open loop: service parallelism (the closed loop's slot count,
+    /// reused as the bound on concurrently-processed admissions).
+    slots: u64,
+    /// Open loop: admission-queue bound; arrivals beyond it are shed.
+    queue_cap: usize,
+    /// Open loop: admission timestamps of arrivals waiting for a slot.
+    queue: VecDeque<Time>,
+    /// Open loop: a future `EventKind::Arrival` is scheduled for this node
+    /// (the stream pauses at quota exhaustion and on crash, and the
+    /// cluster re-arms it when crash-time redistribution grants quota).
+    armed: bool,
+    /// Open loop: current arrival-stream incarnation. Crashes bump it so
+    /// ticks scheduled pre-crash are ignored if they fire post-recovery.
+    epoch: u32,
+    /// Ops offered to this node: arrival ticks fired (open loop) or quota
+    /// consumed by slots (closed loop).
+    pub offered: u64,
+    /// Open loop: arrivals dropped because the admission queue was full.
+    pub shed: u64,
+    /// Open loop: high-water mark of the admission queue.
+    pub queue_depth_max: usize,
     /// Hybrid mode: host LLC model for host-resident keys.
     host_cache: Option<LruCache>,
 }
@@ -29,6 +71,15 @@ impl ClientPlane {
             gen: Generator::new(cfg),
             quota: 0,
             op_seq: 0,
+            arrival: cfg.arrival,
+            slots: cfg.clients_per_replica as u64,
+            queue_cap: cfg.queue_cap,
+            queue: VecDeque::new(),
+            armed: false,
+            epoch: 0,
+            offered: 0,
+            shed: 0,
+            queue_depth_max: 0,
             host_cache: cfg.hybrid.map(|h| LruCache::new(h.host_cache_keys)),
         }
     }
@@ -38,24 +89,138 @@ impl ClientPlane {
         self.gen.keyspace()
     }
 
-    /// Consume one quota slot and draw the next request, or `None` when the
-    /// quota is spent (the slot retires). In catalog mode the generator
-    /// selects the target object first (Zipfian over `objects =`), then a
-    /// type-appropriate op; the returned op carries its `ObjectId`.
+    /// True when this node runs an open-loop arrival stream.
+    pub fn is_open(&self) -> bool {
+        self.arrival.is_open()
+    }
+
+    /// Admissions waiting for a service slot (always 0 in the closed loop).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// A future `Arrival` event is scheduled for this node.
+    pub fn stream_armed(&self) -> bool {
+        self.armed
+    }
+
+    pub fn set_stream_armed(&mut self, armed: bool) {
+        self.armed = armed;
+    }
+
+    /// Current arrival-stream incarnation (see `EventKind::Arrival`).
+    pub fn stream_epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// LWW timestamps compose (time, per-origin seq, origin) so ops are
+    /// globally unique and merge deterministically even when one origin
+    /// issues several ops in the same tick (open-loop bursts and same-tick
+    /// slot boots both do). Layout: now in the top 44 bits, the low 12
+    /// bits of `op_seq` next, origin id in the low byte. The seq field
+    /// wraps at 4096, but two same-origin ops 4096 seqs apart can never
+    /// share a tick: inter-arrival gaps and service times are >= 1 ns.
+    fn lww_timestamp(&self, core: &ReplicaCore, now: Time) -> u64 {
+        debug_assert!(now < 1 << 44, "virtual clock overflows the LWW timestamp packing");
+        ((now.max(1)) << 20) | ((self.op_seq & 0xFFF) << 8) | core.id as u64
+    }
+
+    /// Draw the next request unconditionally (quota already consumed).
+    fn generate(&mut self, core: &mut ReplicaCore, now: Time) -> WorkItem {
+        self.op_seq += 1;
+        let ts = self.lww_timestamp(core, now);
+        let mut item = self.gen.next(&mut core.rng, &core.plane, ts);
+        item.op.origin = core.id;
+        item.op.seq = self.op_seq;
+        core.clients_in_flight += 1;
+        item
+    }
+
+    /// Closed loop: consume one quota slot and draw the next request, or
+    /// `None` when the quota is spent (the slot retires). In catalog mode
+    /// the generator selects the target object first (Zipfian over
+    /// `objects =`), then a type-appropriate op; the returned op carries
+    /// its `ObjectId`.
     pub fn next_op(&mut self, core: &mut ReplicaCore, now: Time) -> Option<WorkItem> {
         if self.quota == 0 {
             return None;
         }
         self.quota -= 1;
-        self.op_seq += 1;
-        // LWW timestamps compose (time, origin) so they are globally unique
-        // and merge deterministically (Table A.1 "unique timestamps").
-        let ts = ((now.max(1)) << 8) | core.id as u64;
-        let mut item = self.gen.next(&mut core.rng, &core.plane, ts);
-        item.op.origin = core.id;
-        item.op.seq = self.op_seq;
-        core.clients_in_flight += 1;
-        Some(item)
+        self.offered += 1;
+        Some(self.generate(core, now))
+    }
+
+    /// Open loop: consume one arrival from the stream (quota -> offered)
+    /// and classify it. The caller has already scheduled/parked the next
+    /// stream tick. Returns the generated item when a service slot is
+    /// free; `None` when the arrival was queued or shed.
+    pub fn admit_arrival(&mut self, core: &mut ReplicaCore, now: Time) -> Option<WorkItem> {
+        debug_assert!(self.quota > 0, "arrival fired with no quota");
+        self.quota -= 1;
+        self.offered += 1;
+        if core.clients_in_flight < self.slots {
+            Some(self.generate(core, now))
+        } else {
+            if self.queue.len() < self.queue_cap {
+                self.queue.push_back(now);
+                self.queue_depth_max = self.queue_depth_max.max(self.queue.len());
+            } else {
+                self.shed += 1;
+            }
+            None
+        }
+    }
+
+    /// Open loop: a service slot freed up — start the oldest queued
+    /// admission, if any. Returns the item plus its original admission
+    /// time (latency includes the queue wait).
+    pub fn start_queued(&mut self, core: &mut ReplicaCore, now: Time) -> Option<(WorkItem, Time)> {
+        let admitted_at = self.queue.pop_front()?;
+        Some((self.generate(core, now), admitted_at))
+    }
+
+    /// Open loop: the seeded gap to the next arrival (>= 1 ns). The
+    /// instantaneous rate is modulated by the process kind; all shapes are
+    /// piecewise-exponential draws off `rng`, so streams replay
+    /// bit-identically from the seed.
+    pub fn next_interarrival(&self, rng: &mut Rng, now: Time) -> Time {
+        let per_sec = match self.arrival {
+            ArrivalProcess::Closed => unreachable!("closed loop draws no inter-arrival gaps"),
+            ArrivalProcess::Poisson { rate } => rate as f64,
+            ArrivalProcess::Bursty { rate, period_ns, amp } => {
+                // Mean-preserving square wave: the first half of each
+                // period runs `amp` times hotter than the second half.
+                let on = (now % period_ns) < period_ns / 2;
+                let base = 2.0 * rate as f64 / (1.0 + amp as f64);
+                if on {
+                    base * amp as f64
+                } else {
+                    base
+                }
+            }
+            ArrivalProcess::Diurnal { rate, period_ns } => {
+                // Triangle wave between 0.5x and 1.5x of the mean rate
+                // (piecewise-linear: no libm trig, so draws stay
+                // bit-stable across platforms).
+                let phase = (now % period_ns) as f64 / period_ns as f64;
+                let tri = if phase < 0.5 { 4.0 * phase - 1.0 } else { 3.0 - 4.0 * phase };
+                rate as f64 * (1.0 + 0.5 * tri)
+            }
+        };
+        let mean_ns = 1.0e9 / per_sec;
+        (rng.gen_exp(mean_ns) as u64).max(1)
+    }
+
+    /// Crash: wipe the admission queue (those clients observe a connection
+    /// reset, not service) and park the arrival stream. Returns the number
+    /// of queued admissions killed; the in-flight kill count is handled by
+    /// the failure plane's `clients_in_flight` reset.
+    pub fn crash_reset(&mut self) -> u64 {
+        let killed = self.queue.len() as u64;
+        self.queue.clear();
+        self.armed = false;
+        self.epoch = self.epoch.wrapping_add(1);
+        killed
     }
 
     /// Read cost of answering a query, after the paths' refresh fold:
@@ -79,5 +244,41 @@ impl ClientPlane {
         } else {
             core.warm_read_ns()
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadKind;
+    use crate::engine::store::Catalog;
+    use crate::rdt::RdtKind;
+
+    fn lww_plane(cfg: &SimConfig) -> (ReplicaCore, ClientPlane) {
+        let mut client = ClientPlane::new(cfg);
+        client.quota = 16;
+        let catalog = Catalog::for_config(cfg, client.keyspace());
+        (ReplicaCore::new(0, cfg, catalog, Rng::new(7)), client)
+    }
+
+    /// Satellite regression: `(now << 8) | origin` gave two ops issued by
+    /// one replica in the same tick identical LWW timestamps, so the merge
+    /// winner depended on delivery order. The packed per-origin `op_seq`
+    /// disambiguator makes same-tick writes strictly ordered by issue.
+    #[test]
+    fn same_tick_lww_writes_from_one_origin_get_distinct_timestamps() {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::LwwRegister));
+        cfg.update_pct = 100; // every op is an LWW write carrying its timestamp
+        let (mut core, mut client) = lww_plane(&cfg);
+        let now = 1_000;
+        let a = client.next_op(&mut core, now).expect("quota");
+        let b = client.next_op(&mut core, now).expect("quota");
+        assert_ne!(a.op.a, b.op.a, "same-tick LWW writes must not collide");
+        assert!(b.op.a > a.op.a, "issue order breaks the same-tick tie");
+        // Time still dominates: an op from any later tick outranks both.
+        let c = client.next_op(&mut core, now + 1).expect("quota");
+        assert!(c.op.a > b.op.a, "later tick outranks same-tick seq range");
+        // Origin id stays in the low byte for cross-node uniqueness.
+        assert_eq!(a.op.a & 0xFF, core.id as u64);
     }
 }

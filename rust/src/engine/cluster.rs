@@ -332,6 +332,10 @@ impl Cluster {
             self.metrics.busy_ns[i] = r.busy_total();
             self.metrics.executions += r.executions();
             self.metrics.rejected += r.rejected();
+            self.metrics.offered += r.offered();
+            self.metrics.shed += r.shed();
+            self.metrics.queue_depth_max =
+                self.metrics.queue_depth_max.max(r.queue_depth_max() as u64);
             for (o, &a) in r.object_applied().iter().enumerate() {
                 self.metrics.obj_applied[o] += a;
             }
@@ -410,7 +414,13 @@ impl Cluster {
                     for (j, &r) in live.iter().enumerate() {
                         let share = remaining / live.len() as u64
                             + if j < (remaining % live.len() as u64) as usize { 1 } else { 0 };
-                        self.replicas[r].grant_quota(share);
+                        if let Some(epoch) = self.replicas[r].grant_quota(share) {
+                            // The survivor's open-loop stream had parked at
+                            // quota exhaustion; restart it or the granted
+                            // share would never be offered (the run would
+                            // then never drain).
+                            self.q.push(t, r, EventKind::Arrival { epoch });
+                        }
                     }
                 }
                 timeline.push(FiredIncident {
@@ -726,6 +736,10 @@ impl Cluster {
     }
 
     fn all_quota_spent(&self) -> bool {
+        // Closed loop: remaining slot issues; open loop: the un-offered
+        // tail of each node's arrival stream. Either way, quota 0
+        // everywhere means the cluster's total offered-op budget is spent,
+        // so termination keys off arrival-stream exhaustion.
         self.replicas.iter().all(|r| r.quota() == 0 || r.crashed())
     }
 
@@ -735,9 +749,17 @@ impl Cluster {
         // across events. The drain flag must not flip while any live
         // replica still owes a response: background timers (heartbeats,
         // pollers) may be exactly what those completions are waiting on.
-        // Crashed replicas' slots died with them (their in-flight count is
-        // reset at crash time; their quota was redistributed).
-        self.replicas.iter().all(|r| r.crashed() || r.in_flight() == 0)
+        // Open loop adds queued-but-unissued admissions, which are pending
+        // in the same sense (a completion will dequeue them into a slot) —
+        // but only at *live* replicas: shed arrivals were dropped outright
+        // and a crashed node's queue was wiped at crash time, so neither
+        // may hold the drain open (a chaos run would spin to the event
+        // cap waiting on clients that no longer exist). Crashed replicas'
+        // in-flight slots died with them (reset at crash; their quota was
+        // redistributed).
+        self.replicas
+            .iter()
+            .all(|r| r.crashed() || (r.in_flight() == 0 && r.queued_admissions() == 0))
     }
 
     fn current_leader(&self) -> NodeId {

@@ -88,8 +88,22 @@ impl Replica {
 
     pub fn boot(&mut self, ctx: &mut Ctx, clients: usize, quota: u64) {
         self.client.quota = quota;
-        for c in 0..clients {
-            ctx.q.push(ctx.q.now(), self.core.id, EventKind::ClientArrive { client: c });
+        if self.client.is_open() {
+            // Open loop: one aggregate arrival stream instead of slot
+            // self-arrivals. The first gap is drawn here so the stream is
+            // seeded per node; the closed loop must not reach this draw
+            // (bit-identity with the pre-open-loop engine).
+            if quota > 0 {
+                let at =
+                    ctx.q.now() + self.client.next_interarrival(&mut self.core.rng, ctx.q.now());
+                let epoch = self.client.stream_epoch();
+                ctx.q.push(at, self.core.id, EventKind::Arrival { epoch });
+                self.client.set_stream_armed(true);
+            }
+        } else {
+            for c in 0..clients {
+                ctx.q.push(ctx.q.now(), self.core.id, EventKind::ClientArrive { client: c });
+            }
         }
         // Background machinery; `base` desynchronizes replicas. The boot
         // push order (relaxed pollers, strong log pollers, heartbeat
@@ -110,11 +124,21 @@ impl Replica {
         }
         match kind {
             EventKind::ClientArrive { client } => self.on_client(ctx, client),
+            EventKind::Arrival { epoch } => self.on_arrival(ctx, epoch),
             EventKind::VerbDeliver { src, verb } => self.on_verb(ctx, src, verb),
             EventKind::AckDeliver { token } => self.on_completion(ctx, token, true),
             EventKind::NackDeliver { token } => self.on_completion(ctx, token, false),
             EventKind::Timer(t) => self.on_timer(ctx, t),
-            EventKind::Crash => self.failure.on_crash(&mut self.core, ctx),
+            EventKind::Crash => {
+                // Queued-but-unissued admissions die with the node (their
+                // logical clients see a connection reset); in-flight ops
+                // are killed by the failure plane's reset below. Counting
+                // both keeps the offered = completed + shed + killed
+                // identity closed across crash schedules.
+                ctx.metrics.crash_killed +=
+                    self.core.clients_in_flight + self.client.crash_reset();
+                self.failure.on_crash(&mut self.core, ctx)
+            }
             EventKind::Recover => self.failure.on_recover(&mut self.core, ctx),
             // Link-level fault actions are consumed by the cluster's
             // network actor before dispatch; a replica never sees them.
@@ -126,10 +150,44 @@ impl Replica {
 
     fn on_client(&mut self, ctx: &mut Ctx, client: usize) {
         let now = ctx.q.now();
+        if self.client.is_open() {
+            // Open loop: a completion freed this service slot — start the
+            // oldest queued admission (latency spans its queue wait).
+            let Some((item, admitted_at)) = self.client.start_queued(&mut self.core, now) else {
+                return; // admission queue empty: the slot idles until the next arrival
+            };
+            self.process_client_op(ctx, client, item, admitted_at);
+            return;
+        }
         let Some(item) = self.client.next_op(&mut self.core, now) else {
             return; // quota spent: the slot retires
         };
         self.process_client_op(ctx, client, item, now);
+    }
+
+    /// Open-loop arrival-stream tick: offer one op, re-arm the stream
+    /// while un-offered quota remains, and admit / queue / shed the
+    /// arrival against the service slots. The re-arm draw happens before
+    /// workload generation so the RNG interleaving is a fixed function of
+    /// the stream, independent of slot occupancy.
+    fn on_arrival(&mut self, ctx: &mut Ctx, epoch: u32) {
+        if epoch != self.client.stream_epoch() {
+            return; // tick from a pre-crash stream incarnation
+        }
+        let now = ctx.q.now();
+        if self.client.quota == 0 {
+            self.client.set_stream_armed(false);
+            return;
+        }
+        if self.client.quota > 1 {
+            let at = now + self.client.next_interarrival(&mut self.core.rng, now);
+            ctx.q.push(at, self.core.id, EventKind::Arrival { epoch });
+        } else {
+            self.client.set_stream_armed(false);
+        }
+        if let Some(item) = self.client.admit_arrival(&mut self.core, now) {
+            self.process_client_op(ctx, 0, item, now);
+        }
     }
 
     fn process_client_op(&mut self, ctx: &mut Ctx, client: usize, item: WorkItem, arrival: Time) {
@@ -312,14 +370,48 @@ impl Replica {
         self.core.clients_in_flight
     }
 
+    /// Open-loop admissions waiting for a service slot (0 when closed).
+    pub fn queued_admissions(&self) -> usize {
+        self.client.queued()
+    }
+
+    /// Ops offered to this node (arrival ticks fired / quota consumed).
+    pub fn offered(&self) -> u64 {
+        self.client.offered
+    }
+
+    /// Open-loop arrivals shed on a full admission queue.
+    pub fn shed(&self) -> u64 {
+        self.client.shed
+    }
+
+    /// Open-loop admission-queue high-water mark.
+    pub fn queue_depth_max(&self) -> usize {
+        self.client.queue_depth_max
+    }
+
     /// Drain this replica's remaining quota (crash redistribution).
     pub fn take_quota(&mut self) -> u64 {
         std::mem::take(&mut self.client.quota)
     }
 
-    /// Grant extra quota (a crashed peer's redistributed share).
-    pub fn grant_quota(&mut self, extra: u64) {
+    /// Grant extra quota (a crashed peer's redistributed share). Returns
+    /// the stream epoch to arm when the grant must re-start this node's
+    /// open-loop arrival stream (the stream parked at quota exhaustion, so
+    /// nothing else would ever offer the new quota); the cluster owns the
+    /// event queue and pushes the `Arrival` tick. `None` for the closed
+    /// loop, a still-armed stream, a zero grant, or a crashed node.
+    #[must_use]
+    pub fn grant_quota(&mut self, extra: u64) -> Option<u32> {
         self.client.quota += extra;
+        let rearm =
+            extra > 0 && self.client.is_open() && !self.client.stream_armed() && !self.core.crashed;
+        if rearm {
+            self.client.set_stream_armed(true);
+            Some(self.client.stream_epoch())
+        } else {
+            None
+        }
     }
 
     pub fn digest(&self) -> u64 {
@@ -474,11 +566,15 @@ impl Replica {
     /// Diagnostic snapshot for runaway-loop debugging.
     pub fn debug_status(&self) -> String {
         format!(
-            "id={} crashed={} quota={} in_flight={} leader={} {} {} busy_until={}",
+            "id={} crashed={} quota={} in_flight={} queued={} offered={} shed={} leader={} {} {} \
+             busy_until={}",
             self.core.id,
             self.core.crashed,
             self.client.quota,
             self.core.clients_in_flight,
+            self.client.queued(),
+            self.client.offered,
+            self.client.shed,
             self.core.leader,
             self.relaxed.debug_status(),
             self.strong.debug_status(),

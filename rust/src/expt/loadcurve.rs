@@ -1,0 +1,183 @@
+//! Load curve — the open-loop saturation sweep: offered-load grid ×
+//! arrival shape × consensus backend × batch × leadership placement over a
+//! 16-instance Account catalog (per-(object, group) strong ordering, so
+//! sharded placements and batching both matter). Each cell drives seeded
+//! per-node arrival streams (`arrival = poisson:RATE` / `bursty:...`)
+//! through the admission queue and records the latency-vs-offered-load
+//! knee the paper's fig. 6–11 family gestures at: response percentiles
+//! rise gently until the service capacity knee, then the queue fills,
+//! latency jumps an order of magnitude, and the shed column takes off.
+//!
+//! Batching gets to show its real win here — coalescing under bursty
+//! arrivals rather than under a fixed in-flight cap — so every rate runs
+//! at `batch ∈ {1, 8}`. Seeds depend only on the workload axes (arrival
+//! kind, rate, batch), so backend/placement pairs of a cell face the same
+//! arrival stream. The CI smoke leg (`expt loadcurve --quick --threads 2
+//! --backend ...`) runs one backend per matrix job and uploads the CSV.
+
+use crate::config::{
+    ArrivalProcess, CatalogSpec, ConsensusBackend, LeaderPlacement, SimConfig, WorkloadKind,
+};
+use crate::expt::common::{backend_filter, f3, placement_filter, run_cells_tagged};
+use crate::rdt::RdtKind;
+use crate::util::table::Table;
+
+/// Offered load per node (ops/s of virtual time). The top of the grid sits
+/// well past the service knee (~1–2M ops/s/node), the bottom well under it.
+pub const RATE_SWEEP: &[u64] =
+    &[50_000, 100_000, 200_000, 400_000, 800_000, 1_600_000, 3_200_000, 6_400_000];
+pub const RATE_SWEEP_QUICK: &[u64] = &[100_000, 800_000, 6_400_000];
+
+/// Bursty shape used on the non-poisson axis: 200 µs period, first half
+/// 4× hotter than the second (mean rate preserved).
+const BURST_PERIOD_NS: u64 = 200_000;
+const BURST_AMP: u32 = 4;
+
+fn arrival_kinds(rate: u64) -> [ArrivalProcess; 2] {
+    [
+        ArrivalProcess::Poisson { rate },
+        ArrivalProcess::Bursty { rate, period_ns: BURST_PERIOD_NS, amp: BURST_AMP },
+    ]
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let backends: Vec<ConsensusBackend> = match backend_filter() {
+        Some(b) => vec![b],
+        None => ConsensusBackend::ALL.to_vec(),
+    };
+    let placements: Vec<LeaderPlacement> = match placement_filter() {
+        Some(p) => vec![p],
+        // Quick sweeps stay single-placement (CI opts into sharded legs
+        // via --placement); full sweeps carry the comparison.
+        None if quick => vec![LeaderPlacement::Single],
+        None => vec![LeaderPlacement::Single, LeaderPlacement::Hash],
+    };
+    let rates: &[u64] = if quick { RATE_SWEEP_QUICK } else { RATE_SWEEP };
+    // `ops` is the cluster-wide arrival-stream budget (total offered ops),
+    // not a completion target: saturated cells complete fewer (shed).
+    let ops: u64 = if quick { 6_000 } else { 16_000 };
+
+    let mut t = Table::new(
+        "Load curve — offered load × arrival shape × backend × batch × placement \
+         (account:16 catalog, 25% updates, open loop)",
+        &[
+            "arrival",
+            "rate_per_node",
+            "backend",
+            "batch",
+            "placement",
+            "nodes",
+            "offered",
+            "completed",
+            "shed",
+            "qdepth_max",
+            "p50_us",
+            "p95_us",
+            "p99_us",
+            "rt_us",
+            "tput_ops_us",
+        ],
+    );
+    let mut jobs = Vec::new();
+    for &placement in &placements {
+        for &backend in &backends {
+            for (ri, &rate) in rates.iter().enumerate() {
+                for (ki, arrival) in arrival_kinds(rate).into_iter().enumerate() {
+                    for (qi, &batch) in [1u32, 8].iter().enumerate() {
+                        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                        cfg.objects = CatalogSpec::parse("account:16").expect("spec parses");
+                        cfg.objects.zipf_theta = 0.6;
+                        cfg.arrival = arrival;
+                        cfg.backend = backend;
+                        cfg.placement = placement;
+                        cfg.batch_size = batch;
+                        cfg.n_replicas = 4;
+                        cfg.update_pct = 25;
+                        cfg.seed =
+                            0x10AD_0000 + (ki as u64) * 0x10000 + (ri as u64) * 0x100 + qi as u64;
+                        jobs.push(((arrival, rate, backend, batch, placement), (cfg, ops)));
+                    }
+                }
+            }
+        }
+    }
+    for ((arrival, rate, backend, batch, placement), cell, rep) in run_cells_tagged(jobs) {
+        let m = &rep.metrics;
+        t.row(vec![
+            arrival.label().split(':').next().unwrap_or("?").to_string(),
+            rate.to_string(),
+            backend.name().into(),
+            batch.to_string(),
+            placement.name().into(),
+            "4".to_string(),
+            m.offered.to_string(),
+            m.total_completed().to_string(),
+            m.shed.to_string(),
+            m.queue_depth_max.to_string(),
+            f3(m.response.p50() as f64 / 1_000.0),
+            f3(m.response.p95() as f64 / 1_000.0),
+            f3(m.response.p99() as f64 / 1_000.0),
+            f3(cell.rt_us),
+            f3(cell.tput),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_has_knee_shape_and_conserves_offered_ops() {
+        crate::expt::common::set_threads(2);
+        let t = &run(true)[0];
+        let backends = match backend_filter() {
+            Some(_) => 1,
+            None => ConsensusBackend::ALL.len(),
+        };
+        // rates × {poisson, bursty} × {batch 1, 8} × backends × 1 placement.
+        assert_eq!(t.rows().len(), RATE_SWEEP_QUICK.len() * 2 * 2 * backends);
+        for row in t.rows() {
+            let offered: u64 = row[6].parse().unwrap();
+            let completed: u64 = row[7].parse().unwrap();
+            let shed: u64 = row[8].parse().unwrap();
+            // Fault-free: every offered arrival either completed or shed,
+            // and the stream budget is exactly the per-node split of ops.
+            assert_eq!(offered, 6_000, "full stream offered: {row:?}");
+            assert_eq!(offered, completed + shed, "accounting identity: {row:?}");
+            assert!(completed > 0, "saturated cells still serve: {row:?}");
+        }
+        // Knee shape per (backend, arrival, batch) series: the top of the
+        // rate grid sits past saturation, so p99 must be far above the
+        // bottom's and backpressure must be visible.
+        for backend in match backend_filter() {
+            Some(b) => vec![b],
+            None => ConsensusBackend::ALL.to_vec(),
+        } {
+            for arrival in ["poisson", "bursty"] {
+                for batch in ["1", "8"] {
+                    let series: Vec<_> = t
+                        .rows()
+                        .iter()
+                        .filter(|r| r[0] == arrival && r[2] == backend.name() && r[3] == batch)
+                        .collect();
+                    assert_eq!(series.len(), RATE_SWEEP_QUICK.len());
+                    let p99_lo: f64 = series.first().unwrap()[12].parse().unwrap();
+                    let p99_hi: f64 = series.last().unwrap()[12].parse().unwrap();
+                    let shed_hi: u64 = series.last().unwrap()[8].parse().unwrap();
+                    assert!(
+                        p99_hi >= 5.0 * p99_lo,
+                        "{} {arrival} batch={batch}: no knee: p99 {p99_lo} -> {p99_hi}",
+                        backend.name()
+                    );
+                    assert!(
+                        shed_hi > 0,
+                        "{} {arrival} batch={batch}: overload never shed",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}

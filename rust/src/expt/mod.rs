@@ -26,6 +26,7 @@ pub mod fig17;
 pub mod fig24;
 pub mod fig25_26;
 pub mod fig27;
+pub mod loadcurve;
 pub mod scaleout;
 pub mod table2_1;
 pub mod tablec_1;
@@ -36,7 +37,7 @@ use crate::util::table::Table;
 pub const ALL: &[&str] = &[
     "table2_1", "tableC_1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig24", "fig25_26", "fig27", "ablation", "backends",
-    "bench", "chaos", "scaleout",
+    "bench", "chaos", "loadcurve", "scaleout",
 ];
 
 /// Canonical experiment id for `id`, accepting zero-padded aliases
@@ -81,6 +82,7 @@ pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
         "backends" => backends::run(quick),
         "bench" => bench::run(quick),
         "chaos" => chaos::run(quick),
+        "loadcurve" => loadcurve::run(quick),
         "scaleout" => scaleout::run(quick),
         _ => return None,
     };

@@ -143,9 +143,15 @@ fn cmd_expt(args: &[String]) -> i32 {
             ids.clone()
         };
         if ids_for_check.iter().any(|id| {
-            !matches!(expt::canonical(id), Some("backends") | Some("chaos") | Some("scaleout"))
+            !matches!(
+                expt::canonical(id),
+                Some("backends") | Some("chaos") | Some("scaleout") | Some("loadcurve")
+            )
         }) {
-            eprintln!("--backend only applies to `expt backends`, `expt chaos`, and `expt scaleout`");
+            eprintln!(
+                "--backend only applies to `expt backends`, `expt chaos`, `expt scaleout`, \
+                 and `expt loadcurve`"
+            );
             return 2;
         }
         expt::common::set_backend_filter(b);
@@ -159,11 +165,12 @@ fn cmd_expt(args: &[String]) -> i32 {
         } else {
             ids.clone()
         };
-        if ids_for_check
-            .iter()
-            .any(|id| !matches!(expt::canonical(id), Some("scaleout") | Some("chaos")))
-        {
-            eprintln!("--placement only applies to `expt scaleout` and `expt chaos`");
+        if ids_for_check.iter().any(|id| {
+            !matches!(expt::canonical(id), Some("scaleout") | Some("chaos") | Some("loadcurve"))
+        }) {
+            eprintln!(
+                "--placement only applies to `expt scaleout`, `expt chaos`, and `expt loadcurve`"
+            );
             return 2;
         }
         expt::common::set_placement_filter(p);
@@ -190,10 +197,13 @@ fn cmd_expt(args: &[String]) -> i32 {
         for t in &tables {
             println!("{}", t.render());
         }
-        // A placement-filtered scaleout or chaos run saves under a suffixed
-        // id so the CI matrix's single and hash legs upload distinct CSVs.
+        // A placement-filtered scaleout/chaos/loadcurve run saves under a
+        // suffixed id so the CI matrix's single and hash legs upload
+        // distinct CSVs.
         let save_id = match expt::common::placement_filter() {
-            Some(p) if matches!(canon, "scaleout" | "chaos") => format!("{canon}_{}", p.name()),
+            Some(p) if matches!(canon, "scaleout" | "chaos" | "loadcurve") => {
+                format!("{canon}_{}", p.name())
+            }
             _ => canon.to_string(),
         };
         expt::common::save(&tables, &save_id);

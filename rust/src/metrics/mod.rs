@@ -49,6 +49,18 @@ pub struct RunMetrics {
     /// Fault-timeline telemetry: `(t, subject, observer)` — observer saw
     /// subject's heartbeat resume at t.
     pub recoveries: Vec<(u64, usize, usize)>,
+    /// Ops offered to the cluster: open-loop arrival ticks fired plus
+    /// closed-loop quota consumed (summed per node at quiescence).
+    pub offered: u64,
+    /// Open-loop arrivals shed on full admission queues (backpressure).
+    pub shed: u64,
+    /// Offered ops killed by crashes: in-flight at the crashed node plus
+    /// its queued-but-unissued admissions. Closes the conservation
+    /// identity `offered = completed + shed + crash_killed` for runs that
+    /// lose nodes (fault-free runs have it 0).
+    pub crash_killed: u64,
+    /// High-water mark of any node's open-loop admission queue.
+    pub queue_depth_max: u64,
     /// Virtual makespan of the run (ns): last client completion.
     pub makespan_ns: u64,
     /// Last client-op completion time (feeds makespan).
@@ -77,6 +89,10 @@ impl RunMetrics {
             election_times: Vec::new(),
             detections: Vec::new(),
             recoveries: Vec::new(),
+            offered: 0,
+            shed: 0,
+            crash_killed: 0,
+            queue_depth_max: 0,
             makespan_ns: 0,
             last_completion_ns: 0,
             events: 0,

@@ -71,8 +71,17 @@ pub enum NetFault {
 /// Event payloads.
 #[derive(Clone, Debug)]
 pub enum EventKind {
-    /// A closed-loop client slot at this replica wants to issue its next op.
+    /// A closed-loop client slot at this replica wants to issue its next
+    /// op. The open loop reuses the same event as its "service slot freed"
+    /// signal: on completion the slot pulls the oldest queued admission.
     ClientArrive { client: usize },
+    /// Open-loop aggregate arrival-stream tick at this replica: one offered
+    /// op arrives, and the stream re-arms itself with the next seeded
+    /// inter-arrival gap while un-offered quota remains. `epoch` guards
+    /// against stale ticks: a crash kills the node's stream (epoch bump),
+    /// so a tick scheduled before the crash can never double the stream a
+    /// post-recovery quota grant re-arms.
+    Arrival { epoch: u32 },
     /// A verb arrives at this node's NIC (payload lands per its dst_mem).
     VerbDeliver { src: NodeId, verb: Verb },
     /// Completion (CQE/ACK) for a verb this node issued earlier.

@@ -135,6 +135,10 @@ impl Histogram {
         self.quantile(0.50)
     }
 
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }

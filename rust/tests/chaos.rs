@@ -12,8 +12,8 @@
 //!   phase slack and the read round trip).
 
 use safardb::config::{
-    CatalogSpec, ConsensusBackend, FaultAction, FaultSchedule, LeaderPlacement, SimConfig,
-    WorkloadKind,
+    ArrivalProcess, CatalogSpec, ConsensusBackend, FaultAction, FaultSchedule, LeaderPlacement,
+    SimConfig, WorkloadKind,
 };
 use safardb::engine::cluster;
 use safardb::prop_assert;
@@ -434,6 +434,44 @@ fn crashed_origins_partial_update_is_regossiped_by_receivers() {
         );
         assert!(rep.converged_per_object(), "{b}: per-object divergence");
         assert!(rep.invariants_ok, "{b}: integrity broke");
+    }
+}
+
+#[test]
+fn open_loop_crash_drains_and_balances_the_books_on_all_backends() {
+    // Pinned regression for the open-loop drain hang: a crash sheds the
+    // dead node's admission queue and kills its in-flight ops, and the
+    // victims' arrival streams are gone — so `no_pending_clients()` must
+    // not count a crashed node's queue (or shed entries anywhere) as
+    // pending work, or the post-crash drain would wait forever on ops
+    // nobody will ever serve. The run must terminate with the stream
+    // budget fully offered and the books balanced:
+    // offered = completed + shed + crash_killed.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = chaos_cfg(backend, RdtKind::Account, 4);
+        cfg.arrival = ArrivalProcess::Poisson { rate: 2_000_000 };
+        cfg.queue_cap = 8;
+        cfg.seed = 0x10AD_C4A5;
+        cfg.fault = FaultSchedule::parse("crash@30:2").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed[2], "{b}: node 2 stays down");
+        assert!(rep.converged(), "{b}: diverged: {:?}", rep.digests);
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+        let m = &rep.metrics;
+        assert_eq!(
+            m.offered, 6_000,
+            "{b}: redistributed arrival streams must offer the whole budget"
+        );
+        assert_eq!(
+            m.offered,
+            m.total_completed() + m.shed + m.crash_killed,
+            "{b}: open-loop crash accounting leaked ops (completed={} shed={} killed={})",
+            m.total_completed(),
+            m.shed,
+            m.crash_killed
+        );
+        assert!(m.crash_killed > 0, "{b}: the crash killed queued/in-flight ops");
     }
 }
 

@@ -62,6 +62,29 @@ fn follower_crash_keeps_serving() {
 }
 
 #[test]
+fn crash_quota_redistribution_conserves_every_op() {
+    // The dead node's un-issued quota splits across 3 survivors; 3 rarely
+    // divides it evenly, so the remainder must be handed out round-robin
+    // rather than truncated — a silent truncation would strand ops and
+    // show up here as offered < total_ops. The books must balance
+    // exactly: every op in the budget was either completed or killed
+    // in flight by the crash, and the closed loop never sheds.
+    let rep = cluster::run(account(SystemKind::SafarDb, 4, FaultSchedule::crash_at(1, 50)));
+    assert!(rep.crashed[1]);
+    assert!(rep.converged() && rep.invariants_ok);
+    let m = &rep.metrics;
+    assert_eq!(m.offered, 16_000, "redistribution lost quota (remainder truncated?)");
+    assert_eq!(m.shed, 0, "closed loop cannot shed");
+    assert_eq!(
+        m.offered,
+        m.total_completed() + m.crash_killed,
+        "op conservation broke: completed={} crash_killed={}",
+        m.total_completed(),
+        m.crash_killed
+    );
+}
+
+#[test]
 fn crashed_follower_recovers_and_catches_up_via_log_replay() {
     let rep = cluster::run(account(
         SystemKind::SafarDb,
