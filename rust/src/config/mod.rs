@@ -819,6 +819,13 @@ pub struct SimConfig {
     /// one wire verb (relaxed fan-out and leader-side log appends). 1 =
     /// batching off, bit-identical to the pre-batching engine.
     pub batch_size: u32,
+    /// Strong-plane pipeline depth: up to this many consensus rounds in
+    /// flight per shard (sync group). Quorums collect out of order; commit
+    /// and apply stay strictly in slot order behind a commit cursor. 1 =
+    /// stop-and-wait, bit-identical to the pre-pipelining engine.
+    /// Orthogonal to `batch_size`: batching widens each round, the window
+    /// deepens the pipeline — they multiply.
+    pub window: u32,
     /// Reducible ops aggregated locally before one propagation (§5.4; 1 =
     /// propagate every op).
     pub summarize_threshold: u32,
@@ -855,6 +862,7 @@ impl SimConfig {
             backend_explicit: false,
             placement: LeaderPlacement::Single,
             batch_size: 1,
+            window: 1,
             summarize_threshold: 1,
             seed: 0xC0FFEE,
             fault: FaultSchedule::none(),
@@ -953,6 +961,12 @@ impl SimConfig {
         if self.batch_size > 1024 {
             return Err(format!("batch_size must be <= 1024, got {}", self.batch_size));
         }
+        if self.window == 0 {
+            return Err("window must be >= 1 (1 = pipelining off)".into());
+        }
+        if self.window > 64 {
+            return Err(format!("window must be <= 64, got {}", self.window));
+        }
         if self.system == SystemKind::Waverunner && self.backend != ConsensusBackend::Raft {
             return Err(format!(
                 "Waverunner's strong path is its SmartNIC Raft pipeline; backend '{}' \
@@ -1048,6 +1062,7 @@ impl SimConfig {
                 "batch" | "batch_size" => {
                     self.batch_size = v.parse().map_err(|_| bad("batch_size"))?
                 }
+                "window" => self.window = v.parse().map_err(|_| bad("window"))?,
                 "system" => {
                     self.system = match v {
                         "safardb" => SystemKind::SafarDb,
@@ -1141,6 +1156,7 @@ mod tests {
             backend_explicit: _,
             placement: _,
             batch_size: _,
+            window: _,
             summarize_threshold: _,
             seed: _,
             fault: _,
@@ -1167,6 +1183,7 @@ mod tests {
             "backend_explicit",
             "placement",
             "batch_size",
+            "window",
             "summarize_threshold",
             "seed",
             "fault",
@@ -1266,6 +1283,17 @@ mod tests {
         assert!(c.validate().is_err(), "batch_size 0 rejected");
         c.batch_size = 2048;
         assert!(c.validate().is_err(), "batch_size cap enforced");
+        c.batch_size = 8;
+
+        assert_eq!(c.window, 1, "pipelining defaults off");
+        c.apply_kv("window = 16\n").unwrap();
+        assert_eq!(c.window, 16);
+        c.validate().expect("window + batching validates");
+        c.window = 0;
+        assert!(c.validate().is_err(), "window 0 rejected");
+        c.window = 65;
+        assert!(c.validate().is_err(), "window cap enforced");
+        c.window = 1;
 
         // Waverunner's strong path is its Raft pipeline — backend pinned.
         let mut w = SimConfig::waverunner(WorkloadKind::Ycsb);

@@ -522,7 +522,9 @@ impl ReplicaCore {
     }
 
     /// Send one verb to every peer in `peers`, serializing initiator-side
-    /// costs (Hamband's CQE wait makes this expensive; SafarDB pipelines).
+    /// costs (Hamband's CQE wait makes this expensive; SafarDB pipelines —
+    /// and `SimConfig::window` extends that pipelining across whole
+    /// consensus rounds, not just the verbs within one fan-out).
     pub fn fan_out(
         &mut self,
         ctx: &mut Ctx,

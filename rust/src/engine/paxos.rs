@@ -81,6 +81,11 @@ struct PaxosShard {
 pub struct PaxosPath {
     shards: Vec<PaxosShard>,
     batch: usize,
+    /// Round-commit telemetry: `(shard, start_slot)` -> virtual ns of the
+    /// round's first fan-out. `or_insert` keeps the first attempt's stamp
+    /// across stall/reset re-pumps, so `smr_round` reports true
+    /// first-issue-to-commit latency.
+    round_start: FastMap<(usize, u64), u64>,
     /// Chaos mode (link faults in the schedule): forwarded ops arm a
     /// reply watchdog, since a LeaderReply lost on a faulty link would
     /// otherwise strand its origin-side client slot forever.
@@ -105,7 +110,12 @@ impl PaxosPath {
         let shards = (0..n_shards)
             .map(|_| PaxosShard {
                 log: ReplicationLog::new(),
-                leader_sm: PaxosLeader::new(id, cfg.n_replicas, cfg.batch_size as usize),
+                leader_sm: PaxosLeader::with_window(
+                    id,
+                    cfg.n_replicas,
+                    cfg.batch_size as usize,
+                    cfg.window as usize,
+                ),
                 acceptor: PaxosAcceptor::new(),
                 lease: true,
                 lease_wave: 0,
@@ -117,6 +127,7 @@ impl PaxosPath {
         PaxosPath {
             shards,
             batch: cfg.batch_size as usize,
+            round_start: FastMap::default(),
             chaos: cfg.fault.has_link_faults(),
             done_fwd: FastMap::default(),
             pending_fwd: FastMap::default(),
@@ -259,47 +270,60 @@ impl PaxosPath {
         self.try_fan_out(core, ctx, mb, s);
     }
 
-    /// Start the next landing-region write batch if the pipeline is free.
+    /// Pump queued batches until the window fills: one landing-region
+    /// write fan-out per free pipeline stage.
     fn try_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize) {
-        let Some((ballot, round, start_slot, ops)) = self.shards[s].leader_sm.pump() else { return };
-        // Sequential pipeline: the leader stays execution-busy through the
-        // round, exactly like Mu (appendix D.1 — leader-bound throughput).
-        let now = ctx.q.now();
-        if now > core.busy_until {
-            core.busy_total += now - core.busy_until;
-            core.busy_until = now;
+        let mut pumped = false;
+        loop {
+            let Some((ballot, round, start_slot, ops)) = self.shards[s].leader_sm.pump() else {
+                break;
+            };
+            pumped = true;
+            // The leader stays execution-busy through the round's issue,
+            // exactly like Mu (appendix D.1 — leader-bound throughput);
+            // windowed rounds then overlap their fabric round-trips.
+            let now = ctx.q.now();
+            if now > core.busy_until {
+                core.busy_total += now - core.busy_until;
+                core.busy_until = now;
+            }
+            // Batch assembly: one log read per coalesced entry (the
+            // verb-issue setup is charged once by the fan_out below).
+            let per_entry = core.sys.mem.local_read_ns(core.landing_mem());
+            core.occupy_batch(now, per_entry, ops.len());
+            if ops.len() > 1 {
+                ctx.metrics.coalesced += ops.len() as u64 - 1;
+            }
+            let peers = mb.live_peers(core.id);
+            self.shards[s].leader_sm.round_started(peers.len() as u32);
+            self.round_start.entry((s, start_slot)).or_insert(now);
+            ctx.metrics.note_inflight(s, self.shards[s].leader_sm.depth() as u64);
+            let mem = core.landing_mem_for_peer();
+            let group = s as u8;
+            // Shared batch: the per-peer clone below is a refcount bump
+            // (§Perf).
+            let ops: crate::net::verbs::OpBatch = ops.into();
+            core.fan_out(
+                ctx,
+                &peers,
+                |t| {
+                    Verb::write(
+                        mem,
+                        Payload::PaxosAppend { group, ballot, start_slot, ops: ops.clone() },
+                        t,
+                    )
+                    .on_leader_qp()
+                },
+                true,
+                || TokenCtx::Paxos(PaxosToken::Append { group, ballot, round, start_slot }),
+            );
         }
-        // Batch assembly: one log read per coalesced entry (the verb-issue
-        // setup is charged once by the fan_out below).
-        let per_entry = core.sys.mem.local_read_ns(core.landing_mem());
-        core.occupy_batch(now, per_entry, ops.len());
-        if ops.len() > 1 {
-            ctx.metrics.coalesced += ops.len() as u64 - 1;
-        }
-        let peers = mb.live_peers(core.id);
-        self.shards[s].leader_sm.round_started(peers.len() as u32);
-        let mem = core.landing_mem_for_peer();
-        let group = s as u8;
-        // Shared batch: the per-peer clone below is a refcount bump (§Perf).
-        let ops: crate::net::verbs::OpBatch = ops.into();
-        core.fan_out(
-            ctx,
-            &peers,
-            |t| {
-                Verb::write(
-                    mem,
-                    Payload::PaxosAppend { group, ballot, start_slot, ops: ops.clone() },
-                    t,
-                )
-                .on_leader_qp()
-            },
-            true,
-            || TokenCtx::Paxos(PaxosToken::Append { group, ballot, round, start_slot }),
-        );
         // Sole survivor: no doorbells will ever arrive, and none are
         // needed — the leader's local append is the whole majority.
-        if let Some((start, ops)) = self.shards[s].leader_sm.commit_if_solo() {
-            self.commit_batch(core, ctx, mb, s, start, ops);
+        if pumped {
+            while let Some((start, ops)) = self.shards[s].leader_sm.commit_if_solo() {
+                self.commit_batch(core, ctx, mb, s, start, ops);
+            }
         }
     }
 
@@ -308,6 +332,9 @@ impl PaxosPath {
         if now > core.busy_until {
             core.busy_total += now - core.busy_until;
             core.busy_until = now;
+        }
+        if let Some(t0) = self.round_start.remove(&(s, start_slot)) {
+            ctx.metrics.smr_round.record(now.saturating_sub(t0));
         }
         ctx.metrics.smr_commits += ops.len() as u64;
         if self.chaos {
@@ -577,9 +604,16 @@ impl ReplicationPath for PaxosPath {
                     PaxosStep::Wait => {}
                     PaxosStep::Commit { start_slot, ops } => {
                         self.commit_batch(core, ctx, mb, s, start_slot, ops);
+                        // Later flights whose quorum landed first release
+                        // now, in slot order.
+                        while let Some((start, ops)) = self.shards[s].leader_sm.pop_released() {
+                            self.commit_batch(core, ctx, mb, s, start, ops);
+                        }
                     }
                     PaxosStep::Stall => {
-                        self.shards[s].leader_sm.reset_in_flight();
+                        // The whole window resets as a unit: committed-but-
+                        // unreleased flights never applied and re-fly too.
+                        self.shards[s].leader_sm.reset_window();
                         // Retry once the heartbeat scanner refreshes the
                         // live set (same recovery cadence as Mu).
                         ctx.q.push(
@@ -687,7 +721,7 @@ impl ReplicationPath for PaxosPath {
                     ctx.metrics.elections += 1;
                     ctx.metrics.election_times.push(ctx.q.now());
                     let promised = self.shards[0].acceptor.promised;
-                    self.shards[0].leader_sm.reset_in_flight();
+                    self.shards[0].leader_sm.reset_window();
                     self.shards[0].leader_sm.assume_leadership(core.id, promised);
                     self.shards[0].lease = false;
                     self.paxos_campaign(core, ctx, mb, 0, true);
@@ -717,7 +751,7 @@ impl ReplicationPath for PaxosPath {
                     }
                     gained = true;
                     let promised = self.shards[s].acceptor.promised;
-                    self.shards[s].leader_sm.reset_in_flight();
+                    self.shards[s].leader_sm.reset_window();
                     self.shards[s].leader_sm.assume_leadership(core.id, promised);
                     self.shards[s].lease = false;
                     self.paxos_campaign(core, ctx, mb, s, true);
@@ -796,6 +830,7 @@ impl ReplicationPath for PaxosPath {
             shard.parked.clear();
         }
         self.pending_fwd = FastMap::default();
+        self.round_start = FastMap::default();
         // A freshly recovered replica leads nothing until the placement
         // table reassigns groups to it (sticky rebalance).
         self.led.iter_mut().for_each(|l| *l = false);

@@ -53,6 +53,9 @@ pub struct StrongPath {
     system: SystemKind,
     /// Leader-side log-entry batching bound (1 = off).
     batch: usize,
+    /// Strong-plane pipeline depth: up to this many consensus rounds in
+    /// flight per group/shard (1 = stop-and-wait, the seed behavior).
+    window: usize,
     /// Chaos mode (schedule has link faults): forwarded ops arm a reply
     /// watchdog and the Raft leader gets a periodic re-pump tick, since
     /// lossy links can eat the logical acks the pipeline waits on.
@@ -63,7 +66,11 @@ pub struct StrongPath {
     /// anti-entropy replay work exactly like Mu/Paxos.
     mu: Vec<MuInstance>,
     logs: Vec<ReplicationLog>,
-    round_id: Vec<u64>,
+    /// First fan-out time of each in-flight consensus round, keyed
+    /// `(group-or-shard, start slot)`. `or_insert` keeps the first
+    /// attempt's stamp across chaos re-pumps, so `smr_round` measures true
+    /// first-issue-to-commit latency.
+    round_start: FastMap<(usize, u64), u64>,
     requesters: FastMap<(usize, u64), Requester>,
     pending_fwd: FastMap<u64, PendingClient>,
     next_request_id: u64,
@@ -145,7 +152,11 @@ impl StrongPath {
                         id == crate::smr::raft::initial_leader()
                     };
                 RaftShard::new(leads.then(|| {
-                    RaftLeader::with_batch(cfg.n_replicas, cfg.batch_size as usize)
+                    RaftLeader::with_window(
+                        cfg.n_replicas,
+                        cfg.batch_size as usize,
+                        cfg.window as usize,
+                    )
                 }))
             })
             .collect();
@@ -154,10 +165,13 @@ impl StrongPath {
             backend: cfg.backend,
             system: cfg.system,
             batch: cfg.batch_size as usize,
+            window: cfg.window as usize,
             chaos: cfg.fault.has_link_faults(),
-            mu: (0..groups).map(|g| MuInstance::new(g as u8, cfg.n_replicas)).collect(),
+            mu: (0..groups)
+                .map(|g| MuInstance::with_window(g as u8, cfg.n_replicas, cfg.window as usize))
+                .collect(),
             logs: (0..groups).map(|_| ReplicationLog::new()).collect(),
-            round_id: vec![0; groups],
+            round_start: FastMap::default(),
             requesters: FastMap::default(),
             pending_fwd: FastMap::default(),
             next_request_id: 1,
@@ -231,11 +245,25 @@ impl StrongPath {
         let g = core.plane.global_group(&op) as usize;
         if core.is_leader_of(g) {
             let slot = self.logs[g].next_free_slot();
-            if let Some(round) = self.mu[g].submit(op, slot) {
-                self.fan_out_round(core, ctx, mb, g, round);
+            if let Some((rid, at, round)) = self.mu[g].submit(op, slot) {
+                self.round_start.entry((g, at)).or_insert(ctx.q.now());
+                ctx.metrics.note_inflight(g, self.mu[g].depth() as u64);
+                self.fan_out_round(core, ctx, mb, g, rid, round);
             }
         } else {
             self.forward_conflicting(core, ctx, op, req);
+        }
+    }
+
+    /// Refill group `g`'s window from its queue (pump-until-full: a commit
+    /// frees one stage, but a takeover or an abort can free several).
+    fn mu_pump_full(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize) {
+        loop {
+            let slot = self.logs[g].next_free_slot();
+            let Some((rid, at, round)) = self.mu[g].pump(slot) else { break };
+            self.round_start.entry((g, at)).or_insert(ctx.q.now());
+            ctx.metrics.note_inflight(g, self.mu[g].depth() as u64);
+            self.fan_out_round(core, ctx, mb, g, rid, round);
         }
     }
 
@@ -277,7 +305,8 @@ impl StrongPath {
         }
         let term = self.raft[s].follower.term + 1;
         let next = self.raft[s].follower.log_len();
-        self.raft[s].leader = Some(RaftLeader::promote(mb.live_set().len(), self.batch, term, next));
+        self.raft[s].leader =
+            Some(RaftLeader::promote(mb.live_set().len(), self.batch, self.window, term, next));
         self.raft[s].lease = false;
         self.raft[s].votes = FastMap::default();
         self.raft_campaign(core, ctx, mb, s);
@@ -412,19 +441,24 @@ impl StrongPath {
         let rl = self.raft[s].leader.as_mut().expect("just ensured");
         let term = rl.term;
         let (index, fanout) = rl.submit(op);
+        let depth = rl.depth() as u64;
         self.raft_mirror_append(s, index, term, &[op]);
         self.raft[s].pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
+            self.round_start.entry((s, start)).or_insert(ctx.q.now());
+            ctx.metrics.note_inflight(s, depth);
             self.raft_fan_out(core, ctx, mb, s, term, start, ops);
         }
     }
 
-    fn fan_out_round(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize, round: Round) {
-        self.round_id[g] += 1;
-        let rid = self.round_id[g];
+    /// Fan one Mu phase out to the live follower set. `rid` is the phase
+    /// nonce the automaton allocated — completion tokens carry it so
+    /// responses route back to the owning in-flight round (stale rids
+    /// drop inside the automaton).
+    fn fan_out_round(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize, rid: u64, round: Round) {
         let group = g as u8;
         let peers = mb.live_peers(core.id);
-        self.mu[g].round_started(peers.len() as u32);
+        self.mu[g].round_started(rid, peers.len() as u32);
         let use_wt = self.prop_con == PropagationMode::WriteThrough;
         // Sequential SMR: the leader is execution-busy from the previous
         // round's fan-out through this round's quorum (appendix D.1).
@@ -467,7 +501,7 @@ impl StrongPath {
     fn mu_step(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, g: usize, step: Step) {
         match step {
             Step::Wait => {}
-            Step::Next(round) => {
+            Step::Next(rid, round) => {
                 // A WriteProposal quorum (the transition into ReadSlots)
                 // means a follower majority accepted this leadership —
                 // confirmation, in lease terms.
@@ -476,44 +510,12 @@ impl StrongPath {
                     self.mu_confirmed[c] = true;
                 }
                 if let Round::WriteLog { slot, proposal, op, adopted } = round {
-                    // Accept phase entry: the leader *executes* the
-                    // transaction before writing followers' logs (§4.4).
-                    // Its permissibility check here is authoritative — the
-                    // op sits at a fixed position in the total order.
-                    if !adopted && !core.plane.permissible(&op) {
-                        core.note_rejected(&op);
-                        self.mu[g].abort_current();
-                        if self.chaos {
-                            self.done_fwd.insert((op.origin, op.seq), false);
-                        }
-                        if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
-                            self.answer_requester(core, ctx, req, false);
-                        }
-                        let next = self.logs[g].next_free_slot();
-                        if let Some(round) = self.mu[g].pump(next) {
-                            self.fan_out_round(core, ctx, mb, g, round);
-                        }
-                        return;
-                    }
-                    // Execute locally unless this replica already applied
-                    // the entry (e.g. it drained it from its log as a
-                    // follower before winning the election).
-                    if self.logs[g].applied_upto <= slot {
-                        let exec_cost = core.exec().op_exec_ns + core.write_state_cost(false);
-                        core.occupy(ctx.q.now(), exec_cost);
-                        if adopted {
-                            core.plane.apply_forced(&op);
-                        } else {
-                            core.plane.apply(&op);
-                        }
-                        core.executions += 1;
-                    }
-                    self.logs[g].write_slot(slot, proposal, op);
-                    self.logs[g].applied_upto = self.logs[g].applied_upto.max(slot + 1);
+                    self.mu_enter_accept(core, ctx, mb, g, rid, slot, proposal, op, adopted);
+                } else {
+                    self.fan_out_round(core, ctx, mb, g, rid, round)
                 }
-                self.fan_out_round(core, ctx, mb, g, round)
             }
-            Step::Commit { slot: _, proposal: _, op, adopted: _ } => {
+            Step::Commit { slot, proposal: _, op, adopted: _ } => {
                 // Quorum of followers acked the Accept write: committed.
                 // The SMR pipeline is sequential per group — the leader is
                 // execution-time-busy through the whole round (appendix
@@ -523,18 +525,14 @@ impl StrongPath {
                     core.busy_total += now - core.busy_until;
                     core.busy_until = now;
                 }
-                ctx.metrics.smr_commits += 1;
-                if self.chaos {
-                    self.done_fwd.insert((op.origin, op.seq), true);
+                self.mu_commit_one(core, ctx, g, slot, op);
+                // Rounds behind this one may have collected their Accept
+                // quorums out of order: release every contiguous committed
+                // successor, then refill the freed window stages.
+                while let Some((slot, _proposal, op, _adopted)) = self.mu[g].pop_released() {
+                    self.mu_commit_one(core, ctx, g, slot, op);
                 }
-                if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
-                    self.answer_requester(core, ctx, req, true);
-                }
-                // Pump the next queued conflicting op.
-                let slot = self.logs[g].next_free_slot();
-                if let Some(round) = self.mu[g].pump(slot) {
-                    self.fan_out_round(core, ctx, mb, g, round);
-                }
+                self.mu_pump_full(core, ctx, mb, g);
             }
             Step::Stall => {
                 // A stalled round on a never-confirmed leadership means
@@ -563,7 +561,7 @@ impl StrongPath {
                         }
                     }
                 }
-                self.mu[g].reset_in_flight();
+                self.mu[g].reset_window();
                 // Retry once the heartbeat scanner refreshes the live set.
                 ctx.q.push(
                     ctx.q.now() + core.heartbeat_period_ns,
@@ -571,6 +569,79 @@ impl StrongPath {
                     EventKind::Timer(TimerKind::SmrTick(g as u8)),
                 );
             }
+        }
+    }
+
+    /// Accept-phase entry (§4.4): the leader *executes* the transaction
+    /// before writing followers' logs — its permissibility check here is
+    /// authoritative, the op sits at a fixed position in the total order.
+    /// With a window, execution is serialized in slot order: once this
+    /// round enters Accept, any parked successor follows (recursively, one
+    /// slot at a time).
+    fn mu_enter_accept(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        mb: &dyn Membership,
+        g: usize,
+        rid: u64,
+        slot: u64,
+        proposal: u64,
+        op: OpCall,
+        adopted: bool,
+    ) {
+        if !adopted && !core.plane.permissible(&op) {
+            core.note_rejected(&op);
+            // Aborting frees this round's slot; later in-flight rounds
+            // flush back to the queue (they would leave a log hole) and
+            // re-fly from the freed slot via the pump below.
+            self.mu[g].abort_accept(rid);
+            if self.chaos {
+                self.done_fwd.insert((op.origin, op.seq), false);
+            }
+            if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
+                self.answer_requester(core, ctx, req, false);
+            }
+            self.mu_pump_full(core, ctx, mb, g);
+            return;
+        }
+        // Execute locally unless this replica already applied the entry
+        // (e.g. it drained it from its log as a follower before winning
+        // the election).
+        if self.logs[g].applied_upto <= slot {
+            let exec_cost = core.exec().op_exec_ns + core.write_state_cost(false);
+            core.occupy(ctx.q.now(), exec_cost);
+            if adopted {
+                core.plane.apply_forced(&op);
+            } else {
+                core.plane.apply(&op);
+            }
+            core.executions += 1;
+        }
+        self.logs[g].write_slot(slot, proposal, op);
+        self.logs[g].applied_upto = self.logs[g].applied_upto.max(slot + 1);
+        self.fan_out_round(core, ctx, mb, g, rid, Round::WriteLog { slot, proposal, op, adopted });
+        // The execution cursor advanced: a successor round parked in
+        // AcceptWait may enter Accept now.
+        if let Some((rid, Round::WriteLog { slot, proposal, op, adopted })) =
+            self.mu[g].pop_accept_ready()
+        {
+            self.mu_enter_accept(core, ctx, mb, g, rid, slot, proposal, op, adopted);
+        }
+    }
+
+    /// Commit-point bookkeeping for one released Mu round: latency
+    /// telemetry, the chaos exactly-once ledger, and the requester answer.
+    fn mu_commit_one(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, g: usize, slot: u64, op: OpCall) {
+        if let Some(t0) = self.round_start.remove(&(g, slot)) {
+            ctx.metrics.smr_round.record(ctx.q.now().saturating_sub(t0));
+        }
+        ctx.metrics.smr_commits += 1;
+        if self.chaos {
+            self.done_fwd.insert((op.origin, op.seq), true);
+        }
+        if let Some(req) = self.requesters.remove(&(op.origin, op.seq)) {
+            self.answer_requester(core, ctx, req, true);
         }
     }
 
@@ -584,7 +655,7 @@ impl StrongPath {
         self.mu_confirmed.iter_mut().for_each(|c| *c = true);
         core.request_sync(ctx, rightful);
         for g in 0..self.mu.len() {
-            self.mu[g].reset_in_flight();
+            self.mu[g].reset_window();
             for op in self.mu[g].take_queue() {
                 match self.requesters.remove(&(op.origin, op.seq)) {
                     Some(req @ Requester::Local { .. }) => self.forward_conflicting(core, ctx, op, req),
@@ -611,7 +682,7 @@ impl StrongPath {
             *l = false;
         }
         core.request_sync(ctx, rightful);
-        self.mu[g].reset_in_flight();
+        self.mu[g].reset_window();
         for op in self.mu[g].take_queue() {
             match self.requesters.remove(&(op.origin, op.seq)) {
                 Some(req @ Requester::Local { .. }) => self.forward_conflicting(core, ctx, op, req),
@@ -872,9 +943,12 @@ impl StrongPath {
         let rl = self.raft[0].leader.as_mut().unwrap();
         let term = rl.term;
         let (index, fanout) = rl.submit(op);
+        let depth = rl.depth() as u64;
         self.raft_mirror_append(0, index, term, &[op]);
         self.raft[0].pending.insert(index, req);
         if let Some((term, start, ops)) = fanout {
+            self.round_start.entry((0, start)).or_insert(ctx.q.now());
+            ctx.metrics.note_inflight(0, depth);
             self.raft_fan_out(core, ctx, mb, 0, term, start, ops);
         }
     }
@@ -905,6 +979,42 @@ impl StrongPath {
         );
         ctx.metrics.verbs += 1;
         ctx.net.issue(ctx.q, ctx.qps, &core.sys.fabric, ctx.q.now(), core.id, src, ack, false);
+    }
+
+    /// Commit-point processing for one released AppendEntries batch:
+    /// latency telemetry, the chaos exactly-once ledger, and each entry's
+    /// requester answer.
+    fn raft_commit_batch(
+        &mut self,
+        core: &mut ReplicaCore,
+        ctx: &mut Ctx,
+        s: usize,
+        start_index: u64,
+        ops: Vec<OpCall>,
+        done: Time,
+    ) {
+        if let Some(t0) = self.round_start.remove(&(s, start_index)) {
+            ctx.metrics.smr_round.record(ctx.q.now().saturating_sub(t0));
+        }
+        ctx.metrics.smr_commits += ops.len() as u64;
+        if self.chaos {
+            for o in &ops {
+                self.done_fwd.insert((o.origin, o.seq), true);
+            }
+        }
+        for i in 0..ops.len() as u64 {
+            if let Some(req) = self.raft[s].pending.remove(&(start_index + i)) {
+                match req {
+                    Requester::Local { client, arrival } => {
+                        let t = core.occupy(done, core.exec().client_overhead_ns / 2);
+                        core.complete_client(ctx, client, arrival, t);
+                    }
+                    Requester::Remote { reply_to, request_id } => {
+                        self.reply_remote(core, ctx, reply_to, request_id, true, true);
+                    }
+                }
+            }
+        }
     }
 
     fn raft_fan_out(&mut self, core: &mut ReplicaCore, ctx: &mut Ctx, mb: &dyn Membership, s: usize, term: u64, start: u64, ops: Vec<OpCall>) {
@@ -1160,26 +1270,23 @@ impl ReplicationPath for StrongPath {
                         // Leader state was updated at submit; commit point
                         // is the quorum ack.
                         let done = core.occupy(ctx.q.now(), core.exec().op_exec_ns);
-                        ctx.metrics.smr_commits += ops.len() as u64;
-                        if self.chaos {
-                            for o in &ops {
-                                self.done_fwd.insert((o.origin, o.seq), true);
-                            }
+                        self.raft_commit_batch(core, ctx, s, start_index, ops, done);
+                        // Batches behind this one may have collected their
+                        // majorities out of order: release every contiguous
+                        // committed successor in index order.
+                        while let Some((start, ops)) =
+                            self.raft[s].leader.as_mut().unwrap().pop_released()
+                        {
+                            let done = core.occupy(ctx.q.now(), core.exec().op_exec_ns);
+                            self.raft_commit_batch(core, ctx, s, start, ops, done);
                         }
-                        for i in 0..ops.len() as u64 {
-                            if let Some(req) = self.raft[s].pending.remove(&(start_index + i)) {
-                                match req {
-                                    Requester::Local { client, arrival } => {
-                                        let t = core.occupy(done, core.exec().client_overhead_ns / 2);
-                                        core.complete_client(ctx, client, arrival, t);
-                                    }
-                                    Requester::Remote { reply_to, request_id } => {
-                                        self.reply_remote(core, ctx, reply_to, request_id, true, true);
-                                    }
-                                }
-                            }
-                        }
-                        if let Some((term, start, ops)) = self.raft[s].leader.as_mut().unwrap().pump() {
+                        // Refill the freed window stages from the queue.
+                        loop {
+                            let rl = self.raft[s].leader.as_mut().unwrap();
+                            let Some((term, start, ops)) = rl.pump() else { break };
+                            let depth = rl.depth() as u64;
+                            self.round_start.entry((s, start)).or_insert(ctx.q.now());
+                            ctx.metrics.note_inflight(s, depth);
                             self.raft_fan_out(core, ctx, mb, s, term, start, ops);
                         }
                     }
@@ -1193,11 +1300,9 @@ impl ReplicationPath for StrongPath {
         let TokenCtx::Strong(token) = token else { return };
         match token {
             StrongToken::Mu { group, round_id } => {
+                // The automaton routes by rid nonce (stale rids drop).
                 let g = group as usize;
-                if round_id != self.round_id[g] {
-                    return; // stale round
-                }
-                let step = self.mu[g].on_response(if ok { Resp::Ack } else { Resp::Failure });
+                let step = self.mu[g].on_response(round_id, if ok { Resp::Ack } else { Resp::Failure });
                 self.mu_step(core, ctx, mb, g, step);
             }
             StrongToken::Forward { request_id } => {
@@ -1214,15 +1319,12 @@ impl ReplicationPath for StrongPath {
         // Only Mu rounds read remote state; Forward tokens ride writes.
         let TokenCtx::Strong(StrongToken::Mu { group, round_id }) = token else { return };
         let g = group as usize;
-        if round_id != self.round_id[g] {
-            return; // stale round
-        }
         let resp = match data {
             ReadData::MinProposal(p) => Resp::MinProposal(p),
             ReadData::LogSlot(s) => Resp::Slot(s),
             _ => Resp::Ack,
         };
-        let step = self.mu[g].on_response(resp);
+        let step = self.mu[g].on_response(round_id, resp);
         self.mu_step(core, ctx, mb, g, step);
     }
 
@@ -1261,11 +1363,17 @@ impl ReplicationPath for StrongPath {
                             self.raft_campaign(core, ctx, mb, s);
                         }
                     } else if core.is_leader_of(s) {
-                        if let Some(rl) = self.raft[s].leader.as_mut() {
-                            rl.set_cluster_size(mb.live_set().len());
-                            if let Some((term, start, ops)) = rl.refanout() {
-                                self.raft_fan_out(core, ctx, mb, s, term, start, ops);
+                        let flights = match self.raft[s].leader.as_mut() {
+                            Some(rl) => {
+                                rl.set_cluster_size(mb.live_set().len());
+                                rl.refanout()
                             }
+                            None => Vec::new(),
+                        };
+                        // Re-ship *every* in-flight batch: with a window a
+                        // lost append can wedge any stage, not just one.
+                        for (term, start, ops) in flights {
+                            self.raft_fan_out(core, ctx, mb, s, term, start, ops);
                         }
                     }
                     // Re-arm: permanently in chaos mode, and as a one-shot
@@ -1284,10 +1392,7 @@ impl ReplicationPath for StrongPath {
                 let g = g as usize;
                 if core.is_leader_of(g) {
                     self.mu[g].set_cluster_size(mb.live_set().len());
-                    let slot = self.logs[g].next_free_slot();
-                    if let Some(round) = self.mu[g].pump(slot) {
-                        self.fan_out_round(core, ctx, mb, g, round);
-                    }
+                    self.mu_pump_full(core, ctx, mb, g);
                 }
             }
             TimerKind::ForwardCheck { request_id } => {
@@ -1383,10 +1488,7 @@ impl ReplicationPath for StrongPath {
                         }
                         for g in 0..self.mu.len() {
                             self.mu[g].set_cluster_size(mb.live_set().len());
-                            let slot = self.logs[g].next_free_slot();
-                            if let Some(round) = self.mu[g].pump(slot) {
-                                self.fan_out_round(core, ctx, mb, g, round);
-                            }
+                            self.mu_pump_full(core, ctx, mb, g);
                         }
                     }
                 }
@@ -1433,10 +1535,7 @@ impl ReplicationPath for StrongPath {
                         for peer in mb.live_peers(core.id) {
                             self.replay_group_to(core, ctx, g, peer);
                         }
-                        let slot = self.logs[g].next_free_slot();
-                        if let Some(round) = self.mu[g].pump(slot) {
-                            self.fan_out_round(core, ctx, mb, g, round);
-                        }
+                        self.mu_pump_full(core, ctx, mb, g);
                     }
                 }
                 if gained {
@@ -1470,6 +1569,8 @@ impl ReplicationPath for StrongPath {
 
     fn install_logs(&mut self, logs: Vec<ReplicationLog>) {
         self.logs = logs;
+        // Stale round stamps belong to the pre-crash incarnation.
+        self.round_start = FastMap::default();
         // A freshly recovered replica leads nothing until the placement
         // table reassigns groups to it (sticky rebalance), so its
         // last-acted leadership view resets — any group it later regains

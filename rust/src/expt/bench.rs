@@ -13,7 +13,8 @@
 //!
 //! Cells deliberately engage every plane: the Account WRDT (conflicting
 //! withdraws → strong path) and the `mixed` 9-object catalog, each under
-//! batching off (1) and on (8), per backend — 12 cells total.
+//! batching off (1) and on (8), per backend, plus pipelined (window 8)
+//! Account cells for the Raft and Paxos backends — 14 cells total.
 
 use crate::config::{CatalogSpec, ConsensusBackend, SimConfig, WorkloadKind};
 use crate::expt::common::{self, CellJob};
@@ -31,11 +32,14 @@ pub const BATCHES: &[u32] = &[1, 8];
 /// One measured bench cell (the unit the ratchet compares).
 #[derive(Clone, Debug)]
 pub struct BenchCell {
-    /// Stable cell id (`<backend>_b<batch>_<objects>`) — the join key for
+    /// Stable cell id (`<backend>_b<batch>_<objects>`, with a `w<window>`
+    /// suffix after the batch for pipelined cells) — the join key for
     /// baseline comparison.
     pub id: String,
     pub backend: &'static str,
     pub batch: u32,
+    /// Strong-plane pipeline depth the cell ran under (1 = stop-and-wait).
+    pub window: u32,
     pub objects: &'static str,
     /// Leadership placement the cell ran under (the pinned grid is all
     /// `single`; recorded so sharded cells can join the grid later without
@@ -51,10 +55,14 @@ pub struct BenchCell {
     pub peak_rss_kb: u64,
     /// Replica 0's converged state digest — deterministic for a fixed seed.
     pub digest: u64,
+    /// p99 consensus-round commit latency in µs (0 when nothing conflicted).
+    pub smr_round_p99_us: f64,
+    /// Deepest strong-plane pipeline any shard reached (≤ `window`).
+    pub inflight_max: u64,
 }
 
 /// Ops per bench cell. Smaller than the figure sweeps: the grid exists to
-/// time the event loop, and 12 cells must fit a CI leg.
+/// time the event loop, and 14 cells must fit a CI leg.
 pub fn bench_ops(quick: bool) -> u64 {
     if quick {
         8_000
@@ -63,8 +71,9 @@ pub fn bench_ops(quick: bool) -> u64 {
     }
 }
 
-/// (cell id, backend name, batch, catalog label) — a cell's identity.
-type BenchMeta = (String, &'static str, u32, &'static str);
+/// (cell id, backend name, batch, window, catalog label) — a cell's
+/// identity.
+type BenchMeta = (String, &'static str, u32, u32, &'static str);
 
 fn grid(quick: bool) -> Vec<(BenchMeta, CellJob)> {
     let mut jobs = Vec::new();
@@ -80,9 +89,22 @@ fn grid(quick: bool) -> Vec<(BenchMeta, CellJob)> {
                 cfg.update_pct = 25;
                 cfg.seed = 0x5AFA_BE7C;
                 let id = format!("{}_b{batch}_{objects}", backend.name());
-                jobs.push(((id, backend.name(), batch, objects), (cfg, bench_ops(quick))));
+                jobs.push(((id, backend.name(), batch, 1, objects), (cfg, bench_ops(quick))));
             }
         }
+    }
+    // Pipelined strong-plane cells: window 8, unbatched, on the
+    // conflicting-heavy Account catalog for the two quorum-ack backends
+    // (pipelining moves their round-trip-bound commit path the most).
+    for backend in [ConsensusBackend::Raft, ConsensusBackend::Paxos] {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        cfg.backend = backend;
+        cfg.batch_size = 1;
+        cfg.window = 8;
+        cfg.update_pct = 25;
+        cfg.seed = 0x5AFA_BE7C;
+        let id = format!("{}_b1w8_account", backend.name());
+        jobs.push(((id, backend.name(), 1, 8, "account"), (cfg, bench_ops(quick))));
     }
     jobs
 }
@@ -102,13 +124,14 @@ pub fn bench_cells(quick: bool, threads: usize) -> Vec<BenchCell> {
     metas
         .into_iter()
         .zip(results)
-        .map(|((id, backend, batch, objects), (_, rep))| {
+        .map(|((id, backend, batch, window, objects), (_, rep))| {
             let events = rep.metrics.events;
             let wall_s = rep.wall_s;
             BenchCell {
                 id,
                 backend,
                 batch,
+                window,
                 objects,
                 placement: "single",
                 ops: bench_ops(quick),
@@ -117,6 +140,8 @@ pub fn bench_cells(quick: bool, threads: usize) -> Vec<BenchCell> {
                 events_per_sec: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
                 peak_rss_kb: peak_rss_kb(),
                 digest: rep.digests[0],
+                smr_round_p99_us: rep.metrics.smr_round.p99() as f64 / 1_000.0,
+                inflight_max: rep.metrics.inflight_max_overall(),
             }
         })
         .collect()
@@ -152,6 +177,7 @@ pub fn to_json(cells: &[BenchCell], quick: bool, provisional: bool) -> Json {
             o.set("id", c.id.as_str().into());
             o.set("backend", c.backend.into());
             o.set("batch", Json::Num(c.batch as f64));
+            o.set("window", Json::Num(c.window as f64));
             o.set("objects", c.objects.into());
             o.set("placement", c.placement.into());
             o.set("ops", c.ops.into());
@@ -161,6 +187,8 @@ pub fn to_json(cells: &[BenchCell], quick: bool, provisional: bool) -> Json {
             o.set("peak_rss_kb", c.peak_rss_kb.into());
             // Hex string: a u64 digest does not fit f64 exactly.
             o.set("digest", format!("{:016x}", c.digest).as_str().into());
+            o.set("smr_round_p99_us", c.smr_round_p99_us.into());
+            o.set("inflight_max", c.inflight_max.into());
             o
         })
         .collect();
@@ -182,11 +210,14 @@ pub fn run(quick: bool) -> Vec<Table> {
             "cell",
             "backend",
             "batch",
+            "window",
             "objects",
             "events",
             "wall_s",
             "events_per_sec",
             "peak_rss_kb",
+            "round_p99_us",
+            "inflight_max",
         ],
     );
     for c in &cells {
@@ -194,11 +225,14 @@ pub fn run(quick: bool) -> Vec<Table> {
             c.id.clone(),
             c.backend.into(),
             c.batch.to_string(),
+            c.window.to_string(),
             c.objects.into(),
             c.events.to_string(),
             format!("{:.3}", c.wall_s),
             format!("{:.0}", c.events_per_sec),
             c.peak_rss_kb.to_string(),
+            format!("{:.3}", c.smr_round_p99_us),
+            c.inflight_max.to_string(),
         ]);
     }
     vec![t]
@@ -211,13 +245,15 @@ mod tests {
     #[test]
     fn grid_ids_are_unique_and_stable() {
         let g = grid(true);
-        assert_eq!(g.len(), 12, "3 backends x 2 batches x 2 catalogs");
+        assert_eq!(g.len(), 14, "3 backends x 2 batches x 2 catalogs + 2 pipelined");
         let mut ids: Vec<&str> = g.iter().map(|((id, ..), _)| id.as_str()).collect();
         assert!(ids.contains(&"mu_b1_account"));
         assert!(ids.contains(&"paxos_b8_mixed"));
+        assert!(ids.contains(&"raft_b1w8_account"));
+        assert!(ids.contains(&"paxos_b1w8_account"));
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), 12, "cell ids must be unique join keys");
+        assert_eq!(ids.len(), 14, "cell ids must be unique join keys");
     }
 
     #[test]
@@ -226,6 +262,7 @@ mod tests {
             id: "mu_b1_account".into(),
             backend: "mu",
             batch: 1,
+            window: 1,
             objects: "account",
             placement: "single",
             ops: 8000,
@@ -234,12 +271,16 @@ mod tests {
             events_per_sec: 493824.0,
             peak_rss_kb: 4096,
             digest: 0xDEAD_BEEF,
+            smr_round_p99_us: 4.5,
+            inflight_max: 1,
         }];
         let s = to_json(&cells, true, true).render();
         assert!(s.contains(r#""schema":"safardb-bench-v1""#));
         assert!(s.contains(r#""provisional":true"#));
         assert!(s.contains(r#""placement":"single""#));
         assert!(s.contains(r#""id":"mu_b1_account""#));
+        assert!(s.contains(r#""window":1"#));
+        assert!(s.contains(r#""inflight_max":1"#));
         assert!(s.contains(r#""digest":"00000000deadbeef""#));
     }
 

@@ -110,6 +110,24 @@ pub fn placement_filter() -> Option<LeaderPlacement> {
     }
 }
 
+/// Strong-plane window restriction for window-aware sweeps (the CLI's
+/// `--window N` knob; 0 = unset, the sweep's own default axis).
+static WINDOW: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin window-aware sweeps (currently `expt loadcurve`) to one pipeline
+/// depth — the CI matrix runs its pipelined legs this way.
+pub fn set_window_filter(w: u32) {
+    WINDOW.store(w as usize, Ordering::SeqCst);
+}
+
+/// The configured window restriction, if any.
+pub fn window_filter() -> Option<u32> {
+    match WINDOW.load(Ordering::SeqCst) {
+        0 => None,
+        w => Some(w as u32),
+    }
+}
+
 /// Pin the worker count for subsequent [`run_cells_auto`] calls (the CLI's
 /// `--threads N` knob lands here).
 pub fn set_threads(n: usize) {

@@ -1,24 +1,29 @@
 //! Load curve — the open-loop saturation sweep: offered-load grid ×
-//! arrival shape × consensus backend × batch × leadership placement over a
-//! 16-instance Account catalog (per-(object, group) strong ordering, so
-//! sharded placements and batching both matter). Each cell drives seeded
-//! per-node arrival streams (`arrival = poisson:RATE` / `bursty:...`)
-//! through the admission queue and records the latency-vs-offered-load
-//! knee the paper's fig. 6–11 family gestures at: response percentiles
-//! rise gently until the service capacity knee, then the queue fills,
-//! latency jumps an order of magnitude, and the shed column takes off.
+//! arrival shape × consensus backend × batch × window × leadership
+//! placement over a 16-instance Account catalog (per-(object, group)
+//! strong ordering, so sharded placements, batching and pipelining all
+//! matter). Each cell drives seeded per-node arrival streams (`arrival =
+//! poisson:RATE` / `bursty:...`) through the admission queue and records
+//! the latency-vs-offered-load knee the paper's fig. 6–11 family gestures
+//! at: response percentiles rise gently until the service capacity knee,
+//! then the queue fills, latency jumps an order of magnitude, and the shed
+//! column takes off.
 //!
 //! Batching gets to show its real win here — coalescing under bursty
 //! arrivals rather than under a fixed in-flight cap — so every rate runs
-//! at `batch ∈ {1, 8}`. Seeds depend only on the workload axes (arrival
-//! kind, rate, batch), so backend/placement pairs of a cell face the same
-//! arrival stream. The CI smoke leg (`expt loadcurve --quick --threads 2
-//! --backend ...`) runs one backend per matrix job and uploads the CSV.
+//! at `batch ∈ {1, 8}`; full sweeps additionally pipeline the strong plane
+//! at `window ∈ {1, 8}` (the sliding window moves the knee by overlapping
+//! consensus rounds instead of widening them). Seeds depend only on the
+//! workload axes (arrival kind, rate, batch) — never on backend, placement
+//! or window — so every pipeline depth of a cell faces the bit-identical
+//! arrival stream. The CI smoke legs (`expt loadcurve --quick --threads 2
+//! --backend ...` and `... --window 8`) run one backend per matrix job and
+//! upload the CSV.
 
 use crate::config::{
     ArrivalProcess, CatalogSpec, ConsensusBackend, LeaderPlacement, SimConfig, WorkloadKind,
 };
-use crate::expt::common::{backend_filter, f3, placement_filter, run_cells_tagged};
+use crate::expt::common::{backend_filter, f3, placement_filter, run_cells_tagged, window_filter};
 use crate::rdt::RdtKind;
 use crate::util::table::Table;
 
@@ -52,19 +57,27 @@ pub fn run(quick: bool) -> Vec<Table> {
         None if quick => vec![LeaderPlacement::Single],
         None => vec![LeaderPlacement::Single, LeaderPlacement::Hash],
     };
+    let windows: Vec<u32> = match window_filter() {
+        Some(w) => vec![w],
+        // Quick sweeps stay stop-and-wait (CI opts into pipelined legs
+        // via --window); full sweeps carry the comparison.
+        None if quick => vec![1],
+        None => vec![1, 8],
+    };
     let rates: &[u64] = if quick { RATE_SWEEP_QUICK } else { RATE_SWEEP };
     // `ops` is the cluster-wide arrival-stream budget (total offered ops),
     // not a completion target: saturated cells complete fewer (shed).
     let ops: u64 = if quick { 6_000 } else { 16_000 };
 
     let mut t = Table::new(
-        "Load curve — offered load × arrival shape × backend × batch × placement \
+        "Load curve — offered load × arrival shape × backend × batch × window × placement \
          (account:16 catalog, 25% updates, open loop)",
         &[
             "arrival",
             "rate_per_node",
             "backend",
             "batch",
+            "window",
             "placement",
             "nodes",
             "offered",
@@ -74,6 +87,8 @@ pub fn run(quick: bool) -> Vec<Table> {
             "p50_us",
             "p95_us",
             "p99_us",
+            "round_p99_us",
+            "inflight_max",
             "rt_us",
             "tput_ops_us",
         ],
@@ -81,33 +96,45 @@ pub fn run(quick: bool) -> Vec<Table> {
     let mut jobs = Vec::new();
     for &placement in &placements {
         for &backend in &backends {
-            for (ri, &rate) in rates.iter().enumerate() {
-                for (ki, arrival) in arrival_kinds(rate).into_iter().enumerate() {
-                    for (qi, &batch) in [1u32, 8].iter().enumerate() {
-                        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
-                        cfg.objects = CatalogSpec::parse("account:16").expect("spec parses");
-                        cfg.objects.zipf_theta = 0.6;
-                        cfg.arrival = arrival;
-                        cfg.backend = backend;
-                        cfg.placement = placement;
-                        cfg.batch_size = batch;
-                        cfg.n_replicas = 4;
-                        cfg.update_pct = 25;
-                        cfg.seed =
-                            0x10AD_0000 + (ki as u64) * 0x10000 + (ri as u64) * 0x100 + qi as u64;
-                        jobs.push(((arrival, rate, backend, batch, placement), (cfg, ops)));
+            for &window in &windows {
+                for (ri, &rate) in rates.iter().enumerate() {
+                    for (ki, arrival) in arrival_kinds(rate).into_iter().enumerate() {
+                        for (qi, &batch) in [1u32, 8].iter().enumerate() {
+                            let mut cfg =
+                                SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+                            cfg.objects = CatalogSpec::parse("account:16").expect("spec parses");
+                            cfg.objects.zipf_theta = 0.6;
+                            cfg.arrival = arrival;
+                            cfg.backend = backend;
+                            cfg.placement = placement;
+                            cfg.batch_size = batch;
+                            cfg.window = window;
+                            cfg.n_replicas = 4;
+                            cfg.update_pct = 25;
+                            // Workload axes only: pipeline depths of a cell
+                            // share the arrival stream bit-for-bit.
+                            cfg.seed = 0x10AD_0000
+                                + (ki as u64) * 0x10000
+                                + (ri as u64) * 0x100
+                                + qi as u64;
+                            jobs.push((
+                                (arrival, rate, backend, batch, window, placement),
+                                (cfg, ops),
+                            ));
+                        }
                     }
                 }
             }
         }
     }
-    for ((arrival, rate, backend, batch, placement), cell, rep) in run_cells_tagged(jobs) {
+    for ((arrival, rate, backend, batch, window, placement), cell, rep) in run_cells_tagged(jobs) {
         let m = &rep.metrics;
         t.row(vec![
             arrival.label().split(':').next().unwrap_or("?").to_string(),
             rate.to_string(),
             backend.name().into(),
             batch.to_string(),
+            window.to_string(),
             placement.name().into(),
             "4".to_string(),
             m.offered.to_string(),
@@ -117,6 +144,8 @@ pub fn run(quick: bool) -> Vec<Table> {
             f3(m.response.p50() as f64 / 1_000.0),
             f3(m.response.p95() as f64 / 1_000.0),
             f3(m.response.p99() as f64 / 1_000.0),
+            f3(m.smr_round.p99() as f64 / 1_000.0),
+            m.inflight_max_overall().to_string(),
             f3(cell.rt_us),
             f3(cell.tput),
         ]);
@@ -136,17 +165,28 @@ mod tests {
             Some(_) => 1,
             None => ConsensusBackend::ALL.len(),
         };
-        // rates × {poisson, bursty} × {batch 1, 8} × backends × 1 placement.
+        // rates × {poisson, bursty} × {batch 1, 8} × backends × 1 placement
+        // × 1 window (quick pins the window axis like the placement axis).
         assert_eq!(t.rows().len(), RATE_SWEEP_QUICK.len() * 2 * 2 * backends);
         for row in t.rows() {
-            let offered: u64 = row[6].parse().unwrap();
-            let completed: u64 = row[7].parse().unwrap();
-            let shed: u64 = row[8].parse().unwrap();
+            let offered: u64 = row[7].parse().unwrap();
+            let completed: u64 = row[8].parse().unwrap();
+            let shed: u64 = row[9].parse().unwrap();
             // Fault-free: every offered arrival either completed or shed,
             // and the stream budget is exactly the per-node split of ops.
             assert_eq!(offered, 6_000, "full stream offered: {row:?}");
             assert_eq!(offered, completed + shed, "accounting identity: {row:?}");
             assert!(completed > 0, "saturated cells still serve: {row:?}");
+            // Percentiles are order statistics of one histogram: p50 ≤
+            // p95 ≤ p99 must hold in every cell.
+            let p50: f64 = row[11].parse().unwrap();
+            let p95: f64 = row[12].parse().unwrap();
+            let p99: f64 = row[13].parse().unwrap();
+            assert!(p50 <= p95 && p95 <= p99, "percentile ordering: {row:?}");
+            // The pipeline never exceeds its configured depth.
+            let window: u64 = row[4].parse().unwrap();
+            let inflight: u64 = row[15].parse().unwrap();
+            assert!(inflight <= window, "inflight {inflight} > window {window}: {row:?}");
         }
         // Knee shape per (backend, arrival, batch) series: the top of the
         // rate grid sits past saturation, so p99 must be far above the
@@ -163,9 +203,9 @@ mod tests {
                         .filter(|r| r[0] == arrival && r[2] == backend.name() && r[3] == batch)
                         .collect();
                     assert_eq!(series.len(), RATE_SWEEP_QUICK.len());
-                    let p99_lo: f64 = series.first().unwrap()[12].parse().unwrap();
-                    let p99_hi: f64 = series.last().unwrap()[12].parse().unwrap();
-                    let shed_hi: u64 = series.last().unwrap()[8].parse().unwrap();
+                    let p99_lo: f64 = series.first().unwrap()[13].parse().unwrap();
+                    let p99_hi: f64 = series.last().unwrap()[13].parse().unwrap();
+                    let shed_hi: u64 = series.last().unwrap()[9].parse().unwrap();
                     assert!(
                         p99_hi >= 5.0 * p99_lo,
                         "{} {arrival} batch={batch}: no knee: p99 {p99_lo} -> {p99_hi}",

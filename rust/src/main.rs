@@ -3,6 +3,7 @@
 //! ```text
 //! safardb expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]
 //!                       [--placement single|hash|round_robin|load_aware]
+//!                       [--window N]
 //!                                                 reproduce a paper table/figure
 //! safardb list                                    list experiment ids
 //! safardb run [config.kv] [k=v ...]               run one cluster config, print report
@@ -37,7 +38,7 @@ fn main() {
         _ => {
             eprintln!("usage: safardb <expt|list|run|bench-compare|runtime-check> [...]");
             eprintln!("  expt <id|all> [--quick] [--threads N] [--backend mu|raft|paxos]");
-            eprintln!("                [--placement single|hash|round_robin|load_aware]");
+            eprintln!("                [--placement single|hash|round_robin|load_aware] [--window N]");
             eprintln!("                           reproduce a paper table/figure (see `safardb list`)");
             eprintln!("  run [config.kv] [k=v]    run one cluster and print the report");
             eprintln!("  bench-compare <baseline.json> <current.json>");
@@ -60,11 +61,20 @@ fn parse_backend(v: &str) -> Option<ConsensusBackend> {
     ConsensusBackend::parse(v)
 }
 
+/// Same bounds as `SimConfig::validate` (1 = pipelining off, 64 = cap).
+fn parse_window(v: &str) -> Option<u32> {
+    match v.parse::<u32>() {
+        Ok(w) if (1..=64).contains(&w) => Some(w),
+        _ => None,
+    }
+}
+
 fn cmd_expt(args: &[String]) -> i32 {
     let mut quick = false;
     let mut threads: Option<usize> = None;
     let mut backend: Option<ConsensusBackend> = None;
     let mut placement: Option<LeaderPlacement> = None;
+    let mut window: Option<u32> = None;
     let mut ids: Vec<&str> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -105,6 +115,23 @@ fn cmd_expt(args: &[String]) -> i32 {
                 return 2;
             };
             backend = Some(b);
+        } else if a == "--window" {
+            i += 1;
+            let Some(v) = args.get(i) else {
+                eprintln!("--window requires a value (1..=64)");
+                return 2;
+            };
+            let Some(w) = parse_window(v) else {
+                eprintln!("bad --window value '{v}' (want an integer in 1..=64)");
+                return 2;
+            };
+            window = Some(w);
+        } else if let Some(v) = a.strip_prefix("--window=") {
+            let Some(w) = parse_window(v) else {
+                eprintln!("bad --window value '{v}' (want an integer in 1..=64)");
+                return 2;
+            };
+            window = Some(w);
         } else if a == "--threads" {
             i += 1;
             let Some(v) = args.get(i) else {
@@ -176,6 +203,21 @@ fn cmd_expt(args: &[String]) -> i32 {
         expt::common::set_placement_filter(p);
         eprintln!("[placement filter: {}]", p.name());
     }
+    if let Some(w) = window {
+        // Only the window-aware sweep consults the filter; accepting it
+        // elsewhere would silently emit unfiltered CSVs.
+        let ids_for_check: Vec<&str> = if ids.is_empty() || ids == ["all"] {
+            expt::ALL.to_vec()
+        } else {
+            ids.clone()
+        };
+        if ids_for_check.iter().any(|id| !matches!(expt::canonical(id), Some("loadcurve"))) {
+            eprintln!("--window only applies to `expt loadcurve`");
+            return 2;
+        }
+        expt::common::set_window_filter(w);
+        eprintln!("[window filter: {w}]");
+    }
     eprintln!("[sweep executor: {} worker thread(s)]", expt::common::configured_threads());
     let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
         expt::ALL.to_vec()
@@ -197,15 +239,20 @@ fn cmd_expt(args: &[String]) -> i32 {
         for t in &tables {
             println!("{}", t.render());
         }
-        // A placement-filtered scaleout/chaos/loadcurve run saves under a
-        // suffixed id so the CI matrix's single and hash legs upload
-        // distinct CSVs.
-        let save_id = match expt::common::placement_filter() {
+        // A placement- or window-filtered scaleout/chaos/loadcurve run
+        // saves under a suffixed id so the CI matrix's legs upload
+        // distinct CSVs (the suffixes compose: `loadcurve_hash_w8`).
+        let mut save_id = match expt::common::placement_filter() {
             Some(p) if matches!(canon, "scaleout" | "chaos" | "loadcurve") => {
                 format!("{canon}_{}", p.name())
             }
             _ => canon.to_string(),
         };
+        if let Some(w) = expt::common::window_filter() {
+            if canon == "loadcurve" {
+                save_id = format!("{save_id}_w{w}");
+            }
+        }
         expt::common::save(&tables, &save_id);
         println!("[saved results/{save_id}*.csv]\n");
     }

@@ -19,6 +19,14 @@ pub struct RunMetrics {
     pub rejected: u64,
     /// Conflicting ops that went through SMR.
     pub smr_commits: u64,
+    /// Strong-plane round commit latency (ns): first fan-out of a
+    /// consensus round / append batch to its in-order commit release.
+    /// With `window` > 1 overlapping rounds keep their own stamps.
+    pub smr_round: Histogram,
+    /// Per-shard (global sync group; index 0 under `placement = single`)
+    /// high-water mark of concurrent in-flight consensus rounds. Never
+    /// exceeds `window`; 1 everywhere at the stop-and-wait default.
+    pub inflight_max: Vec<u64>,
     /// Verbs put on the wire.
     pub verbs: u64,
     /// Per-path batching merge count: every *batch* of k coalesced
@@ -78,6 +86,8 @@ impl RunMetrics {
             completed_sum: 0,
             rejected: 0,
             smr_commits: 0,
+            smr_round: Histogram::new(),
+            inflight_max: Vec::new(),
             verbs: 0,
             coalesced: 0,
             executions: 0,
@@ -97,6 +107,20 @@ impl RunMetrics {
             last_completion_ns: 0,
             events: 0,
         }
+    }
+
+    /// Record an observed pipeline depth for `shard` (resizes on first
+    /// sight — sharded placements discover their group count lazily).
+    pub fn note_inflight(&mut self, shard: usize, depth: u64) {
+        if self.inflight_max.len() <= shard {
+            self.inflight_max.resize(shard + 1, 0);
+        }
+        self.inflight_max[shard] = self.inflight_max[shard].max(depth);
+    }
+
+    /// Deepest pipeline any shard reached (bench/loadcurve telemetry).
+    pub fn inflight_max_overall(&self) -> u64 {
+        self.inflight_max.iter().copied().max().unwrap_or(0)
     }
 
     pub fn total_completed(&self) -> u64 {

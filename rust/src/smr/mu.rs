@@ -15,6 +15,16 @@
 //! included). NACKed/crashed followers are counted as failures; if failures
 //! make quorum impossible the instance stalls and the engine retries after
 //! the follower list is refreshed by the Leader Switch Plane.
+//!
+//! With a window > 1 the instance keeps several transactions in flight at
+//! contiguous slots: their Prepare phases (ReadMinProposals, WriteProposal,
+//! ReadSlots) overlap freely and quorums collect out of order, but the
+//! Accept entry — where the engine runs permissibility, applies, and writes
+//! the log slot — is serialized in slot order behind an execution cursor,
+//! and commits release in slot order behind the commit cursor (the deque
+//! front). Every phase fan-out carries a fresh `rid` nonce; the engine
+//! tags tokens with it and the instance routes responses back to the
+//! owning round (stale rids fall on the floor).
 
 use std::collections::VecDeque;
 
@@ -35,13 +45,15 @@ pub enum Round {
     WriteLog { slot: u64, proposal: u64, op: OpCall, adopted: bool },
 }
 
-/// What the engine should do after feeding a response.
+/// What the engine should do after feeding a response. `Next` carries the
+/// rid nonce of the new phase fan-out — the engine stamps it on the
+/// round's completion tokens.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Step {
     /// Nothing yet — keep feeding responses.
     Wait,
     /// Start the next round (previous one reached quorum).
-    Next(Round),
+    Next(u64, Round),
     /// The entry in `slot` is committed; `op` must be applied at the leader
     /// and (if `adopted`) the originally proposed op must be re-submitted.
     Commit { slot: u64, proposal: u64, op: OpCall, adopted: Option<OpCall> },
@@ -60,31 +72,49 @@ pub enum Resp {
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Phase {
-    Idle,
     ReadProposals,
     WriteProposal,
     ReadSlots,
+    /// ReadSlots quorum reached, but an earlier round has not entered
+    /// Accept yet: parked behind the execution cursor.
+    AcceptWait,
     Accept,
 }
 
+/// One in-flight transaction's consensus state (a window stage).
 #[derive(Debug)]
-pub struct MuInstance {
-    pub group: u8,
+struct MuRound {
+    /// Nonce of the in-flight phase fan-out (fresh per phase).
+    rid: u64,
     phase: Phase,
-    /// Followers targeted in the in-flight round.
+    /// Followers targeted in the in-flight phase.
     targeted: u32,
     responded: u32,
     failed: u32,
-    /// Cluster size (quorum = majority of n, leader counts as one vote).
-    n: usize,
     proposal: u64,
-    max_seen_proposal: u64,
     slot: u64,
     current_op: Option<OpCall>,
     /// Originally submitted op when a foreign entry got adopted.
     original_op: Option<OpCall>,
     /// Highest-proposal non-empty slot seen during ReadSlots.
     adopted: Option<(u64, OpCall)>,
+    /// The Accept entry is a foreign adoption (rides `Round::WriteLog`).
+    was_adopted: bool,
+    /// Accept quorum reached but an earlier round hasn't: committed out of
+    /// order, released strictly in slot order.
+    committed: bool,
+}
+
+#[derive(Debug)]
+pub struct MuInstance {
+    pub group: u8,
+    /// Cluster size (quorum = majority of n, leader counts as one vote).
+    n: usize,
+    /// Pipeline depth: concurrent rounds at contiguous slots.
+    window: usize,
+    rounds: VecDeque<MuRound>,
+    next_rid: u64,
+    max_seen_proposal: u64,
     queue: VecDeque<OpCall>,
     pub committed: u64,
     pub restarts: u64,
@@ -92,19 +122,17 @@ pub struct MuInstance {
 
 impl MuInstance {
     pub fn new(group: u8, n: usize) -> Self {
+        Self::with_window(group, n, 1)
+    }
+
+    pub fn with_window(group: u8, n: usize, window: usize) -> Self {
         MuInstance {
             group,
-            phase: Phase::Idle,
-            targeted: 0,
-            responded: 0,
-            failed: 0,
             n,
-            proposal: 0,
+            window: window.max(1),
+            rounds: VecDeque::new(),
+            next_rid: 0,
             max_seen_proposal: 0,
-            slot: 0,
-            current_op: None,
-            original_op: None,
-            adopted: None,
             queue: VecDeque::new(),
             committed: 0,
             restarts: 0,
@@ -121,164 +149,271 @@ impl MuInstance {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.phase == Phase::Idle && self.queue.is_empty()
+        self.rounds.is_empty() && self.queue.is_empty()
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
-    /// Submit a conflicting op. Returns the first round to fan out if the
-    /// instance was idle.
-    pub fn submit(&mut self, op: OpCall, next_free_slot: u64) -> Option<Round> {
-        if self.phase != Phase::Idle {
+    /// Current pipeline depth (for `inflight_max` telemetry).
+    pub fn depth(&self) -> usize {
+        self.rounds.len()
+    }
+
+    fn alloc_rid(&mut self) -> u64 {
+        self.next_rid += 1;
+        self.next_rid
+    }
+
+    /// Submit a conflicting op. Returns `(rid, slot, round)` to fan out if
+    /// the window had a free stage, else queues.
+    pub fn submit(&mut self, op: OpCall, next_free_slot: u64) -> Option<(u64, u64, Round)> {
+        if self.rounds.len() >= self.window {
             self.queue.push_back(op);
             return None;
         }
-        self.begin(op, next_free_slot)
+        Some(self.begin(op, next_free_slot))
     }
 
-    fn begin(&mut self, op: OpCall, next_free_slot: u64) -> Option<Round> {
-        self.current_op = Some(op);
-        self.slot = next_free_slot;
-        self.adopted = None;
-        self.phase = Phase::ReadProposals;
-        self.arm();
-        Some(Round::ReadMinProposals)
+    fn begin(&mut self, op: OpCall, next_free_slot: u64) -> (u64, u64, Round) {
+        // In-flight rounds hold slots the log doesn't show yet (the slot is
+        // only written at the Accept entry): place after the deepest one.
+        let slot = next_free_slot.max(self.rounds.back().map_or(0, |r| r.slot + 1));
+        let rid = self.alloc_rid();
+        self.rounds.push_back(MuRound {
+            rid,
+            phase: Phase::ReadProposals,
+            targeted: 0,
+            responded: 0,
+            failed: 0,
+            proposal: 0,
+            slot,
+            current_op: Some(op),
+            original_op: None,
+            adopted: None,
+            was_adopted: false,
+            committed: false,
+        });
+        (rid, slot, Round::ReadMinProposals)
     }
 
-    /// The engine tells the instance how many followers it targeted.
-    pub fn round_started(&mut self, targeted: u32) {
-        self.targeted = targeted;
+    /// The engine tells the instance how many followers the `rid` fan-out
+    /// targeted.
+    pub fn round_started(&mut self, rid: u64, targeted: u32) {
+        if let Some(r) = self.rounds.iter_mut().find(|r| r.rid == rid) {
+            r.targeted = targeted;
+        }
     }
 
-    fn arm(&mut self) {
-        self.responded = 0;
-        self.failed = 0;
-        self.max_seen_proposal = self.max_seen_proposal.max(self.proposal);
-    }
-
-    /// Pop the next queued op once a commit completes. Returns the opening
-    /// round if something was queued.
-    pub fn pump(&mut self, next_free_slot: u64) -> Option<Round> {
-        debug_assert_eq!(self.phase, Phase::Idle);
+    /// Start the next queued op if the window has a free stage. Call again
+    /// until `None` to fill the window (pump-until-full).
+    pub fn pump(&mut self, next_free_slot: u64) -> Option<(u64, u64, Round)> {
+        if self.rounds.len() >= self.window {
+            return None;
+        }
         let op = self.queue.pop_front()?;
-        self.begin(op, next_free_slot)
+        Some(self.begin(op, next_free_slot))
     }
 
-    /// Feed one follower response for the in-flight round.
-    pub fn on_response(&mut self, resp: Resp) -> Step {
-        if self.phase == Phase::Idle {
-            return Step::Wait; // stale response after stall/commit
+    /// Release the committed round at the commit cursor, if any. The
+    /// engine drains this after every Commit step so rounds whose Accept
+    /// quorum arrived out of order commit strictly in slot order.
+    pub fn pop_released(&mut self) -> Option<(u64, u64, OpCall, Option<OpCall>)> {
+        let front = self.rounds.front()?;
+        if !(front.phase == Phase::Accept && front.committed) {
+            return None;
         }
-        match resp {
-            Resp::Failure => self.failed += 1,
-            Resp::MinProposal(p) => {
-                self.max_seen_proposal = self.max_seen_proposal.max(p);
-                self.responded += 1;
-            }
-            Resp::Ack => self.responded += 1,
-            Resp::Slot(entry) => {
-                if let Some((p, op)) = entry {
-                    match self.adopted {
-                        Some((bp, _)) if bp >= p => {}
-                        _ => self.adopted = Some((p, op)),
-                    }
-                }
-                self.responded += 1;
-            }
+        let r = self.rounds.pop_front().expect("front exists");
+        self.committed += 1;
+        let op = r.current_op.expect("op in flight");
+        // If we adopted a foreign entry, the original op restarts from
+        // Prepare (paper: "the leader repeats the Prepare phase for the
+        // originally proposed transaction").
+        let adopted = r.original_op;
+        if let Some(orig) = adopted {
+            self.queue.push_front(orig);
         }
+        Some((r.slot, r.proposal, op, adopted))
+    }
 
+    /// A parked round whose predecessor has entered Accept: transition it
+    /// to Accept and return its `(rid, WriteLog)` fan-out. The engine
+    /// drains this after every Accept entry so execution stays serialized
+    /// in slot order.
+    pub fn pop_accept_ready(&mut self) -> Option<(u64, Round)> {
+        let idx = self.rounds.iter().position(|r| r.phase == Phase::AcceptWait)?;
+        if idx > 0 && self.rounds[idx - 1].phase != Phase::Accept {
+            return None; // execution cursor still behind
+        }
+        let rid = self.alloc_rid();
+        let r = &mut self.rounds[idx];
+        r.phase = Phase::Accept;
+        r.rid = rid;
+        r.responded = 0;
+        r.failed = 0;
+        let round = Round::WriteLog {
+            slot: r.slot,
+            proposal: r.proposal,
+            op: r.current_op.expect("resolved at ReadSlots"),
+            adopted: r.was_adopted,
+        };
+        Some((rid, round))
+    }
+
+    /// Feed one follower response for the phase fan-out tagged `rid`.
+    pub fn on_response(&mut self, rid: u64, resp: Resp) -> Step {
         let need = self.quorum_followers();
-        if self.responded < need {
+        // Route to the owning round; responses from superseded phases,
+        // committed rounds, or flushed rounds carry dead rids and drop.
+        let Some(idx) = self
+            .rounds
+            .iter()
+            .position(|r| r.rid == rid && !r.committed && r.phase != Phase::AcceptWait)
+        else {
+            return Step::Wait;
+        };
+        if let Resp::MinProposal(p) = resp {
+            self.max_seen_proposal = self.max_seen_proposal.max(p);
+        }
+        {
+            let r = &mut self.rounds[idx];
+            match resp {
+                Resp::Failure => r.failed += 1,
+                Resp::MinProposal(_) | Resp::Ack => r.responded += 1,
+                Resp::Slot(entry) => {
+                    if let Some((p, op)) = entry {
+                        match r.adopted {
+                            Some((bp, _)) if bp >= p => {}
+                            _ => r.adopted = Some((p, op)),
+                        }
+                    }
+                    r.responded += 1;
+                }
+            }
+        }
+        let r = &self.rounds[idx];
+        if r.responded < need {
             // Quorum impossible once too many targets have failed.
-            let healthy_remaining = self.targeted - self.responded - self.failed;
-            if self.responded + healthy_remaining < need {
+            let healthy_remaining = r.targeted - r.responded - r.failed;
+            if r.responded + healthy_remaining < need {
                 return Step::Stall;
             }
             return Step::Wait;
         }
 
-        // Quorum reached: advance the phase.
-        match self.phase {
+        // Quorum reached: advance the round's phase.
+        match r.phase {
             Phase::ReadProposals => {
-                self.proposal = self.max_seen_proposal + 1;
-                self.phase = Phase::WriteProposal;
-                self.arm();
-                Step::Next(Round::WriteProposal { proposal: self.proposal })
+                let proposal = self.max_seen_proposal + 1;
+                self.max_seen_proposal = proposal;
+                let rid = self.alloc_rid();
+                let r = &mut self.rounds[idx];
+                r.proposal = proposal;
+                r.phase = Phase::WriteProposal;
+                r.rid = rid;
+                r.responded = 0;
+                r.failed = 0;
+                Step::Next(rid, Round::WriteProposal { proposal })
             }
             Phase::WriteProposal => {
-                self.phase = Phase::ReadSlots;
-                self.arm();
-                Step::Next(Round::ReadSlots { slot: self.slot })
+                let rid = self.alloc_rid();
+                let r = &mut self.rounds[idx];
+                r.phase = Phase::ReadSlots;
+                r.rid = rid;
+                r.responded = 0;
+                r.failed = 0;
+                Step::Next(rid, Round::ReadSlots { slot: r.slot })
             }
             Phase::ReadSlots => {
-                // Adopt a previously accepted entry if any slot was non-empty.
-                let mut was_adopted = false;
-                let op = if let Some((_, foreign)) = self.adopted {
-                    if Some(foreign) != self.current_op {
-                        self.original_op = self.current_op.take();
+                // Adopt a previously accepted entry if any slot was
+                // non-empty, then enter Accept — unless an earlier round
+                // hasn't executed yet (the execution cursor serializes
+                // Accept entries in slot order).
+                let r = &mut self.rounds[idx];
+                if let Some((_, foreign)) = r.adopted {
+                    if Some(foreign) != r.current_op {
+                        r.original_op = r.current_op.take();
+                        r.was_adopted = true;
                         self.restarts += 1;
-                        was_adopted = true;
                     }
-                    foreign
-                } else {
-                    self.current_op.expect("op in flight")
-                };
-                self.current_op = Some(op);
-                self.phase = Phase::Accept;
-                self.arm();
-                Step::Next(Round::WriteLog {
-                    slot: self.slot,
-                    proposal: self.proposal,
-                    op,
-                    adopted: was_adopted,
-                })
+                    r.current_op = Some(foreign);
+                }
+                if idx > 0 && self.rounds[idx - 1].phase != Phase::Accept {
+                    self.rounds[idx].phase = Phase::AcceptWait;
+                    return Step::Wait;
+                }
+                let rid = self.alloc_rid();
+                let r = &mut self.rounds[idx];
+                r.phase = Phase::Accept;
+                r.rid = rid;
+                r.responded = 0;
+                r.failed = 0;
+                Step::Next(
+                    rid,
+                    Round::WriteLog {
+                        slot: r.slot,
+                        proposal: r.proposal,
+                        op: r.current_op.expect("op in flight"),
+                        adopted: r.was_adopted,
+                    },
+                )
             }
             Phase::Accept => {
-                let op = self.current_op.take().expect("op in flight");
-                let slot = self.slot;
-                let proposal = self.proposal;
-                self.committed += 1;
-                self.phase = Phase::Idle;
-                // If we adopted a foreign entry, the original op restarts
-                // from Prepare (paper: "the leader repeats the Prepare
-                // phase for the originally proposed transaction").
-                let adopted = self.original_op.take();
-                if let Some(orig) = adopted {
-                    self.queue.push_front(orig);
+                self.rounds[idx].committed = true;
+                match self.pop_released() {
+                    Some((slot, proposal, op, adopted)) => {
+                        Step::Commit { slot, proposal, op, adopted }
+                    }
+                    None => Step::Wait, // blocked behind an earlier round
                 }
-                Step::Commit { slot, proposal, op, adopted }
             }
-            Phase::Idle => Step::Wait,
+            Phase::AcceptWait => Step::Wait, // unreachable (filtered above)
         }
     }
 
-    /// Abort the in-flight op without requeueing it (the leader found it
-    /// impermissible in total-order position; §2.1 permissibility).
-    pub fn abort_current(&mut self) {
-        self.current_op = None;
-        if let Some(orig) = self.original_op.take() {
+    /// Abort the round that just entered Accept without requeueing its op
+    /// (the leader found it impermissible in total-order position; §2.1
+    /// permissibility). Later in-flight rounds hold later slots — letting
+    /// them write would leave a hole at the aborted slot, so they flush
+    /// back to the queue head (in slot order) and re-fly from the freed
+    /// slot.
+    pub fn abort_accept(&mut self, rid: u64) {
+        let Some(idx) = self.rounds.iter().position(|r| r.rid == rid) else {
+            return;
+        };
+        while self.rounds.len() > idx + 1 {
+            let r = self.rounds.pop_back().expect("len checked");
+            if let Some(op) = r.current_op {
+                self.queue.push_front(op);
+            }
+            if let Some(op) = r.original_op {
+                self.queue.push_front(op);
+            }
+        }
+        let r = self.rounds.pop_back().expect("aborted round exists");
+        if let Some(orig) = r.original_op {
             self.queue.push_front(orig);
         }
-        self.phase = Phase::Idle;
-        self.adopted = None;
     }
 
-    /// Abandon the in-flight round (leader change / stall reset).
-    pub fn reset_in_flight(&mut self) {
-        if let Some(op) = self.current_op.take() {
-            self.queue.push_front(op);
+    /// Abandon the whole window (leader change / stall reset): every
+    /// in-flight op — including committed-but-unreleased rounds, whose
+    /// effects never applied — returns to the queue head in slot order.
+    pub fn reset_window(&mut self) {
+        while let Some(r) = self.rounds.pop_back() {
+            if let Some(op) = r.current_op {
+                self.queue.push_front(op);
+            }
+            if let Some(op) = r.original_op {
+                self.queue.push_front(op);
+            }
         }
-        if let Some(op) = self.original_op.take() {
-            self.queue.push_front(op);
-        }
-        self.phase = Phase::Idle;
     }
 
     /// Abdication: hand every queued op back to the engine (which re-routes
     /// them through the forward path to the rightful leader). Call
-    /// [`Self::reset_in_flight`] first so the in-flight op is included.
+    /// [`Self::reset_window`] first so in-flight ops are included.
     pub fn take_queue(&mut self) -> Vec<OpCall> {
         self.queue.drain(..).collect()
     }
@@ -294,53 +429,35 @@ mod tests {
 
     /// Drive one full consensus round with `f` followers all healthy.
     fn drive_commit(mu: &mut MuInstance, f: u32, o: OpCall, slot: u64) -> Step {
-        let mut round = mu.submit(o, slot).expect("idle -> first round");
+        let (rid, _, round) = mu.submit(o, slot).expect("idle -> first round");
+        assert_eq!(round, Round::ReadMinProposals);
+        drive_from(mu, f, rid)
+    }
+
+    /// Feed healthy quorums phase by phase until the round commits.
+    fn drive_from(mu: &mut MuInstance, f: u32, mut rid: u64) -> Step {
+        let mut phase = 0usize;
         loop {
-            mu.round_started(f);
-            assert_eq!(round, Round::ReadMinProposals);
+            mu.round_started(rid, f);
+            let resp = match phase {
+                0 => Resp::MinProposal(0),
+                2 => Resp::Slot(None),
+                _ => Resp::Ack,
+            };
             let mut step = Step::Wait;
             for _ in 0..f {
-                step = mu.on_response(Resp::MinProposal(0));
-                if !matches!(step, Step::Wait) {
-                    break;
-                }
-            }
-            let Step::Next(r2) = step else { panic!("expected WriteProposal, got {step:?}") };
-            assert!(matches!(r2, Round::WriteProposal { .. }));
-            mu.round_started(f);
-            let mut step = Step::Wait;
-            for _ in 0..f {
-                step = mu.on_response(Resp::Ack);
-                if !matches!(step, Step::Wait) {
-                    break;
-                }
-            }
-            let Step::Next(r3) = step else { panic!("expected ReadSlots") };
-            assert!(matches!(r3, Round::ReadSlots { .. }));
-            mu.round_started(f);
-            let mut step = Step::Wait;
-            for _ in 0..f {
-                step = mu.on_response(Resp::Slot(None));
-                if !matches!(step, Step::Wait) {
-                    break;
-                }
-            }
-            let Step::Next(r4) = step else { panic!("expected WriteLog") };
-            assert!(matches!(r4, Round::WriteLog { .. }));
-            mu.round_started(f);
-            let mut step = Step::Wait;
-            for _ in 0..f {
-                step = mu.on_response(Resp::Ack);
+                step = mu.on_response(rid, resp);
                 if !matches!(step, Step::Wait) {
                     break;
                 }
             }
             match step {
                 Step::Commit { .. } => return step,
-                Step::Next(r) => {
-                    round = r;
+                Step::Next(next_rid, _) => {
+                    rid = next_rid;
+                    phase += 1;
                 }
-                other => panic!("unexpected {other:?}"),
+                other => panic!("unexpected {other:?} in phase {phase}"),
             }
         }
     }
@@ -364,36 +481,36 @@ mod tests {
     #[test]
     fn quorum_before_all_responses() {
         let mut mu = MuInstance::new(0, 8); // n=8: quorum followers = 4
-        mu.submit(op(1), 0);
-        mu.round_started(7);
+        let (rid, _, _) = mu.submit(op(1), 0).unwrap();
+        mu.round_started(rid, 7);
         for _ in 0..3 {
-            assert_eq!(mu.on_response(Resp::MinProposal(5)), Step::Wait);
+            assert_eq!(mu.on_response(rid, Resp::MinProposal(5)), Step::Wait);
         }
-        let s = mu.on_response(Resp::MinProposal(2));
-        assert!(matches!(s, Step::Next(Round::WriteProposal { proposal: 6 })), "{s:?}");
+        let s = mu.on_response(rid, Resp::MinProposal(2));
+        assert!(matches!(s, Step::Next(_, Round::WriteProposal { proposal: 6 })), "{s:?}");
     }
 
     #[test]
     fn adopts_highest_proposal_foreign_entry_then_requeues_original() {
         let mut mu = MuInstance::new(0, 4);
-        mu.submit(op(7), 3);
-        mu.round_started(3);
+        let (rid, _, _) = mu.submit(op(7), 3).unwrap();
+        mu.round_started(rid, 3);
         // Prepare reads
-        mu.on_response(Resp::MinProposal(0));
-        let Step::Next(_) = mu.on_response(Resp::MinProposal(0)) else { panic!() };
-        mu.round_started(3);
-        mu.on_response(Resp::Ack);
-        let Step::Next(_) = mu.on_response(Resp::Ack) else { panic!() };
+        mu.on_response(rid, Resp::MinProposal(0));
+        let Step::Next(rid, _) = mu.on_response(rid, Resp::MinProposal(0)) else { panic!() };
+        mu.round_started(rid, 3);
+        mu.on_response(rid, Resp::Ack);
+        let Step::Next(rid, _) = mu.on_response(rid, Resp::Ack) else { panic!() };
         // Slot reads find a foreign entry with proposal 9 and one with 4:
-        mu.round_started(3);
-        mu.on_response(Resp::Slot(Some((4, op(100)))));
-        let step = mu.on_response(Resp::Slot(Some((9, op(200)))));
-        let Step::Next(Round::WriteLog { op: chosen, .. }) = step else { panic!("{step:?}") };
+        mu.round_started(rid, 3);
+        mu.on_response(rid, Resp::Slot(Some((4, op(100)))));
+        let step = mu.on_response(rid, Resp::Slot(Some((9, op(200)))));
+        let Step::Next(rid, Round::WriteLog { op: chosen, .. }) = step else { panic!("{step:?}") };
         assert_eq!(chosen.a, 200, "highest proposal adopted");
         // Accept acks
-        mu.round_started(3);
-        mu.on_response(Resp::Ack);
-        let step = mu.on_response(Resp::Ack);
+        mu.round_started(rid, 3);
+        mu.on_response(rid, Resp::Ack);
+        let step = mu.on_response(rid, Resp::Ack);
         let Step::Commit { op: committed, adopted, .. } = step else { panic!("{step:?}") };
         assert_eq!(committed.a, 200);
         assert_eq!(adopted.unwrap().a, 7, "original requeued");
@@ -404,45 +521,154 @@ mod tests {
     #[test]
     fn queues_while_busy_and_pumps() {
         let mut mu = MuInstance::new(0, 4);
-        assert!(mu.submit(op(1), 0).is_some());
-        assert!(mu.submit(op(2), 0).is_none(), "busy -> queued");
+        let (rid, _, _) = mu.submit(op(1), 0).expect("idle -> first round");
+        assert!(mu.submit(op(2), 0).is_none(), "window full -> queued");
         assert_eq!(mu.queue_len(), 1);
+        assert!(mu.pump(0).is_none(), "window full -> no pump");
         // finish op 1
-        for round in 0..4 {
-            mu.round_started(3);
-            let resp = match round {
-                0 => Resp::MinProposal(0),
-                2 => Resp::Slot(None),
-                _ => Resp::Ack,
-            };
-            mu.on_response(resp);
-            let _ = mu.on_response(resp);
-        }
-        assert!(mu.phase == Phase::Idle);
+        let step = drive_from(&mut mu, 3, rid);
+        assert!(matches!(step, Step::Commit { .. }));
         let r = mu.pump(1);
-        assert_eq!(r, Some(Round::ReadMinProposals));
+        assert!(matches!(r, Some((_, 1, Round::ReadMinProposals))), "{r:?}");
     }
 
     #[test]
     fn stalls_when_quorum_impossible() {
         let mut mu = MuInstance::new(0, 4); // needs 2 follower responses
-        mu.submit(op(1), 0);
-        mu.round_started(3);
-        assert_eq!(mu.on_response(Resp::Failure), Step::Wait); // 2 healthy left, need 2
+        let (rid, _, _) = mu.submit(op(1), 0).unwrap();
+        mu.round_started(rid, 3);
+        assert_eq!(mu.on_response(rid, Resp::Failure), Step::Wait); // 2 healthy left, need 2
         // Second failure leaves only 1 healthy target < quorum 2: stall now.
-        let s = mu.on_response(Resp::Failure);
+        let s = mu.on_response(rid, Resp::Failure);
         assert_eq!(s, Step::Stall);
-        mu.reset_in_flight();
+        mu.reset_window();
         assert_eq!(mu.queue_len(), 1, "op requeued for retry");
     }
 
     #[test]
     fn proposal_numbers_increase_past_observed() {
         let mut mu = MuInstance::new(0, 4);
-        mu.submit(op(1), 0);
-        mu.round_started(3);
-        mu.on_response(Resp::MinProposal(41));
-        let s = mu.on_response(Resp::MinProposal(3));
-        assert!(matches!(s, Step::Next(Round::WriteProposal { proposal: 42 })), "{s:?}");
+        let (rid, _, _) = mu.submit(op(1), 0).unwrap();
+        mu.round_started(rid, 3);
+        mu.on_response(rid, Resp::MinProposal(41));
+        let s = mu.on_response(rid, Resp::MinProposal(3));
+        assert!(matches!(s, Step::Next(_, Round::WriteProposal { proposal: 42 })), "{s:?}");
+    }
+
+    /// Step a round through one healthy quorum phase, returning the next
+    /// emission.
+    fn quorum(mu: &mut MuInstance, rid: u64, f: u32, resp: Resp) -> Step {
+        mu.round_started(rid, f);
+        let mut step = Step::Wait;
+        for _ in 0..f {
+            step = mu.on_response(rid, resp);
+            if !matches!(step, Step::Wait) {
+                break;
+            }
+        }
+        step
+    }
+
+    #[test]
+    fn windowed_prepares_overlap_at_contiguous_slots() {
+        let mut mu = MuInstance::with_window(0, 4, 2);
+        let (rid_a, slot_a, _) = mu.submit(op(1), 5).unwrap();
+        // The log can't show slot 6 as free yet — the in-flight round owns
+        // slot 5 and hasn't written it — so the instance places round B
+        // after its own deepest in-flight slot.
+        let (rid_b, slot_b, _) = mu.submit(op(2), 5).unwrap();
+        assert_eq!((slot_a, slot_b), (5, 6), "contiguous in-flight slots");
+        assert_ne!(rid_a, rid_b);
+        assert!(mu.submit(op(3), 5).is_none(), "window full -> queued");
+        // Both Prepare phases advance independently.
+        let Step::Next(_, Round::WriteProposal { proposal: p_a }) =
+            quorum(&mut mu, rid_a, 3, Resp::MinProposal(0))
+        else {
+            panic!()
+        };
+        let Step::Next(_, Round::WriteProposal { proposal: p_b }) =
+            quorum(&mut mu, rid_b, 3, Resp::MinProposal(0))
+        else {
+            panic!()
+        };
+        assert!(p_b > p_a, "later round proposes higher");
+    }
+
+    #[test]
+    fn accept_entries_serialize_behind_the_execution_cursor() {
+        let mut mu = MuInstance::with_window(0, 4, 2);
+        let (rid_a, _, _) = mu.submit(op(1), 0).unwrap();
+        let (rid_b, _, _) = mu.submit(op(2), 0).unwrap();
+        // Round B races ahead through Prepare while A sits in ReadProposals.
+        let Step::Next(rid_b, _) = quorum(&mut mu, rid_b, 3, Resp::MinProposal(0)) else {
+            panic!()
+        };
+        let Step::Next(rid_b, _) = quorum(&mut mu, rid_b, 3, Resp::Ack) else { panic!() };
+        // B's ReadSlots quorum completes first: parked, not emitted.
+        assert_eq!(quorum(&mut mu, rid_b, 3, Resp::Slot(None)), Step::Wait, "B parks");
+        assert!(mu.pop_accept_ready().is_none(), "execution cursor still at A");
+        // A advances to its Accept entry...
+        let Step::Next(rid_a, _) = quorum(&mut mu, rid_a, 3, Resp::MinProposal(0)) else {
+            panic!()
+        };
+        let Step::Next(rid_a, _) = quorum(&mut mu, rid_a, 3, Resp::Ack) else { panic!() };
+        let Step::Next(rid_a, Round::WriteLog { slot: 0, .. }) =
+            quorum(&mut mu, rid_a, 3, Resp::Slot(None))
+        else {
+            panic!()
+        };
+        // ...which unparks B in slot order.
+        let (rid_b2, Round::WriteLog { slot: 1, .. }) = mu.pop_accept_ready().unwrap() else {
+            panic!()
+        };
+        assert_ne!(rid_b, rid_b2, "Accept fan-out gets a fresh nonce");
+        // B's Accept quorum lands before A's: committed out of order,
+        // released in slot order.
+        assert_eq!(quorum(&mut mu, rid_b2, 3, Resp::Ack), Step::Wait, "blocked behind A");
+        assert!(mu.pop_released().is_none());
+        let Step::Commit { slot: 0, .. } = quorum(&mut mu, rid_a, 3, Resp::Ack) else { panic!() };
+        let (slot, _, o, adopted) = mu.pop_released().unwrap();
+        assert_eq!((slot, o.a), (1, 2));
+        assert!(adopted.is_none());
+        assert_eq!(mu.committed, 2);
+        assert!(mu.is_idle());
+    }
+
+    #[test]
+    fn aborted_accept_flushes_later_rounds_to_requeue() {
+        let mut mu = MuInstance::with_window(0, 4, 3);
+        let (rid_a, _, _) = mu.submit(op(1), 0).unwrap();
+        let (_, _, _) = mu.submit(op(2), 0).unwrap();
+        let (_, _, _) = mu.submit(op(3), 0).unwrap();
+        // A reaches its Accept entry; the engine finds it impermissible.
+        let Step::Next(rid_a, _) = quorum(&mut mu, rid_a, 3, Resp::MinProposal(0)) else {
+            panic!()
+        };
+        let Step::Next(rid_a, _) = quorum(&mut mu, rid_a, 3, Resp::Ack) else { panic!() };
+        let Step::Next(rid_a, Round::WriteLog { .. }) = quorum(&mut mu, rid_a, 3, Resp::Slot(None))
+        else {
+            panic!()
+        };
+        mu.abort_accept(rid_a);
+        // The rejected op is gone; the later rounds' ops re-fly from the
+        // freed slot (no log hole), in slot order.
+        assert_eq!(mu.depth(), 0);
+        assert_eq!(mu.queue_len(), 2);
+        let (_, slot, _) = mu.pump(0).unwrap();
+        assert_eq!(slot, 0, "pipeline restarts at the freed slot");
+    }
+
+    #[test]
+    fn reset_window_requeues_all_rounds_in_slot_order() {
+        let mut mu = MuInstance::with_window(0, 4, 3);
+        mu.submit(op(1), 0).unwrap();
+        mu.submit(op(2), 0).unwrap();
+        mu.submit(op(3), 0).unwrap();
+        mu.reset_window();
+        assert_eq!(mu.depth(), 0);
+        assert_eq!(mu.queue_len(), 3);
+        let ops = mu.take_queue();
+        assert_eq!(ops.iter().map(|o| o.a).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(mu.committed, 0, "nothing released, nothing counted");
     }
 }

@@ -43,18 +43,36 @@ pub enum PaxosStep {
     Stall,
 }
 
-/// Leader-side pipeline: one in-flight batch of contiguous log slots.
+/// One in-flight batch of contiguous log slots (a pipeline stage).
+#[derive(Debug)]
+struct Flight {
+    start: u64,
+    ops: Vec<OpCall>,
+    /// Monotone per-pump nonce: a doorbell left over from an aborted
+    /// (stalled) round must not count toward the retried round's quorum,
+    /// even though ballot and start_slot repeat — Mu's `round_id` guard,
+    /// one-sided edition. With a window > 1 it also routes each doorbell
+    /// to its flight.
+    round: u64,
+    acks: u32,
+    fails: u32,
+    targeted: u32,
+    /// Quorum reached but an earlier flight hasn't: committed out of
+    /// order, released (applied/answered) strictly in slot order.
+    committed: bool,
+}
+
+/// Leader-side pipeline: up to `window` in-flight batches of contiguous
+/// log slots. Doorbell quorums collect out of order across flights; the
+/// commit cursor (the deque front) releases contiguous committed batches
+/// in slot order.
 #[derive(Debug)]
 pub struct PaxosLeader {
     pub ballot: u64,
     n: usize,
     batch: usize,
-    in_flight: Option<(u64, Vec<OpCall>, u32, u32)>, // (start, ops, acks, fails)
-    targeted: u32,
-    /// Monotone per-pump nonce: a doorbell left over from an aborted
-    /// (stalled) round must not count toward the retried round's quorum,
-    /// even though ballot and start_slot repeat — Mu's `round_id` guard,
-    /// one-sided edition.
+    window: usize,
+    flights: VecDeque<Flight>,
     round_id: u64,
     queue: VecDeque<(u64, OpCall)>, // (slot, op) — slots are contiguous
     pub committed: u64,
@@ -62,12 +80,16 @@ pub struct PaxosLeader {
 
 impl PaxosLeader {
     pub fn new(id: NodeId, n: usize, batch: usize) -> Self {
+        Self::with_window(id, n, batch, 1)
+    }
+
+    pub fn with_window(id: NodeId, n: usize, batch: usize, window: usize) -> Self {
         PaxosLeader {
             ballot: ballot(1, id),
             n,
             batch: batch.max(1),
-            in_flight: None,
-            targeted: 0,
+            window: window.max(1),
+            flights: VecDeque::new(),
             round_id: 0,
             queue: VecDeque::new(),
             committed: 0,
@@ -85,7 +107,7 @@ impl PaxosLeader {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.in_flight.is_none() && self.queue.is_empty()
+        self.flights.is_empty() && self.queue.is_empty()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -93,7 +115,12 @@ impl PaxosLeader {
     }
 
     pub fn in_flight(&self) -> bool {
-        self.in_flight.is_some()
+        !self.flights.is_empty()
+    }
+
+    /// Current pipeline depth (for `inflight_max` telemetry).
+    pub fn depth(&self) -> usize {
+        self.flights.len()
     }
 
     /// Take over leadership: adopt a ballot strictly above everything seen
@@ -116,86 +143,114 @@ impl PaxosLeader {
         self.queue.push_back((slot, op));
     }
 
-    /// Start the next batch if the pipeline is free: drains up to `batch`
-    /// queued entries and returns `(ballot, round, start_slot, ops)` to
-    /// fan out. The round nonce must ride the completion tokens.
+    /// Start the next batch if the window has a free stage: drains up to
+    /// `batch` queued entries and returns `(ballot, round, start_slot,
+    /// ops)` to fan out. The round nonce must ride the completion tokens.
+    /// Call again until `None` to fill the window (pump-until-full).
     pub fn pump(&mut self) -> Option<(u64, u64, u64, Vec<OpCall>)> {
-        if self.in_flight.is_some() {
+        if self.flights.len() >= self.window {
             return None;
         }
         let (start, _) = *self.queue.front()?;
         let take = self.queue.len().min(self.batch);
         let ops: Vec<OpCall> = self.queue.drain(..take).map(|(_, op)| op).collect();
         self.round_id += 1;
-        self.in_flight = Some((start, ops.clone(), 0, 0));
+        self.flights.push_back(Flight {
+            start,
+            ops: ops.clone(),
+            round: self.round_id,
+            acks: 0,
+            fails: 0,
+            targeted: 0,
+            committed: false,
+        });
         Some((self.ballot, self.round_id, start, ops))
     }
 
-    /// The engine reports how many followers the fan-out targeted.
+    /// The engine reports how many followers the fan-out targeted (applies
+    /// to the flight `pump` just started).
     pub fn round_started(&mut self, targeted: u32) {
-        self.targeted = targeted;
+        if let Some(f) = self.flights.back_mut() {
+            f.targeted = targeted;
+        }
+    }
+
+    /// Release the committed flight at the commit cursor, if any. The
+    /// engine drains this after every Commit step / solo commit so flights
+    /// whose quorum arrived out of order apply strictly in slot order.
+    pub fn pop_released(&mut self) -> Option<(u64, Vec<OpCall>)> {
+        if !self.flights.front()?.committed {
+            return None;
+        }
+        let f = self.flights.pop_front()?;
+        self.committed += f.ops.len() as u64;
+        Some((f.start, f.ops))
     }
 
     /// Feed one write completion (`ok` = ACK doorbell, else NACK) for the
-    /// in-flight batch identified by `(b, round, start_slot)`.
+    /// in-flight batch identified by `(b, round, start_slot)`. Quorums may
+    /// complete out of order across the window; `Commit` is only returned
+    /// once the *front* flight commits (drain `pop_released` for any
+    /// successors that committed earlier).
     pub fn on_completion(&mut self, b: u64, round: u64, start_slot: u64, ok: bool) -> PaxosStep {
-        if b != self.ballot || round != self.round_id {
-            // Pre-takeover write, or a doorbell from a round that stalled
-            // and was re-pumped (same ballot and slots, older nonce).
-            return PaxosStep::Wait;
+        if b != self.ballot {
+            return PaxosStep::Wait; // pre-takeover write
         }
         let need = self.quorum_followers();
-        let targeted = self.targeted;
-        let Some((start, ops, acks, fails)) = &mut self.in_flight else {
-            return PaxosStep::Wait; // completion after commit/stall
+        // Doorbells from a round that stalled and was re-pumped (same
+        // ballot and slots, older nonce) match no flight and are dropped.
+        let Some(f) = self.flights.iter_mut().find(|f| f.round == round) else {
+            return PaxosStep::Wait;
         };
-        if *start != start_slot {
+        if f.start != start_slot || f.committed {
             return PaxosStep::Wait;
         }
         if ok {
-            *acks += 1;
+            f.acks += 1;
         } else {
-            *fails += 1;
+            f.fails += 1;
         }
-        if *acks >= need {
-            let start = *start;
-            let ops = std::mem::take(ops);
-            self.in_flight = None;
-            self.committed += ops.len() as u64;
-            return PaxosStep::Commit { start_slot: start, ops };
+        if f.acks >= need {
+            f.committed = true;
+            if let Some((start, ops)) = self.pop_released() {
+                return PaxosStep::Commit { start_slot: start, ops };
+            }
+            return PaxosStep::Wait; // blocked behind an earlier flight
         }
-        let healthy_remaining = targeted.saturating_sub(*acks + *fails);
-        if *acks + healthy_remaining < need {
+        let healthy_remaining = f.targeted.saturating_sub(f.acks + f.fails);
+        if f.acks + healthy_remaining < need {
             return PaxosStep::Stall;
         }
         PaxosStep::Wait
     }
 
     /// With no live followers the leader's own local append already *is*
-    /// the majority (cluster of one): commit the in-flight batch without
+    /// the majority (cluster of one): commit the front flight without
     /// waiting for doorbells that can never arrive.
     pub fn commit_if_solo(&mut self) -> Option<(u64, Vec<OpCall>)> {
         if self.quorum_followers() > 0 {
             return None;
         }
-        let (start, ops, _, _) = self.in_flight.take()?;
-        self.committed += ops.len() as u64;
-        Some((start, ops))
+        if let Some(f) = self.flights.front_mut() {
+            f.committed = true;
+        }
+        self.pop_released()
     }
 
-    /// Abandon the in-flight batch (stall/leader change): entries return to
-    /// the queue head, keeping their slots.
-    pub fn reset_in_flight(&mut self) {
-        if let Some((start, ops, _, _)) = self.in_flight.take() {
-            for (i, op) in ops.into_iter().enumerate().rev() {
-                self.queue.push_front((start + i as u64, op));
+    /// Abandon the whole window (stall/leader change): every in-flight
+    /// entry — including committed-but-unreleased flights, whose effects
+    /// never applied — returns to the queue head in slot order.
+    pub fn reset_window(&mut self) {
+        while let Some(f) = self.flights.pop_back() {
+            for (i, op) in f.ops.into_iter().enumerate().rev() {
+                self.queue.push_front((f.start + i as u64, op));
             }
         }
     }
 
     /// Drop all pipeline state (recovery snapshot install).
     pub fn clear(&mut self) {
-        self.in_flight = None;
+        self.flights.clear();
         self.queue.clear();
     }
 }
@@ -280,7 +335,7 @@ mod tests {
         assert_eq!(l.on_completion(b, r, start, false), PaxosStep::Wait);
         let s = l.on_completion(b, r, start, false); // 1 healthy left < 2
         assert_eq!(s, PaxosStep::Stall);
-        l.reset_in_flight();
+        l.reset_window();
         assert_eq!(l.queue_len(), 1, "entry requeued at its slot");
         let (_, _, start_again, _) = l.pump().unwrap();
         assert_eq!(start_again, 0);
@@ -309,7 +364,7 @@ mod tests {
         for _ in 0..3 {
             let _ = l.on_completion(b, r1, start, false);
         }
-        l.reset_in_flight();
+        l.reset_window();
         l.set_cluster_size(2); // crashed peers left the live set; need 1
         let (b2, r2, start2, _) = l.pump().unwrap();
         assert_eq!((b2, start2), (b, start), "same ballot and slot re-fly");
@@ -335,5 +390,63 @@ mod tests {
         assert!(a.accept(ballot(1, 0)), "equal ballot re-accepted (same leader)");
         assert!(a.accept(ballot(2, 1)));
         assert!(!a.accept(ballot(1, 0)), "stale leader rejected");
+    }
+
+    #[test]
+    fn window_keeps_multiple_rounds_in_flight() {
+        let mut l = PaxosLeader::with_window(0, 4, 1, 3);
+        for slot in 0..4 {
+            l.submit(slot, op(slot));
+        }
+        assert!(l.pump().is_some());
+        assert!(l.pump().is_some());
+        assert!(l.pump().is_some(), "three concurrent rounds fit");
+        assert_eq!(l.depth(), 3);
+        assert!(l.pump().is_none(), "window full");
+        assert_eq!(l.queue_len(), 1);
+    }
+
+    #[test]
+    fn out_of_order_quorums_release_in_slot_order() {
+        let mut l = PaxosLeader::with_window(0, 4, 1, 2); // need 2 doorbells
+        l.submit(0, op(10));
+        l.submit(1, op(11));
+        let (b, r0, s0, _) = l.pump().unwrap();
+        l.round_started(3);
+        let (_, r1, s1, _) = l.pump().unwrap();
+        l.round_started(3);
+        // Slot 1's quorum lands first: committed out of order, held back.
+        assert_eq!(l.on_completion(b, r1, s1, true), PaxosStep::Wait);
+        assert_eq!(l.on_completion(b, r1, s1, true), PaxosStep::Wait, "blocked behind slot 0");
+        assert!(l.pop_released().is_none(), "commit cursor at slot 0");
+        // Slot 0 commits: it releases, then the parked slot 1 follows.
+        l.on_completion(b, r0, s0, true);
+        let s = l.on_completion(b, r0, s0, true);
+        assert_eq!(s, PaxosStep::Commit { start_slot: 0, ops: vec![op(10)] });
+        assert_eq!(l.pop_released(), Some((1, vec![op(11)])));
+        assert_eq!(l.committed, 2);
+        assert!(l.is_idle());
+    }
+
+    #[test]
+    fn reset_window_requeues_every_flight_in_slot_order() {
+        let mut l = PaxosLeader::with_window(0, 4, 1, 3);
+        for slot in 0..3 {
+            l.submit(slot, op(slot));
+        }
+        let (b, _, _, _) = l.pump().unwrap();
+        let (_, r1, s1, _) = l.pump().unwrap();
+        let (_, _, _, _) = l.pump().unwrap();
+        l.round_started(3);
+        // A committed-but-unreleased flight resets too: its effects never
+        // applied, so a deposed leader must not treat it as durable.
+        l.on_completion(b, r1, s1, true);
+        l.on_completion(b, r1, s1, true);
+        l.reset_window();
+        assert_eq!(l.depth(), 0);
+        assert_eq!(l.queue_len(), 3, "all window entries requeued");
+        let (_, _, start, _) = l.pump().unwrap();
+        assert_eq!(start, 0, "retry restarts from the first window slot");
+        assert_eq!(l.committed, 0, "nothing released, nothing counted");
     }
 }

@@ -21,19 +21,32 @@ pub enum RaftStep {
     Commit { start_index: u64, ops: Vec<OpCall> },
 }
 
-/// Leader-side replication pipeline. One in-flight *batch* at a time
-/// (Waverunner's packet-serial fast path is batch size 1), queueing behind
-/// it; `pump` drains up to `batch` queued entries into one AppendEntries.
+/// One in-flight AppendEntries batch (a pipeline stage).
+#[derive(Debug)]
+struct Flight {
+    start: u64,
+    ops: Vec<OpCall>,
+    /// Distinct ack sources. Voters are tracked by id: the chaos re-pump
+    /// re-ships in-flight batches and followers re-ack, so a bare counter
+    /// would let one reachable follower fake a majority.
+    voters: Vec<NodeId>,
+    /// Majority reached but an earlier batch hasn't: committed out of
+    /// order, released (applied/answered) strictly in index order.
+    committed: bool,
+}
+
+/// Leader-side replication pipeline: up to `window` in-flight batches
+/// (Waverunner's packet-serial fast path is window 1, batch 1), queueing
+/// behind the window; `pump` drains up to `batch` queued entries into one
+/// AppendEntries per free stage.
 #[derive(Debug)]
 pub struct RaftLeader {
     pub term: u64,
     n: usize,
     batch: usize,
+    window: usize,
     next_index: u64,
-    /// (start_index, ops, distinct ack sources). Voters are tracked by id:
-    /// the chaos re-pump re-ships an in-flight batch and followers re-ack,
-    /// so a bare counter would let one reachable follower fake a majority.
-    in_flight: Option<(u64, Vec<OpCall>, Vec<NodeId>)>,
+    flights: VecDeque<Flight>,
     queue: VecDeque<(u64, OpCall)>,
     pub committed: u64,
 }
@@ -44,21 +57,28 @@ impl RaftLeader {
     }
 
     pub fn with_batch(n: usize, batch: usize) -> Self {
+        Self::with_window(n, batch, 1)
+    }
+
+    pub fn with_window(n: usize, batch: usize, window: usize) -> Self {
         RaftLeader {
             term: 1,
             n,
             batch: batch.max(1),
+            window: window.max(1),
             next_index: 0,
-            in_flight: None,
+            flights: VecDeque::new(),
             queue: VecDeque::new(),
             committed: 0,
         }
     }
 
     /// A follower taking over after an election (generic Raft backend):
-    /// next entries append after the adopted log, at a higher term.
-    pub fn promote(n: usize, batch: usize, term: u64, next_index: u64) -> Self {
-        let mut l = Self::with_batch(n, batch);
+    /// next entries append after the adopted log, at a higher term. The
+    /// deposed leader's window dies with it — the replay that precedes
+    /// promotion covers every slot its uncommitted flights held.
+    pub fn promote(n: usize, batch: usize, window: usize, term: u64, next_index: u64) -> Self {
+        let mut l = Self::with_window(n, batch, window);
         l.term = term;
         l.next_index = next_index;
         l
@@ -74,67 +94,89 @@ impl RaftLeader {
 
     /// Client op arrives at the leader. The entry's log index is assigned
     /// immediately (so callers can key pending requests on it); an
-    /// AppendEntries fan-out is returned only if the pipeline was empty.
+    /// AppendEntries fan-out is returned only if the window has a free
+    /// stage.
     pub fn submit(&mut self, op: OpCall) -> (u64, Option<(u64, u64, Vec<OpCall>)>) {
         let index = self.next_index;
         self.next_index += 1;
         self.queue.push_back((index, op));
-        if self.in_flight.is_some() {
+        if self.flights.len() >= self.window {
             return (index, None);
         }
         (index, self.pump())
     }
 
-    /// Follower ack for the *last* index of the in-flight batch (followers
+    /// Release the committed batch at the commit cursor, if any. The
+    /// engine drains this after every Commit step so batches whose
+    /// majority arrived out of order apply strictly in index order.
+    pub fn pop_released(&mut self) -> Option<(u64, Vec<OpCall>)> {
+        if !self.flights.front()?.committed {
+            return None;
+        }
+        let f = self.flights.pop_front()?;
+        self.committed += f.ops.len() as u64;
+        Some((f.start, f.ops))
+    }
+
+    /// Follower ack for the *last* index of an in-flight batch (followers
     /// ack a batch once, after appending all of it — possibly again for a
     /// chaos-mode re-ship; duplicates from the same follower count once).
+    /// Majorities may land out of order across the window; `Commit` is
+    /// only returned once the *front* batch commits (drain `pop_released`
+    /// for any successors that committed earlier).
     pub fn on_ack(&mut self, term: u64, index: u64, from: NodeId) -> RaftStep {
         if term != self.term {
             return RaftStep::Wait;
         }
         let majority = self.majority_acks();
-        match &mut self.in_flight {
-            Some((start, ops, voters)) if *start + ops.len() as u64 - 1 == index => {
-                if !voters.contains(&from) {
-                    voters.push(from);
-                }
-                if voters.len() as u32 >= majority {
-                    let start = *start;
-                    let ops = std::mem::take(ops);
-                    self.in_flight = None;
-                    self.committed += ops.len() as u64;
-                    RaftStep::Commit { start_index: start, ops }
-                } else {
-                    RaftStep::Wait
-                }
-            }
-            _ => RaftStep::Wait,
+        let Some(f) = self
+            .flights
+            .iter_mut()
+            .find(|f| f.start + f.ops.len() as u64 - 1 == index && !f.committed)
+        else {
+            return RaftStep::Wait;
+        };
+        if !f.voters.contains(&from) {
+            f.voters.push(from);
+        }
+        if (f.voters.len() as u32) < majority {
+            return RaftStep::Wait;
+        }
+        f.committed = true;
+        match self.pop_released() {
+            Some((start, ops)) => RaftStep::Commit { start_index: start, ops },
+            None => RaftStep::Wait, // blocked behind an earlier batch
         }
     }
 
-    /// Chaos-mode nudge: re-ship the in-flight batch. A lost AppendEntries
-    /// or an eaten logical ack would otherwise wedge the one-in-flight
+    /// Chaos-mode nudge: re-ship every in-flight batch. A lost
+    /// AppendEntries or an eaten logical ack would otherwise wedge the
     /// pipeline forever; followers overwrite-accept the duplicates and
-    /// re-ack, so the re-send is idempotent.
-    pub fn refanout(&self) -> Option<(u64, u64, Vec<OpCall>)> {
-        self.in_flight.as_ref().map(|(start, ops, _)| (self.term, *start, ops.clone()))
+    /// re-ack, so the re-sends are idempotent.
+    pub fn refanout(&self) -> Vec<(u64, u64, Vec<OpCall>)> {
+        self.flights.iter().map(|f| (self.term, f.start, f.ops.clone())).collect()
     }
 
-    /// After a commit, start the next queued batch (up to `batch` entries)
-    /// if any.
+    /// Start the next queued batch (up to `batch` entries) if the window
+    /// has a free stage. Call again until `None` to fill the window.
     pub fn pump(&mut self) -> Option<(u64, u64, Vec<OpCall>)> {
-        if self.in_flight.is_some() {
+        if self.flights.len() >= self.window {
             return None;
         }
         let (start, _) = *self.queue.front()?;
         let take = self.queue.len().min(self.batch);
         let ops: Vec<OpCall> = self.queue.drain(..take).map(|(_, op)| op).collect();
-        self.in_flight = Some((start, ops.clone(), Vec::new()));
+        self.flights.push_back(Flight { start, ops: ops.clone(), voters: Vec::new(), committed: false });
         Some((self.term, start, ops))
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Current pipeline depth (for `inflight_max` telemetry).
+    pub fn depth(&self) -> usize {
+        self.flights.len()
     }
 }
 
@@ -320,5 +362,43 @@ mod tests {
         let mut f = RaftFollower::new();
         f.on_append(3, 0, op(1));
         assert!(!f.on_append(2, 1, op(2)));
+    }
+
+    #[test]
+    fn window_fans_out_submits_without_waiting() {
+        let mut l = RaftLeader::with_window(3, 1, 2);
+        assert!(l.submit(op(1)).1.is_some());
+        assert!(l.submit(op(2)).1.is_some(), "second round rides the window");
+        assert_eq!(l.depth(), 2);
+        assert!(l.submit(op(3)).1.is_none(), "window full: queued");
+        assert_eq!(l.queue_len(), 1);
+    }
+
+    #[test]
+    fn out_of_order_majorities_release_in_index_order() {
+        let mut l = RaftLeader::with_window(3, 1, 2);
+        l.submit(op(1)).1.unwrap();
+        l.submit(op(2)).1.unwrap();
+        // Index 1's ack lands first: committed out of order, held back.
+        assert_eq!(l.on_ack(1, 1, 1), RaftStep::Wait, "blocked behind index 0");
+        assert!(l.pop_released().is_none(), "commit cursor at index 0");
+        // Index 0 commits: it releases, then the parked index 1 follows.
+        let s = l.on_ack(1, 0, 2);
+        assert_eq!(s, RaftStep::Commit { start_index: 0, ops: vec![op(1)] });
+        assert_eq!(l.pop_released(), Some((1, vec![op(2)])));
+        assert_eq!(l.committed, 2);
+    }
+
+    #[test]
+    fn refanout_reships_the_whole_window() {
+        let mut l = RaftLeader::with_window(3, 1, 3);
+        l.submit(op(1));
+        l.submit(op(2));
+        let ships = l.refanout();
+        assert_eq!(ships.len(), 2);
+        assert_eq!((ships[0].1, ships[1].1), (0, 1));
+        // Re-acks after the re-ship still count once per follower.
+        l.on_ack(1, 0, 1);
+        assert_eq!(l.on_ack(1, 0, 1), RaftStep::Wait, "released flight: ack dropped");
     }
 }

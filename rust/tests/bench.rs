@@ -10,18 +10,19 @@ use safardb::util::json::Json;
 #[test]
 fn bench_json_document_is_well_formed() {
     let cells = bench_cells(true, 2);
-    assert_eq!(cells.len(), 12, "3 backends x 2 batches x 2 catalogs");
+    assert_eq!(cells.len(), 14, "3 backends x 2 batches x 2 catalogs + 2 pipelined");
     let doc = to_json(&cells, true, false);
     let parsed = Json::parse(&doc.render()).expect("writer output must parse");
     assert_eq!(parsed.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
     assert_eq!(parsed.get("provisional").and_then(|p| p.as_bool()), Some(false));
     let arr = parsed.get("cells").and_then(|c| c.as_arr()).expect("cells array");
-    assert_eq!(arr.len(), 12);
+    assert_eq!(arr.len(), 14);
     for c in arr {
         for key in [
             "id",
             "backend",
             "batch",
+            "window",
             "objects",
             "placement",
             "ops",
@@ -30,9 +31,15 @@ fn bench_json_document_is_well_formed() {
             "events_per_sec",
             "peak_rss_kb",
             "digest",
+            "smr_round_p99_us",
+            "inflight_max",
         ] {
             assert!(c.get(key).is_some(), "cell missing field '{key}'");
         }
+        // The pipeline depth telemetry never exceeds the configured window.
+        let w = c.get("window").unwrap().as_f64().unwrap();
+        let inflight = c.get("inflight_max").unwrap().as_f64().unwrap();
+        assert!(inflight <= w, "inflight_max {inflight} > window {w}");
         // Digests are 16-hex-digit strings (u64 doesn't fit f64).
         let d = c.get("digest").unwrap().as_str().expect("digest is a string");
         assert_eq!(d.len(), 16);

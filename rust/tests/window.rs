@@ -1,0 +1,242 @@
+//! Pipelined strong plane — the sliding-window (`SimConfig::window`)
+//! equivalence and chaos suite.
+//!
+//! The window overlaps consensus rounds; it must never change *what*
+//! commits, only *when*. The oracle mirrors the batching/placement
+//! suites: on rejection-proof catalogs (no interleaving can reject, so
+//! the converged state is the order-free fold of the issued ops) every
+//! pipeline depth must land on byte-identical digests and commit counts
+//! under every backend — and under chaos the window is a fate-sharing
+//! unit: a deposed leader's uncommitted out-of-order quorums must never
+//! apply.
+
+use safardb::config::{
+    CatalogSpec, ConsensusBackend, FaultSchedule, LeaderPlacement, SimConfig, WorkloadKind,
+};
+use safardb::engine::cluster::{self, RunReport};
+use safardb::rdt::RdtKind;
+
+fn run_checked(cfg: SimConfig, label: &str) -> RunReport {
+    let rep = cluster::run(cfg);
+    assert!(rep.converged(), "{label}: replicas diverged: {:?}", rep.digests);
+    assert!(rep.invariants_ok, "{label}: integrity violated");
+    rep
+}
+
+/// Account workload that cannot reject in *any* interleaving (12 ops ×
+/// ≤80-unit withdrawals < the 1000 seed balance) — same construction as
+/// the backend-equivalence suite, so the conflicting path is
+/// byte-comparable across pipeline depths.
+fn rejection_proof_account(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 100;
+    cfg.total_ops = 12;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Rejection-proof heterogeneous catalog (commutative counters/sets plus
+/// under-budget accounts) — exercises multiple sync groups so per-group
+/// windows run concurrently.
+fn rejection_proof_mixed(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.objects = CatalogSpec::parse("counter:2,gset:1,account:2").unwrap();
+    cfg.n_replicas = 4;
+    cfg.update_pct = 100;
+    cfg.total_ops = 12;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn window_depths_reproduce_stop_and_wait_digests_across_backends() {
+    // Out-of-order quorum collection + in-order commit must be outcome
+    // invariant: any window depth reproduces the window=1 digests and
+    // commit counts on both rejection-proof catalogs, per backend.
+    for backend in ConsensusBackend::ALL {
+        for (label, mk) in [
+            ("account", rejection_proof_account as fn(u64) -> SimConfig),
+            ("mixed", rejection_proof_mixed as fn(u64) -> SimConfig),
+        ] {
+            for seed in [0x817D_0001u64, 0x817D_0002] {
+                let mut base = mk(seed);
+                base.backend = backend;
+                let lbl = format!("{}/{label} seed={seed:#x}", backend.name());
+                let one = run_checked(base.clone(), &lbl);
+                assert_eq!(one.metrics.rejected, 0, "{lbl}: workload is rejection-proof");
+                for window in [4u32, 16] {
+                    let mut cfg = base.clone();
+                    cfg.window = window;
+                    let rep = run_checked(cfg, &lbl);
+                    assert!(rep.converged_per_object(), "{lbl} w={window}: per-object");
+                    assert_eq!(
+                        one.object_digests[0], rep.object_digests[0],
+                        "{lbl} w={window}: pipelining changed outcomes"
+                    );
+                    assert_eq!(
+                        one.metrics.smr_commits, rep.metrics.smr_commits,
+                        "{lbl} w={window}: commit count diverged"
+                    );
+                    assert_eq!(one.metrics.rejected, rep.metrics.rejected);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn window_composes_with_batching_and_sharded_placement() {
+    // The window multiplies the other strong-plane knobs rather than
+    // replacing them: batch=8 × window=8 under hash placement still lands
+    // on the stop-and-wait single-leader digests.
+    for backend in ConsensusBackend::ALL {
+        let mut base = rejection_proof_mixed(0x817D_C095);
+        base.backend = backend;
+        let one = run_checked(base.clone(), backend.name());
+        let mut cfg = base.clone();
+        cfg.batch_size = 8;
+        cfg.window = 8;
+        cfg.placement = LeaderPlacement::Hash;
+        let rep = run_checked(cfg, backend.name());
+        assert_eq!(
+            one.object_digests[0],
+            rep.object_digests[0],
+            "{}: batch×window×placement changed outcomes",
+            backend.name()
+        );
+        assert_eq!(one.metrics.smr_commits, rep.metrics.smr_commits, "{}", backend.name());
+    }
+}
+
+#[test]
+fn window_1_is_bit_identical_to_seed_behavior() {
+    // window=1 is the default and must not perturb anything — digests,
+    // event counts, completions all bit-equal to an explicit window=1 run
+    // (the config default) on a realistic WRDT mix. Guards the default
+    // path: pipelining machinery must be invisible until opted into.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+    cfg.n_replicas = 4;
+    cfg.update_pct = 30;
+    cfg.total_ops = 6_000;
+    cfg.seed = 0x81D0_617;
+    for backend in ConsensusBackend::ALL {
+        cfg.backend = backend;
+        let a = run_checked(cfg.clone(), backend.name());
+        let mut explicit = cfg.clone();
+        explicit.window = 1;
+        let b = run_checked(explicit, backend.name());
+        assert_eq!(a.digests, b.digests, "{}", backend.name());
+        assert_eq!(a.metrics.events, b.metrics.events, "{}", backend.name());
+        assert_eq!(a.metrics.total_completed(), b.metrics.total_completed());
+        // Telemetry agrees the pipeline never opened past depth 1.
+        assert!(a.metrics.inflight_max_overall() <= 1, "{}", backend.name());
+    }
+}
+
+#[test]
+fn crdt_workloads_ignore_the_window() {
+    // No conflicting ops → the strong path never runs → the window knob
+    // must be invisible down to the event stream.
+    let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::PnCounter));
+    cfg.total_ops = 4_000;
+    cfg.update_pct = 30;
+    cfg.seed = 0x81D_C4D7;
+    let one = run_checked(cfg.clone(), "w1");
+    let mut deep = cfg.clone();
+    deep.window = 16;
+    let rep = run_checked(deep, "w16");
+    assert_eq!(one.digests, rep.digests, "window perturbed a CRDT-only run");
+    assert_eq!(one.metrics.events, rep.metrics.events, "window perturbed the event stream");
+}
+
+#[test]
+fn leader_crash_with_full_window_converges_on_all_backends() {
+    // The chaos unit test for the tentpole: crash the leader at a rate
+    // that keeps its window full, so takeover replay must cover all
+    // uncommitted window slots and the deposed leader's out-of-order
+    // quorums must never apply. Re-election happens, no committed op is
+    // lost, and the survivors converge with integrity intact.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        cfg.backend = backend;
+        cfg.n_replicas = 5;
+        cfg.update_pct = 25;
+        cfg.total_ops = 10_000;
+        cfg.window = 16;
+        cfg.seed = 0x81D_C4A0;
+        cfg.fault = FaultSchedule::parse("crash@50:leader").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed[0], "{b}: crashed leader stays down");
+        assert_ne!(rep.leader, 0, "{b}: a successor leads");
+        assert!(rep.metrics.elections >= 1, "{b}: re-election happened");
+        assert!(rep.converged(), "{b}: diverged with a full window: {:?}", rep.digests);
+        assert!(rep.invariants_ok, "{b}: integrity broke (uncommitted window slot applied)");
+        assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+    }
+}
+
+#[test]
+fn partition_minority_imposter_with_inflight_window_mutates_nothing() {
+    // PR-8's minority-imposter scenario with the pipeline open: a cut
+    // endpoint that re-places groups onto itself now carries a *window* of
+    // unconfirmed rounds, and the per-group lease fence must gate all of
+    // them — none may apply. Runs under a sharded placement so several
+    // per-group windows are in flight when the partition lands.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        cfg.objects = CatalogSpec::parse("account:16").unwrap();
+        cfg.objects.zipf_theta = 0.6;
+        cfg.backend = backend;
+        cfg.placement = LeaderPlacement::Hash;
+        cfg.n_replicas = 5;
+        cfg.update_pct = 25;
+        cfg.total_ops = 8_000;
+        cfg.window = 8;
+        cfg.seed = 0x81D_8A1D;
+        cfg.fault = FaultSchedule::parse("partition@40:1-2,heal@70").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed.iter().all(|&c| !c), "{b}: nobody crashed");
+        assert_eq!(
+            rep.groups_led.iter().sum::<u64>(),
+            16,
+            "{b}: every group has exactly one leader after the heal: {:?}",
+            rep.groups_led
+        );
+        assert!(
+            rep.converged() && rep.converged_per_object(),
+            "{b}: diverged after heal: {:?}\n{}",
+            rep.digests,
+            rep.dumps.join("\n---\n")
+        );
+        assert!(rep.invariants_ok, "{b}: integrity broke (imposter window applied)");
+        assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+    }
+}
+
+#[test]
+fn leader_crash_during_partition_with_window_converges_single_placement() {
+    // The classic acceptance schedule with the pipeline open, on the
+    // single-leader layout: partition two followers, crash the leader
+    // mid-window, heal — the successor's takeover replay must cover every
+    // uncommitted slot of the dead leader's window.
+    for backend in ConsensusBackend::ALL {
+        let mut cfg = SimConfig::safardb(WorkloadKind::Micro(RdtKind::Account));
+        cfg.backend = backend;
+        cfg.n_replicas = 5;
+        cfg.update_pct = 25;
+        cfg.total_ops = 10_000;
+        cfg.window = 8;
+        cfg.seed = 0x81D_8A2E;
+        cfg.fault = FaultSchedule::parse("partition@40:1-2,crash@50:leader,heal@70").unwrap();
+        let rep = cluster::run(cfg);
+        let b = backend.name();
+        assert!(rep.crashed[0], "{b}: initial leader stays down");
+        assert!(rep.metrics.elections >= 1, "{b}: re-election happened");
+        assert!(rep.converged(), "{b}: diverged: {:?}", rep.digests);
+        assert!(rep.invariants_ok, "{b}: integrity broke");
+        assert!(rep.metrics.smr_commits > 0, "{b}: strong path unexercised");
+    }
+}
